@@ -1,0 +1,48 @@
+//! End-to-end training-step bench over the AOT artifacts: fwd/bwd through
+//! PJRT + optimizer update (native vs HLO engine, 8-bit vs 32-bit) — the
+//! whole-stack complement to `optimizer_speed` (Table 1's "Time" column at
+//! this testbed's scale).
+//!
+//! Run: `cargo bench --bench e2e_step [-- --model small_stable]`
+
+use std::time::Duration;
+
+use bitopt8::config::{parse_optim, Engine, RunConfig, Schedule};
+use bitopt8::coordinator::Trainer;
+use bitopt8::runtime::Runtime;
+use bitopt8::util::args::Args;
+use bitopt8::util::bench::bench;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let model = args.get_or("model", "small_stable").to_string();
+    let budget = Duration::from_millis(args.get_u64("budget-ms", 8000));
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts")).expect("runtime");
+
+    println!("e2e_step: model {model}");
+    println!("{:<30} {:>14} {:>16}", "config", "ms/step", "opt state MB");
+    for (label, bits, engine) in [
+        ("adam32 native", 32usize, Engine::Native),
+        ("adam8 native", 8, Engine::Native),
+        ("adam8 hlo (Pallas kernels)", 8, Engine::Hlo),
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.model = model.clone();
+        cfg.steps = 10_000; // not used; we drive steps manually
+        cfg.seed = 5;
+        cfg.optim = parse_optim("adam", bits, "dynamic", true).unwrap();
+        cfg.optim.lr = 3e-4;
+        cfg.engine = engine;
+        cfg.schedule = Schedule::Constant;
+        let mut tr = Trainer::new(&rt, cfg).expect("trainer");
+        let state_mb = tr.state_bytes() as f64 / 1e6;
+        let r = bench(label, budget, 200, || {
+            tr.train_step().expect("step");
+        });
+        println!("{label:<30} {:>14.1} {:>16.2}", r.median_ns / 1e6, state_mb);
+    }
+}

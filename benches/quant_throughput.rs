@@ -1,0 +1,66 @@
+//! Block-wise quantizer throughput (§2.1's efficiency claim): block-wise
+//! vs tensor-wide normalization, quantize and dequantize, single vs multi
+//! core. The paper's argument: per-block normalization removes cross-core
+//! synchronization, so block-wise should scale ~linearly with cores while
+//! tensor-wide pays a global reduction.
+//!
+//! Run: `cargo bench --bench quant_throughput`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitopt8::quant::{dynamic_tree, BlockQuantizer, BLOCK};
+use bitopt8::util::args::Args;
+use bitopt8::util::bench::{bench, black_box};
+use bitopt8::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n = args.get_usize("n", 16 << 20);
+    let budget = Duration::from_millis(args.get_u64("budget-ms", 1500));
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let cb = Arc::new(dynamic_tree::dynamic_signed());
+
+    println!("quant_throughput: n = {n} ({} MB)", n * 4 >> 20);
+    println!("{:<34} {:>14} {:>12}", "config", "GB/s (f32 in)", "ns/elem");
+    for (label, block, threads) in [
+        ("blockwise B=2048, 1 core", BLOCK, Some(1)),
+        ("blockwise B=2048, all cores", BLOCK, None),
+        ("tensor-wide, 1 core", usize::MAX, Some(1)),
+        ("tensor-wide, all cores", usize::MAX, None),
+    ] {
+        let bq = BlockQuantizer { codebook: cb.clone(), block };
+        let mut q = bq.quantize(&x);
+        let saved = std::env::var("BITOPT8_THREADS").ok();
+        if let Some(t) = threads {
+            std::env::set_var("BITOPT8_THREADS", t.to_string());
+        }
+        let r = bench(label, budget, 100, || {
+            bq.quantize_into(black_box(&x), &mut q);
+        });
+        match saved {
+            Some(v) => std::env::set_var("BITOPT8_THREADS", v),
+            None => std::env::remove_var("BITOPT8_THREADS"),
+        }
+        println!(
+            "{label:<34} {:>14.2} {:>12.2}",
+            (n as f64 * 4.0) / r.median_ns,
+            r.median_ns / n as f64
+        );
+    }
+
+    // dequantize
+    let bq = BlockQuantizer::new(cb, BLOCK);
+    let q = bq.quantize(&x);
+    let mut out = vec![0.0f32; n];
+    let r = bench("dequantize blockwise, all cores", budget, 100, || {
+        bq.dequantize_into(black_box(&q), &mut out);
+    });
+    println!(
+        "{:<34} {:>14.2} {:>12.2}",
+        "dequantize blockwise, all cores",
+        (n as f64 * 4.0) / r.median_ns,
+        r.median_ns / n as f64
+    );
+}

@@ -1,0 +1,50 @@
+//! Appendix G bench: SRAM-Quantiles vs exact (full-sort) quantile
+//! estimation — the paper reports 0.064 ns/element vs 5–300 ns/element for
+//! general-purpose estimators; the *shape* to reproduce is a large
+//! constant-factor win that grows with input size.
+//!
+//! Run: `cargo bench --bench quantiles`
+
+use std::time::Duration;
+
+use bitopt8::quant::sram_quantiles::{estimate_quantiles, exact_quantiles};
+use bitopt8::util::args::Args;
+use bitopt8::util::bench::{bench, black_box};
+use bitopt8::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let budget = Duration::from_millis(args.get_u64("budget-ms", 1200));
+    println!(
+        "{:>12} {:>16} {:>16} {:>9} {:>14}",
+        "n", "SRAM ns/elem", "full-sort ns/elem", "speedup", "max q err"
+    );
+    for pow in [16usize, 20, 23] {
+        let n = 1usize << pow;
+        let mut rng = Rng::new(11);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        let fast = bench("sram", budget, 200, || {
+            black_box(estimate_quantiles(black_box(&data), 257));
+        });
+        let slow = bench("sort", budget, 50, || {
+            black_box(exact_quantiles(black_box(&data), 257));
+        });
+        // quality check: interior quantile error
+        let est = estimate_quantiles(&data, 257);
+        let exact = exact_quantiles(&data, 257);
+        let max_err = est[8..249]
+            .iter()
+            .zip(&exact[8..249])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "{:>12} {:>16.3} {:>17.3} {:>8.1}x {:>14.4}",
+            n,
+            fast.median_ns / n as f64,
+            slow.median_ns / n as f64,
+            slow.median_ns / fast.median_ns,
+            max_err
+        );
+    }
+}

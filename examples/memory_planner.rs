@@ -1,0 +1,48 @@
+//! Memory planner: the Table 2 analysis as a user-facing tool — "which
+//! models can I finetune on my GPU, and what does the optimizer state
+//! cost?"
+//!
+//!   cargo run --release --example memory_planner -- [--gb 11]
+
+use bitopt8::model::memory::{MemoryModel, OptStateKind, KNOWN_MODELS};
+use bitopt8::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let budget = args.get_f64("gb", 11.0);
+    let mm = MemoryModel::default();
+
+    println!("memory budget: {budget} GB (batch size 1, fp16 weights+grads)\n");
+    println!(
+        "{:<24} {:>8} {:>11} {:>11} {:>11} {:>9}",
+        "model", "params", "Adam32", "Adafactor", "Adam8", "fits?"
+    );
+    for m in KNOWN_MODELS {
+        let t32 = mm.total_bytes(&m, OptStateKind::Adam32) / 1e9;
+        let taf = mm.total_bytes(&m, OptStateKind::Adafactor) / 1e9;
+        let t8 = mm.total_bytes(&m, OptStateKind::Adam8) / 1e9;
+        let verdict = if t8 <= budget && t32 <= budget {
+            "both"
+        } else if t8 <= budget {
+            "8-bit only"
+        } else {
+            "neither"
+        };
+        println!(
+            "{:<24} {:>7.0}M {:>9.1}GB {:>9.1}GB {:>9.1}GB {:>10}",
+            m.name,
+            m.params / 1e6,
+            t32,
+            taf,
+            t8,
+            verdict
+        );
+    }
+    println!(
+        "\nstate bytes/param: Adam32 {:.2}, Adafactor {:.2}, Adam8 {:.3}, Momentum8 {:.3}",
+        OptStateKind::Adam32.bytes_per_param(),
+        OptStateKind::Adafactor.bytes_per_param(),
+        OptStateKind::Adam8.bytes_per_param(),
+        OptStateKind::Momentum8.bytes_per_param()
+    );
+}

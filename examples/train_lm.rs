@@ -1,0 +1,91 @@
+//! End-to-end driver (the full-stack validation example): train a
+//! transformer LM through the AOT artifacts — L2 fwd/bwd graph + L1 fused
+//! 8-bit optimizer — comparing 8-bit Adam against 32-bit Adam, logging the
+//! loss curves.
+//!
+//!   cargo run --release --example train_lm -- \
+//!       --model small_stable --steps 300 [--also-32bit] [--engine hlo]
+//!
+//! For the ~100M-parameter mandate run: `--model gpt100m_stable` (build
+//! artifacts with `make artifacts` first; the gpt100m preset is included
+//! by default). Results land in results/train_lm_<model>_<opt>.jsonl.
+
+use anyhow::Result;
+use bitopt8::config::{parse_optim, Engine, RunConfig, Schedule};
+use bitopt8::coordinator::Trainer;
+use bitopt8::runtime::Runtime;
+use bitopt8::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "small_stable").to_string();
+    let steps = args.get_usize("steps", 300);
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+
+    let mut variants: Vec<(&str, usize)> = vec![("adam8", 8)];
+    if args.flag("also-32bit") {
+        variants.push(("adam32", 32));
+    }
+
+    for (tag, bits) in variants {
+        let mut cfg = RunConfig::default();
+        cfg.model = model.clone();
+        cfg.steps = steps;
+        cfg.seed = args.get_u64("seed", 42);
+        cfg.eval_every = (steps / 6).max(1);
+        cfg.eval_batches = 8;
+        cfg.optim = parse_optim("adam", bits, "dynamic", true)?;
+        cfg.optim.lr = args.get_f64("lr", 6e-4) as f32;
+        cfg.emb32 = bits == 8;
+        cfg.schedule = Schedule::WarmupLinear { warmup: steps / 10, total: steps };
+        cfg.engine = if args.get_or("engine", "native") == "hlo" {
+            Engine::Hlo
+        } else {
+            Engine::Native
+        };
+        std::fs::create_dir_all("results")?;
+        cfg.log_jsonl = Some(format!("results/train_lm_{model}_{tag}.jsonl"));
+
+        println!("=== {} ===", cfg.describe());
+        let t0 = std::time::Instant::now();
+        let mut tr = Trainer::new(&rt, cfg)?;
+        println!(
+            "{:.1}M params | optimizer state {:.1} MB",
+            tr.n_params() as f64 / 1e6,
+            tr.state_bytes() as f64 / 1e6
+        );
+        let mut last_log = std::time::Instant::now();
+        let mut losses = Vec::new();
+        for step in 0..steps {
+            let loss = tr.train_step()?;
+            losses.push(loss);
+            if tr.detector.is_unstable() {
+                println!("UNSTABLE at step {step}: {:?}", tr.detector.reason());
+                break;
+            }
+            if last_log.elapsed().as_secs() >= 10 || step + 1 == steps || step < 3 {
+                let recent =
+                    &losses[losses.len().saturating_sub(10)..];
+                let avg: f64 = recent.iter().sum::<f64>() / recent.len() as f64;
+                println!(
+                    "step {:>5}/{steps} | loss {:>7.4} (avg10 {:>7.4}) | {:>6.2} s/step",
+                    step + 1,
+                    loss,
+                    avg,
+                    t0.elapsed().as_secs_f64() / (step + 1) as f64
+                );
+                last_log = std::time::Instant::now();
+            }
+        }
+        let (eval_loss, _) = tr.evaluate()?;
+        println!(
+            "final: train {:.4} | eval {:.4} (ppl {:.2}) | total {:.1}s | state {:.1} MB",
+            losses.last().copied().unwrap_or(f64::NAN),
+            eval_loss,
+            eval_loss.exp(),
+            t0.elapsed().as_secs_f64(),
+            tr.state_bytes() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

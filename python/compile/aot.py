@@ -1,0 +1,188 @@
+"""AOT compiler: lower every L2 graph to HLO **text** + write the manifest.
+
+HLO text (never ``.serialize()``) is the interchange format — the image's
+xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos, while
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs under --out-dir:
+  {model}[_stable].{train,eval}.hlo.txt      one pair per model variant
+  adam8_n{npad}.hlo.txt                      fused 8-bit Adam per tensor size
+  momentum8_n{npad}.hlo.txt                  fused 8-bit Momentum per size
+  quant_{signed,unsigned}_n{N}.hlo.txt       standalone kernels (parity tests)
+  dequant_{signed,unsigned}_n{N}.hlo.txt
+  manifest.json                              the Rust-side contract
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import optim8
+from .kernels import codebooks
+from .kernels.blockwise import BLOCK
+
+DEFAULT_MODELS = "nano,nano:stable,tiny,tiny:stable,small,small:stable,cls_tiny,gpt100m:stable"
+
+#: HLO optimizer-update artifacts are only generated for tensors up to this
+#: many elements; larger tensors (e.g. gpt100m embeddings) use the native
+#: Rust engine, which is the production hot path anyway (DESIGN.md §Perf).
+MAX_HLO_UPDATE_SIZE = 4 << 20
+
+#: Fixed sizes for the standalone kernel-parity artifacts.
+PARITY_N = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer elides
+    # >10-element literals as `constant({...})`, which the Rust-side HLO
+    # text parser silently reads back as zeros — the 256-entry codebooks
+    # baked into the kernels would vanish.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided literal in HLO text"
+    return text
+
+
+def lower_to_file(fn, example, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+def parse_model_arg(spec: str):
+    if ":" in spec:
+        preset, flag = spec.split(":")
+        assert flag == "stable", spec
+        return preset, True
+    return spec, False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=DEFAULT_MODELS,
+                    help="comma list of presets, ':stable' suffix for the "
+                         "stable-embedding graph variant")
+    ap.add_argument("--block", type=int, default=BLOCK)
+    ap.add_argument("--skip-updates", action="store_true",
+                    help="skip per-size optimizer artifacts (fast dev builds)")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    manifest: dict = {
+        "block": args.block,
+        "codebooks": {
+            name: [float(v) for v in codebooks.by_name(name)]
+            for name in ("dynamic_signed", "dynamic_unsigned",
+                         "linear_signed", "linear_unsigned")
+        },
+        "hp_layout": {
+            "adam8": ["lr", "beta1", "beta2", "eps", "weight_decay",
+                      "bias_c1", "bias_c2", "unused"],
+            "momentum8": ["lr", "beta", "weight_decay", "is_first",
+                          "unused", "unused", "unused", "unused"],
+        },
+        "models": [],
+        "updates": {"adam8": {}, "momentum8": {}},
+        "parity": {},
+    }
+
+    sizes: set[int] = set()
+    for spec in args.models.split(","):
+        preset, stable = parse_model_arg(spec.strip())
+        cfg = model_lib.config_from(preset, stable)
+        tag = f"{preset}_stable" if stable else preset
+        print(f"model {tag}: {model_lib.n_params(cfg) / 1e6:.2f}M params", flush=True)
+
+        train_fn, train_ex = model_lib.make_train_step(cfg)
+        eval_fn, eval_ex = model_lib.make_eval_step(cfg)
+        train_path = os.path.join(out, f"{tag}.train.hlo.txt")
+        eval_path = os.path.join(out, f"{tag}.eval.hlo.txt")
+        lower_to_file(train_fn, train_ex, train_path)
+        lower_to_file(eval_fn, eval_ex, eval_path)
+
+        params = []
+        for s in model_lib.param_specs(cfg):
+            size = math.prod(s.shape)
+            npad = optim8.padded(size, args.block)
+            if size <= MAX_HLO_UPDATE_SIZE:
+                sizes.add(size)
+            params.append({
+                "name": s.name,
+                "shape": list(s.shape),
+                "init": s.init,
+                "is_embedding": s.is_embedding,
+                "size": size,
+                "padded": npad,
+            })
+        manifest["models"].append({
+            "name": tag,
+            "preset": preset,
+            "stable_embedding": stable,
+            "task": cfg.task,
+            "batch": cfg.batch,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "n_classes": cfg.n_classes,
+            "n_params": model_lib.n_params(cfg),
+            "train": os.path.basename(train_path),
+            "eval": os.path.basename(eval_path),
+            "params": params,
+        })
+
+    if not args.skip_updates:
+        for n in sorted(sizes):
+            fn, ex = optim8.make_adam8_step(n, args.block)
+            path = os.path.join(out, f"adam8_n{n}.hlo.txt")
+            lower_to_file(fn, ex, path)
+            manifest["updates"]["adam8"][str(n)] = os.path.basename(path)
+
+            fn, ex = optim8.make_momentum8_step(n, args.block)
+            path = os.path.join(out, f"momentum8_n{n}.hlo.txt")
+            lower_to_file(fn, ex, path)
+            manifest["updates"]["momentum8"][str(n)] = os.path.basename(path)
+
+        # Standalone kernels for engine-parity tests.
+        for signed in (True, False):
+            name = "signed" if signed else "unsigned"
+            fn, ex = optim8.make_quantize_graph(PARITY_N, signed, args.block)
+            qpath = os.path.join(out, f"quant_{name}_n{PARITY_N}.hlo.txt")
+            lower_to_file(fn, ex, qpath)
+            fn, ex = optim8.make_dequantize_graph(PARITY_N, signed, args.block)
+            dpath = os.path.join(out, f"dequant_{name}_n{PARITY_N}.hlo.txt")
+            lower_to_file(fn, ex, dpath)
+            manifest["parity"][f"quant_{name}"] = {
+                "n": PARITY_N,
+                "quant": os.path.basename(qpath),
+                "dequant": os.path.basename(dpath),
+            }
+
+    mpath = os.path.join(out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

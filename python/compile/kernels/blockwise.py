@@ -1,0 +1,110 @@
+"""L1 Pallas kernels: block-wise quantize / dequantize (paper §2.1).
+
+TPU mapping of the paper's CUDA kernels (DESIGN.md §Hardware-Adaptation):
+each quantization block of B=2048 elements is one Pallas grid step whose
+operands live in VMEM; the absmax is a VMEM-local reduction (the shared-
+memory reduction of the CUDA version), and the codebook search is a
+vectorized broadcast-compare against the 256-entry table (VPU-friendly,
+replacing the warp binary search). The codebook/midpoint tables are kernel
+*inputs* with a constant index map, i.e. resident in VMEM across the whole
+grid. interpret=True everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU perf is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+#: The paper's block size (§2.1).
+BLOCK = 2048
+
+
+def _encode(xn: jnp.ndarray, mids: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codebook-index = count of decision boundaries <= value,
+    i.e. searchsorted(side="right") — identical tie semantics to Rust
+    `Codebook::encode` (ties round toward the larger value).
+
+    searchsorted is O(log 256) per element and lowers fine in interpret
+    mode. On a real-TPU Mosaic build this would become the O(256)
+    broadcast-compare + sum (`(mids[None,:] <= xn[:,None]).sum(1)`), which
+    trades flops for VPU-friendly regularity; both compute the same index.
+    """
+    return jnp.searchsorted(mids, xn, side="right").astype(jnp.uint8)
+
+
+def _quantize_kernel(mids_ref, x_ref, codes_ref, absmax_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x))
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 1.0).astype(jnp.float32)
+    codes_ref[...] = _encode(x * inv, mids_ref[...])
+    absmax_ref[...] = absmax.reshape(1)
+
+
+def _dequantize_kernel(cb_ref, codes_ref, absmax_ref, out_ref):
+    vals = cb_ref[...][codes_ref[...].astype(jnp.int32)]
+    out_ref[...] = vals * absmax_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _quantize_jit(x, mids, block):
+    n = x.shape[0]
+    grid = n // block
+    n_mids = mids.shape[0]
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_mids,), lambda i: (0,)),  # codebook midpoints
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(mids, x)
+
+
+def quantize_blockwise(x, codebook: np.ndarray, block: int = BLOCK):
+    """Pallas block-wise quantization; x length must be a block multiple
+    (use ref.pad_to_blocks). Returns (codes u8, absmax f32 per block)."""
+    x = jnp.asarray(x, jnp.float32)
+    assert x.shape[0] % block == 0
+    from . import codebooks
+
+    mids = jnp.asarray(codebooks.midpoints(codebook))
+    return _quantize_jit(x, mids, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _dequantize_jit(codes, absmax, cb, block):
+    n = codes.shape[0]
+    grid = n // block
+    n_cb = cb.shape[0]
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_cb,), lambda i: (0,)),  # codebook values
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(cb, codes, absmax)
+
+
+def dequantize_blockwise(codes, absmax, codebook: np.ndarray, block: int = BLOCK):
+    """Pallas block-wise dequantization."""
+    cb = jnp.asarray(codebook)
+    return _dequantize_jit(codes, absmax, cb, block)

@@ -1,0 +1,91 @@
+"""Quantization codebooks — Python mirror of ``rust/src/quant/``.
+
+The construction here is kept line-for-line equivalent to the Rust
+implementation (all arithmetic in f64, decimal-literal decade scales, cast
+to f32 at the end) so the Pallas/HLO engine and the native Rust engine use
+bit-identical `Q^map` tables. The integration test
+``rust/tests/engine_parity.rs`` checks this through the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: Decade scales as decimal literals (same literals as Rust DECADE_SCALE).
+_DECADE_SCALE = [1.0, 1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6]
+
+
+def _decade_midpoints(n: int) -> list[float]:
+    """Midpoints of linspace(0.1, 1.0, n+1), computed exactly like Rust."""
+    lo, hi = 0.1, 1.0
+    step = (hi - lo) / n
+    out = []
+    for i in range(n):
+        a = lo + step * i
+        b = lo + step * (i + 1)
+        out.append(0.5 * (a + b))
+    return out
+
+
+def _tree_magnitudes(extra_fraction_bit: bool, inverse: bool) -> list[float]:
+    out = []
+    for e in range(7):
+        f = (min(e, 6) if inverse else 6 - e) + (1 if extra_fraction_bit else 0)
+        n = 1 << f
+        mids = _decade_midpoints(n)
+        scale = _DECADE_SCALE[e]
+        for i, m in enumerate(mids):
+            if e == 0 and i == n - 1:
+                out.append(1.0)  # exact absmax code (zero-error outliers)
+            else:
+                out.append(m * scale)
+    return out
+
+
+def dynamic_signed() -> np.ndarray:
+    """Signed dynamic tree quantization (first Adam state / momentum)."""
+    mags = _tree_magnitudes(False, False)
+    assert len(mags) == 127
+    vals = []
+    for m in mags:
+        vals.append(np.float32(m))
+        vals.append(np.float32(-m))
+    vals.append(np.float32(0.0))
+    vals.append(np.float32(1e-7))
+    return np.sort(np.array(vals, dtype=np.float32))
+
+
+def dynamic_unsigned() -> np.ndarray:
+    """Unsigned dynamic quantization (§2.2) — sign bit re-purposed as an
+    extra fixed fraction bit, for the strictly positive second Adam state."""
+    mags = _tree_magnitudes(True, False)
+    assert len(mags) == 254
+    vals = [np.float32(m) for m in mags]
+    vals.append(np.float32(0.0))
+    vals.append(np.float32(1e-7))
+    return np.sort(np.array(vals, dtype=np.float32))
+
+
+def linear_signed() -> np.ndarray:
+    """Linear baseline: { i/127 : i in -127..127 } (ablation rows)."""
+    return np.sort(np.array([i / 127.0 for i in range(-127, 128)], dtype=np.float32))
+
+
+def linear_unsigned() -> np.ndarray:
+    return np.array([i / 255.0 for i in range(256)], dtype=np.float32)
+
+
+def by_name(name: str) -> np.ndarray:
+    return {
+        "dynamic_signed": dynamic_signed,
+        "dynamic_unsigned": dynamic_unsigned,
+        "linear_signed": linear_signed,
+        "linear_unsigned": linear_unsigned,
+    }[name]()
+
+
+def midpoints(codebook: np.ndarray) -> np.ndarray:
+    """Decision boundaries between adjacent codebook values (f32 math,
+    same as Rust: 0.5 * (v[i] + v[i+1]))."""
+    cb = codebook.astype(np.float32)
+    return (np.float32(0.5) * (cb[:-1] + cb[1:])).astype(np.float32)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: fused 8-bit Momentum update (Eq. 1 + §2 pipeline).
+
+hp = [lr, beta, weight_decay, is_first_step, 0, 0, 0, 0]; the first step
+initializes the state with the raw gradient (m_0 = g_0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .blockwise import BLOCK, _encode
+
+
+def _momentum8_kernel(hp_ref, cb_ref, mids_ref, p_ref, g_ref, c_ref, a_ref,
+                      p_out, c_out, a_out):
+    cb, mids = cb_ref[...], mids_ref[...]
+    hp = hp_ref[...]
+    lr, beta, wd, first = hp[0], hp[1], hp[2], hp[3]
+    p = p_ref[...]
+    g = g_ref[...] + wd * p
+    m = cb[c_ref[...].astype(jnp.int32)] * a_ref[0]
+    m = jnp.where(first > 0.5, g, beta * m + g)
+    p = p - lr * m
+    am = jnp.max(jnp.abs(m))
+    inv = jnp.where(am > 0, 1.0 / am, 1.0).astype(jnp.float32)
+    p_out[...] = p
+    c_out[...] = _encode(m * inv, mids)
+    a_out[...] = am.reshape(1)
+
+
+def build_momentum8_update(n: int, block: int = BLOCK):
+    """fn(hp, p, g, c, a) -> (p', c', a') over padded length-n tensors."""
+    assert n % block == 0
+    from . import codebooks
+
+    cb = jnp.asarray(codebooks.dynamic_signed())
+    mids = jnp.asarray(codebooks.midpoints(codebooks.dynamic_signed()))
+    grid = n // block
+
+    def update(hp, p, g, c, a):
+        return pl.pallas_call(
+            _momentum8_kernel,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((8,), lambda i: (0,)),
+                pl.BlockSpec((cb.shape[0],), lambda i: (0,)),
+                pl.BlockSpec((mids.shape[0],), lambda i: (0,)),
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n,), jnp.float32),
+                jax.ShapeDtypeStruct((n,), jnp.uint8),
+                jax.ShapeDtypeStruct((grid,), jnp.float32),
+            ],
+            interpret=True,
+        )(hp, cb, mids, p, g, c, a)
+
+    return update
+
+
+def make_hp(lr: float, beta: float, weight_decay: float, t: int) -> np.ndarray:
+    return np.array([lr, beta, weight_decay, 1.0 if t <= 1 else 0.0,
+                     0.0, 0.0, 0.0, 0.0], dtype=np.float32)

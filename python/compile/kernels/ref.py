@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything here is deliberately simple, vectorized jnp with no pallas —
+the CORE correctness signal for L1. pytest compares each Pallas kernel
+against these functions; Rust's native engine is cross-checked against the
+same semantics through the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import codebooks
+
+
+def pad_to_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Zero-pad a 1-D array to a multiple of `block` (zeros never raise a
+    block absmax, so padding does not perturb quantization of real data)."""
+    n = x.shape[0]
+    rem = (-n) % block
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,), dtype=x.dtype)])
+    return x
+
+
+def quantize_blockwise(x, codebook: np.ndarray, block: int):
+    """Block-wise quantization (Eq. 4): per-block absmax normalization then
+    nearest-codebook-value encoding. Returns (codes u8 [n], absmax f32
+    [n/block]); `x` must already be padded to a block multiple."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    assert n % block == 0, "pad first"
+    xb = x.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(xb), axis=1)
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 1.0).astype(jnp.float32)
+    xn = xb * inv[:, None]
+    mids = jnp.asarray(codebooks.midpoints(codebook))
+    # count of midpoints <= value == nearest index (ties round up), exactly
+    # the Rust Codebook::encode semantics.
+    codes = jnp.searchsorted(mids, xn.reshape(-1), side="right").astype(jnp.uint8)
+    return codes.reshape(n), absmax.astype(jnp.float32)
+
+
+def dequantize_blockwise(codes, absmax, codebook: np.ndarray, block: int):
+    """Inverse: codebook lookup then denormalize by the block absmax."""
+    cb = jnp.asarray(codebook)
+    vals = cb[codes.astype(jnp.int32)].reshape(-1, block)
+    return (vals * absmax[:, None]).reshape(-1)
+
+
+def adam_update(p, g, m, r, lr, beta1, beta2, eps, weight_decay, t):
+    """32-bit Adam update rule (Eq. 2 + bias correction), elementwise —
+    the same rule as Rust `Adam::update_rule` with coupled weight decay."""
+    g = jnp.asarray(g, jnp.float32)
+    if weight_decay != 0.0:
+        g = g + weight_decay * p
+    m = beta1 * m + (1.0 - beta1) * g
+    r = beta2 * r + (1.0 - beta2) * g * g
+    bias1 = 1.0 - beta1**t
+    bias2 = 1.0 - beta2**t
+    m_hat = m / bias1
+    r_hat = r / bias2
+    p = p - lr * m_hat / (jnp.sqrt(r_hat) + eps)
+    return p, m, r
+
+
+def adam8bit_update(p, g, codes1, absmax1, codes2, absmax2,
+                    cb1: np.ndarray, cb2: np.ndarray, block: int,
+                    lr, beta1, beta2, eps, weight_decay, t):
+    """Reference 8-bit Adam step (Figure 1): dequantize → 32-bit update →
+    requantize. Arrays must be padded to a block multiple."""
+    m = dequantize_blockwise(codes1, absmax1, cb1, block)
+    r = dequantize_blockwise(codes2, absmax2, cb2, block)
+    p, m, r = adam_update(p, g, m, r, lr, beta1, beta2, eps, weight_decay, t)
+    codes1, absmax1 = quantize_blockwise(m, cb1, block)
+    codes2, absmax2 = quantize_blockwise(r, cb2, block)
+    return p, codes1, absmax1, codes2, absmax2
+
+
+def momentum_update(p, g, m, lr, beta, weight_decay, t):
+    """SGD+momentum (Eq. 1): m_t = β m + g (m_0 = g_0)."""
+    g = jnp.asarray(g, jnp.float32)
+    if weight_decay != 0.0:
+        g = g + weight_decay * p
+    m = jnp.where(t <= 1, g, beta * m + g)
+    p = p - lr * m
+    return p, m
+
+
+def momentum8bit_update(p, g, codes, absmax, cb: np.ndarray, block: int,
+                        lr, beta, weight_decay, t):
+    m = dequantize_blockwise(codes, absmax, cb, block)
+    p, m = momentum_update(p, g, m, lr, beta, weight_decay, t)
+    codes, absmax = quantize_blockwise(m, cb, block)
+    return p, codes, absmax

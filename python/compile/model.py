@@ -1,0 +1,294 @@
+"""L2: transformer language model / sequence classifier in JAX.
+
+The compute graphs the coordinator drives at runtime — lowered once by
+``aot.py`` to HLO text. Two graph families:
+
+* ``lm``  — next-token LM: ``train_step(params..., tokens[B,S+1])`` returns
+  ``(loss, grad_0, ..., grad_{k-1})``.
+* ``cls`` — sequence classification (the GLUE-like Table 4 workload):
+  ``train_step(params..., tokens[B,S], labels[B])``.
+
+The **stable embedding layer** (paper §2.3) is a graph-level switch:
+Xavier-uniform init (done host-side from the manifest) + LayerNorm applied
+*before* adding position embeddings. The standard embedding follows the
+fairseq recipe the paper's Appendix C describes: N(0, 1/√d) init with
+√d output scaling. Keeping 32-bit optimizer state for the embedding is a
+host-side (Rust) optimizer-policy decision, not a graph change.
+
+Parameters travel as a flat, name-sorted list so the Rust side can map
+HLO parameter positions to tensors via the manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab: int = 2048
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+    batch: int = 16
+    stable_embedding: bool = False
+    task: str = "lm"  # "lm" | "cls"
+    n_classes: int = 2  # cls only
+    init_std_scale: float = 1.0
+
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Model presets. `gpt100m` is the E2E-mandate scale (~110M params).
+PRESETS: dict[str, ModelConfig] = {
+    "nano": ModelConfig("nano", vocab=512, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=256, seq_len=64, batch=16),
+    "tiny": ModelConfig("tiny", vocab=2048, d_model=128, n_layers=2, n_heads=4,
+                        d_ff=512, seq_len=128, batch=16),
+    "small": ModelConfig("small", vocab=4096, d_model=256, n_layers=4, n_heads=4,
+                         d_ff=1024, seq_len=128, batch=16),
+    "medium": ModelConfig("medium", vocab=8192, d_model=512, n_layers=8, n_heads=8,
+                          d_ff=2048, seq_len=128, batch=8),
+    "gpt100m": ModelConfig("gpt100m", vocab=16384, d_model=768, n_layers=12,
+                           n_heads=12, d_ff=3072, seq_len=256, batch=4),
+    "cls_tiny": ModelConfig("cls_tiny", vocab=1024, d_model=128, n_layers=2,
+                            n_heads=4, d_ff=512, seq_len=64, batch=32,
+                            task="cls", n_classes=4),
+}
+
+
+def config_from(preset: str, stable_embedding: bool, batch: int | None = None,
+                seq_len: int | None = None) -> ModelConfig:
+    import dataclasses
+    cfg = PRESETS[preset]
+    kw = {"stable_embedding": stable_embedding}
+    if batch is not None:
+        kw["batch"] = batch
+    if seq_len is not None:
+        kw["seq_len"] = seq_len
+    return dataclasses.replace(cfg, **kw)
+
+
+# --------------------------------------------------------------- parameters
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    #: host-side initializer: "zeros" | "ones" | "normal:<std>" | "xavier_uniform"
+    init: str
+    #: embedding-layer flag — the coordinator gives these tensors 32-bit
+    #: optimizer state when the stable-embedding policy is on (§2.3).
+    is_embedding: bool = False
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    """Name-sorted parameter inventory (the manifest contract with Rust)."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    emb_init = ("xavier_uniform" if cfg.stable_embedding
+                else f"normal:{1.0 / math.sqrt(d):.8e}")
+    specs = [
+        ParamSpec("embed.tok", (v, d), emb_init, is_embedding=True),
+        ParamSpec("embed.pos", (cfg.seq_len, d), "normal:0.02", is_embedding=True),
+        ParamSpec("final_ln.bias", (d,), "zeros"),
+        ParamSpec("final_ln.scale", (d,), "ones"),
+    ]
+    if cfg.stable_embedding:
+        specs += [
+            ParamSpec("embed.ln.bias", (d,), "zeros"),
+            ParamSpec("embed.ln.scale", (d,), "ones"),
+        ]
+    if cfg.task == "lm":
+        specs.append(ParamSpec("lm_head", (d, v), f"normal:{1.0 / math.sqrt(d):.8e}"))
+    else:
+        specs.append(ParamSpec("cls_head", (d, cfg.n_classes),
+                               f"normal:{1.0 / math.sqrt(d):.8e}"))
+    std = 0.02 * cfg.init_std_scale
+    resid_std = std / math.sqrt(2.0 * cfg.n_layers)
+    for l in range(cfg.n_layers):
+        p = f"layers.{l:02d}"
+        specs += [
+            ParamSpec(f"{p}.ln1.bias", (d,), "zeros"),
+            ParamSpec(f"{p}.ln1.scale", (d,), "ones"),
+            ParamSpec(f"{p}.ln2.bias", (d,), "zeros"),
+            ParamSpec(f"{p}.ln2.scale", (d,), "ones"),
+            ParamSpec(f"{p}.attn.wq", (d, d), f"normal:{std:.8e}"),
+            ParamSpec(f"{p}.attn.wk", (d, d), f"normal:{std:.8e}"),
+            ParamSpec(f"{p}.attn.wv", (d, d), f"normal:{std:.8e}"),
+            ParamSpec(f"{p}.attn.wo", (d, d), f"normal:{resid_std:.8e}"),
+            ParamSpec(f"{p}.mlp.w1", (d, ff), f"normal:{std:.8e}"),
+            ParamSpec(f"{p}.mlp.b1", (ff,), "zeros"),
+            ParamSpec(f"{p}.mlp.w2", (ff, d), f"normal:{resid_std:.8e}"),
+            ParamSpec(f"{p}.mlp.b2", (d,), "zeros"),
+        ]
+    specs.sort(key=lambda s: s.name)
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Reference initializer (tests / python-side experiments). The Rust
+    coordinator re-implements this from the manifest init strings."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = {}
+    for spec in param_specs(cfg):
+        if spec.init == "zeros":
+            arr = np.zeros(spec.shape, np.float32)
+        elif spec.init == "ones":
+            arr = np.ones(spec.shape, np.float32)
+        elif spec.init == "xavier_uniform":
+            fan_in, fan_out = spec.shape[0], spec.shape[-1]
+            a = math.sqrt(6.0 / (fan_in + fan_out))
+            arr = rng.uniform(-a, a, spec.shape).astype(np.float32)
+        elif spec.init.startswith("normal:"):
+            std = float(spec.init.split(":")[1])
+            arr = (rng.standard_normal(spec.shape) * std).astype(np.float32)
+        else:
+            raise ValueError(spec.init)
+        out[spec.name] = jnp.asarray(arr)
+    return out
+
+
+# ------------------------------------------------------------------ forward
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: ModelConfig, p: dict, prefix: str, x, causal: bool):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim()
+    q = (x @ p[f"{prefix}.wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p[f"{prefix}.wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p[f"{prefix}.wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[f"{prefix}.wo"]
+
+
+def _embed(cfg: ModelConfig, p: dict, tokens):
+    s = tokens.shape[1]
+    tok = p["embed.tok"][tokens]
+    if cfg.stable_embedding:
+        # §2.3: LayerNorm *before* adding position embeddings.
+        tok = _layer_norm(tok, p["embed.ln.scale"], p["embed.ln.bias"])
+        return tok + p["embed.pos"][None, :s]
+    # fairseq recipe (Appendix C): N(0, 1/√d) init scaled up by √d.
+    return tok * math.sqrt(cfg.d_model) + p["embed.pos"][None, :s]
+
+
+def forward(cfg: ModelConfig, p: dict, tokens):
+    """Token ids [B,S] -> final hidden states [B,S,D]."""
+    x = _embed(cfg, p, tokens)
+    causal = cfg.task == "lm"
+    for l in range(cfg.n_layers):
+        pre = f"layers.{l:02d}"
+        h = _layer_norm(x, p[f"{pre}.ln1.scale"], p[f"{pre}.ln1.bias"])
+        x = x + _attention(cfg, p, f"{pre}.attn", h, causal)
+        h = _layer_norm(x, p[f"{pre}.ln2.scale"], p[f"{pre}.ln2.bias"])
+        h = jax.nn.gelu(h @ p[f"{pre}.mlp.w1"] + p[f"{pre}.mlp.b1"])
+        x = x + (h @ p[f"{pre}.mlp.w2"] + p[f"{pre}.mlp.b2"])
+    return _layer_norm(x, p["final_ln.scale"], p["final_ln.bias"])
+
+
+def lm_loss(cfg: ModelConfig, p: dict, tokens):
+    """Next-token cross-entropy; tokens [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    hid = forward(cfg, p, inp)
+    logits = hid @ p["lm_head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def cls_loss(cfg: ModelConfig, p: dict, tokens, labels):
+    """Mean-pooled classification cross-entropy; also returns accuracy."""
+    hid = forward(cfg, p, tokens)
+    pooled = jnp.mean(hid, axis=1)
+    logits = pooled @ p["cls_head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+# --------------------------------------------------------------- step graphs
+def make_train_step(cfg: ModelConfig):
+    """Return (fn, example_args): the AOT-lowered training-step graph.
+
+    lm:  fn(*params, tokens[B,S+1]) -> (loss, *grads)
+    cls: fn(*params, tokens[B,S], labels[B]) -> (loss, acc, *grads)
+    """
+    names = [s.name for s in param_specs(cfg)]
+
+    if cfg.task == "lm":
+        def fn(*args):
+            params = dict(zip(names, args[:len(names)]))
+            tokens = args[len(names)]
+            loss, grads = jax.value_and_grad(
+                lambda pp: lm_loss(cfg, pp, tokens))(params)
+            return (loss, *[grads[n] for n in names])
+
+        example = tuple(
+            jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in param_specs(cfg)
+        ) + (jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32),)
+    else:
+        def fn(*args):
+            params = dict(zip(names, args[:len(names)]))
+            tokens = args[len(names)]
+            labels = args[len(names) + 1]
+            (loss, acc), grads = jax.value_and_grad(
+                lambda pp: cls_loss(cfg, pp, tokens, labels), has_aux=True)(params)
+            return (loss, acc, *[grads[n] for n in names])
+
+        example = tuple(
+            jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in param_specs(cfg)
+        ) + (
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+        )
+    return fn, example
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Loss-only graph (validation; no gradients)."""
+    names = [s.name for s in param_specs(cfg)]
+
+    if cfg.task == "lm":
+        def fn(*args):
+            params = dict(zip(names, args[:len(names)]))
+            return (lm_loss(cfg, params, args[len(names)]),)
+
+        example = tuple(
+            jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in param_specs(cfg)
+        ) + (jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32),)
+    else:
+        def fn(*args):
+            params = dict(zip(names, args[:len(names)]))
+            loss, acc = cls_loss(cfg, params, args[len(names)], args[len(names) + 1])
+            return (loss, acc)
+
+        example = tuple(
+            jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in param_specs(cfg)
+        ) + (
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+        )
+    return fn, example
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s.shape) for s in param_specs(cfg))

@@ -1,0 +1,108 @@
+"""L2 optimizer-update graphs built on the L1 Pallas kernels.
+
+Each graph is shape-specialized to one (real length, padded length) pair
+and lowered by ``aot.py`` to ``adam8_n{npad}.hlo.txt`` /
+``momentum8_n{npad}.hlo.txt``. The Rust runtime compiles one executable per
+distinct parameter-tensor size and calls it every step with the u8 state
+buffers it owns.
+
+Padding contract: params/grads travel at their real length `n`; the
+quantized state (codes + absmax) lives at the padded length `npad` (zeros
+in the pad region never affect a block absmax, and a zero state + zero
+grad never moves a padded lane).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam8bit, momentum8bit
+from .kernels.blockwise import BLOCK
+
+
+def padded(n: int, block: int = BLOCK) -> int:
+    return -(-n // block) * block
+
+
+def _pad(x, npad):
+    n = x.shape[0]
+    if n == npad:
+        return x
+    return jnp.concatenate([x, jnp.zeros((npad - n,), x.dtype)])
+
+
+def make_adam8_step(n: int, block: int = BLOCK):
+    """fn(hp[8], p[n], g[n], c1[npad], a1[nb], c2[npad], a2[nb])
+         -> (p'[n], c1', a1', c2', a2')  — the per-size AOT graph."""
+    npad = padded(n, block)
+    update = adam8bit.build_adam8_update(npad, block)
+
+    def fn(hp, p, g, c1, a1, c2, a2):
+        p_pad = _pad(p, npad)
+        g_pad = _pad(g, npad)
+        p_new, c1, a1, c2, a2 = update(hp, p_pad, g_pad, c1, a1, c2, a2)
+        return (p_new[:n], c1, a1, c2, a2)
+
+    nb = npad // block
+    example = (
+        jax.ShapeDtypeStruct((8,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((npad,), jnp.uint8),
+        jax.ShapeDtypeStruct((nb,), jnp.float32),
+        jax.ShapeDtypeStruct((npad,), jnp.uint8),
+        jax.ShapeDtypeStruct((nb,), jnp.float32),
+    )
+    return fn, example
+
+
+def make_momentum8_step(n: int, block: int = BLOCK):
+    """fn(hp[8], p[n], g[n], c[npad], a[nb]) -> (p'[n], c', a')."""
+    npad = padded(n, block)
+    update = momentum8bit.build_momentum8_update(npad, block)
+
+    def fn(hp, p, g, c, a):
+        p_new, c, a = update(hp, _pad(p, npad), _pad(g, npad), c, a)
+        return (p_new[:n], c, a)
+
+    nb = npad // block
+    example = (
+        jax.ShapeDtypeStruct((8,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((npad,), jnp.uint8),
+        jax.ShapeDtypeStruct((nb,), jnp.float32),
+    )
+    return fn, example
+
+
+def make_quantize_graph(n: int, signed: bool, block: int = BLOCK):
+    """Standalone block-wise quantize graph (engine-parity tests)."""
+    from .kernels import blockwise, codebooks
+
+    cb = codebooks.dynamic_signed() if signed else codebooks.dynamic_unsigned()
+    assert n % block == 0
+
+    def fn(x):
+        codes, absmax = blockwise.quantize_blockwise(x, cb, block)
+        return (codes, absmax)
+
+    example = (jax.ShapeDtypeStruct((n,), jnp.float32),)
+    return fn, example
+
+
+def make_dequantize_graph(n: int, signed: bool, block: int = BLOCK):
+    from .kernels import blockwise, codebooks
+
+    cb = codebooks.dynamic_signed() if signed else codebooks.dynamic_unsigned()
+    assert n % block == 0
+
+    def fn(codes, absmax):
+        return (blockwise.dequantize_blockwise(codes, absmax, cb, block),)
+
+    example = (
+        jax.ShapeDtypeStruct((n,), jnp.uint8),
+        jax.ShapeDtypeStruct((n // block,), jnp.float32),
+    )
+    return fn, example

@@ -1,0 +1,203 @@
+//! Figure 4 / Figure 5 analysis: where in the 256×256 code space Adam
+//! updates live (usage histogram) and how large the quantization-induced
+//! Adam error is per code (absolute + relative error maps).
+//!
+//! For each element we quantize both states, find the (code1, code2) cell,
+//! and accumulate |u32−u8| and |u32−u8|/|u32| into that cell, where
+//! u = m/(√r + ε) (Appendix D).
+
+use crate::quant::BlockQuantizer;
+
+/// 256×256 maps, row = first-state code, col = second-state code.
+pub struct AdamErrorMaps {
+    pub n1: usize,
+    pub n2: usize,
+    pub usage: Vec<u64>,
+    pub abs_err_sum: Vec<f64>,
+    pub rel_err_sum: Vec<f64>,
+}
+
+impl AdamErrorMaps {
+    pub fn cell(&self, c1: u8, c2: u8) -> usize {
+        c1 as usize * self.n2 + c2 as usize
+    }
+
+    pub fn mean_abs(&self, c1: u8, c2: u8) -> f64 {
+        let i = self.cell(c1, c2);
+        if self.usage[i] == 0 {
+            0.0
+        } else {
+            self.abs_err_sum[i] / self.usage[i] as f64
+        }
+    }
+
+    /// Overall mean absolute Adam error (the scalar quoted in Appendix D).
+    pub fn overall_abs(&self) -> f64 {
+        let total: u64 = self.usage.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.abs_err_sum.iter().sum::<f64>() / total as f64
+        }
+    }
+
+    pub fn overall_rel(&self) -> f64 {
+        let total: u64 = self.usage.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.rel_err_sum.iter().sum::<f64>() / total as f64
+        }
+    }
+
+    /// Overlap statistic plotted in Figure 4: usage-weighted share of
+    /// error mass landing in high-usage cells. Lower = errors are rare.
+    pub fn high_use_high_error_overlap(&self) -> f64 {
+        let total_use: u64 = self.usage.iter().sum();
+        let total_err: f64 = self.abs_err_sum.iter().sum();
+        if total_use == 0 || total_err <= 0.0 {
+            return 0.0;
+        }
+        // top-decile usage cells
+        let mut by_use: Vec<usize> = (0..self.usage.len()).collect();
+        by_use.sort_by_key(|&i| std::cmp::Reverse(self.usage[i]));
+        let top = &by_use[..by_use.len() / 10];
+        top.iter().map(|&i| self.abs_err_sum[i]).sum::<f64>() / total_err
+    }
+
+    /// CSV rows "c1,c2,usage,mean_abs,mean_rel" for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("c1,c2,usage,mean_abs_err,mean_rel_err\n");
+        for c1 in 0..self.n1 {
+            for c2 in 0..self.n2 {
+                let i = c1 * self.n2 + c2;
+                if self.usage[i] == 0 {
+                    continue;
+                }
+                let u = self.usage[i];
+                out.push_str(&format!(
+                    "{},{},{},{:.6e},{:.6e}\n",
+                    c1,
+                    c2,
+                    u,
+                    self.abs_err_sum[i] / u as f64,
+                    self.rel_err_sum[i] / u as f64
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Build the Figure 4 maps for a quantizer pair on given Adam states.
+pub fn adam_error_maps(
+    bq_m: &BlockQuantizer,
+    bq_r: &BlockQuantizer,
+    m: &[f32],
+    r: &[f32],
+    eps: f32,
+) -> AdamErrorMaps {
+    assert_eq!(m.len(), r.len());
+    let qm = bq_m.quantize(m);
+    let qr = bq_r.quantize(r);
+    let dm = bq_m.dequantize(&qm);
+    let dr = bq_r.dequantize(&qr);
+    let (n1, n2) = (bq_m.codebook.len(), bq_r.codebook.len());
+    let mut maps = AdamErrorMaps {
+        n1,
+        n2,
+        usage: vec![0; n1 * n2],
+        abs_err_sum: vec![0.0; n1 * n2],
+        rel_err_sum: vec![0.0; n1 * n2],
+    };
+    for i in 0..m.len() {
+        let u32v = m[i] / (r[i].max(0.0).sqrt() + eps);
+        let u8v = dm[i] / (dr[i].max(0.0).sqrt() + eps);
+        let cell = maps.cell(qm.codes[i], qr.codes[i]);
+        maps.usage[cell] += 1;
+        let abs = (u32v - u8v).abs() as f64;
+        maps.abs_err_sum[cell] += abs;
+        if u32v.abs() > 1e-12 {
+            maps.rel_err_sum[cell] += abs / u32v.abs() as f64;
+        }
+    }
+    maps
+}
+
+/// Figure 5: mean absolute Adam error per first-state code (256 buckets),
+/// with the codes normalized to [-1, 1] by index.
+pub fn per_code_error(
+    bq_m: &BlockQuantizer,
+    bq_r: &BlockQuantizer,
+    m: &[f32],
+    r: &[f32],
+    eps: f32,
+) -> Vec<(f32, f64, u64)> {
+    let maps = adam_error_maps(bq_m, bq_r, m, r, eps);
+    let n1 = maps.n1;
+    (0..n1)
+        .map(|c1| {
+            let mut use_sum = 0u64;
+            let mut err_sum = 0.0;
+            for c2 in 0..maps.n2 {
+                let i = c1 * maps.n2 + c2;
+                use_sum += maps.usage[i];
+                err_sum += maps.abs_err_sum[i];
+            }
+            let norm_pos = 2.0 * c1 as f32 / (n1 - 1) as f32 - 1.0;
+            let mean = if use_sum == 0 { 0.0 } else { err_sum / use_sum as f64 };
+            (norm_pos, mean, use_sum)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{quantizer_pair, synth_adam_states};
+    use crate::quant::Format;
+
+    #[test]
+    fn maps_accumulate_all_elements() {
+        let (m, r) = synth_adam_states(20_000, 1);
+        let (bm, br) = quantizer_pair(Format::Dynamic, true);
+        let maps = adam_error_maps(&bm, &br, &m, &r, 1e-8);
+        assert_eq!(maps.usage.iter().sum::<u64>(), 20_000);
+        assert!(maps.overall_abs().is_finite());
+    }
+
+    #[test]
+    fn blockwise_dynamic_has_lower_overlap_than_linear() {
+        // Figure 4's qualitative claim.
+        let (m, r) = synth_adam_states(60_000, 2);
+        let (bm_d, br_d) = quantizer_pair(Format::Dynamic, true);
+        let (bm_l, br_l) = quantizer_pair(Format::Linear, true);
+        let d = adam_error_maps(&bm_d, &br_d, &m, &r, 1e-8);
+        let l = adam_error_maps(&bm_l, &br_l, &m, &r, 1e-8);
+        assert!(
+            d.overall_rel() < l.overall_rel(),
+            "dynamic rel {} vs linear rel {}",
+            d.overall_rel(),
+            l.overall_rel()
+        );
+    }
+
+    #[test]
+    fn per_code_has_256_rows_and_positions_in_unit_range() {
+        let (m, r) = synth_adam_states(10_000, 3);
+        let (bm, br) = quantizer_pair(Format::Dynamic, true);
+        let rows = per_code_error(&bm, &br, &m, &r, 1e-8);
+        assert_eq!(rows.len(), 256);
+        assert!(rows.iter().all(|&(p, _, _)| (-1.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn csv_is_parsable() {
+        let (m, r) = synth_adam_states(5_000, 4);
+        let (bm, br) = quantizer_pair(Format::Dynamic, true);
+        let csv = adam_error_maps(&bm, &br, &m, &r, 1e-8).to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap().split(',').count(), 5);
+        assert!(csv.lines().count() > 10);
+    }
+}

@@ -1,0 +1,57 @@
+//! Quantization-error analysis — regenerates the data behind Figures 2,
+//! 4, 5, 6 and Table 6 (Appendix D/F).
+
+pub mod adam_error;
+
+pub use adam_error::{adam_error_maps, per_code_error, AdamErrorMaps};
+
+use crate::quant::{BlockQuantizer, Codebook, Format, BLOCK};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Synthetic Adam-state sample mimicking LM training statistics: scales
+/// vary by 3–5 orders of magnitude *across* tensors/blocks (§2.2's
+/// observation), while values within a block share a tensor-local scale
+/// with moderate lognormal spread — matching how real per-tensor state
+/// distributions look (a block holds adjacent parameters of one tensor).
+pub fn synth_adam_states(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut m = Vec::with_capacity(n);
+    let mut r = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        // per-block scales spanning the paper's 3–5 decades
+        let m_scale = 10f64.powf(rng.uniform_range(-4.5, -1.5));
+        let g_scale = 10f64.powf(rng.uniform_range(-4.0, -2.0));
+        let end = (i + BLOCK).min(n);
+        while i < end {
+            m.push((rng.normal() * m_scale) as f32);
+            // r is a smoothed sum of squares: strictly positive, with
+            // lognormal within-block spread around the block scale.
+            let spread = 10f64.powf(rng.normal() * 0.35);
+            r.push(((g_scale * spread).powi(2)) as f32);
+            i += 1;
+        }
+    }
+    (m, r)
+}
+
+/// The quantizer pair (signed for m, unsigned for r) for a format.
+pub fn quantizer_pair(format: Format, blockwise: bool) -> (BlockQuantizer, BlockQuantizer) {
+    let block = if blockwise { BLOCK } else { usize::MAX };
+    (
+        BlockQuantizer { codebook: format.signed_codebook(), block },
+        BlockQuantizer { codebook: format.unsigned_codebook(), block },
+    )
+}
+
+/// Figure 2 / Figure 6 data: dump a codebook's 256 values (sorted).
+pub fn codebook_dump(cb: &Codebook) -> Vec<(usize, f32)> {
+    cb.values().iter().copied().enumerate().collect()
+}
+
+/// Convenience: a quantizer over an explicit codebook.
+pub fn quantizer(cb: Codebook, blockwise: bool) -> BlockQuantizer {
+    let block = if blockwise { BLOCK } else { usize::MAX };
+    BlockQuantizer { codebook: Arc::new(cb), block }
+}

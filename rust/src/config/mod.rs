@@ -1,0 +1,298 @@
+//! Typed run configuration: model, optimizer, data, schedule, engine.
+//!
+//! Loaded from a TOML file (`configs/*.toml`), overridable from the CLI
+//! (`--lr 0.01 --optimizer adam8 ...`). Every experiment in
+//! EXPERIMENTS.md is a RunConfig.
+
+pub mod toml;
+
+use anyhow::{anyhow, Result};
+
+use crate::optim::{Bits, OptimConfig, OptimKind};
+use crate::quant::Format;
+use crate::util::args::Args;
+use toml::TomlDoc;
+
+/// Which engine performs the optimizer update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Fused multi-threaded Rust path (production hot path).
+    Native,
+    /// AOT Pallas/HLO artifacts executed via PJRT (the L1 kernels).
+    Hlo,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "native" => Some(Engine::Native),
+            "hlo" => Some(Engine::Hlo),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Hlo => "hlo",
+        }
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup over `warmup` steps then linear decay to 10% at `total`.
+    WarmupLinear { warmup: usize, total: usize },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, base: f32, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant => base,
+            Schedule::WarmupLinear { warmup, total } => {
+                if step < warmup {
+                    base * (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let p = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    base * (1.0 - 0.9 * p.min(1.0))
+                }
+            }
+        }
+    }
+}
+
+/// A full training-run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Manifest model name, e.g. "tiny" or "tiny_stable".
+    pub model: String,
+    pub optim: OptimConfig,
+    /// 32-bit optimizer state for embedding tensors (§2.3 policy).
+    pub emb32: bool,
+    /// Override the token-embedding init (Table 8 ablates Xavier vs the
+    /// fairseq normal init independently of the LayerNorm graph change).
+    pub emb_init_override: Option<String>,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub grad_clip: f32,
+    pub schedule: Schedule,
+    pub engine: Engine,
+    pub artifacts_dir: String,
+    /// Corpus noise level (LM difficulty).
+    pub data_noise: f64,
+    pub log_jsonl: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            optim: OptimConfig::adam(1e-3, Bits::B32),
+            emb32: false,
+            emb_init_override: None,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            seed: 42,
+            grad_clip: 1.0,
+            schedule: Schedule::Constant,
+            engine: Engine::Native,
+            artifacts_dir: "artifacts".into(),
+            data_noise: 0.25,
+            log_jsonl: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let d = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        cfg.model = d.str_or("model", "name", &cfg.model);
+        cfg.emb32 = d.bool_or("model", "emb32", cfg.emb32);
+        cfg.steps = d.usize_or("train", "steps", cfg.steps);
+        cfg.eval_every = d.usize_or("train", "eval_every", cfg.eval_every);
+        cfg.eval_batches = d.usize_or("train", "eval_batches", cfg.eval_batches);
+        cfg.seed = d.usize_or("train", "seed", cfg.seed as usize) as u64;
+        cfg.grad_clip = d.f64_or("train", "grad_clip", cfg.grad_clip as f64) as f32;
+        cfg.data_noise = d.f64_or("data", "noise", cfg.data_noise);
+        cfg.artifacts_dir = d.str_or("train", "artifacts_dir", &cfg.artifacts_dir);
+        let engine = d.str_or("train", "engine", cfg.engine.name());
+        cfg.engine = Engine::parse(&engine).ok_or_else(|| anyhow!("bad engine {engine:?}"))?;
+
+        let warmup = d.usize_or("train", "warmup", 0);
+        cfg.schedule = if warmup > 0 {
+            Schedule::WarmupLinear { warmup, total: cfg.steps }
+        } else {
+            Schedule::Constant
+        };
+
+        cfg.optim = parse_optim(
+            &d.str_or("optimizer", "kind", "adam"),
+            d.usize_or("optimizer", "bits", 32),
+            &d.str_or("optimizer", "format", "dynamic"),
+            d.bool_or("optimizer", "blockwise", true),
+        )?;
+        cfg.optim.lr = d.f64_or("optimizer", "lr", cfg.optim.lr as f64) as f32;
+        cfg.optim.beta1 = d.f64_or("optimizer", "beta1", cfg.optim.beta1 as f64) as f32;
+        cfg.optim.beta2 = d.f64_or("optimizer", "beta2", cfg.optim.beta2 as f64) as f32;
+        cfg.optim.eps = d.f64_or("optimizer", "eps", cfg.optim.eps as f64) as f32;
+        cfg.optim.weight_decay =
+            d.f64_or("optimizer", "weight_decay", cfg.optim.weight_decay as f64) as f32;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the file config.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(m) = a.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(o) = a.get("optimizer") {
+            // shorthand: adam | adam8 | momentum8 | adafactor | ...
+            let (kind, bits) = match o.strip_suffix('8') {
+                Some(base) => (base, 8),
+                None => (o, 32),
+            };
+            self.optim = parse_optim(
+                kind,
+                bits,
+                a.get_or("format", "dynamic"),
+                !a.flag("tensorwise"),
+            )?;
+        }
+        if let Some(v) = a.get("lr") {
+            self.optim.lr = v.parse()?;
+        }
+        if let Some(v) = a.get("beta1") {
+            self.optim.beta1 = v.parse()?;
+        }
+        if let Some(v) = a.get("beta2") {
+            self.optim.beta2 = v.parse()?;
+        }
+        if let Some(v) = a.get("eps") {
+            self.optim.eps = v.parse()?;
+        }
+        if let Some(v) = a.get("steps") {
+            self.steps = v.parse()?;
+        }
+        if let Some(v) = a.get("seed") {
+            self.seed = v.parse()?;
+        }
+        if let Some(v) = a.get("engine") {
+            self.engine = Engine::parse(v).ok_or_else(|| anyhow!("bad engine {v:?}"))?;
+        }
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts_dir = v.to_string();
+        }
+        if a.flag("emb32") {
+            self.emb32 = true;
+        }
+        if let Some(v) = a.get("log") {
+            self.log_jsonl = Some(v.to_string());
+        }
+        Ok(())
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} | {} | steps={} seed={} engine={} emb32={}",
+            self.model,
+            self.optim.describe(),
+            self.steps,
+            self.seed,
+            self.engine.name(),
+            self.emb32
+        )
+    }
+}
+
+/// Build an OptimConfig from string pieces (shared by TOML + CLI paths).
+pub fn parse_optim(kind: &str, bits: usize, format: &str, blockwise: bool) -> Result<OptimConfig> {
+    let kind = OptimKind::parse(kind).ok_or_else(|| anyhow!("unknown optimizer {kind:?}"))?;
+    let format = Format::parse(format).ok_or_else(|| anyhow!("unknown format {format:?}"))?;
+    let bits = match bits {
+        32 => Bits::B32,
+        8 => Bits::B8 { format, blockwise },
+        other => return Err(anyhow!("bits must be 8 or 32, got {other}")),
+    };
+    let mut cfg = OptimConfig::adam(1e-3, bits);
+    cfg.kind = kind;
+    if kind == OptimKind::Momentum || kind == OptimKind::Lars {
+        cfg.beta1 = 0.9;
+        cfg.beta2 = 0.0;
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip_with_toml() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[model]
+name = "tiny_stable"
+emb32 = true
+
+[optimizer]
+kind = "adam"
+bits = 8
+lr = 0.0163
+beta2 = 0.995
+
+[train]
+steps = 300
+warmup = 30
+engine = "native"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "tiny_stable");
+        assert!(cfg.emb32);
+        assert_eq!(cfg.optim.bits, Bits::b8_dynamic());
+        assert!((cfg.optim.lr - 0.0163).abs() < 1e-9);
+        assert_eq!(cfg.steps, 300);
+        assert!(matches!(cfg.schedule, Schedule::WarmupLinear { warmup: 30, total: 300 }));
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            ["train", "--optimizer", "adam8", "--lr", "0.01", "--steps", "5", "--emb32"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optim.bits, Bits::b8_dynamic());
+        assert_eq!(cfg.steps, 5);
+        assert!(cfg.emb32);
+    }
+
+    #[test]
+    fn schedule_warmup_then_decay() {
+        let s = Schedule::WarmupLinear { warmup: 10, total: 110 };
+        assert!(s.lr_at(1.0, 0) < 0.2);
+        assert!((s.lr_at(1.0, 9) - 1.0).abs() < 1e-6);
+        assert!(s.lr_at(1.0, 60) < 1.0);
+        assert!(s.lr_at(1.0, 109) >= 0.1 - 1e-6);
+    }
+
+    #[test]
+    fn parse_optim_rejects_bad_bits() {
+        assert!(parse_optim("adam", 16, "dynamic", true).is_err());
+        assert!(parse_optim("bogus", 8, "dynamic", true).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal TOML-subset parser (the `toml` crate is not in the offline
+//! registry). Supports what run configs need: `[section]` headers,
+//! `key = value` with strings, integers, floats, booleans, and comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live under "".
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .ok_or_else(|| anyhow!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if let Some(body) = v.strip_prefix('"') {
+        return body.strip_suffix('"').map(|s| TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !v.contains('.') && !v.contains('e') && !v.contains('E') {
+        if let Ok(i) = v.parse::<i64>() {
+            return Some(TomlValue::Int(i));
+        }
+    }
+    v.parse::<f64>().ok().map(TomlValue::Float)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# run config
+engine = "native"
+
+[model]
+preset = "tiny"        # preset name
+stable_embedding = true
+
+[optimizer]
+kind = "adam"
+lr = 1.6e-2
+bits = 8
+steps = 300
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.str_or("", "engine", "?"), "native");
+        assert_eq!(d.str_or("model", "preset", "?"), "tiny");
+        assert!(d.bool_or("model", "stable_embedding", false));
+        assert_eq!(d.f64_or("optimizer", "lr", 0.0), 1.6e-2);
+        assert_eq!(d.usize_or("optimizer", "bits", 0), 8);
+        assert_eq!(d.usize_or("optimizer", "steps", 0), 300);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.f64_or("optimizer", "nope", 7.5), 7.5);
+        assert_eq!(d.str_or("nope", "nope", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let d = TomlDoc::parse("name = \"a#b\" # trailing").unwrap();
+        assert_eq!(d.str_or("", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! JSONL metrics sink — one JSON object per line, append-only; the
+//! experiment harness and examples tail these files to build loss curves.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+pub struct JsonlSink {
+    w: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlSink> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        Ok(JsonlSink { w: BufWriter::new(f) })
+    }
+
+    pub fn write(&mut self, record: &Json) -> Result<()> {
+        self.w.write_all(record.to_string().as_bytes())?;
+        self.w.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Convenience: a training-step record.
+    pub fn step(&mut self, step: usize, loss: f64, lr: f64, extra: Vec<(&str, Json)>) -> Result<()> {
+        let mut pairs = vec![
+            ("kind", s("step")),
+            ("step", num(step as f64)),
+            ("loss", num(loss)),
+            ("lr", num(lr)),
+        ];
+        pairs.extend(extra);
+        self.write(&obj(pairs))
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_parseable_lines() {
+        let dir = std::env::temp_dir().join(format!("bitopt8_metrics_{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.step(1, 6.5, 1e-3, vec![("ppl", num(665.0))]).unwrap();
+            sink.step(2, 6.4, 1e-3, vec![]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[0]).unwrap();
+        assert_eq!(rec.get("step").as_usize(), Some(1));
+        assert_eq!(rec.get("ppl").as_f64(), Some(665.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

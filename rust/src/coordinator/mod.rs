@@ -1,0 +1,14 @@
+//! L3 coordinator: the training framework around the AOT artifacts.
+//!
+//! * [`trainer`] — parameter/optimizer ownership + the step loop.
+//! * [`stability`] — divergence detection (Table 3 "Unstable %").
+//! * [`metrics`] — JSONL metrics sink.
+//! * [`checkpoint`] — save/restore (lossless for 8-bit states).
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod stability;
+pub mod trainer;
+
+pub use stability::StabilityDetector;
+pub use trainer::{median_over_seeds, run_config, RunResult, Trainer};

@@ -1,0 +1,147 @@
+//! Training-stability detection (Table 3's "Unstable %").
+//!
+//! The paper counts a run as unsuccessful if it "crashes due to exploding
+//! gradients or diverges in the loss". We operationalize that as:
+//!   * any non-finite loss or gradient (the "crash"), or
+//!   * loss exceeding `initial + margin` nats for `patience` consecutive
+//!     observations after a short grace period (the "divergence"), or
+//!   * loss above a hard ceiling.
+
+#[derive(Clone, Debug)]
+pub struct StabilityDetector {
+    initial: Option<f64>,
+    bad_streak: usize,
+    steps_seen: usize,
+    pub margin: f64,
+    pub patience: usize,
+    pub grace: usize,
+    pub hard_ceiling: f64,
+    verdict: Option<&'static str>,
+}
+
+impl Default for StabilityDetector {
+    fn default() -> Self {
+        StabilityDetector {
+            initial: None,
+            bad_streak: 0,
+            steps_seen: 0,
+            margin: 2.0,
+            patience: 5,
+            grace: 5,
+            hard_ceiling: 30.0,
+            verdict: None,
+        }
+    }
+}
+
+impl StabilityDetector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one training loss; returns true while the run is healthy.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        if self.verdict.is_some() {
+            return false;
+        }
+        self.steps_seen += 1;
+        if !loss.is_finite() {
+            self.verdict = Some("non-finite loss");
+            return false;
+        }
+        if loss > self.hard_ceiling {
+            self.verdict = Some("loss above hard ceiling");
+            return false;
+        }
+        let initial = *self.initial.get_or_insert(loss);
+        if self.steps_seen > self.grace && loss > initial + self.margin {
+            self.bad_streak += 1;
+            if self.bad_streak >= self.patience {
+                self.verdict = Some("sustained divergence above initial loss");
+                return false;
+            }
+        } else {
+            self.bad_streak = 0;
+        }
+        true
+    }
+
+    /// Report a gradient crash (non-finite grads) directly.
+    pub fn report_grad_crash(&mut self) {
+        self.verdict = Some("non-finite gradients");
+    }
+
+    pub fn is_unstable(&self) -> bool {
+        self.verdict.is_some()
+    }
+
+    pub fn reason(&self) -> Option<&'static str> {
+        self.verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_run_stays_stable() {
+        let mut d = StabilityDetector::new();
+        for i in 0..100 {
+            assert!(d.observe(6.0 - i as f64 * 0.01));
+        }
+        assert!(!d.is_unstable());
+    }
+
+    #[test]
+    fn nan_is_immediately_unstable() {
+        let mut d = StabilityDetector::new();
+        d.observe(6.0);
+        assert!(!d.observe(f64::NAN));
+        assert!(d.is_unstable());
+        assert_eq!(d.reason(), Some("non-finite loss"));
+    }
+
+    #[test]
+    fn sustained_divergence_trips_after_patience() {
+        let mut d = StabilityDetector::new();
+        for _ in 0..10 {
+            d.observe(6.0);
+        }
+        for i in 0..d.patience {
+            let healthy = d.observe(9.5);
+            if i < d.patience - 1 {
+                assert!(healthy, "tripped too early at {i}");
+            }
+        }
+        assert!(d.is_unstable());
+    }
+
+    #[test]
+    fn transient_spike_is_forgiven() {
+        let mut d = StabilityDetector::new();
+        for _ in 0..10 {
+            d.observe(6.0);
+        }
+        d.observe(9.5); // single spike
+        for _ in 0..20 {
+            assert!(d.observe(5.5));
+        }
+        assert!(!d.is_unstable());
+    }
+
+    #[test]
+    fn hard_ceiling() {
+        let mut d = StabilityDetector::new();
+        assert!(!d.observe(1e6));
+        assert!(d.is_unstable());
+    }
+
+    #[test]
+    fn grad_crash() {
+        let mut d = StabilityDetector::new();
+        d.observe(6.0);
+        d.report_grad_crash();
+        assert!(d.is_unstable());
+    }
+}

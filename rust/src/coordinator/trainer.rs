@@ -1,0 +1,456 @@
+//! The training coordinator: owns parameters, optimizer state, the data
+//! pipeline and the step loop; drives the AOT train/eval artifacts through
+//! PJRT and applies optimizer updates with either engine:
+//!
+//! * `Engine::Native` — the fused multi-threaded Rust 8-bit optimizer
+//!   (production hot path; `optim::*`).
+//! * `Engine::Hlo` — the AOT Pallas kernels (`adam8_n*.hlo.txt`), i.e. the
+//!   L1 layer executing through PJRT. Tensors whose policy is 32-bit
+//!   state (stable-embedding §2.3) or whose size has no HLO artifact fall
+//!   back to the native path; `RunResult::hlo_updated_tensors` reports how
+//!   many went through HLO so tests can assert the path is exercised.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Engine, RunConfig};
+use crate::coordinator::metrics::JsonlSink;
+use crate::coordinator::stability::StabilityDetector;
+use crate::data::{corpus::Corpus, glue::GlueDataset};
+use crate::optim::{self, Bits, OptimKind, Optimizer};
+use crate::runtime::{self, ModelEntry, Runtime};
+use crate::util::json::num;
+use crate::util::rng::Rng;
+
+/// 8-bit optimizer state mirrored for the HLO engine (padded layout).
+struct HloState {
+    artifact: String,
+    codes1: Vec<u8>,
+    absmax1: Vec<f32>,
+    codes2: Vec<u8>,
+    absmax2: Vec<f32>,
+    /// momentum artifacts carry a single state
+    single_state: bool,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub model: ModelEntry,
+    pub cfg: RunConfig,
+    pub params: Vec<Vec<f32>>,
+    opts: Vec<Box<dyn Optimizer>>,
+    hlo: Vec<Option<HloState>>,
+    corpus: Option<Corpus>,
+    glue: Option<GlueDataset>,
+    data_rng: Rng,
+    eval_seed: u64,
+    pub detector: StabilityDetector,
+    metrics: Option<JsonlSink>,
+    pub step: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub losses: Vec<f64>,
+    pub evals: Vec<(usize, f64)>,
+    pub eval_accs: Vec<(usize, f64)>,
+    pub unstable: bool,
+    pub reason: Option<&'static str>,
+    pub final_eval: f64,
+    pub state_bytes: usize,
+    pub wall_secs: f64,
+    pub steps_done: usize,
+    pub hlo_updated_tensors: usize,
+}
+
+impl RunResult {
+    pub fn ppl(&self) -> f64 {
+        self.final_eval.exp()
+    }
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Trainer<'rt>> {
+        let manifest = rt.manifest()?;
+        let model = manifest.model(&cfg.model)?.clone();
+        let mut seed_rng = Rng::new(cfg.seed);
+        let mut init_rng = seed_rng.fork(1);
+        let data_rng = seed_rng.fork(2);
+        let eval_seed = seed_rng.fork(3).next_u64();
+
+        // Parameters from the manifest init contract (with the optional
+        // Table 8 embedding-init override).
+        let params: Vec<Vec<f32>> = model
+            .params
+            .iter()
+            .map(|p| {
+                if p.name == "embed.tok" {
+                    if let Some(init) = &cfg.emb_init_override {
+                        let mut spec = p.clone();
+                        spec.init = init.clone();
+                        return runtime::init_param(&spec, &mut init_rng);
+                    }
+                }
+                runtime::init_param(p, &mut init_rng)
+            })
+            .collect();
+
+        // Per-tensor optimizers with the stable-embedding 32-bit policy.
+        let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
+        for p in &model.params {
+            let mut ocfg = cfg.optim;
+            if cfg.emb32 && p.is_embedding {
+                ocfg.bits = Bits::B32;
+            }
+            let shape = if p.shape.len() == 2 { Some((p.shape[0], p.shape[1])) } else { None };
+            opts.push(optim::build(&ocfg, p.size, shape));
+        }
+
+        // HLO-engine state mirrors where applicable.
+        let mut hlo: Vec<Option<HloState>> = Vec::new();
+        for (p, opt) in model.params.iter().zip(&opts) {
+            let entry = if cfg.engine == Engine::Hlo {
+                Self::make_hlo_state(&manifest, &cfg, p.size, p.padded, opt.as_ref())
+            } else {
+                None
+            };
+            hlo.push(entry);
+        }
+
+        let (corpus, glue) = if model.task == "lm" {
+            (Some(Corpus::with_params(model.vocab, cfg.seed, 1.1, cfg.data_noise)), None)
+        } else {
+            let task = crate::data::glue::GLUE_TASKS
+                .iter()
+                .find(|t| t.n_classes == model.n_classes)
+                .cloned()
+                .unwrap_or(crate::data::glue::GLUE_TASKS[4].clone());
+            (None, Some(GlueDataset::generate(&task, model.vocab, model.seq_len, cfg.seed)))
+        };
+
+        let metrics = match &cfg.log_jsonl {
+            Some(path) => Some(JsonlSink::create(path)?),
+            None => None,
+        };
+
+        Ok(Trainer {
+            rt,
+            model,
+            cfg,
+            params,
+            opts,
+            hlo,
+            corpus,
+            glue,
+            data_rng,
+            eval_seed,
+            detector: StabilityDetector::new(),
+            metrics,
+            step: 0,
+        })
+    }
+
+    /// Use a specific GLUE task (Table 4 runs).
+    pub fn with_glue_task(mut self, task: &crate::data::glue::GlueTask) -> Result<Self> {
+        anyhow::ensure!(self.model.task == "cls", "glue task on a cls model only");
+        anyhow::ensure!(
+            task.n_classes <= self.model.n_classes,
+            "task has more classes than the model head"
+        );
+        self.glue = Some(GlueDataset::generate(
+            task,
+            self.model.vocab,
+            self.model.seq_len,
+            self.cfg.seed,
+        ));
+        Ok(self)
+    }
+
+    fn make_hlo_state(
+        manifest: &runtime::Manifest,
+        cfg: &RunConfig,
+        size: usize,
+        padded: usize,
+        opt: &dyn Optimizer,
+    ) -> Option<HloState> {
+        // Only quantized Adam/Momentum have HLO artifacts; 32-bit-policy
+        // tensors (emb32) keep the native engine.
+        let quantized = opt.states().iter().any(|(_, s)| s.is_quantized());
+        if !quantized {
+            return None;
+        }
+        let (kind_key, single) = match cfg.optim.kind {
+            OptimKind::Adam | OptimKind::AdamW => ("adam8", false),
+            OptimKind::Momentum => ("momentum8", true),
+            _ => return None,
+        };
+        let artifact = manifest.update_artifact(kind_key, size)?.to_string();
+        let cb_signed = crate::quant::dynamic_tree::dynamic_signed();
+        let zero = cb_signed.encode(0.0);
+        let cb_unsigned = crate::quant::dynamic_tree::dynamic_unsigned();
+        let zero_u = cb_unsigned.encode(0.0);
+        let nb = padded / manifest.block;
+        Some(HloState {
+            artifact,
+            codes1: vec![zero; padded],
+            absmax1: vec![0.0; nb],
+            codes2: if single { Vec::new() } else { vec![zero_u; padded] },
+            absmax2: if single { Vec::new() } else { vec![0.0; nb] },
+            single_state: single,
+        })
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.opts.iter().map(|o| o.state_bytes()).sum()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Build the LM token batch [B, S+1] (train) from a given rng.
+    fn lm_batch(&self, rng: &mut Rng) -> Vec<i32> {
+        let c = self.corpus.as_ref().expect("lm task");
+        c.batch(rng, self.model.batch, self.model.seq_len + 1)
+    }
+
+    /// One training step; returns the loss.
+    pub fn train_step(&mut self) -> Result<f64> {
+        let step_lr = self.cfg.schedule.lr_at(self.cfg.optim.lr, self.step);
+
+        // ---- forward/backward through the AOT train artifact -------------
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        for (vals, spec) in self.params.iter().zip(&self.model.params) {
+            inputs.push(runtime::lit_f32_shaped(vals, &spec.shape)?);
+        }
+        let mut rng = self.data_rng.clone();
+        let is_lm = self.model.task == "lm";
+        if is_lm {
+            let toks = self.lm_batch(&mut rng);
+            inputs.push(runtime::lit_i32_2d(&toks, self.model.batch, self.model.seq_len + 1)?);
+        } else {
+            let (mut toks, mut labels) = (Vec::new(), Vec::new());
+            self.glue
+                .as_ref()
+                .expect("cls task")
+                .train_batch(&mut rng, self.model.batch, &mut toks, &mut labels);
+            inputs.push(runtime::lit_i32_2d(&toks, self.model.batch, self.model.seq_len)?);
+            inputs.push(runtime::lit_i32(&labels));
+        }
+        self.data_rng = rng;
+
+        let outputs = self
+            .rt
+            .run(&self.model.train, &inputs)
+            .with_context(|| format!("train step on {}", self.model.train))?;
+        let n_aux = if is_lm { 1 } else { 2 };
+        anyhow::ensure!(
+            outputs.len() == n_aux + self.params.len(),
+            "expected {} outputs, got {}",
+            n_aux + self.params.len(),
+            outputs.len()
+        );
+        let loss = runtime::scalar_of(&outputs[0])? as f64;
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.params.len());
+        for out in &outputs[n_aux..] {
+            grads.push(runtime::f32_of(out)?);
+        }
+
+        // ---- gradient hygiene --------------------------------------------
+        let mut sq = 0.0f64;
+        let mut finite = true;
+        for g in &grads {
+            for &v in g {
+                if !v.is_finite() {
+                    finite = false;
+                    break;
+                }
+                sq += v as f64 * v as f64;
+            }
+        }
+        if !finite {
+            self.detector.report_grad_crash();
+            self.step += 1;
+            return Ok(loss);
+        }
+        let gnorm = sq.sqrt();
+        if self.cfg.grad_clip > 0.0 && gnorm > self.cfg.grad_clip as f64 {
+            let scale = (self.cfg.grad_clip as f64 / gnorm) as f32;
+            for g in grads.iter_mut() {
+                for v in g.iter_mut() {
+                    *v *= scale;
+                }
+            }
+        }
+
+        // ---- optimizer update (native or HLO engine) ---------------------
+        for i in 0..self.params.len() {
+            self.opts[i].set_lr(step_lr);
+            if self.hlo[i].is_some() {
+                self.hlo_update(i, step_lr, &grads[i])?;
+            } else {
+                self.opts[i].step(&mut self.params[i], &grads[i]);
+            }
+        }
+
+        self.detector.observe(loss);
+        self.step += 1;
+        if let Some(sink) = self.metrics.as_mut() {
+            sink.step(self.step, loss, step_lr as f64, vec![("gnorm", num(gnorm))])?;
+        }
+        Ok(loss)
+    }
+
+    /// Apply the update for tensor `i` through its HLO artifact.
+    fn hlo_update(&mut self, i: usize, lr: f32, grads: &[f32]) -> Result<()> {
+        let o = &mut self.opts[i];
+        o.set_t(o.t() + 1);
+        let t = o.t();
+        let cfg = &self.cfg.optim;
+        let st = self.hlo[i].as_mut().expect("hlo state");
+        let hp: [f32; 8] = if st.single_state {
+            [lr, cfg.beta1, cfg.weight_decay, if t <= 1 { 1.0 } else { 0.0 }, 0.0, 0.0, 0.0, 0.0]
+        } else {
+            let bias1 = 1.0 - cfg.beta1.powi(t as i32);
+            let bias2 = 1.0 - cfg.beta2.powi(t as i32);
+            [lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay, bias1, bias2, 0.0]
+        };
+        let mut inputs = vec![
+            runtime::lit_f32(&hp),
+            runtime::lit_f32(&self.params[i]),
+            runtime::lit_f32(grads),
+            runtime::lit_u8(&st.codes1)?,
+            runtime::lit_f32(&st.absmax1),
+        ];
+        if !st.single_state {
+            inputs.push(runtime::lit_u8(&st.codes2)?);
+            inputs.push(runtime::lit_f32(&st.absmax2));
+        }
+        let outputs = self.rt.run(&st.artifact, &inputs)?;
+        self.params[i] = runtime::f32_of(&outputs[0])?;
+        st.codes1 = runtime::u8_of(&outputs[1])?;
+        st.absmax1 = runtime::f32_of(&outputs[2])?;
+        if !st.single_state {
+            st.codes2 = runtime::u8_of(&outputs[3])?;
+            st.absmax2 = runtime::f32_of(&outputs[4])?;
+        }
+        Ok(())
+    }
+
+    /// Evaluation loss (and accuracy for cls) on held-out batches.
+    pub fn evaluate(&mut self) -> Result<(f64, Option<f64>)> {
+        let mut rng = Rng::new(self.eval_seed);
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+            for (vals, spec) in self.params.iter().zip(&self.model.params) {
+                inputs.push(runtime::lit_f32_shaped(vals, &spec.shape)?);
+            }
+            if self.model.task == "lm" {
+                let toks = self.lm_batch(&mut rng);
+                inputs.push(runtime::lit_i32_2d(
+                    &toks,
+                    self.model.batch,
+                    self.model.seq_len + 1,
+                )?);
+            } else {
+                let ds = self.glue.as_ref().expect("cls");
+                // fixed eval set, batch-sized windows (wrapping)
+                let n = ds.eval_labels.len();
+                let b = self.model.batch;
+                let start = (losses.len() * b) % n;
+                let mut toks = Vec::with_capacity(b * self.model.seq_len);
+                let mut labels = Vec::with_capacity(b);
+                for k in 0..b {
+                    let idx = (start + k) % n;
+                    toks.extend_from_slice(
+                        &ds.eval_tokens[idx * ds.seq_len..(idx + 1) * ds.seq_len],
+                    );
+                    labels.push(ds.eval_labels[idx]);
+                }
+                inputs.push(runtime::lit_i32_2d(&toks, b, self.model.seq_len)?);
+                inputs.push(runtime::lit_i32(&labels));
+            }
+            let outputs = self.rt.run(&self.model.eval, &inputs)?;
+            losses.push(runtime::scalar_of(&outputs[0])? as f64);
+            if self.model.task != "lm" {
+                accs.push(runtime::scalar_of(&outputs[1])? as f64);
+            }
+        }
+        let mean_loss = crate::util::stats::mean(&losses);
+        let mean_acc = if accs.is_empty() { None } else { Some(crate::util::stats::mean(&accs)) };
+        Ok((mean_loss, mean_acc))
+    }
+
+    /// Run the configured number of steps (stopping early on instability).
+    pub fn train(&mut self) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut res = RunResult {
+            state_bytes: self.state_bytes(),
+            hlo_updated_tensors: self.hlo.iter().filter(|h| h.is_some()).count(),
+            ..Default::default()
+        };
+        for _ in 0..self.cfg.steps {
+            let loss = self.train_step()?;
+            res.losses.push(loss);
+            if self.detector.is_unstable() {
+                break;
+            }
+            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+                let (el, acc) = self.evaluate()?;
+                res.evals.push((self.step, el));
+                if let Some(a) = acc {
+                    res.eval_accs.push((self.step, a));
+                }
+            }
+        }
+        if !self.detector.is_unstable() {
+            let (el, acc) = self.evaluate()?;
+            res.evals.push((self.step, el));
+            if let Some(a) = acc {
+                res.eval_accs.push((self.step, a));
+            }
+        }
+        res.unstable = self.detector.is_unstable();
+        res.reason = self.detector.reason();
+        res.final_eval = res.evals.last().map(|&(_, l)| l).unwrap_or(f64::NAN);
+        res.steps_done = self.step;
+        res.wall_secs = t0.elapsed().as_secs_f64();
+        if let Some(m) = self.metrics.as_mut() {
+            m.flush()?;
+        }
+        Ok(res)
+    }
+
+    /// Dequantized snapshots of every optimizer state (Figure 4 capture).
+    pub fn state_snapshot(&self) -> Vec<(String, Vec<f32>)> {
+        let mut out = Vec::new();
+        for (spec, opt) in self.model.params.iter().zip(&self.opts) {
+            for (name, st) in opt.states() {
+                out.push((format!("{}::{}", spec.name, name), st.to_f32()));
+            }
+        }
+        out
+    }
+}
+
+/// Convenience used by the repro harness: run one config end to end.
+pub fn run_config(rt: &Runtime, cfg: RunConfig) -> Result<RunResult> {
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.train()
+}
+
+/// Reduce a set of seeds to the paper's reporting convention: median over
+/// *successful* runs + instability percentage.
+pub fn median_over_seeds(results: &[RunResult]) -> (f64, f64) {
+    let ok: Vec<f64> = results
+        .iter()
+        .filter(|r| !r.unstable && r.final_eval.is_finite())
+        .map(|r| r.final_eval)
+        .collect();
+    let unstable_pct = 100.0 * (results.len() - ok.len()) as f64 / results.len().max(1) as f64;
+    let med = crate::util::stats::median(&ok);
+    (med, unstable_pct)
+}

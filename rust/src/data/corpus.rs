@@ -1,0 +1,167 @@
+//! Synthetic LM corpus: Zipfian unigram marginals + learnable Markov
+//! structure.
+//!
+//! Natural-language corpora have (a) heavily skewed token frequencies —
+//! exactly what destabilizes embedding gradients per Appendix C — and (b)
+//! predictable local structure that lets a transformer reduce loss well
+//! below the unigram entropy. The generator mixes a deterministic
+//! per-token successor map (learnable signal) with Zipf(α) noise:
+//!
+//!   next = succ[cur]           with prob 1 − noise
+//!   next ~ Zipf(α)             otherwise
+//!
+//! The optimal cross-entropy is ≈ H(noise) + noise·H(Zipf) < log V, so a
+//! training run has real headroom and a divergent run is unmistakable.
+
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone)]
+pub struct Corpus {
+    vocab: usize,
+    noise: f64,
+    succ: Vec<u32>,
+    zipf: Zipf,
+}
+
+impl Corpus {
+    /// Standard corpus: α = 1.1, 25% noise.
+    pub fn new(vocab: usize, seed: u64) -> Corpus {
+        Corpus::with_params(vocab, seed, 1.1, 0.25)
+    }
+
+    pub fn with_params(vocab: usize, seed: u64, alpha: f64, noise: f64) -> Corpus {
+        assert!(vocab >= 4);
+        let mut rng = Rng::new(seed ^ 0xC0_4F_05);
+        // Random permutation as the successor map (Fisher–Yates) — every
+        // token has exactly one "correct" next token.
+        let mut succ: Vec<u32> = (0..vocab as u32).collect();
+        for i in (1..vocab).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            succ.swap(i, j);
+        }
+        Corpus { vocab, noise, succ, zipf: Zipf::new(vocab, alpha) }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Sample one continuation token.
+    #[inline]
+    pub fn next_token(&self, cur: u32, rng: &mut Rng) -> u32 {
+        if rng.coin(self.noise) {
+            self.zipf.sample(rng) as u32
+        } else {
+            self.succ[cur as usize]
+        }
+    }
+
+    /// Fill `out` with `batch` sequences of `seq` tokens each (row-major),
+    /// as i32 for the int32 HLO token inputs.
+    pub fn fill_batch(&self, rng: &mut Rng, out: &mut [i32], batch: usize, seq: usize) {
+        assert_eq!(out.len(), batch * seq);
+        for b in 0..batch {
+            let mut cur = self.zipf.sample(rng) as u32;
+            for s in 0..seq {
+                out[b * seq + s] = cur as i32;
+                cur = self.next_token(cur, rng);
+            }
+        }
+    }
+
+    /// Allocate-and-fill convenience.
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Vec<i32> {
+        let mut out = vec![0i32; batch * seq];
+        self.fill_batch(rng, &mut out, batch, seq);
+        out
+    }
+
+    /// Approximate floor on the per-token cross-entropy (nats): the
+    /// conditional entropy of the generator given the previous token,
+    /// H ≈ h(p) + p·H(Zipf) with h the binary entropy of the noise coin.
+    pub fn entropy_floor(&self) -> f64 {
+        let p = self.noise;
+        let h_coin = if p > 0.0 && p < 1.0 {
+            -(1.0 - p) * (1.0 - p).ln() - p * p.ln()
+        } else {
+            0.0
+        };
+        // Zipf entropy from the unnormalized weights.
+        let alpha = 1.1;
+        let total: f64 = (1..=self.vocab).map(|i| 1.0 / (i as f64).powf(alpha)).sum();
+        let hz: f64 = (1..=self.vocab)
+            .map(|i| {
+                let q = (1.0 / (i as f64).powf(alpha)) / total;
+                -q * q.ln()
+            })
+            .sum();
+        h_coin + p * hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_tokens_in_range() {
+        let c = Corpus::new(512, 7);
+        let mut rng = Rng::new(1);
+        let b = c.batch(&mut rng, 8, 65);
+        assert_eq!(b.len(), 8 * 65);
+        assert!(b.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn marginals_are_zipfian_skewed() {
+        let c = Corpus::new(256, 9);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 256];
+        for _ in 0..200 {
+            for &t in &c.batch(&mut rng, 4, 128) {
+                counts[t as usize] += 1;
+            }
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        let total: usize = counts.iter().sum();
+        assert!(top10 as f64 / total as f64 > 0.1, "not skewed enough");
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // Successor map: given cur, the modal next token is succ[cur].
+        let c = Corpus::with_params(128, 3, 1.1, 0.25);
+        let mut rng = Rng::new(3);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let b = c.batch(&mut rng, 2, 64);
+            for row in b.chunks(64) {
+                for w in row.windows(2) {
+                    total += 1;
+                    if c.succ[w[0] as usize] == w[1] as u32 {
+                        correct += 1;
+                    }
+                }
+            }
+        }
+        let frac = correct as f64 / total as f64;
+        assert!(frac > 0.7, "successor followed only {frac}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = Corpus::new(512, 42);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(c.batch(&mut r1, 4, 32), c.batch(&mut r2, 4, 32));
+    }
+
+    #[test]
+    fn entropy_floor_below_log_vocab() {
+        let c = Corpus::new(512, 1);
+        let h = c.entropy_floor();
+        assert!(h > 0.0 && h < (512f64).ln(), "floor {h}");
+    }
+}

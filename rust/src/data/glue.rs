@@ -1,0 +1,175 @@
+//! GLUE-like synthetic classification tasks (the Table 4 workload).
+//!
+//! Eight tasks named after the GLUE suite, with sizes/difficulties scaled
+//! so the per-task accuracy spread resembles the paper's Table 4 (large
+//! tasks near ceiling, CoLA-like tasks noisy). Each task is a trigger-token
+//! detection problem: the label is determined by which of `n_classes`
+//! class-specific trigger-token groups dominates the sequence, with label
+//! noise flipping a fraction of examples.
+
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct GlueTask {
+    pub name: &'static str,
+    pub n_classes: usize,
+    pub train_examples: usize,
+    pub eval_examples: usize,
+    /// Probability an example's label is resampled uniformly (difficulty).
+    pub label_noise: f64,
+    /// Trigger tokens injected per example (signal strength).
+    pub triggers_per_example: usize,
+}
+
+/// The eight GLUE datasets of Table 4, as synthetic analogues. STS-B (a
+/// regression task) is substituted with 4-way classification — documented
+/// in DESIGN.md §Substitutions.
+pub const GLUE_TASKS: [GlueTask; 8] = [
+    GlueTask { name: "MNLI", n_classes: 3, train_examples: 6000, eval_examples: 512, label_noise: 0.05, triggers_per_example: 6 },
+    GlueTask { name: "QNLI", n_classes: 2, train_examples: 4000, eval_examples: 512, label_noise: 0.04, triggers_per_example: 6 },
+    GlueTask { name: "QQP", n_classes: 2, train_examples: 6000, eval_examples: 512, label_noise: 0.06, triggers_per_example: 6 },
+    GlueTask { name: "RTE", n_classes: 2, train_examples: 800, eval_examples: 256, label_noise: 0.12, triggers_per_example: 4 },
+    GlueTask { name: "SST-2", n_classes: 2, train_examples: 3000, eval_examples: 512, label_noise: 0.03, triggers_per_example: 8 },
+    GlueTask { name: "MRPC", n_classes: 2, train_examples: 1200, eval_examples: 256, label_noise: 0.08, triggers_per_example: 5 },
+    GlueTask { name: "CoLA", n_classes: 2, train_examples: 2000, eval_examples: 256, label_noise: 0.20, triggers_per_example: 3 },
+    GlueTask { name: "STS-B", n_classes: 4, train_examples: 2000, eval_examples: 256, label_noise: 0.10, triggers_per_example: 5 },
+];
+
+pub struct GlueDataset {
+    pub task: GlueTask,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub train_tokens: Vec<i32>,
+    pub train_labels: Vec<i32>,
+    pub eval_tokens: Vec<i32>,
+    pub eval_labels: Vec<i32>,
+}
+
+impl GlueDataset {
+    /// Materialize a task. Trigger tokens for class c live in the id range
+    /// [vocab - n_classes*8 + c*8, +8); the rest of the sequence is
+    /// Zipfian filler.
+    pub fn generate(task: &GlueTask, vocab: usize, seq_len: usize, seed: u64) -> GlueDataset {
+        assert!(vocab > task.n_classes * 8 + 16);
+        let mut rng = Rng::new(seed ^ 0x61_4C_55_45);
+        let zipf = Zipf::new(vocab - task.n_classes * 8, 1.1);
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut toks = Vec::with_capacity(n * seq_len);
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                let label = rng.below(task.n_classes as u64) as usize;
+                let mut row: Vec<i32> =
+                    (0..seq_len).map(|_| zipf.sample(rng) as i32).collect();
+                // inject class triggers at random positions
+                for _ in 0..task.triggers_per_example {
+                    let pos = rng.below(seq_len as u64) as usize;
+                    let trig = vocab - task.n_classes * 8 + label * 8
+                        + rng.below(8) as usize;
+                    row[pos] = trig as i32;
+                }
+                let observed = if rng.coin(task.label_noise) {
+                    rng.below(task.n_classes as u64) as usize
+                } else {
+                    label
+                };
+                toks.extend_from_slice(&row);
+                labels.push(observed as i32);
+            }
+            (toks, labels)
+        };
+        let (train_tokens, train_labels) = gen(task.train_examples, &mut rng);
+        let (eval_tokens, eval_labels) = gen(task.eval_examples, &mut rng);
+        GlueDataset {
+            task: task.clone(),
+            vocab,
+            seq_len,
+            train_tokens,
+            train_labels,
+            eval_tokens,
+            eval_labels,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    /// Copy batch `idx` (wrapping) into the provided buffers.
+    pub fn train_batch(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        tokens_out: &mut Vec<i32>,
+        labels_out: &mut Vec<i32>,
+    ) {
+        tokens_out.clear();
+        labels_out.clear();
+        for _ in 0..batch {
+            let i = rng.below(self.n_train() as u64) as usize;
+            tokens_out
+                .extend_from_slice(&self.train_tokens[i * self.seq_len..(i + 1) * self.seq_len]);
+            labels_out.push(self.train_labels[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_tasks_with_glue_names() {
+        let names: Vec<_> = GLUE_TASKS.iter().map(|t| t.name).collect();
+        assert_eq!(names, vec!["MNLI", "QNLI", "QQP", "RTE", "SST-2", "MRPC", "CoLA", "STS-B"]);
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let ds = GlueDataset::generate(&GLUE_TASKS[4], 1024, 64, 1);
+        assert_eq!(ds.train_tokens.len(), ds.n_train() * 64);
+        assert_eq!(ds.eval_tokens.len(), ds.eval_labels.len() * 64);
+        assert!(ds.train_labels.iter().all(|&l| (0..2).contains(&l)));
+    }
+
+    #[test]
+    fn triggers_make_task_solvable_by_counting() {
+        // A bag-of-triggers classifier should beat chance comfortably.
+        let task = &GLUE_TASKS[4]; // SST-2
+        let ds = GlueDataset::generate(task, 1024, 64, 2);
+        let base = 1024 - task.n_classes * 8;
+        let mut correct = 0;
+        for (i, &label) in ds.eval_labels.iter().enumerate() {
+            let row = &ds.eval_tokens[i * 64..(i + 1) * 64];
+            let mut counts = vec![0usize; task.n_classes];
+            for &t in row {
+                let t = t as usize;
+                if t >= base {
+                    counts[(t - base) / 8] += 1;
+                }
+            }
+            let pred = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .unwrap()
+                .0;
+            if pred == label as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.eval_labels.len() as f64;
+        assert!(acc > 0.85, "bag-of-triggers acc {acc}");
+    }
+
+    #[test]
+    fn batches_are_deterministic_per_seed() {
+        let ds = GlueDataset::generate(&GLUE_TASKS[0], 1024, 32, 3);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let (mut t1, mut l1, mut t2, mut l2) = (vec![], vec![], vec![], vec![]);
+        ds.train_batch(&mut r1, 8, &mut t1, &mut l1);
+        ds.train_batch(&mut r2, 8, &mut t2, &mut l2);
+        assert_eq!(t1, t2);
+        assert_eq!(l1, l2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic data pipeline.
+//!
+//! The paper trains on CC-100/RoBERTa-corpus-scale text; offline we build
+//! the closest synthetic equivalent that exercises the same code paths
+//! (DESIGN.md §Substitutions): a Zipfian token stream with learnable
+//! Markov structure for language modeling, and a family of GLUE-like
+//! classification tasks for the Table 4 workload.
+
+pub mod corpus;
+pub mod glue;
+
+pub use corpus::Corpus;
+pub use glue::{GlueTask, GLUE_TASKS};

@@ -1,0 +1,27 @@
+//! # bitopt8
+//!
+//! Production-style reproduction of **"8-bit Optimizers via Block-wise
+//! Quantization"** (Dettmers et al., ICLR 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): block-wise
+//!   quantize/dequantize and fused 8-bit optimizer updates.
+//! * **L2** — JAX transformer LM + optimizer graphs
+//!   (`python/compile/model.py`, `optim8.py`), AOT-lowered to HLO text.
+//! * **L3** — this crate: the training coordinator, the numeric-format and
+//!   optimizer substrates, the PJRT runtime, and the benchmark/analysis
+//!   harnesses that regenerate every table and figure of the paper.
+//!
+//! Python never runs on the training path; after `make artifacts` the
+//! binary is self-contained.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,177 @@
+//! bitopt8 CLI — launcher for training runs, paper-table reproduction,
+//! and quantization analysis.
+//!
+//! ```text
+//! bitopt8 train   [--config cfg.toml] [--model tiny_stable] [--optimizer adam8] ...
+//! bitopt8 repro   table1|table2|...|table8|fig3 [--steps N] [--seeds K]
+//! bitopt8 analyze fig2|fig4|fig5|fig6 [--n N]
+//! bitopt8 info    [--artifacts DIR]
+//! ```
+
+use anyhow::Result;
+
+use bitopt8::analysis;
+use bitopt8::config::RunConfig;
+use bitopt8::coordinator::Trainer;
+use bitopt8::quant::{dynamic_tree, linear, quantile, Format};
+use bitopt8::repro;
+use bitopt8::runtime::Runtime;
+use bitopt8::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("repro") => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all-static");
+            repro::run(id, &args)
+        }
+        Some("analyze") => cmd_analyze(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: bitopt8 <train|repro|analyze|info> [options]\n\
+                 (see module docs in rust/src/main.rs; tables/figures: DESIGN.md §4)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    println!("run: {}", cfg.describe());
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    println!(
+        "model {}: {:.2}M params, optimizer state {:.2} MB",
+        tr.model.name,
+        tr.n_params() as f64 / 1e6,
+        tr.state_bytes() as f64 / 1e6,
+    );
+    let res = tr.train()?;
+    println!("{} tensors updated via the HLO (Pallas) engine", res.hlo_updated_tensors);
+    let first = res.losses.first().copied().unwrap_or(f64::NAN);
+    let last = res.losses.last().copied().unwrap_or(f64::NAN);
+    println!(
+        "steps {} | loss {:.4} -> {:.4} | eval {:.4} (ppl {:.2}) | unstable: {}{} | {:.1}s",
+        res.steps_done,
+        first,
+        last,
+        res.final_eval,
+        res.ppl(),
+        res.unstable,
+        res.reason.map(|r| format!(" ({r})")).unwrap_or_default(),
+        res.wall_secs
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig2");
+    match which {
+        // Figure 2: the dynamic-tree data type — dump codebooks + bit semantics.
+        "fig2" => {
+            let mut csv = String::from("codebook,index,value\n");
+            for cb in [dynamic_tree::dynamic_signed(), dynamic_tree::dynamic_unsigned()] {
+                for (i, v) in analysis::codebook_dump(&cb) {
+                    csv.push_str(&format!("{},{},{:e}\n", cb.name(), i, v));
+                }
+            }
+            let path = repro::write_csv("fig2_codebooks.csv", &csv)?;
+            println!("dynamic tree quantization (Figure 2)");
+            for byte in [0b0_0000001u8, 0b0_0010110, 0b0_1011010, 0b1_0010110] {
+                let (sign, zeros, frac) = dynamic_tree::describe_bit_pattern(byte);
+                println!(
+                    "  byte {byte:#010b}: sign {sign:+}, exponent 10^-{zeros}, fraction bits {frac:#b}"
+                );
+            }
+            println!("-> {}", path.display());
+        }
+        // Figure 4: 256x256 usage + error maps for linear / dynamic /
+        // blockwise-dynamic.
+        "fig4" => {
+            let n = args.get_usize("n", 1 << 20);
+            let (m, r) = analysis::synth_adam_states(n, 0xF16_4);
+            for (tag, format, blockwise) in [
+                ("linear", Format::Linear, false),
+                ("dynamic", Format::Dynamic, false),
+                ("blockwise_dynamic", Format::Dynamic, true),
+            ] {
+                let (bm, br) = analysis::quantizer_pair(format, blockwise);
+                let maps = analysis::adam_error_maps(&bm, &br, &m, &r, 1e-8);
+                let path = repro::write_csv(&format!("fig4_{tag}.csv"), &maps.to_csv())?;
+                println!(
+                    "{tag:<18} mean abs err {:.4e}  mean rel err {:.3}  high-use/high-err overlap {:.3} -> {}",
+                    maps.overall_abs(),
+                    maps.overall_rel(),
+                    maps.high_use_high_error_overlap(),
+                    path.display()
+                );
+            }
+        }
+        // Figure 5: per-code Adam error distribution, dynamic vs quantile.
+        "fig5" => {
+            let n = args.get_usize("n", 1 << 20);
+            let (m, r) = analysis::synth_adam_states(n, 0xF16_5);
+            for (tag, format) in [("dynamic", Format::Dynamic), ("quantile", Format::Quantile)] {
+                let (bm, br) = analysis::quantizer_pair(format, true);
+                let rows = analysis::per_code_error(&bm, &br, &m, &r, 1e-8);
+                let mut csv = String::from("norm_value,mean_abs_adam_err,usage\n");
+                for (p, e, u) in rows {
+                    csv.push_str(&format!("{p},{e:.6e},{u}\n"));
+                }
+                let path = repro::write_csv(&format!("fig5_{tag}.csv"), &csv)?;
+                println!("{tag:<10} -> {}", path.display());
+            }
+        }
+        // Figure 6: quantization maps for linear / dynamic / quantile.
+        "fig6" => {
+            let mut csv = String::from("codebook,index,value\n");
+            for cb in [
+                linear::linear_signed(),
+                dynamic_tree::dynamic_signed(),
+                quantile::quantile_normal(),
+            ] {
+                for (i, v) in analysis::codebook_dump(&cb) {
+                    csv.push_str(&format!("{},{},{:e}\n", cb.name(), i, v));
+                }
+            }
+            let path = repro::write_csv("fig6_quantization_maps.csv", &csv)?;
+            println!("-> {}", path.display());
+        }
+        other => anyhow::bail!("unknown analysis {other:?}; known: fig2, fig4, fig5, fig6"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let m = rt.manifest()?;
+    println!("artifacts: {} | block size {}", rt.artifacts_dir().display(), m.block);
+    println!("codebooks: {:?}", m.codebooks.keys().collect::<Vec<_>>());
+    println!("models:");
+    for model in &m.models {
+        println!(
+            "  {:<16} task={:<3} {:>8.2}M params, {} tensors, batch {} x seq {}",
+            model.name,
+            model.task,
+            model.n_params as f64 / 1e6,
+            model.params.len(),
+            model.batch,
+            model.seq_len
+        );
+    }
+    for (kind, sizes) in &m.updates {
+        println!("updates[{kind}]: {} sizes", sizes.len());
+    }
+    Ok(())
+}

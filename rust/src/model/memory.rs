@@ -1,0 +1,165 @@
+//! Analytic training-memory model (Tables 1 & 2).
+//!
+//! Follows the paper's accounting: training memory = weights + gradients +
+//! optimizer state + activations. The experiments keep weights/gradients
+//! at 16-bit mixed precision and vary only the optimizer state:
+//!   32-bit Adam  : 8 bytes/param
+//!   32-bit Momentum: 4 bytes/param
+//!   Adafactor(β1>0): 4 bytes/param (+ tiny factored second moment)
+//!   8-bit Adam   : 2 bytes/param + 8/B bytes absmax overhead
+//!   8-bit Momentum: 1 byte/param + 4/B
+//! Activation memory is estimated for batch size one at the model's native
+//! sequence length (Table 2 uses batch 1).
+
+use crate::quant::BLOCK;
+
+/// Optimizer-state families the tables compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptStateKind {
+    Adam32,
+    Momentum32,
+    Adafactor,
+    Adam8,
+    Momentum8,
+}
+
+impl OptStateKind {
+    pub fn bytes_per_param(&self) -> f64 {
+        match self {
+            OptStateKind::Adam32 => 8.0,
+            OptStateKind::Momentum32 => 4.0,
+            OptStateKind::Adafactor => 4.0,
+            OptStateKind::Adam8 => 2.0 + 8.0 / BLOCK as f64,
+            OptStateKind::Momentum8 => 1.0 + 4.0 / BLOCK as f64,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptStateKind::Adam32 => "32-bit Adam",
+            OptStateKind::Momentum32 => "32-bit Momentum",
+            OptStateKind::Adafactor => "32-bit Adafactor",
+            OptStateKind::Adam8 => "8-bit Adam",
+            OptStateKind::Momentum8 => "8-bit Momentum",
+        }
+    }
+}
+
+/// A named pretrained model for the Table 2 sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct NamedModel {
+    pub name: &'static str,
+    pub params: f64,
+    pub d_model: f64,
+    pub n_layers: f64,
+    pub seq_len: f64,
+}
+
+/// The model family of Table 2.
+pub const KNOWN_MODELS: [NamedModel; 7] = [
+    NamedModel { name: "RoBERTa-base (110M)", params: 110e6, d_model: 768.0, n_layers: 12.0, seq_len: 512.0 },
+    NamedModel { name: "MT5-small (300M)", params: 300e6, d_model: 512.0, n_layers: 8.0, seq_len: 512.0 },
+    NamedModel { name: "RoBERTa-large (355M)", params: 355e6, d_model: 1024.0, n_layers: 24.0, seq_len: 512.0 },
+    NamedModel { name: "MT5-base (580M)", params: 580e6, d_model: 768.0, n_layers: 12.0, seq_len: 512.0 },
+    NamedModel { name: "GPT-2-medium (762M)", params: 762e6, d_model: 1024.0, n_layers: 24.0, seq_len: 1024.0 },
+    NamedModel { name: "MT5-large (1.2B)", params: 1.2e9, d_model: 1024.0, n_layers: 24.0, seq_len: 512.0 },
+    NamedModel { name: "GPT-2-large (1.5B)", params: 1.5e9, d_model: 1280.0, n_layers: 36.0, seq_len: 1024.0 },
+];
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    /// bytes per weight (2 = fp16 mixed precision, the paper's setting)
+    pub weight_bytes: f64,
+    pub grad_bytes: f64,
+    /// master fp32 weights kept by mixed-precision training
+    pub master_weights: bool,
+    pub batch: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel { weight_bytes: 2.0, grad_bytes: 2.0, master_weights: true, batch: 1.0 }
+    }
+}
+
+impl MemoryModel {
+    /// Optimizer-state bytes for `params` parameters.
+    pub fn state_bytes(&self, params: f64, kind: OptStateKind) -> f64 {
+        // Stable-embedding policy keeps ~2% of params in 32-bit state;
+        // negligible at this granularity, ignored (paper does the same in
+        // its GB-level accounting).
+        params * kind.bytes_per_param()
+    }
+
+    /// Total training footprint in bytes (batch-1 activations).
+    pub fn total_bytes(&self, m: &NamedModel, kind: OptStateKind) -> f64 {
+        let w = m.params * self.weight_bytes;
+        let g = m.params * self.grad_bytes;
+        let master = if self.master_weights { m.params * 4.0 } else { 0.0 };
+        let state = self.state_bytes(m.params, kind);
+        // Activation estimate: ~12 · L · B · S · d bytes at fp16 with
+        // checkpoint-free attention (a standard rough rule).
+        let act = 12.0 * m.n_layers * self.batch * m.seq_len * m.d_model * 2.0;
+        // CUDA context + workspace overhead.
+        let overhead = 1.0e9;
+        w + g + master + state + act + overhead
+    }
+
+    /// Memory saved vs 32-bit Adam, in GB (Table 1 "Mem saved").
+    pub fn saved_vs_adam32_gb(&self, params: f64, kind: OptStateKind) -> f64 {
+        (self.state_bytes(params, OptStateKind::Adam32) - self.state_bytes(params, kind)) / 1e9
+    }
+
+    /// Largest model from `KNOWN_MODELS` trainable within `budget_gb`.
+    pub fn largest_finetunable(&self, budget_gb: f64, kind: OptStateKind) -> Option<NamedModel> {
+        KNOWN_MODELS
+            .iter()
+            .filter(|m| self.total_bytes(m, kind) <= budget_gb * 1e9)
+            .max_by(|a, b| a.params.partial_cmp(&b.params).unwrap())
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_bytes_ratios() {
+        let mm = MemoryModel::default();
+        let p = 1e9;
+        assert_eq!(mm.state_bytes(p, OptStateKind::Adam32), 8e9);
+        let b8 = mm.state_bytes(p, OptStateKind::Adam8);
+        assert!(b8 > 2e9 && b8 < 2.01e9, "{b8}");
+    }
+
+    #[test]
+    fn paper_headline_gpt2_adam_state_is_about_11gb() {
+        // §Intro: "Adam optimizer states for the largest GPT-2 ... are 11 GB"
+        let mm = MemoryModel::default();
+        let gb = mm.state_bytes(1.5e9, OptStateKind::Adam32) / 1e9;
+        assert!((gb - 12.0).abs() < 2.0, "{gb}");
+    }
+
+    #[test]
+    fn eight_bit_admits_larger_models_at_every_budget() {
+        let mm = MemoryModel::default();
+        for budget in [6.0, 11.0, 24.0] {
+            let m32 = mm.largest_finetunable(budget, OptStateKind::Adam32);
+            let m8 = mm.largest_finetunable(budget, OptStateKind::Adam8);
+            let p32 = m32.map(|m| m.params).unwrap_or(0.0);
+            let p8 = m8.map(|m| m.params).unwrap_or(0.0);
+            assert!(p8 > p32, "budget {budget}: 8-bit {p8} vs 32-bit {p32}");
+        }
+    }
+
+    #[test]
+    fn totals_monotone_in_state_cost() {
+        let mm = MemoryModel::default();
+        let m = KNOWN_MODELS[2];
+        let t32 = mm.total_bytes(&m, OptStateKind::Adam32);
+        let taf = mm.total_bytes(&m, OptStateKind::Adafactor);
+        let t8 = mm.total_bytes(&m, OptStateKind::Adam8);
+        assert!(t32 > taf && taf > t8);
+    }
+}

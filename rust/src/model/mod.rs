@@ -1,0 +1,7 @@
+//! Model-side substrates: the analytic memory-footprint model used for
+//! Table 1's "Mem saved" column and Table 2's largest-finetunable-model
+//! analysis.
+
+pub mod memory;
+
+pub use memory::{MemoryModel, NamedModel, OptStateKind, KNOWN_MODELS};

@@ -1,0 +1,235 @@
+//! Adafactor (Shazeer & Stern 2018) — the paper's main memory-efficiency
+//! baseline (Tables 1, 4). Per the paper's setup we use the β1 > 0 variant
+//! with the *time-independent* β2 formulation (same decay as Adam), no
+//! hyperparameter re-tuning.
+//!
+//! For 2-D tensors the second moment is factored into row/col sums:
+//!   R_i ← β2 R_i + (1−β2) Σ_j (g²+ε)_ij,  C_j ← β2 C_j + (1−β2) Σ_i (g²+ε)_ij
+//!   V̂_ij = R_i C_j / Σ_i R_i
+//! update u = g/√V̂, RMS-clipped to d=1.0; first moment m = β1 m + (1−β1) u;
+//! w −= lr · m. 1-D tensors fall back to an unfactored second moment.
+//!
+//! All states are 32-bit (that is Adafactor's point); with β1 > 0 the full
+//! first moment dominates: ≈4 bytes/param ≈ half of 32-bit Adam — exactly
+//! the "competitive but still 2× 8-bit Adam" memory row in Table 1.
+
+use super::state::StateTensor;
+use super::{OptimConfig, Optimizer};
+
+const EPS1: f32 = 1e-30; // regularizer added to g² (paper's ε₁)
+const CLIP_D: f32 = 1.0; // update RMS clip threshold
+
+pub struct Adafactor {
+    cfg: OptimConfig,
+    /// First moment, full size (β1 > 0 variant).
+    m: StateTensor,
+    /// Factored second moment for 2-D tensors...
+    row: Vec<f32>,
+    col: Vec<f32>,
+    /// ...or the full second moment for 1-D tensors.
+    v: Vec<f32>,
+    shape: Option<(usize, usize)>,
+    t: u64,
+}
+
+impl Adafactor {
+    pub fn new(cfg: OptimConfig, n: usize, shape: Option<(usize, usize)>) -> Adafactor {
+        let factored = matches!(shape, Some((r, c)) if r > 1 && c > 1 && r * c == n);
+        let shape = if factored { shape } else { None };
+        let (rows, cols) = shape.unwrap_or((0, 0));
+        Adafactor {
+            cfg,
+            m: StateTensor::new_f32(n),
+            row: vec![0.0; rows],
+            col: vec![0.0; cols],
+            v: if factored { Vec::new() } else { vec![0.0; n] },
+            shape,
+            t: 0,
+        }
+    }
+
+    pub fn is_factored(&self) -> bool {
+        self.shape.is_some()
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let cfg = self.cfg;
+        let b2 = cfg.beta2;
+        let bias_c2 = 1.0 - b2.powi(self.t as i32);
+        let n = params.len();
+
+        // Update second-moment statistics and compute v̂ lookup.
+        let vhat_at: Box<dyn Fn(usize) -> f32> = if let Some((rows, cols)) = self.shape {
+            for (i, r) in self.row.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for j in 0..cols {
+                    let g = grads[i * cols + j];
+                    s += g * g + EPS1;
+                }
+                *r = b2 * *r + (1.0 - b2) * s;
+            }
+            for (j, c) in self.col.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for i in 0..rows {
+                    let g = grads[i * cols + j];
+                    s += g * g + EPS1;
+                }
+                *c = b2 * *c + (1.0 - b2) * s;
+            }
+            let row_sum: f32 = self.row.iter().sum::<f32>().max(EPS1);
+            let row = self.row.clone();
+            let col = self.col.clone();
+            Box::new(move |idx: usize| {
+                let (i, j) = (idx / cols, idx % cols);
+                (row[i] * col[j] / row_sum / bias_c2).max(EPS1)
+            })
+        } else {
+            for (v, &g) in self.v.iter_mut().zip(grads) {
+                *v = b2 * *v + (1.0 - b2) * (g * g + EPS1);
+            }
+            let v = self.v.clone();
+            Box::new(move |idx: usize| (v[idx] / bias_c2).max(EPS1))
+        };
+
+        // u = g/√v̂, RMS-clipped.
+        let mut u: Vec<f32> = (0..n).map(|i| grads[i] / vhat_at(i).sqrt()).collect();
+        let rms = (u.iter().map(|&x| x as f64 * x as f64).sum::<f64>() / n as f64).sqrt() as f32;
+        if rms > CLIP_D {
+            let s = CLIP_D / rms;
+            for x in u.iter_mut() {
+                *x *= s;
+            }
+        }
+
+        // First moment + apply.
+        let StateTensor::F32(m) = &mut self.m else { unreachable!("adafactor m is f32") };
+        for i in 0..n {
+            m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * u[i];
+            let mut step = cfg.lr * m[i];
+            if cfg.weight_decay != 0.0 {
+                step += cfg.lr * cfg.weight_decay * params[i];
+            }
+            params[i] -= step;
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.bytes() + (self.row.len() + self.col.len() + self.v.len()) * 4
+    }
+
+    fn name(&self) -> String {
+        "32-bit adafactor".into()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("m", &self.m)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("m", &mut self.m)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{Bits, OptimKind};
+    use crate::util::rng::Rng;
+
+    fn cfg(lr: f32) -> OptimConfig {
+        OptimConfig {
+            kind: OptimKind::Adafactor,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            bits: Bits::B32,
+        }
+    }
+
+    #[test]
+    fn factored_only_for_true_2d() {
+        assert!(Adafactor::new(cfg(0.01), 100, Some((10, 10))).is_factored());
+        assert!(!Adafactor::new(cfg(0.01), 100, Some((1, 100))).is_factored());
+        assert!(!Adafactor::new(cfg(0.01), 100, None).is_factored());
+    }
+
+    #[test]
+    fn factored_memory_is_much_smaller_than_adam() {
+        let n = 512 * 512;
+        let af = Adafactor::new(cfg(0.01), n, Some((512, 512)));
+        let adam = super::super::adam::Adam::new(
+            OptimConfig::adam(0.01, Bits::B32),
+            n,
+        );
+        // m (4n) + row+col (tiny) ≈ half of Adam's 8n.
+        let ratio = adam.state_bytes() as f64 / af.state_bytes() as f64;
+        assert!(ratio > 1.9 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn converges_on_quadratic_2d() {
+        let (rows, cols) = (32, 32);
+        let n = rows * cols;
+        let mut rng = Rng::new(14);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Adafactor::new(cfg(0.05), n, Some((rows, cols)));
+        for _ in 0..1500 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 5e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn unfactored_1d_converges() {
+        let n = 512;
+        let mut rng = Rng::new(15);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Adafactor::new(cfg(0.05), n, None);
+        for _ in 0..1500 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 5e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn update_rms_is_clipped() {
+        // Huge gradient on fresh state: u = g/|g| has RMS 1, stays ≤ d.
+        let mut opt = Adafactor::new(cfg(1.0), 16, None);
+        let mut p = vec![0.0f32; 16];
+        let g = vec![1e6f32; 16];
+        opt.step(&mut p, &g);
+        // step ≤ lr·(1-β1)·d per element after clipping
+        for &v in &p {
+            assert!(v.abs() <= 1.0 + 1e-5, "{v}");
+        }
+    }
+}

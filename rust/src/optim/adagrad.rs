@@ -1,0 +1,163 @@
+//! AdaGrad (Duchi et al. 2011) — Table 7 / Appendix H comparison.
+//!
+//! Accumulates squared gradients over the *whole* run, so the state spans a
+//! much wider dynamic range than Adam's smoothed moments — the regime where
+//! the paper observes 8-bit quantization to be hardest. The 8-bit variant
+//! optionally uses stochastic rounding, which Appendix H suggests helps for
+//! AdaGrad-style accumulators.
+
+use super::state::{for_each_block, StateTensor};
+use super::{make_state, OptimConfig, Optimizer};
+
+pub struct Adagrad {
+    cfg: OptimConfig,
+    acc: StateTensor,
+    t: u64,
+}
+
+impl Adagrad {
+    pub fn new(cfg: OptimConfig, n: usize) -> Adagrad {
+        Adagrad { cfg, acc: make_state(&cfg.bits, n, false), t: 0 }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let cfg = self.cfg;
+        let block = cfg.bits.state_block(params.len());
+        for_each_block(params, grads, &mut self.acc, None, block, |ctx| {
+            let mut scratch: Vec<f32> = Vec::new();
+            {
+                let acc = ctx.s1.load(&mut scratch);
+                for i in 0..ctx.params.len() {
+                    let mut g = ctx.grads[i];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * ctx.params[i];
+                    }
+                    acc[i] += g * g;
+                    ctx.params[i] -= cfg.lr * g / (acc[i].max(0.0).sqrt() + cfg.eps);
+                }
+            }
+            ctx.s1.store(&scratch);
+        });
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.acc.bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("{} adagrad", self.cfg.bits.describe())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("acc", &self.acc)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("acc", &mut self.acc)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{Bits, OptimKind};
+    use crate::util::rng::Rng;
+
+    fn cfg(lr: f32, bits: Bits) -> OptimConfig {
+        OptimConfig {
+            kind: OptimKind::Adagrad,
+            lr,
+            beta1: 0.0,
+            beta2: 0.0,
+            eps: 1e-10,
+            weight_decay: 0.0,
+            bits,
+        }
+    }
+
+    #[test]
+    fn accumulator_is_monotone_nondecreasing() {
+        let n = 256;
+        let mut opt = Adagrad::new(cfg(0.1, Bits::B32), n);
+        let mut rng = Rng::new(6);
+        let mut p = vec![0.0f32; n];
+        let mut prev = vec![0.0f32; n];
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            opt.step(&mut p, &g);
+            let acc = opt.acc.to_f32();
+            for (a, b) in acc.iter().zip(&prev) {
+                assert!(a >= b);
+            }
+            prev = acc;
+        }
+    }
+
+    #[test]
+    fn effective_lr_decays() {
+        // With constant gradient 1.0 the step size shrinks ~1/sqrt(t).
+        let mut opt = Adagrad::new(cfg(1.0, Bits::B32), 1);
+        let mut p = vec![0.0f32];
+        let mut steps = Vec::new();
+        let mut last = 0.0f32;
+        for _ in 0..10 {
+            opt.step(&mut p, &[1.0]);
+            steps.push(last - p[0]);
+            last = p[0];
+        }
+        for w in steps.windows(2) {
+            assert!(w[1] < w[0] + 1e-6);
+        }
+        assert!((steps[0] - 1.0).abs() < 1e-3); // first step = lr*g/sqrt(g^2)
+    }
+
+    #[test]
+    fn adagrad32_converges_on_quadratic() {
+        let n = 1024;
+        let mut rng = Rng::new(7);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Adagrad::new(cfg(0.5, Bits::B32), n);
+        for _ in 0..800 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 1e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn adagrad8_remains_finite_over_long_run() {
+        // The hard case (Appendix H): accumulator spans a wide range.
+        let n = 2048;
+        let mut opt = Adagrad::new(cfg(0.1, Bits::b8_dynamic()), n);
+        let mut rng = Rng::new(8);
+        let mut p = vec![0.0f32; n];
+        for _ in 0..300 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            opt.step(&mut p, &g);
+        }
+        assert!(p.iter().all(|v| v.is_finite()));
+        assert!(opt.acc.to_f32().iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,255 @@
+//! Adam / AdamW with 32-bit or 8-bit block-wise quantized states (Eq. 2).
+//!
+//! The 8-bit step is the paper's Figure 1 pipeline: per quantization block,
+//! dequantize m and r to 32-bit scratch, apply the exact 32-bit Adam rule,
+//! requantize. m uses the signed codebook, r (strictly positive) the
+//! unsigned one (§2.2).
+
+use super::state::{for_each_block, StateTensor};
+use super::{make_state, OptimConfig, OptimKind, Optimizer};
+
+pub struct Adam {
+    cfg: OptimConfig,
+    m: StateTensor,
+    r: StateTensor,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(cfg: OptimConfig, n: usize) -> Adam {
+        debug_assert!(matches!(cfg.kind, OptimKind::Adam | OptimKind::AdamW));
+        Adam {
+            cfg,
+            m: make_state(&cfg.bits, n, true),
+            r: make_state(&cfg.bits, n, false),
+            t: 0,
+        }
+    }
+
+    /// The elementwise 32-bit update rule, shared by every precision path
+    /// (and mirrored by the Pallas kernel `kernels/adam8bit.py`).
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_rule(
+        p: &mut f32,
+        g: f32,
+        m: &mut f32,
+        r: &mut f32,
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        decoupled_wd: bool,
+        bias_c1: f32,
+        bias_c2: f32,
+    ) {
+        let g = if !decoupled_wd && weight_decay != 0.0 { g + weight_decay * *p } else { g };
+        *m = beta1 * *m + (1.0 - beta1) * g;
+        *r = beta2 * *r + (1.0 - beta2) * g * g;
+        let m_hat = *m / bias_c1;
+        let r_hat = *r / bias_c2;
+        let mut step = lr * m_hat / (r_hat.sqrt() + eps);
+        if decoupled_wd && weight_decay != 0.0 {
+            step += lr * weight_decay * *p;
+        }
+        *p -= step;
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let t = self.t;
+        let cfg = self.cfg;
+        let bias_c1 = 1.0 - cfg.beta1.powi(t as i32);
+        let bias_c2 = 1.0 - cfg.beta2.powi(t as i32);
+        let decoupled = cfg.kind == OptimKind::AdamW;
+        let block = cfg.bits.state_block(params.len());
+        // Per-thread reusable scratch (§Perf: a Vec allocation per block
+        // dominated the fused loop before this).
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
+        for_each_block(params, grads, &mut self.m, Some(&mut self.r), block, |ctx| {
+            SCRATCH.with(|cell| {
+                let (scratch_m, scratch_r) = &mut *cell.borrow_mut();
+                {
+                    let m = ctx.s1.load(scratch_m);
+                    let s2 = ctx.s2.as_mut().expect("adam has two states");
+                    let r = s2.load(scratch_r);
+                    for i in 0..ctx.params.len() {
+                        Self::update_rule(
+                            &mut ctx.params[i],
+                            ctx.grads[i],
+                            &mut m[i],
+                            &mut r[i],
+                            cfg.lr,
+                            cfg.beta1,
+                            cfg.beta2,
+                            cfg.eps,
+                            cfg.weight_decay,
+                            decoupled,
+                            bias_c1,
+                            bias_c2,
+                        );
+                    }
+                }
+                ctx.s1.store(scratch_m);
+                ctx.s2.as_mut().unwrap().store(scratch_r);
+            });
+        });
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.bytes() + self.r.bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("{} {}", self.cfg.bits.describe(), self.cfg.kind.name())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("m", &self.m), ("r", &self.r)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("m", &mut self.m), ("r", &mut self.r)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::Bits;
+    use crate::util::rng::Rng;
+
+    fn quadratic_grads(p: &[f32], target: &[f32]) -> Vec<f32> {
+        // loss = 0.5 * ||p - target||^2  ->  grad = p - target
+        p.iter().zip(target).map(|(a, b)| a - b).collect()
+    }
+
+    #[test]
+    fn adam32_converges_on_quadratic() {
+        let n = 4096;
+        let mut rng = Rng::new(1);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Adam::new(OptimConfig::adam(0.05, Bits::B32), n);
+        for _ in 0..500 {
+            let g = quadratic_grads(&p, &target);
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 1e-3, "mse {mse}");
+    }
+
+    #[test]
+    fn adam8_tracks_adam32_closely() {
+        // The paper's core claim at micro scale: the 8-bit trajectory stays
+        // close to the 32-bit one on a well-conditioned problem.
+        let n = 8192;
+        let mut rng = Rng::new(2);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p32 = vec![0.0f32; n];
+        let mut p8 = vec![0.0f32; n];
+        let mut o32 = Adam::new(OptimConfig::adam(0.05, Bits::B32), n);
+        let mut o8 = Adam::new(OptimConfig::adam(0.05, Bits::b8_dynamic()), n);
+        for _ in 0..300 {
+            let g32 = quadratic_grads(&p32, &target);
+            o32.step(&mut p32, &g32);
+            let g8 = quadratic_grads(&p8, &target);
+            o8.step(&mut p8, &g8);
+        }
+        let mse32: f32 =
+            p32.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        let mse8: f32 =
+            p8.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse32 < 1e-3);
+        assert!(mse8 < 5e-3, "8-bit mse {mse8} vs 32-bit {mse32}");
+    }
+
+    #[test]
+    fn adamw_decoupled_weight_decay_shrinks_params() {
+        let n = 128;
+        let mut cfg = OptimConfig::adam(0.0, Bits::B32); // lr used by wd term
+        cfg.kind = OptimKind::AdamW;
+        cfg.lr = 0.1;
+        cfg.weight_decay = 0.1;
+        let mut opt = Adam::new(cfg, n);
+        let mut p = vec![1.0f32; n];
+        let g = vec![0.0f32; n];
+        opt.step(&mut p, &g);
+        // zero grad: p shrinks by exactly lr*wd*p
+        for &v in &p {
+            assert!((v - (1.0 - 0.1 * 0.1)).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn adam_coupled_weight_decay_enters_moments() {
+        let n = 16;
+        let mut cfg = OptimConfig::adam(0.01, Bits::B32);
+        cfg.weight_decay = 0.5;
+        let mut opt = Adam::new(cfg, n);
+        let mut p = vec![2.0f32; n];
+        let g = vec![0.0f32; n];
+        opt.step(&mut p, &g);
+        // grad becomes wd*p = 1.0, so m > 0 after one step
+        let m = opt.m.to_f32();
+        assert!(m.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn bias_correction_first_step_matches_closed_form() {
+        // After one step from zero state: m_hat = g, r_hat = g^2, so
+        // p -= lr * g/(|g| + eps) = lr * sign(g) (approximately).
+        let mut opt = Adam::new(OptimConfig::adam(0.1, Bits::B32), 4);
+        let mut p = vec![0.0f32; 4];
+        let g = vec![0.5f32, -0.5, 2.0, -2.0];
+        opt.step(&mut p, &g);
+        for (v, gi) in p.iter().zip(&g) {
+            let expect = -0.1 * gi.signum();
+            assert!((v - expect).abs() < 1e-3, "{v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn second_state_stays_nonnegative_in_8bit() {
+        let n = 4096;
+        let mut opt = Adam::new(OptimConfig::adam(0.01, Bits::b8_dynamic()), n);
+        let mut rng = Rng::new(3);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            opt.step(&mut p, &g);
+        }
+        assert!(opt.r.to_f32().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn state_bytes_8bit_close_to_2_bytes_per_param() {
+        let n = 1 << 16;
+        let opt = Adam::new(OptimConfig::adam(0.01, Bits::b8_dynamic()), n);
+        let per = opt.state_bytes() as f64 / n as f64;
+        assert!(per < 2.02, "{per}");
+    }
+}

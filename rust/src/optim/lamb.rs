@@ -1,0 +1,187 @@
+//! LAMB (You et al. 2019) — Adam with a per-tensor trust ratio. Appears in
+//! Table 5's runtime comparison. 8-bit variant quantizes the two Adam
+//! moments exactly like 8-bit Adam; the trust-ratio norms are computed on
+//! the dequantized update in the same fused pass.
+//!
+//! u = m̂/(√r̂ + ε) + wd·w;  trust = ‖w‖/‖u‖ (1 if either is 0);
+//! w −= lr · trust · u.
+
+use super::lars::l2_norm;
+use super::state::{for_each_block, StateTensor};
+use super::{make_state, OptimConfig, Optimizer};
+
+pub struct Lamb {
+    cfg: OptimConfig,
+    m: StateTensor,
+    r: StateTensor,
+    /// Per-step update direction (reused buffer; not optimizer state).
+    u: Vec<f32>,
+    t: u64,
+}
+
+impl Lamb {
+    pub fn new(cfg: OptimConfig, n: usize) -> Lamb {
+        Lamb {
+            cfg,
+            m: make_state(&cfg.bits, n, true),
+            r: make_state(&cfg.bits, n, false),
+            u: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let cfg = self.cfg;
+        let bias_c1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bias_c2 = 1.0 - cfg.beta2.powi(self.t as i32);
+
+        // Pass 1: update moments, materialize the un-trust-scaled update u.
+        {
+            let u = &mut self.u;
+            // params are only read in pass 1 (wd term); split borrow via raw
+            // chunks: use the block walker on u as the "params" slot.
+            let block = cfg.bits.state_block(u.len());
+            let p_ro: &[f32] = params;
+            for_each_block(u, grads, &mut self.m, Some(&mut self.r), block, |ctx| {
+                let mut scratch_m: Vec<f32> = Vec::new();
+                let mut scratch_r: Vec<f32> = Vec::new();
+                {
+                    let m = ctx.s1.load(&mut scratch_m);
+                    let s2 = ctx.s2.as_mut().expect("lamb has two states");
+                    let r = s2.load(&mut scratch_r);
+                    for i in 0..ctx.params.len() {
+                        let g = ctx.grads[i];
+                        m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
+                        r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * g * g;
+                        let m_hat = m[i] / bias_c1;
+                        let r_hat = r[i] / bias_c2;
+                        ctx.params[i] = m_hat / (r_hat.sqrt() + cfg.eps)
+                            + cfg.weight_decay * p_ro[ctx.start + i];
+                    }
+                }
+                ctx.s1.store(&scratch_m);
+                ctx.s2.as_mut().unwrap().store(&scratch_r);
+            });
+        }
+
+        // Trust ratio from whole-tensor norms.
+        let w_norm = l2_norm(params) as f32;
+        let u_norm = l2_norm(&self.u) as f32;
+        let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
+        let step = cfg.lr * trust;
+
+        // Pass 2: apply.
+        for (p, &u) in params.iter_mut().zip(self.u.iter()) {
+            *p -= step * u;
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        // u is transient scratch, not persistent optimizer state, but we
+        // still report it: it exists for the lifetime of the optimizer.
+        self.m.bytes() + self.r.bytes() + self.u.len() * 4
+    }
+
+    fn name(&self) -> String {
+        format!("{} lamb", self.cfg.bits.describe())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("m", &self.m), ("r", &self.r)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("m", &mut self.m), ("r", &mut self.r)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{Bits, OptimKind};
+    use crate::util::rng::Rng;
+
+    fn cfg(lr: f32, bits: Bits) -> OptimConfig {
+        OptimConfig {
+            kind: OptimKind::Lamb,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.0,
+            bits,
+        }
+    }
+
+    #[test]
+    fn lamb32_converges_on_quadratic() {
+        let n = 1024;
+        let mut rng = Rng::new(12);
+        let target: Vec<f32> = (0..n).map(|_| 1.0 + rng.normal() as f32 * 0.3).collect();
+        let mut p = vec![3.0f32; n];
+        let mut opt = Lamb::new(cfg(0.05, Bits::B32), n);
+        for _ in 0..800 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 1e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn trust_ratio_normalizes_step_scale() {
+        // LAMB's step magnitude is set by ||w||, not by gradient scale:
+        // scaling the gradient by 1000x should barely change the step.
+        let make = || Lamb::new(cfg(0.1, Bits::B32), 64);
+        let mut p1 = vec![1.0f32; 64];
+        let mut p2 = vec![1.0f32; 64];
+        let g1 = vec![0.001f32; 64];
+        let g2 = vec![1.0f32; 64];
+        let mut o1 = make();
+        let mut o2 = make();
+        o1.step(&mut p1, &g1);
+        o2.step(&mut p2, &g2);
+        let s1 = (1.0 - p1[0]).abs();
+        let s2 = (1.0 - p2[0]).abs();
+        assert!((s1 - s2).abs() < s2 * 0.1, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn lamb8_finite_and_converging() {
+        let n = 4096;
+        let mut rng = Rng::new(13);
+        let target: Vec<f32> = (0..n).map(|_| 1.0 + rng.normal() as f32 * 0.3).collect();
+        let mut p = vec![3.0f32; n];
+        let mut opt = Lamb::new(cfg(0.05, Bits::b8_dynamic()), n);
+        let mse0: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        for _ in 0..400 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(p.iter().all(|v| v.is_finite()));
+        assert!(mse < mse0 * 0.05, "mse {mse} (from {mse0})");
+    }
+}

@@ -1,0 +1,170 @@
+//! LARS (You et al. 2017) — layer-wise adaptive rate scaling on top of
+//! momentum. Appears in the paper's Table 5 runtime comparison; the 8-bit
+//! variant quantizes the momentum state exactly like 8-bit Momentum.
+//!
+//! trust λ = η·‖w‖ / (‖g‖ + wd·‖w‖ + ε); m = β·m + lr·λ·(g + wd·w);
+//! w −= m. One tensor = one "layer" (the coordinator builds per-tensor
+//! optimizers).
+
+use super::state::{for_each_block, StateTensor};
+use super::{make_state, OptimConfig, Optimizer};
+use crate::util::parallel;
+
+/// Default trust coefficient η from the LARS paper.
+pub const TRUST_COEFF: f32 = 0.001;
+
+pub struct Lars {
+    cfg: OptimConfig,
+    m: StateTensor,
+    t: u64,
+}
+
+impl Lars {
+    pub fn new(cfg: OptimConfig, n: usize) -> Lars {
+        Lars { cfg, m: make_state(&cfg.bits, n, true), t: 0 }
+    }
+}
+
+/// ‖x‖₂ computed in parallel chunks with f64 accumulation.
+pub(crate) fn l2_norm(x: &[f32]) -> f64 {
+    let chunks = x.len().div_ceil(1 << 16).max(1);
+    let partial = parallel::par_map(chunks, |c| {
+        let lo = c * (1 << 16);
+        let hi = (lo + (1 << 16)).min(x.len());
+        x[lo..hi].iter().map(|&v| v as f64 * v as f64).sum::<f64>()
+    });
+    partial.into_iter().sum::<f64>().sqrt()
+}
+
+impl Optimizer for Lars {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let cfg = self.cfg;
+        let w_norm = l2_norm(params) as f32;
+        let g_norm = l2_norm(grads) as f32;
+        let trust = if w_norm > 0.0 && g_norm > 0.0 {
+            TRUST_COEFF * w_norm / (g_norm + cfg.weight_decay * w_norm + 1e-9)
+        } else {
+            1.0
+        };
+        let scaled_lr = cfg.lr * trust;
+        let block = cfg.bits.state_block(params.len());
+        for_each_block(params, grads, &mut self.m, None, block, |ctx| {
+            let mut scratch: Vec<f32> = Vec::new();
+            {
+                let m = ctx.s1.load(&mut scratch);
+                for i in 0..ctx.params.len() {
+                    let g = ctx.grads[i] + cfg.weight_decay * ctx.params[i];
+                    m[i] = cfg.beta1 * m[i] + scaled_lr * g;
+                    ctx.params[i] -= m[i];
+                }
+            }
+            ctx.s1.store(&scratch);
+        });
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("{} lars", self.cfg.bits.describe())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("m", &self.m)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("m", &mut self.m)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{Bits, OptimKind};
+    use crate::util::rng::Rng;
+
+    fn cfg(lr: f32, bits: Bits) -> OptimConfig {
+        OptimConfig {
+            kind: OptimKind::Lars,
+            lr,
+            beta1: 0.9,
+            beta2: 0.0,
+            eps: 0.0,
+            weight_decay: 0.0,
+            bits,
+        }
+    }
+
+    #[test]
+    fn l2_norm_matches_naive() {
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..200_000).map(|_| rng.normal() as f32).collect();
+        let naive: f64 = x.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        assert!((l2_norm(&x) - naive).abs() < 1e-6 * naive);
+    }
+
+    #[test]
+    fn trust_ratio_scales_update_with_weight_norm() {
+        // Bigger weights => bigger trust => bigger step, same gradient.
+        let g = vec![0.1f32; 64];
+        let mut p_small = vec![0.1f32; 64];
+        let mut p_big = vec![10.0f32; 64];
+        let mut o1 = Lars::new(cfg(1.0, Bits::B32), 64);
+        let mut o2 = Lars::new(cfg(1.0, Bits::B32), 64);
+        let s0 = p_small[0];
+        let b0 = p_big[0];
+        o1.step(&mut p_small, &g);
+        o2.step(&mut p_big, &g);
+        let step_small = (s0 - p_small[0]).abs();
+        let step_big = (b0 - p_big[0]).abs();
+        assert!(step_big > step_small * 10.0, "{step_big} vs {step_small}");
+    }
+
+    #[test]
+    fn lars32_converges_on_quadratic() {
+        let n = 512;
+        let mut rng = Rng::new(10);
+        let target: Vec<f32> = (0..n).map(|_| 1.0 + rng.normal() as f32 * 0.1).collect();
+        let mut p = vec![2.0f32; n];
+        let mut opt = Lars::new(cfg(20.0, Bits::B32), n);
+        for _ in 0..2000 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 1e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn lars8_finite_and_close() {
+        let n = 4096;
+        let mut rng = Rng::new(11);
+        let mut p = vec![1.0f32; n];
+        let mut opt = Lars::new(cfg(1.0, Bits::b8_dynamic()), n);
+        for _ in 0..100 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.01).collect();
+            opt.step(&mut p, &g);
+        }
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,149 @@
+//! SGD with Momentum (Eq. 1) — single signed state, 32-bit or 8-bit.
+//!
+//! Follows the paper's formulation (PyTorch-style, no dampening):
+//! `m_t = β1 m_{t-1} + g_t`, `w_t = w_{t-1} − α m_t`, with `m_0 = g_0`
+//! (the first step uses the raw gradient).
+
+use super::state::{for_each_block, StateTensor};
+use super::{make_state, OptimConfig, Optimizer};
+
+pub struct Momentum {
+    cfg: OptimConfig,
+    m: StateTensor,
+    t: u64,
+}
+
+impl Momentum {
+    pub fn new(cfg: OptimConfig, n: usize) -> Momentum {
+        Momentum { cfg, m: make_state(&cfg.bits, n, true), t: 0 }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let first = self.t == 1;
+        let cfg = self.cfg;
+        let block = cfg.bits.state_block(params.len());
+        for_each_block(params, grads, &mut self.m, None, block, |ctx| {
+            let mut scratch: Vec<f32> = Vec::new();
+            {
+                let m = ctx.s1.load(&mut scratch);
+                for i in 0..ctx.params.len() {
+                    let mut g = ctx.grads[i];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * ctx.params[i];
+                    }
+                    m[i] = if first { g } else { cfg.beta1 * m[i] + g };
+                    ctx.params[i] -= cfg.lr * m[i];
+                }
+            }
+            ctx.s1.store(&scratch);
+        });
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("{} momentum", self.cfg.bits.describe())
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("m", &self.m)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("m", &mut self.m)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::Bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn first_step_initializes_state_with_gradient() {
+        let mut opt = Momentum::new(OptimConfig::momentum(0.1, 0.9, Bits::B32), 4);
+        let mut p = vec![0.0f32; 4];
+        let g = vec![1.0f32, -2.0, 0.5, 0.0];
+        opt.step(&mut p, &g);
+        let m = opt.m.to_f32();
+        assert_eq!(m, g);
+        assert_eq!(p[0], -0.1);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Momentum::new(OptimConfig::momentum(0.0, 0.9, Bits::B32), 1);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0]);
+        opt.step(&mut p, &[1.0]);
+        let m = opt.m.to_f32();
+        assert!((m[0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum32_converges_on_quadratic() {
+        let n = 1024;
+        let mut rng = Rng::new(4);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Momentum::new(OptimConfig::momentum(0.02, 0.9, Bits::B32), n);
+        for _ in 0..600 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 1e-4, "mse {mse}");
+    }
+
+    #[test]
+    fn momentum8_close_to_momentum32() {
+        let n = 4096;
+        let mut rng = Rng::new(5);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p32 = vec![0.0f32; n];
+        let mut p8 = vec![0.0f32; n];
+        let mut o32 = Momentum::new(OptimConfig::momentum(0.02, 0.9, Bits::B32), n);
+        let mut o8 = Momentum::new(OptimConfig::momentum(0.02, 0.9, Bits::b8_dynamic()), n);
+        for _ in 0..400 {
+            let g32: Vec<f32> = p32.iter().zip(&target).map(|(a, b)| a - b).collect();
+            o32.step(&mut p32, &g32);
+            let g8: Vec<f32> = p8.iter().zip(&target).map(|(a, b)| a - b).collect();
+            o8.step(&mut p8, &g8);
+        }
+        let mse8: f32 =
+            p8.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse8 < 5e-3, "8-bit mse {mse8}");
+    }
+
+    #[test]
+    fn state_is_quarter_size_in_8bit() {
+        let n = 1 << 18;
+        let o32 = Momentum::new(OptimConfig::momentum(0.1, 0.9, Bits::B32), n);
+        let o8 = Momentum::new(OptimConfig::momentum(0.1, 0.9, Bits::b8_dynamic()), n);
+        let ratio = o32.state_bytes() as f64 / o8.state_bytes() as f64;
+        assert!(ratio > 3.9, "{ratio}");
+    }
+}

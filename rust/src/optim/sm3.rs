@@ -1,0 +1,185 @@
+//! SM3 (Anil et al. 2019) — the memory-efficient AdaGrad variant the paper
+//! cites as potentially *more* efficient than 8-bit Adam (Related Work).
+//! Included as a comparison point for the memory-model and ablation benches.
+//!
+//! For a 2-D tensor with row accumulators R and column accumulators C:
+//!   ν_ij = min(R_i, C_j) + g²_ij
+//!   w −= lr · g / √ν;  R_i = max_j ν_ij;  C_j = max_i ν_ij
+//! 1-D tensors use a single full accumulator (equivalent to AdaGrad).
+
+use super::state::StateTensor;
+use super::{OptimConfig, Optimizer};
+
+pub struct Sm3 {
+    cfg: OptimConfig,
+    row: Vec<f32>,
+    col: Vec<f32>,
+    acc: Vec<f32>, // 1-D fallback
+    shape: Option<(usize, usize)>,
+    /// Placeholder so `states()` has something to expose for analysis.
+    empty: StateTensor,
+    t: u64,
+}
+
+impl Sm3 {
+    pub fn new(cfg: OptimConfig, n: usize, shape: Option<(usize, usize)>) -> Sm3 {
+        let factored = matches!(shape, Some((r, c)) if r > 1 && c > 1 && r * c == n);
+        let shape = if factored { shape } else { None };
+        let (rows, cols) = shape.unwrap_or((0, 0));
+        Sm3 {
+            cfg,
+            row: vec![0.0; rows],
+            col: vec![0.0; cols],
+            acc: if factored { Vec::new() } else { vec![0.0; n] },
+            shape,
+            empty: StateTensor::new_f32(0),
+            t: 0,
+        }
+    }
+
+    pub fn is_factored(&self) -> bool {
+        self.shape.is_some()
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let cfg = self.cfg;
+        if let Some((rows, cols)) = self.shape {
+            let mut new_row = vec![0.0f32; rows];
+            let mut new_col = vec![0.0f32; cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    let idx = i * cols + j;
+                    let g = grads[idx];
+                    let nu = self.row[i].min(self.col[j]) + g * g;
+                    params[idx] -= cfg.lr * g / (nu.sqrt() + cfg.eps.max(1e-12));
+                    if nu > new_row[i] {
+                        new_row[i] = nu;
+                    }
+                    if nu > new_col[j] {
+                        new_col[j] = nu;
+                    }
+                }
+            }
+            self.row = new_row;
+            self.col = new_col;
+        } else {
+            for i in 0..params.len() {
+                let g = grads[i];
+                self.acc[i] += g * g;
+                params[i] -= cfg.lr * g / (self.acc[i].sqrt() + cfg.eps.max(1e-12));
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.row.len() + self.col.len() + self.acc.len()) * 4
+    }
+
+    fn name(&self) -> String {
+        "32-bit sm3".into()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn states(&self) -> Vec<(&'static str, &StateTensor)> {
+        vec![("acc", &self.empty)]
+    }
+
+    fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
+        vec![("acc", &mut self.empty)]
+    }
+
+    fn set_t(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{Bits, OptimKind};
+    use crate::util::rng::Rng;
+
+    fn cfg(lr: f32) -> OptimConfig {
+        OptimConfig {
+            kind: OptimKind::Sm3,
+            lr,
+            beta1: 0.0,
+            beta2: 0.0,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            bits: Bits::B32,
+        }
+    }
+
+    #[test]
+    fn sublinear_memory_for_2d() {
+        let sm3 = Sm3::new(cfg(0.1), 1024 * 1024, Some((1024, 1024)));
+        assert!(sm3.is_factored());
+        assert_eq!(sm3.state_bytes(), 2 * 1024 * 4); // rows + cols only
+    }
+
+    #[test]
+    fn accumulators_upper_bound_adagrad() {
+        // SM3 invariant: min(R_i, C_j) ≥ Σ g² for every coordinate, so the
+        // effective lr is never larger than AdaGrad's... check ν grows.
+        let (rows, cols) = (4, 4);
+        let mut opt = Sm3::new(cfg(0.1), 16, Some((rows, cols)));
+        let mut rng = Rng::new(16);
+        let mut p = vec![0.0f32; 16];
+        let mut sum_sq = vec![0.0f32; 16];
+        for _ in 0..50 {
+            let g: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            for (s, &gi) in sum_sq.iter_mut().zip(&g) {
+                *s += gi * gi;
+            }
+            opt.step(&mut p, &g);
+        }
+        for i in 0..rows {
+            for j in 0..cols {
+                let bound = opt.row[i].min(opt.col[j]);
+                assert!(
+                    bound + 1e-4 >= sum_sq[i * cols + j],
+                    "ν bound {bound} < Σg² {}",
+                    sum_sq[i * cols + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let n = 256;
+        let mut rng = Rng::new(17);
+        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; n];
+        let mut opt = Sm3::new(cfg(0.5), n, Some((16, 16)));
+        for _ in 0..800 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g);
+        }
+        let mse: f32 =
+            p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
+        assert!(mse < 5e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn one_d_fallback_matches_adagrad_memory() {
+        let sm3 = Sm3::new(cfg(0.1), 1000, None);
+        assert!(!sm3.is_factored());
+        assert_eq!(sm3.state_bytes(), 4000);
+    }
+}

@@ -1,0 +1,280 @@
+//! Block-wise quantization (paper §2.1).
+//!
+//! The input tensor is viewed as a flat sequence chunked into blocks of
+//! B = 2048 elements. Each block is normalized by its own absolute maximum
+//! `N_b = max|T_b|` and quantized independently (Eq. 4). Consequences the
+//! tests pin down:
+//!   * blocks are independent — no cross-block synchronization (throughput),
+//!   * an outlier only perturbs its own block (stability),
+//!   * the per-block max is quantized with *zero* error (absmax/N_b = ±1 and
+//!     ±1 is in the codebook).
+
+use std::sync::Arc;
+
+use super::codebook::Codebook;
+use crate::util::parallel;
+
+/// The paper's block size.
+pub const BLOCK: usize = 2048;
+
+/// An 8-bit quantized tensor: one code per element plus one f32 absmax per
+/// block. Memory: 1 byte/element + 4/B bytes/element overhead (≈1.002
+/// bytes/element at B=2048).
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub codes: Vec<u8>,
+    pub absmax: Vec<f32>,
+    pub len: usize,
+    pub block: usize,
+}
+
+impl Quantized {
+    pub fn zeros(len: usize, block: usize, zero_code: u8) -> Quantized {
+        let n_blocks = len.div_ceil(block).max(1);
+        Quantized {
+            codes: vec![zero_code; len],
+            absmax: vec![0.0; n_blocks],
+            len,
+            block,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.absmax.len()
+    }
+
+    /// Total storage in bytes (codes + absmax).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.absmax.len() * 4
+    }
+}
+
+/// Quantizer = codebook + block size. `block >= len` degenerates to the
+/// tensor-wide normalization of plain dynamic quantization (§1.2), which is
+/// exactly the ablation baseline in Table 3.
+#[derive(Clone)]
+pub struct BlockQuantizer {
+    pub codebook: Arc<Codebook>,
+    pub block: usize,
+}
+
+impl BlockQuantizer {
+    pub fn new(codebook: Arc<Codebook>, block: usize) -> Self {
+        assert!(block > 0);
+        Self { codebook, block }
+    }
+
+    /// Tensor-wide variant (single normalization constant).
+    pub fn tensor_wide(codebook: Arc<Codebook>) -> Self {
+        Self { codebook, block: usize::MAX }
+    }
+
+    fn effective_block(&self, len: usize) -> usize {
+        self.block.min(len.max(1))
+    }
+
+    /// Quantize a full tensor (parallel over blocks).
+    pub fn quantize(&self, x: &[f32]) -> Quantized {
+        let block = self.effective_block(x.len());
+        let zero = self.codebook.encode(0.0);
+        let mut q = Quantized::zeros(x.len(), block, zero);
+        self.quantize_into(x, &mut q);
+        q
+    }
+
+    /// Re-quantize into existing storage (hot path — no allocation).
+    pub fn quantize_into(&self, x: &[f32], q: &mut Quantized) {
+        assert_eq!(x.len(), q.len);
+        let block = q.block;
+        let cb = &*self.codebook;
+        parallel::par_chunks_pair_mut(&mut q.codes, block, &mut q.absmax, 1, |b, codes, am| {
+            let lo = b * block;
+            let xs = &x[lo..lo + codes.len()];
+            am[0] = quantize_block(cb, xs, codes);
+        });
+    }
+
+    /// Dequantize a full tensor.
+    pub fn dequantize(&self, q: &Quantized) -> Vec<f32> {
+        let mut out = vec![0.0f32; q.len];
+        self.dequantize_into(q, &mut out);
+        out
+    }
+
+    pub fn dequantize_into(&self, q: &Quantized, out: &mut [f32]) {
+        assert_eq!(out.len(), q.len);
+        let cb = &*self.codebook;
+        let codes = &q.codes;
+        let absmax = &q.absmax;
+        let block = q.block;
+        parallel::par_chunks_mut(out, block, |b, o| {
+            let lo = b * block;
+            dequantize_block(cb, &codes[lo..lo + o.len()], absmax[b], o);
+        });
+    }
+}
+
+/// Quantize one block: returns the block absmax (the normalization
+/// constant stored alongside the codes).
+#[inline]
+pub fn quantize_block(cb: &Codebook, xs: &[f32], codes: &mut [u8]) -> f32 {
+    debug_assert_eq!(xs.len(), codes.len());
+    let mut absmax = 0.0f32;
+    for &v in xs {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    // All-zero (or empty) block: store absmax 0; normalization uses 1.0 so
+    // every element encodes the exact-zero code.
+    let inv = if absmax > 0.0 { 1.0 / absmax } else { 1.0 };
+    for (c, &v) in codes.iter_mut().zip(xs) {
+        *c = cb.encode(v * inv);
+    }
+    absmax
+}
+
+/// Dequantize one block: codebook lookup then denormalize by absmax.
+#[inline]
+pub fn dequantize_block(cb: &Codebook, codes: &[u8], absmax: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = cb.decode(c) * absmax;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
+    use crate::quant::linear::linear_signed;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_is_small_for_dynamic() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+        let x = data(10_000, 1);
+        let y = bq.dequantize(&bq.quantize(&x));
+        let max_rel: f32 = x
+            .iter()
+            .zip(&y)
+            .filter(|(a, _)| a.abs() > 1e-5)
+            .map(|(a, b)| ((a - b) / a).abs())
+            .fold(0.0, f32::max);
+        assert!(max_rel < 0.2, "max relative error {max_rel}");
+    }
+
+    #[test]
+    fn block_absmax_is_exact() {
+        // §2.1: "block-wise quantization approximates outlier values without
+        // any error" — the per-block max must round-trip exactly.
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 256);
+        let mut x = data(2048, 2);
+        x[100] = 7.25; // outlier in block 0
+        x[1500] = -3.5; // negative outlier in block 5
+        let q = bq.quantize(&x);
+        let y = bq.dequantize(&q);
+        assert_eq!(y[100], 7.25);
+        assert_eq!(y[1500], -3.5);
+    }
+
+    #[test]
+    fn outlier_confined_to_its_block() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 256);
+        let x = data(2048, 3);
+        let q_clean = bq.quantize(&x);
+        let mut x_out = x.clone();
+        x_out[0] = 1e4; // enormous outlier in block 0
+        let q_dirty = bq.quantize(&x_out);
+        // codes in every block other than block 0 are identical
+        assert_eq!(&q_clean.codes[256..], &q_dirty.codes[256..]);
+        assert_eq!(&q_clean.absmax[1..], &q_dirty.absmax[1..]);
+        // block 0 degraded, as expected
+        assert_ne!(&q_clean.codes[..256], &q_dirty.codes[..256]);
+    }
+
+    #[test]
+    fn tensor_wide_outlier_degrades_everything() {
+        // Contrast case from §2.1: with tensor-wide normalization the
+        // outlier squashes all other values toward zero codes.
+        let bq = BlockQuantizer::tensor_wide(Arc::new(linear_signed()));
+        let x = data(2048, 4);
+        let mut x_out = x.clone();
+        x_out[0] = 1e4;
+        let q = bq.quantize(&x_out);
+        let zero = bq.codebook.encode(0.0);
+        let zeros = q.codes[1..].iter().filter(|&&c| c == zero).count();
+        assert!(zeros > 2000, "only {zeros} squashed to zero");
+    }
+
+    #[test]
+    fn blocks_are_independent() {
+        // quantizing the concatenation == concatenating block quantizations
+        let cb = Arc::new(dynamic_signed());
+        let bq = BlockQuantizer::new(cb.clone(), 128);
+        let x = data(1024, 5);
+        let q_full = bq.quantize(&x);
+        for b in 0..8 {
+            let lo = b * 128;
+            let q_b = bq.quantize(&x[lo..lo + 128]);
+            assert_eq!(&q_full.codes[lo..lo + 128], &q_b.codes[..]);
+            assert!((q_full.absmax[b] - q_b.absmax[0]).abs() == 0.0);
+        }
+    }
+
+    #[test]
+    fn ragged_tail_block() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 100);
+        let x = data(257, 6);
+        let q = bq.quantize(&x);
+        assert_eq!(q.n_blocks(), 3);
+        let y = bq.dequantize(&q);
+        assert_eq!(y.len(), 257);
+    }
+
+    #[test]
+    fn all_zero_tensor() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_unsigned()), BLOCK);
+        let x = vec![0.0f32; 5000];
+        let q = bq.quantize(&x);
+        let y = bq.dequantize(&q);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 512);
+        let x = data(4096, 7);
+        let q1 = bq.quantize(&x);
+        let mut q2 = Quantized::zeros(x.len(), 512, bq.codebook.encode(0.0));
+        bq.quantize_into(&x, &mut q2);
+        assert_eq!(q1.codes, q2.codes);
+        assert_eq!(q1.absmax, q2.absmax);
+    }
+
+    #[test]
+    fn idempotent_roundtrip() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 512);
+        let x = data(4096, 8);
+        let q1 = bq.quantize(&x);
+        let y1 = bq.dequantize(&q1);
+        let q2 = bq.quantize(&y1);
+        assert_eq!(q1.codes, q2.codes);
+        assert_eq!(bq.dequantize(&q2), y1);
+    }
+
+    #[test]
+    fn memory_overhead_is_just_over_1_byte_per_element() {
+        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+        let x = data(1 << 20, 9);
+        let q = bq.quantize(&x);
+        let bytes_per_elem = q.bytes() as f64 / x.len() as f64;
+        assert!(bytes_per_elem < 1.01, "{bytes_per_elem}");
+    }
+}

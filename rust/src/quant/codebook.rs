@@ -1,0 +1,308 @@
+//! Quantization codebooks (`Q^map` in the paper, §1.2).
+//!
+//! A codebook is a sorted list of ≤256 representable values in [-1, 1] (or
+//! [0, 1] for unsigned codes). Quantization of a normalized input is
+//! nearest-value search (Eq. 3/4); we implement it as a binary search over
+//! the midpoints between adjacent codebook entries, which is exactly
+//! arg-min over an ordered codebook.
+
+use crate::util::rng::Rng;
+
+/// LUT resolution: top bits of the monotone integer view of an f32
+/// (sign + 8 exponent + 5 mantissa bits => 16384 buckets, 32 KiB table).
+const LUT_BITS: u32 = 14;
+const LUT_SIZE: usize = 1 << LUT_BITS;
+
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    /// Sorted representable values.
+    values: Vec<f32>,
+    /// Decision boundaries: midpoint between values[i] and values[i+1].
+    midpoints: Vec<f32>,
+    /// Per-bucket (lo, hi) code range — the §Perf fast path: most buckets
+    /// resolve to a single code, the rest to a 1–3 step binary search.
+    lut: Vec<(u8, u8)>,
+    name: &'static str,
+}
+
+/// Monotone mapping from f32 bit patterns to u32 (total order matching <=
+/// on the floats, NaNs aside).
+#[inline(always)]
+fn monotone_bits(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`monotone_bits`].
+fn from_monotone(m: u32) -> f32 {
+    let b = if m & 0x8000_0000 != 0 { m ^ 0x8000_0000 } else { !m };
+    f32::from_bits(b)
+}
+
+impl Codebook {
+    pub fn new(name: &'static str, mut values: Vec<f32>) -> Codebook {
+        assert!(!values.is_empty() && values.len() <= 256, "codebook size");
+        values.sort_by(|a, b| a.partial_cmp(b).expect("finite codebook"));
+        let midpoints = values
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect::<Vec<f32>>();
+        // Build the bucket LUT: for each bucket of the monotone-bits space,
+        // the code range spanned by its value interval [lo_f, hi_f].
+        let encode_exact =
+            |mids: &[f32], x: f32| -> u8 { mids.partition_point(|&m| m <= x) as u8 };
+        let shift = 32 - LUT_BITS;
+        let lut = (0..LUT_SIZE)
+            .map(|bucket| {
+                let lo_bits = (bucket as u32) << shift;
+                let hi_bits = lo_bits | ((1u32 << shift) - 1);
+                let lo_f = from_monotone(lo_bits);
+                let hi_f = from_monotone(hi_bits);
+                let c_lo = if lo_f.is_nan() { 0 } else { encode_exact(&midpoints, lo_f) };
+                let c_hi = if hi_f.is_nan() {
+                    (values.len() - 1) as u8
+                } else {
+                    encode_exact(&midpoints, hi_f)
+                };
+                (c_lo.min(c_hi), c_lo.max(c_hi))
+            })
+            .collect();
+        Codebook { values, midpoints, lut, name }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Decode a code index to its representable value.
+    #[inline(always)]
+    pub fn decode(&self, code: u8) -> f32 {
+        self.values[code as usize]
+    }
+
+    /// Nearest-value quantization of a normalized input (Eq. 3).
+    ///
+    /// Branchless binary search over the midpoints: after the loop `lo` is
+    /// the number of midpoints strictly below `x`, i.e. the arg-min index.
+    /// Ties at an exact midpoint round up (toward the larger value), which
+    /// matches `searchsorted(side="right")` in the Pallas kernel so the
+    /// native and HLO engines agree bit-for-bit.
+    #[inline(always)]
+    pub fn encode(&self, x: f32) -> u8 {
+        // Fast path: bucket LUT on the monotone integer view. Exact — the
+        // bucket's (lo, hi) code range brackets the answer; equal bounds
+        // (the common case) need no search at all.
+        let bucket = (monotone_bits(x) >> (32 - LUT_BITS)) as usize;
+        let (lo, hi) = self.lut[bucket];
+        if lo == hi {
+            return lo;
+        }
+        // Narrow binary search within [lo, hi].
+        lo + self.midpoints[lo as usize..hi as usize].partition_point(|&m| m <= x) as u8
+    }
+
+    /// Reference encode (no LUT) — used by tests to pin LUT exactness.
+    pub fn encode_reference(&self, x: f32) -> u8 {
+        self.midpoints.partition_point(|&m| m <= x) as u8
+    }
+
+    /// Stochastic rounding: round to one of the two bracketing values with
+    /// probability proportional to proximity (Appendix H discussion).
+    pub fn encode_stochastic(&self, x: f32, rng: &mut Rng) -> u8 {
+        let i = self.encode(x) as usize;
+        let v = self.values[i];
+        // Find the bracketing neighbour on the other side of x.
+        let j = if x > v {
+            (i + 1).min(self.values.len() - 1)
+        } else if x < v && i > 0 {
+            i - 1
+        } else {
+            i
+        };
+        if i == j {
+            return i as u8;
+        }
+        let (a, b) = (self.values[i.min(j)], self.values[i.max(j)]);
+        let gap = (b - a) as f64;
+        if gap <= 0.0 {
+            return i as u8;
+        }
+        // P(round up) = distance from lower value.
+        let p_up = ((x - a) as f64 / gap).clamp(0.0, 1.0);
+        if rng.uniform() < p_up {
+            i.max(j) as u8
+        } else {
+            i.min(j) as u8
+        }
+    }
+
+    /// Round-trip: quantize then decode.
+    #[inline(always)]
+    pub fn nearest(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+
+    /// Max absolute value in the codebook (1.0 for our formats).
+    pub fn max_abs(&self) -> f32 {
+        self.values
+            .iter()
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// True if every value appears exactly once.
+    pub fn all_distinct(&self) -> bool {
+        self.values.windows(2).all(|w| w[0] < w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> Codebook {
+        Codebook::new("simple", vec![-1.0, -0.5, 0.0, 0.25, 1.0])
+    }
+
+    #[test]
+    fn encode_is_argmin() {
+        let cb = simple();
+        // brute force argmin must agree everywhere
+        let mut x = -1.5f32;
+        while x <= 1.5 {
+            let brute = cb
+                .values()
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da = (*a - x).abs();
+                    let db = (*b - x).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap()
+                .0;
+            let got = cb.encode(x) as usize;
+            let d_brute = (cb.values()[brute] - x).abs();
+            let d_got = (cb.values()[got] - x).abs();
+            assert!(
+                (d_got - d_brute).abs() < 1e-7,
+                "x={x} got={got} brute={brute}"
+            );
+            x += 0.013;
+        }
+    }
+
+    #[test]
+    fn codebook_values_encode_to_themselves() {
+        let cb = simple();
+        for (i, &v) in cb.values().iter().enumerate() {
+            assert_eq!(cb.encode(v) as usize, i);
+            assert_eq!(cb.nearest(v), v);
+        }
+    }
+
+    #[test]
+    fn out_of_range_clamps_to_ends() {
+        let cb = simple();
+        assert_eq!(cb.encode(-9.0), 0);
+        assert_eq!(cb.encode(9.0) as usize, cb.len() - 1);
+    }
+
+    #[test]
+    fn idempotence() {
+        let cb = simple();
+        let mut x = -1.2f32;
+        while x < 1.2 {
+            let q1 = cb.encode(x);
+            let q2 = cb.encode(cb.decode(q1));
+            assert_eq!(q1, q2, "x={x}");
+            x += 0.017;
+        }
+    }
+
+    #[test]
+    fn stochastic_is_unbiased_between_neighbours() {
+        let cb = simple();
+        let mut rng = Rng::new(1234);
+        // x = 0.125 sits halfway between 0.0 and 0.25
+        let mut ups = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            let c = cb.encode_stochastic(0.125, &mut rng);
+            if cb.decode(c) == 0.25 {
+                ups += 1;
+            }
+        }
+        let frac = ups as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn stochastic_exact_value_never_moves() {
+        let cb = simple();
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(cb.decode(cb.encode_stochastic(0.25, &mut rng)), 0.25);
+        }
+    }
+
+    #[test]
+    fn lut_encode_matches_reference_exhaustively() {
+        // Pin the §Perf fast path to the reference bit-for-bit on every
+        // codebook, sweeping values, decision boundaries, and denormals.
+        for cb in [
+            crate::quant::dynamic_tree::dynamic_signed(),
+            crate::quant::dynamic_tree::dynamic_unsigned(),
+            crate::quant::linear::linear_signed(),
+            crate::quant::linear::linear_unsigned(),
+            simple(),
+        ] {
+            let mut probes: Vec<f32> = Vec::new();
+            for &v in cb.values() {
+                for d in [-2i32, -1, 0, 1, 2] {
+                    // nudge by ulps around each representable value
+                    let b = v.to_bits() as i64 + d as i64;
+                    probes.push(f32::from_bits(b.clamp(0, u32::MAX as i64) as u32));
+                }
+            }
+            for w in cb.values().windows(2) {
+                let m = 0.5 * (w[0] + w[1]);
+                for d in [-1i64, 0, 1] {
+                    probes.push(f32::from_bits((m.to_bits() as i64 + d) as u32));
+                }
+            }
+            let mut rng = Rng::new(1);
+            for _ in 0..20_000 {
+                probes.push((rng.normal() * rng.uniform_range(1e-9, 2.0)) as f32);
+            }
+            probes.extend_from_slice(&[0.0, -0.0, 1.0, -1.0, 5.0, -5.0, 1e-30, -1e-30]);
+            for x in probes {
+                if !x.is_finite() {
+                    continue;
+                }
+                assert_eq!(
+                    cb.encode(x),
+                    cb.encode_reference(x),
+                    "{}: x = {x} ({:#010x})",
+                    cb.name(),
+                    x.to_bits()
+                );
+            }
+        }
+    }
+}

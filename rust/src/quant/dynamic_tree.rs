@@ -1,0 +1,249 @@
+//! Dynamic tree quantization codebooks (paper §1.3, §2.2, Appendix F.1).
+//!
+//! The data type (Figure 2): sign bit, then a unary exponent (each leading
+//! zero bit divides the magnitude by 10), an indicator bit, and linear
+//! fraction bits for the remaining positions. Rather than decode bytes
+//! bit-by-bit at runtime, we materialize the 256 representable values once
+//! as a [`Codebook`]; storage is the index into it (the paper does the
+//! same — quantization is index lookup either way).
+//!
+//! Construction (shared *verbatim* with `python/compile/kernels/codebooks.py`
+//! so the native Rust engine and the Pallas/HLO engine agree bit-for-bit;
+//! all arithmetic in f64, cast to f32 at the end):
+//!
+//! * decade `e` (= number of leading zero bits) spans `(0.1, 1.0] · 10^-e`;
+//! * a decade with `f` fraction bits contributes the `2^f` midpoints of
+//!   `linspace(0.1, 1.0, 2^f + 1)` scaled by `10^-e` — except the top
+//!   decade, where the largest midpoint is replaced by an exact `1.0` so
+//!   that absmax-normalized maxima quantize with *zero error* (§2.1);
+//! * `0.0` and the denormal-like `1e-7` ("large exponent 10^-7", §1.3)
+//!   fill the remaining codes.
+//!
+//! Signed layout: 7 value bits ⇒ decades e=0..6 with f = 6-e fraction bits,
+//! mirrored for the sign: 2·127 + 2 = 256 codes.
+//! Unsigned layout (§2.2): the sign bit is re-purposed as one extra *fixed*
+//! fraction bit ⇒ decades e=0..6 with f = 7-e: 254 + 2 = 256 codes.
+
+use super::codebook::Codebook;
+
+/// Midpoints of `linspace(0.1, 1.0, n+1)`, computed in f64.
+fn decade_midpoints(n: usize) -> Vec<f64> {
+    let lo = 0.1f64;
+    let hi = 1.0f64;
+    let step = (hi - lo) / n as f64;
+    (0..n)
+        .map(|i| {
+            let a = lo + step * i as f64;
+            let b = lo + step * (i + 1) as f64;
+            0.5 * (a + b)
+        })
+        .collect()
+}
+
+/// Decade scales as decimal literals — parsed identically by Rust and
+/// Python, so both languages build bit-identical f32 codebooks.
+const DECADE_SCALE: [f64; 7] = [1.0, 1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6];
+
+fn tree_magnitudes(extra_fraction_bit: bool, inverse: bool) -> Vec<f64> {
+    let mut out = Vec::new();
+    for e in 0..7usize {
+        // fraction bits for this decade; inverse swaps which decade is rich.
+        let f = if inverse { e.min(6) } else { 6 - e } + usize::from(extra_fraction_bit);
+        let n = 1usize << f;
+        let mids = decade_midpoints(n);
+        let scale = DECADE_SCALE[e];
+        for (i, m) in mids.iter().enumerate() {
+            // Top decade: replace the largest midpoint with exact 1.0 so the
+            // block absmax is representable without error.
+            if e == 0 && i == n - 1 {
+                out.push(1.0);
+            } else {
+                out.push(m * scale);
+            }
+        }
+    }
+    out
+}
+
+/// Signed dynamic tree quantization ("dynamic quantization" for the first
+/// Adam state / momentum). 256 values: ±(127 tree magnitudes), 0, 1e-7.
+pub fn dynamic_signed() -> Codebook {
+    let mags = tree_magnitudes(false, false);
+    debug_assert_eq!(mags.len(), 127);
+    let mut vals: Vec<f32> = Vec::with_capacity(256);
+    for &m in &mags {
+        vals.push(m as f32);
+        vals.push(-m as f32);
+    }
+    vals.push(0.0);
+    vals.push(1e-7);
+    Codebook::new("dynamic_signed", vals)
+}
+
+/// Unsigned dynamic quantization (§2.2): sign bit re-purposed as a fixed
+/// fraction bit, for the strictly-positive second Adam state.
+pub fn dynamic_unsigned() -> Codebook {
+    let mags = tree_magnitudes(true, false);
+    debug_assert_eq!(mags.len(), 254);
+    let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
+    vals.push(0.0);
+    vals.push(1e-7);
+    Codebook::new("dynamic_unsigned", vals)
+}
+
+/// Inverse dynamic quantization (Appendix F.1): exponent direction swapped —
+/// most fraction bits go to the *smallest* decade.
+pub fn inverse_dynamic_signed() -> Codebook {
+    let mags = tree_magnitudes(false, true);
+    debug_assert_eq!(mags.len(), 127);
+    let mut vals: Vec<f32> = Vec::with_capacity(256);
+    for &m in &mags {
+        vals.push(m as f32);
+        vals.push(-m as f32);
+    }
+    vals.push(0.0);
+    // the e=0 decade already contributed an exact 1.0; fill the last code
+    // with a denormal-like value below the smallest tree magnitude
+    vals.push(1e-8);
+    Codebook::new("inverse_dynamic_signed", vals)
+}
+
+/// Inverse dynamic, unsigned variant.
+pub fn inverse_dynamic_unsigned() -> Codebook {
+    let mags = tree_magnitudes(true, true);
+    debug_assert_eq!(mags.len(), 254);
+    let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
+    vals.push(0.0);
+    vals.push(1e-8); // e=0 decade already contains the exact 1.0
+    Codebook::new("inverse_dynamic_unsigned", vals)
+}
+
+/// Decode the dynamic-tree *bit pattern* semantics for exposition (Figure 2
+/// regeneration): returns (sign, exponent_zeros, fraction_bits) per byte.
+pub fn describe_bit_pattern(byte: u8) -> (i8, u32, u8) {
+    let sign = if byte & 0x80 != 0 { -1 } else { 1 };
+    let low7 = byte & 0x7F;
+    if low7 == 0 {
+        return (sign, 7, 0); // all-zero payload: the 0 / 1e-7 codes
+    }
+    let zeros = low7.leading_zeros() - 1; // leading zeros within 7 bits (u8 minus sign bit)
+    let frac_bits = 6 - zeros; // bits after the indicator
+    let frac = low7 & ((1u8 << frac_bits).wrapping_sub(1));
+    (sign, zeros, frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_are_256() {
+        assert_eq!(dynamic_signed().len(), 256);
+        assert_eq!(dynamic_unsigned().len(), 256);
+        assert_eq!(inverse_dynamic_signed().len(), 256);
+        assert_eq!(inverse_dynamic_unsigned().len(), 256);
+    }
+
+    #[test]
+    fn all_values_distinct_and_sorted() {
+        for cb in [
+            dynamic_signed(),
+            dynamic_unsigned(),
+            inverse_dynamic_signed(),
+            inverse_dynamic_unsigned(),
+        ] {
+            assert!(cb.all_distinct(), "{}", cb.name());
+        }
+    }
+
+    #[test]
+    fn signed_contains_plus_minus_one_and_zero() {
+        let cb = dynamic_signed();
+        assert!(cb.values().contains(&1.0));
+        assert!(cb.values().contains(&-1.0));
+        assert!(cb.values().contains(&0.0));
+    }
+
+    #[test]
+    fn unsigned_is_nonnegative_with_one_and_zero() {
+        let cb = dynamic_unsigned();
+        assert!(cb.values().iter().all(|&v| v >= 0.0));
+        assert!(cb.values().contains(&1.0));
+        assert!(cb.values().contains(&0.0));
+    }
+
+    #[test]
+    fn seven_orders_of_magnitude() {
+        // paper §1.3: "numbers can have a large exponent 10^-7"
+        let cb = dynamic_signed();
+        let smallest_pos = cb
+            .values()
+            .iter()
+            .filter(|&&v| v > 0.0)
+            .fold(f32::INFINITY, |m, &v| m.min(v));
+        assert!(smallest_pos <= 1.5e-7, "{smallest_pos}");
+        assert_eq!(cb.max_abs(), 1.0);
+    }
+
+    #[test]
+    fn top_decade_precision_about_1_over_63() {
+        // paper §1.3: "precision as high as 1/63"
+        let cb = dynamic_signed();
+        let top: Vec<f32> = cb
+            .values()
+            .iter()
+            .copied()
+            .filter(|&v| v > 0.1 && v <= 1.0)
+            .collect();
+        assert_eq!(top.len(), 64);
+        let max_gap = top.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+        assert!(max_gap < 0.05, "max_gap={max_gap}"); // ~0.9/63 + end fixup
+    }
+
+    #[test]
+    fn unsigned_has_double_resolution_of_signed_top_decade() {
+        let count = |cb: &Codebook| {
+            cb.values()
+                .iter()
+                .filter(|&&v| v > 0.1 && v <= 1.0)
+                .count()
+        };
+        assert_eq!(count(&dynamic_unsigned()), 2 * count(&dynamic_signed()));
+    }
+
+    #[test]
+    fn inverse_is_rich_at_small_magnitudes() {
+        let dense_small = |cb: &Codebook| {
+            cb.values()
+                .iter()
+                .filter(|&&v| v > 0.0 && v < 1e-5)
+                .count()
+        };
+        assert!(dense_small(&inverse_dynamic_signed()) > dense_small(&dynamic_signed()));
+    }
+
+    #[test]
+    fn signed_is_symmetric_ex_zero_denormal() {
+        let cb = dynamic_signed();
+        for &v in cb.values() {
+            if v > 1.5e-7 {
+                assert!(
+                    cb.values().contains(&(-v)),
+                    "missing mirror of {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bit_pattern_decode_covers_all_bytes() {
+        for b in 0..=255u8 {
+            let (sign, zeros, frac) = describe_bit_pattern(b);
+            assert!(sign == 1 || sign == -1);
+            assert!(zeros <= 7);
+            if zeros < 7 {
+                assert!(u32::from(frac) < (1u32 << (6 - zeros)));
+            }
+        }
+    }
+}

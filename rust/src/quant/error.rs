@@ -1,0 +1,139 @@
+//! Quantization-error metrics (Table 6, Appendix D/F).
+//!
+//! Two quantities from the paper:
+//!  * **absolute quantization error** — E |x − dequant(quant(x))| per state;
+//!  * **relative Adam error** — E |u32 − u8| / |u32| with
+//!    u = m̂ / (sqrt(r̂) + ε), comparing the Adam update computed from exact
+//!    states vs quantized states.
+
+use super::blockwise::BlockQuantizer;
+use crate::util::stats::Welford;
+
+/// Mean absolute round-trip error of a quantizer on `data`.
+pub fn abs_quant_error(bq: &BlockQuantizer, data: &[f32]) -> Welford {
+    let y = bq.dequantize(&bq.quantize(data));
+    let mut w = Welford::new();
+    for (a, b) in data.iter().zip(&y) {
+        w.push((a - b).abs() as f64);
+    }
+    w
+}
+
+/// Relative Adam error: quantize the two Adam states with `bq_m` / `bq_r`,
+/// compute both updates and accumulate |u32−u8| / |u32| over elements where
+/// the exact update is non-negligible.
+pub fn relative_adam_error(
+    bq_m: &BlockQuantizer,
+    bq_r: &BlockQuantizer,
+    m: &[f32],
+    r: &[f32],
+    eps: f32,
+) -> Welford {
+    assert_eq!(m.len(), r.len());
+    let mq = bq_m.dequantize(&bq_m.quantize(m));
+    let rq = bq_r.dequantize(&bq_r.quantize(r));
+    let mut w = Welford::new();
+    for i in 0..m.len() {
+        let u32v = m[i] / (r[i].max(0.0).sqrt() + eps);
+        let u8v = mq[i] / (rq[i].max(0.0).sqrt() + eps);
+        let denom = u32v.abs();
+        if denom > 1e-12 {
+            w.push(((u32v - u8v).abs() / denom) as f64);
+        }
+    }
+    w
+}
+
+/// Absolute Adam error |u32 − u8| (used by the Figure 4/5 analysis).
+pub fn abs_adam_error(
+    bq_m: &BlockQuantizer,
+    bq_r: &BlockQuantizer,
+    m: &[f32],
+    r: &[f32],
+    eps: f32,
+) -> Welford {
+    let mq = bq_m.dequantize(&bq_m.quantize(m));
+    let rq = bq_r.dequantize(&bq_r.quantize(r));
+    let mut w = Welford::new();
+    for i in 0..m.len() {
+        let u32v = m[i] / (r[i].max(0.0).sqrt() + eps);
+        let u8v = mq[i] / (rq[i].max(0.0).sqrt() + eps);
+        w.push((u32v - u8v).abs() as f64);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::blockwise::BLOCK;
+    use crate::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
+    use crate::quant::linear::{linear_signed, linear_unsigned};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    /// Synthetic Adam states: m ~ small normal, r ~ squared small normal —
+    /// spans several orders of magnitude like real training (§2.2).
+    fn adam_states(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let m: Vec<f32> = (0..n).map(|_| (rng.normal() * 1e-3) as f32).collect();
+        let r: Vec<f32> = (0..n)
+            .map(|_| {
+                let g = rng.normal() * 10f64.powf(rng.uniform_range(-4.0, -2.0));
+                (g * g) as f32
+            })
+            .collect();
+        (m, r)
+    }
+
+    #[test]
+    fn dynamic_beats_linear_on_relative_adam_error() {
+        // Table 6 ordering: Linear >> Dynamic in relative Adam error.
+        let (m, r) = adam_states(100_000, 42);
+        let dyn_m = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+        let dyn_r = BlockQuantizer::new(Arc::new(dynamic_unsigned()), BLOCK);
+        let lin_m = BlockQuantizer::new(Arc::new(linear_signed()), BLOCK);
+        let lin_r = BlockQuantizer::new(Arc::new(linear_unsigned()), BLOCK);
+        let e_dyn = relative_adam_error(&dyn_m, &dyn_r, &m, &r, 1e-8).mean();
+        let e_lin = relative_adam_error(&lin_m, &lin_r, &m, &r, 1e-8).mean();
+        assert!(
+            e_dyn * 3.0 < e_lin,
+            "dynamic {e_dyn:.4} should be ≪ linear {e_lin:.4}"
+        );
+    }
+
+    #[test]
+    fn blockwise_not_worse_than_tensor_wide_with_outliers() {
+        let (mut m, _r) = adam_states(32_768, 43);
+        // inject outliers every ~5000 elements
+        for i in (0..m.len()).step_by(5000) {
+            m[i] = 0.3;
+        }
+        let cb = Arc::new(dynamic_signed());
+        let cbr = Arc::new(dynamic_unsigned());
+        let bw_m = BlockQuantizer::new(cb.clone(), BLOCK);
+        let tw_m = BlockQuantizer::tensor_wide(cb);
+        let bw_r = BlockQuantizer::new(cbr.clone(), BLOCK);
+        let tw_r = BlockQuantizer::tensor_wide(cbr);
+        let e_bw = abs_quant_error(&bw_m, &m).mean();
+        let e_tw = abs_quant_error(&tw_m, &m).mean();
+        assert!(e_bw < e_tw, "blockwise {e_bw:.3e} vs tensor-wide {e_tw:.3e}");
+        let _ = (bw_r, tw_r);
+    }
+
+    #[test]
+    fn error_metrics_are_finite_and_nonnegative() {
+        let (m, r) = adam_states(10_000, 44);
+        let bq_m = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+        let bq_r = BlockQuantizer::new(Arc::new(dynamic_unsigned()), BLOCK);
+        for w in [
+            abs_quant_error(&bq_m, &m),
+            relative_adam_error(&bq_m, &bq_r, &m, &r, 1e-8),
+            abs_adam_error(&bq_m, &bq_r, &m, &r, 1e-8),
+        ] {
+            assert!(w.mean().is_finite());
+            assert!(w.mean() >= 0.0);
+            assert!(w.count() > 0);
+        }
+    }
+}

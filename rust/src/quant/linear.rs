@@ -1,0 +1,63 @@
+//! Linear quantization codebooks — the ablation baseline (Table 3) and the
+//! "Linear" row of Table 6. Equally spaced representable values.
+
+use super::codebook::Codebook;
+
+/// Signed linear: 255 values { i/127 : i = -127..=127 }. Includes exact
+/// -1, 0, +1 (symmetric; one 8-bit code is unused, as in symmetric int8).
+pub fn linear_signed() -> Codebook {
+    let vals: Vec<f32> = (-127..=127).map(|i| i as f32 / 127.0).collect();
+    Codebook::new("linear_signed", vals)
+}
+
+/// Unsigned linear: 256 values { i/255 : i = 0..=255 }.
+pub fn linear_unsigned() -> Codebook {
+    let vals: Vec<f32> = (0..=255).map(|i| i as f32 / 255.0).collect();
+    Codebook::new("linear_unsigned", vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(linear_signed().len(), 255);
+        assert_eq!(linear_unsigned().len(), 256);
+    }
+
+    #[test]
+    fn signed_endpoints_and_zero() {
+        let cb = linear_signed();
+        assert!(cb.values().contains(&-1.0));
+        assert!(cb.values().contains(&0.0));
+        assert!(cb.values().contains(&1.0));
+        assert!(cb.all_distinct());
+    }
+
+    #[test]
+    fn uniform_spacing() {
+        let cb = linear_signed();
+        let gaps: Vec<f32> = cb.values().windows(2).map(|w| w[1] - w[0]).collect();
+        let g0 = gaps[0];
+        assert!(gaps.iter().all(|g| (g - g0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn unsigned_covers_unit_interval() {
+        let cb = linear_unsigned();
+        assert_eq!(cb.values()[0], 0.0);
+        assert_eq!(*cb.values().last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn linear_small_value_error_is_poor_vs_dynamic() {
+        // The paper's motivation: linear wastes precision on small values.
+        let lin = linear_unsigned();
+        let dyn_u = super::super::dynamic_tree::dynamic_unsigned();
+        let x = 3e-4f32;
+        let err_lin = (lin.nearest(x) - x).abs();
+        let err_dyn = (dyn_u.nearest(x) - x).abs();
+        assert!(err_dyn < err_lin, "dyn {err_dyn} vs lin {err_lin}");
+    }
+}

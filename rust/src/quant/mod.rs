@@ -1,0 +1,110 @@
+//! The paper's numeric-format substrate: 8-bit non-linear quantization.
+//!
+//! * [`codebook`] — the `Q^map` abstraction + nearest / stochastic encode.
+//! * [`dynamic_tree`] — dynamic (tree) quantization, signed / unsigned /
+//!   inverse variants (§1.3, §2.2, Appendix F.1).
+//! * [`linear`] — linear baseline (Table 3 ablation, Table 6).
+//! * [`quantile`] — lossy minimum-entropy encoding (Appendix F.2).
+//! * [`sram_quantiles`] — fast approximate quantile estimation (Appendix G).
+//! * [`blockwise`] — block-wise normalization machinery (§2.1).
+//! * [`error`] — quantization / Adam error metrics (Table 6, Appendix D).
+
+pub mod blockwise;
+pub mod codebook;
+pub mod dynamic_tree;
+pub mod error;
+pub mod linear;
+pub mod quantile;
+pub mod sram_quantiles;
+
+pub use blockwise::{BlockQuantizer, Quantized, BLOCK};
+pub use codebook::Codebook;
+
+use std::sync::Arc;
+
+/// The quantization formats the paper evaluates (Tables 3 & 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Dynamic (tree) quantization — the paper's method.
+    Dynamic,
+    /// Linear quantization — ablation baseline.
+    Linear,
+    /// Quantile quantization (Appendix F.2).
+    Quantile,
+    /// Inverse dynamic quantization (Appendix F.1).
+    InverseDynamic,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "dynamic" => Some(Format::Dynamic),
+            "linear" => Some(Format::Linear),
+            "quantile" => Some(Format::Quantile),
+            "inverse-dynamic" | "inverse_dynamic" => Some(Format::InverseDynamic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Dynamic => "dynamic",
+            Format::Linear => "linear",
+            Format::Quantile => "quantile",
+            Format::InverseDynamic => "inverse-dynamic",
+        }
+    }
+
+    /// Codebook for signed state tensors (momentum / first Adam state).
+    pub fn signed_codebook(&self) -> Arc<Codebook> {
+        Arc::new(match self {
+            Format::Dynamic => dynamic_tree::dynamic_signed(),
+            Format::Linear => linear::linear_signed(),
+            Format::Quantile => quantile::quantile_normal(),
+            Format::InverseDynamic => dynamic_tree::inverse_dynamic_signed(),
+        })
+    }
+
+    /// Codebook for non-negative state tensors (second Adam state, AdaGrad
+    /// accumulator).
+    pub fn unsigned_codebook(&self) -> Arc<Codebook> {
+        Arc::new(match self {
+            Format::Dynamic => dynamic_tree::dynamic_unsigned(),
+            Format::Linear => linear::linear_unsigned(),
+            // Quantile of the squared-normal (chi²₁) distribution.
+            Format::Quantile => {
+                use crate::util::rng::Rng;
+                let mut rng = Rng::new(0x51_51_51);
+                let data: Vec<f32> = (0..1_000_000)
+                    .map(|_| {
+                        let g = rng.normal();
+                        (g * g) as f32
+                    })
+                    .collect();
+                quantile::quantile_from_data(&data)
+            }
+            Format::InverseDynamic => dynamic_tree::inverse_dynamic_unsigned(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parse_roundtrip() {
+        for f in [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic] {
+            assert_eq!(Format::parse(f.name()), Some(f));
+        }
+        assert_eq!(Format::parse("bogus"), None);
+    }
+
+    #[test]
+    fn codebooks_construct_for_all_formats() {
+        for f in [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic] {
+            assert!(f.signed_codebook().len() > 100);
+            assert!(f.unsigned_codebook().len() > 100);
+        }
+    }
+}

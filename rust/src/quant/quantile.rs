@@ -1,0 +1,93 @@
+//! Quantile quantization (Appendix F.2): a lossy minimum-entropy encoding.
+//!
+//! The codebook values are the midpoints between 2^k + 1 equally spaced
+//! quantiles of the input distribution (Eq. 5), so every code is used
+//! equally often. Quantiles are estimated with SRAM-Quantiles (Appendix G).
+
+use super::codebook::Codebook;
+use super::sram_quantiles::estimate_quantiles;
+
+/// Build a 256-value quantile codebook from sample data, normalized into
+/// [-1, 1] by the max-abs of the codebook (the paper normalizes values from
+/// the standard normal the same way for Figure 6).
+pub fn quantile_from_data(data: &[f32]) -> Codebook {
+    assert!(!data.is_empty());
+    // 2^8 + 1 boundary quantiles -> 256 midpoints (Eq. 5).
+    let qs = estimate_quantiles(data, 257);
+    let mut vals: Vec<f32> = qs.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+    debug_assert_eq!(vals.len(), 256);
+    let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(f32::MIN_POSITIVE);
+    for v in vals.iter_mut() {
+        *v /= max_abs;
+    }
+    // De-duplicate (heavy-tailed data can repeat midpoints after f32
+    // rounding); keep the codebook strictly sorted.
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    Codebook::new("quantile", vals)
+}
+
+/// Quantile codebook for the standard normal distribution, via a large
+/// deterministic sample — the generic "Quantile" row of Table 6 / Figure 6.
+pub fn quantile_normal() -> Codebook {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(0x9e3779b9);
+    let data: Vec<f32> = (0..1_000_000).map(|_| rng.normal() as f32).collect();
+    quantile_from_data(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn codebook_has_close_to_256_values_in_unit_range() {
+        let cb = quantile_normal();
+        assert!(cb.len() >= 250, "len {}", cb.len());
+        assert!(cb.max_abs() <= 1.0 + 1e-6);
+        assert!(cb.all_distinct());
+    }
+
+    #[test]
+    fn codes_are_used_nearly_uniformly_on_matching_data() {
+        // Minimum-entropy property: on data from the same distribution each
+        // code should be hit with roughly equal frequency.
+        let cb = quantile_normal();
+        let mut rng = Rng::new(77);
+        let mut counts = vec![0usize; cb.len()];
+        let n = 256 * 400;
+        // Normalize samples the same way the codebook was normalized: the
+        // codebook spans the sample range [-max_abs, max_abs] mapped to
+        // [-1, 1]; use a fresh sample's absmax as proxy normalizer.
+        let sample: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let absmax = sample.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for &x in &sample {
+            counts[cb.encode(x / absmax) as usize] += 1;
+        }
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        assert!(used as f64 > cb.len() as f64 * 0.9, "used {used}");
+        // No single code should dominate.
+        let max_frac = *counts.iter().max().unwrap() as f64 / n as f64;
+        assert!(max_frac < 0.03, "max code frequency {max_frac}");
+    }
+
+    #[test]
+    fn dense_near_mode_sparse_in_tails() {
+        let cb = quantile_normal();
+        let near0 = cb.values().iter().filter(|v| v.abs() < 0.1).count();
+        let tail = cb.values().iter().filter(|v| v.abs() > 0.8).count();
+        assert!(near0 > tail, "near0={near0} tail={tail}");
+    }
+
+    #[test]
+    fn from_data_handles_skewed_input() {
+        let mut rng = Rng::new(8);
+        let data: Vec<f32> = (0..50_000)
+            .map(|_| (rng.normal().abs().powi(3)) as f32)
+            .collect();
+        let cb = quantile_from_data(&data);
+        assert!(cb.len() > 100);
+        assert!(cb.all_distinct());
+    }
+}

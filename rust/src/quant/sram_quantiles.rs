@@ -1,0 +1,125 @@
+//! SRAM-Quantiles (Appendix G): fast approximate estimation of the 256
+//! sample quantiles needed by quantile quantization.
+//!
+//! Idea from the paper: full-tensor sorting thrashes DRAM; instead, find the
+//! eCDF of *subsets that fit in SRAM* (4096 values on the paper's GPU; here
+//! a cache-resident chunk), read the 257 equally spaced quantiles of each
+//! subset, and average the per-subset quantiles — the arithmetic mean is an
+//! unbiased estimator and subset sample quantiles are asymptotically
+//! unbiased (Chen & Kelton 2001), so more subsets ⇒ better estimates.
+
+use crate::util::parallel;
+
+/// Subset size — the paper's SRAM budget (≈4096 f32 per core).
+pub const SRAM_CHUNK: usize = 4096;
+
+/// Estimate `k` equally spaced quantiles of `data` (Eq. 5 uses k = 2^8 + 1
+/// boundary quantiles). Chunks are processed independently (in parallel)
+/// and their quantile vectors averaged.
+pub fn estimate_quantiles(data: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 2);
+    assert!(!data.is_empty());
+    let n_chunks = data.len().div_ceil(SRAM_CHUNK);
+    let partials: Vec<Vec<f64>> = parallel::par_map(n_chunks, |c| {
+        let lo = c * SRAM_CHUNK;
+        let hi = (lo + SRAM_CHUNK).min(data.len());
+        let mut chunk: Vec<f32> = data[lo..hi].to_vec();
+        chunk.sort_by(|a, b| a.partial_cmp(b).expect("finite input"));
+        chunk_quantiles(&chunk, k)
+    });
+    // Average per-quantile across chunks (atomic adds in the paper; a plain
+    // reduction here).
+    let mut acc = vec![0.0f64; k];
+    for p in &partials {
+        for (a, v) in acc.iter_mut().zip(p) {
+            *a += v;
+        }
+    }
+    let inv = 1.0 / partials.len() as f64;
+    acc.into_iter().map(|v| (v * inv) as f32).collect()
+}
+
+/// Exact quantiles by full sort — the slow baseline SRAM-Quantiles is
+/// benchmarked against (`benches/quantiles.rs`).
+pub fn exact_quantiles(data: &[f32], k: usize) -> Vec<f32> {
+    let mut sorted: Vec<f32> = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite input"));
+    chunk_quantiles(&sorted, k)
+        .into_iter()
+        .map(|v| v as f32)
+        .collect()
+}
+
+/// `k` equally spaced quantiles of an already-sorted slice, with linear
+/// interpolation between order statistics.
+fn chunk_quantiles(sorted: &[f32], k: usize) -> Vec<f64> {
+    let n = sorted.len();
+    (0..k)
+        .map(|i| {
+            let q = i as f64 / (k - 1) as f64;
+            let rank = q * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo] as f64
+            } else {
+                let w = rank - lo as f64;
+                sorted[lo] as f64 * (1.0 - w) + sorted[hi] as f64 * w
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_quantiles_of_uniform_grid() {
+        let data: Vec<f32> = (0..1001).map(|i| i as f32 / 1000.0).collect();
+        let q = exact_quantiles(&data, 5);
+        let expect = [0.0, 0.25, 0.5, 0.75, 1.0];
+        for (a, b) in q.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn estimate_close_to_exact_for_normal_data() {
+        let mut rng = Rng::new(99);
+        let data: Vec<f32> = (0..200_000).map(|_| rng.normal() as f32).collect();
+        let est = estimate_quantiles(&data, 257);
+        let exact = exact_quantiles(&data, 257);
+        // Compare interior quantiles (extremes have high estimator variance).
+        let mut max_err = 0.0f32;
+        for i in 8..249 {
+            max_err = max_err.max((est[i] - exact[i]).abs());
+        }
+        assert!(max_err < 0.05, "max interior error {max_err}");
+    }
+
+    #[test]
+    fn estimates_are_monotone() {
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..50_000).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let est = estimate_quantiles(&data, 257);
+        for w in est.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn short_input_works() {
+        let q = estimate_quantiles(&[1.0, 2.0, 3.0], 3);
+        assert_eq!(q.len(), 3);
+        assert!((q[0] - 1.0).abs() < 1e-6 && (q[2] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..30_000).map(|_| rng.normal() as f32).collect();
+        assert_eq!(estimate_quantiles(&data, 65), estimate_quantiles(&data, 65));
+    }
+}

@@ -1,0 +1,43 @@
+//! Table/figure regeneration harness — one function per table and figure
+//! of the paper (DESIGN.md §4 experiment index). Each prints the rows to
+//! stdout and writes a CSV under `results/`.
+
+pub mod tables_static;
+pub mod tables_train;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write a results CSV (creating `results/`).
+pub fn write_csv(name: &str, content: &str) -> Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Dispatch `bitopt8 repro <id>`.
+pub fn run(id: &str, args: &crate::util::args::Args) -> Result<()> {
+    match id {
+        "table1" => tables_train::table1(args),
+        "table2" => tables_static::table2(),
+        "table3" => tables_train::table3(args),
+        "table4" => tables_train::table4(args),
+        "table5" => tables_static::table5(args),
+        "table6" => tables_static::table6(args),
+        "table7" => tables_train::table7(args),
+        "table8" => tables_train::table8(args),
+        "fig3" => tables_train::fig3(args),
+        "all-static" => {
+            tables_static::table2()?;
+            tables_static::table5(args)?;
+            tables_static::table6(args)
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; known: table1..table8, fig3, all-static \
+             (fig2/fig4/fig5/fig6 live under `bitopt8 analyze`)"
+        ),
+    }
+}

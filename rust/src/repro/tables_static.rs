@@ -1,0 +1,140 @@
+//! Non-training table generators: Table 2 (memory model), Table 5
+//! (optimizer runtime), Table 6 (quantization error).
+
+use anyhow::Result;
+
+use crate::model::memory::{MemoryModel, OptStateKind};
+use crate::optim::{build, Bits, OptimConfig, OptimKind};
+use crate::quant::error::{abs_quant_error, relative_adam_error};
+use crate::quant::Format;
+use crate::util::args::Args;
+use crate::util::bench::{bench, black_box};
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// Table 2: largest finetunable model per GPU-memory budget, batch size 1.
+pub fn table2() -> Result<()> {
+    let mm = MemoryModel::default();
+    println!("Table 2 — largest finetunable model (batch size 1)");
+    println!("{:<16} {:<28} {:<28}", "GPU size in GB", "32-bit Adam", "8-bit Adam");
+    let mut csv = String::from("gpu_gb,adam32,adam8\n");
+    for budget in [6.0, 11.0, 24.0] {
+        let m32 = mm
+            .largest_finetunable(budget, OptStateKind::Adam32)
+            .map(|m| m.name.to_string())
+            .unwrap_or_else(|| "—".into());
+        let m8 = mm
+            .largest_finetunable(budget, OptStateKind::Adam8)
+            .map(|m| m.name.to_string())
+            .unwrap_or_else(|| "—".into());
+        println!("{budget:<16} {m32:<28} {m8:<28}");
+        csv.push_str(&format!("{budget},{m32},{m8}\n"));
+    }
+    let path = super::write_csv("table2.csv", &csv)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+/// Table 5: isolated optimizer runtime, normalized to ms per update per 1B
+/// parameters (we measure on a smaller tensor and scale linearly — the
+/// update is strictly elementwise/streaming).
+pub fn table5(args: &Args) -> Result<()> {
+    let n: usize = args.get_usize("n", 4 << 20);
+    let budget = std::time::Duration::from_millis(args.get_u64("budget-ms", 1500));
+    let mut rng = Rng::new(7);
+    let grads: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.01).collect();
+
+    println!("Table 5 — optimizer runtime, ms per update per 1B params (n = {n})");
+    println!(
+        "{:<12} {:>16} {:>16} {:>14}",
+        "Optimizer", "32-bit (naive)", "32-bit (fused)", "8-bit (ours)"
+    );
+    let mut csv = String::from("optimizer,ms_32bit_naive,ms_32bit_fused,ms_8bit\n");
+
+    for kind in [OptimKind::Adam, OptimKind::Momentum, OptimKind::Lamb, OptimKind::Lars] {
+        let mut row = Vec::new();
+        for (bits, single_thread) in [
+            (Bits::B32, true),  // "32-bit PyTorch" analogue: single-core
+            (Bits::B32, false), // "32-bit Apex" analogue: fused multicore
+            (Bits::b8_dynamic(), false),
+        ] {
+            let mut cfg = OptimConfig::adam(1e-3, bits);
+            cfg.kind = kind;
+            let mut opt = build(&cfg, n, None);
+            let mut params = vec![0.0f32; n];
+            let label = format!("{}/{}", kind.name(), bits.describe());
+            let prev = std::env::var("BITOPT8_THREADS").ok();
+            if single_thread {
+                std::env::set_var("BITOPT8_THREADS", "1");
+            }
+            let res = bench(&label, budget, 200, || {
+                opt.step(black_box(&mut params), black_box(&grads));
+            });
+            match prev {
+                Some(v) => std::env::set_var("BITOPT8_THREADS", v),
+                None => std::env::remove_var("BITOPT8_THREADS"),
+            }
+            // scale to 1B params
+            let ms_per_1b = res.median_ns * 1e-6 * (1e9 / n as f64);
+            row.push(ms_per_1b);
+        }
+        println!(
+            "{:<12} {:>16.1} {:>16.1} {:>14.1}",
+            kind.name(),
+            row[0],
+            row[1],
+            row[2]
+        );
+        csv.push_str(&format!("{},{:.2},{:.2},{:.2}\n", kind.name(), row[0], row[1], row[2]));
+    }
+    let path = super::write_csv("table5.csv", &csv)?;
+    println!("-> {} (paper: 8-bit faster than fused 32-bit for every optimizer)", path.display());
+    Ok(())
+}
+
+/// Table 6: mean relative Adam error and absolute quantization error for
+/// the first Adam state across formats, mean ± SE over draws.
+pub fn table6(args: &Args) -> Result<()> {
+    let n: usize = args.get_usize("n", 1 << 20);
+    let draws: usize = args.get_usize("draws", 5);
+    println!("Table 6 — quantization error by format ({draws} draws of {n} states)");
+    println!(
+        "{:<18} {:>26} {:>30}",
+        "Method", "Relative Adam Error", "Absolute Quantization Error"
+    );
+    let mut csv = String::from("method,rel_adam_err,rel_adam_se,abs_quant_err,abs_quant_se\n");
+    for format in [
+        Format::Linear,
+        Format::Quantile,
+        Format::InverseDynamic,
+        Format::Dynamic,
+    ] {
+        let (bq_m, bq_r) = crate::analysis::quantizer_pair(format, true);
+        let mut rel = Welford::new();
+        let mut abs = Welford::new();
+        for d in 0..draws {
+            let (m, r) = crate::analysis::synth_adam_states(n, 0xBEEF + d as u64);
+            rel.push(relative_adam_error(&bq_m, &bq_r, &m, &r, 1e-8).mean());
+            abs.push(abs_quant_error(&bq_m, &m).mean());
+        }
+        println!(
+            "{:<18} {:>17.2}% ± {:.2}% {:>20.3e} ± {:.1e}",
+            format.name(),
+            rel.mean() * 100.0,
+            rel.std_err() * 100.0,
+            abs.mean(),
+            abs.std_err()
+        );
+        csv.push_str(&format!(
+            "{},{:.6e},{:.6e},{:.6e},{:.6e}\n",
+            format.name(),
+            rel.mean(),
+            rel.std_err(),
+            abs.mean(),
+            abs.std_err()
+        ));
+    }
+    let path = super::write_csv("table6.csv", &csv)?;
+    println!("-> {} (paper ordering: Linear >> Quantile > InvDynamic > Dynamic)", path.display());
+    Ok(())
+}

@@ -1,0 +1,404 @@
+//! Training-based table generators: Tables 1, 3, 4, 7, 8 and Figure 3.
+//!
+//! Each reproduces the *comparison structure* of the paper's table on the
+//! synthetic workloads (DESIGN.md §Substitutions): same optimizer grid,
+//! same ablation axes, same reporting convention (median over seeds /
+//! hyperparameter runs, instability percentage). Step counts and seed
+//! counts are scaled to this testbed and CLI-overridable.
+
+use anyhow::Result;
+
+use crate::config::{parse_optim, RunConfig, Schedule};
+use crate::coordinator::{median_over_seeds, run_config, RunResult};
+use crate::data::glue::GLUE_TASKS;
+use crate::optim::{Bits, OptimKind};
+use crate::quant::Format;
+use crate::runtime::Runtime;
+use crate::util::args::Args;
+use crate::util::stats::median;
+
+fn runtime(args: &Args) -> Result<Runtime> {
+    Runtime::new(args.get_or("artifacts", "artifacts"))
+}
+
+fn base(model: &str, steps: usize, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.steps = steps;
+    cfg.seed = seed;
+    cfg.eval_every = 0; // evaluate once at the end
+    cfg.eval_batches = 8;
+    cfg.schedule = Schedule::WarmupLinear { warmup: steps / 10, total: steps };
+    cfg
+}
+
+fn seeds(args: &Args, default: u64) -> Vec<u64> {
+    let n = args.get_u64("seeds", default);
+    (0..n).map(|i| 1000 + i * 17).collect()
+}
+
+/// One (setting × seeds) evaluation returning (median eval metric,
+/// unstable %, median wall seconds, state bytes).
+fn run_seeds(rt: &Runtime, mk: impl Fn(u64) -> RunConfig, seeds: &[u64]) -> Result<(f64, f64, f64, usize)> {
+    let mut results: Vec<RunResult> = Vec::new();
+    for &s in seeds {
+        results.push(run_config(rt, mk(s))?);
+    }
+    let (med, unstable) = median_over_seeds(&results);
+    let wall = median(&results.iter().map(|r| r.wall_secs).collect::<Vec<_>>());
+    let bytes = results.first().map(|r| r.state_bytes).unwrap_or(0);
+    Ok((med, unstable, wall, bytes))
+}
+
+// ---------------------------------------------------------------- Table 1
+pub fn table1(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 250);
+    let model = args.get_or("model", "tiny_stable");
+    let cls_model = "cls_tiny";
+    let seeds = seeds(args, 3);
+
+    println!("Table 1 — 8-bit vs 32-bit optimizers (LM: {model}, {steps} steps; CLS: {cls_model})");
+    println!(
+        "{:<22} {:<5} {:>10} {:>9} {:>12}",
+        "Optimizer", "Task", "Metric", "Time s", "Mem saved"
+    );
+    let mut csv = String::from("optimizer,task,metric,time_s,state_bytes,mem_saved_frac\n");
+
+    // LM rows: Adam32 (reference), Adam8, Adafactor.
+    let mut adam32_bytes = 0usize;
+    let lm_rows: Vec<(&str, OptimKind, Bits, bool)> = vec![
+        ("32-bit Adam", OptimKind::Adam, Bits::B32, true),
+        ("32-bit Adafactor", OptimKind::Adafactor, Bits::B32, true),
+        ("8-bit Adam", OptimKind::Adam, Bits::b8_dynamic(), true),
+    ];
+    for (label, kind, bits, emb32) in lm_rows {
+        let (ppl, unstable, wall, bytes) = run_seeds(
+            &rt,
+            |s| {
+                let mut cfg = base(model, steps, s);
+                cfg.optim = parse_optim(kind.name(), bits_of(bits), "dynamic", true).unwrap();
+                cfg.optim.lr = args.get_f64("lr", 1e-3) as f32;
+                cfg.emb32 = emb32 && bits != Bits::B32;
+                cfg
+            },
+            &seeds,
+        )?;
+        if bits == Bits::B32 && kind == OptimKind::Adam {
+            adam32_bytes = bytes;
+        }
+        let saved = (adam32_bytes.saturating_sub(bytes)) as f64 / 1e6;
+        println!(
+            "{:<22} {:<5} {:>7.2}ppl {:>9.1} {:>9.1} MB  (unstable {unstable:.0}%)",
+            label,
+            "LM",
+            ppl.exp(),
+            wall,
+            saved
+        );
+        csv.push_str(&format!(
+            "{label},LM,{:.4},{wall:.2},{bytes},{:.4}\n",
+            ppl.exp(),
+            saved
+        ));
+    }
+
+    // CLS rows: Momentum32 vs Momentum8 (the ImageNet/MoCo analogue).
+    let mut mom32_bytes = 0usize;
+    for (label, bits) in [("32-bit Momentum", Bits::B32), ("8-bit Momentum", Bits::b8_dynamic())] {
+        let (loss, unstable, wall, bytes) = run_seeds(
+            &rt,
+            |s| {
+                let mut cfg = base(cls_model, steps, s);
+                cfg.optim = parse_optim("momentum", bits_of(bits), "dynamic", true).unwrap();
+                cfg.optim.lr = args.get_f64("cls-lr", 0.05) as f32;
+                cfg
+            },
+            &seeds,
+        )?;
+        if bits == Bits::B32 {
+            mom32_bytes = bytes;
+        }
+        // report accuracy: rerun? run_seeds returns eval loss; for CLS we
+        // want accuracy — rerun one seed to read accuracy.
+        let mut cfg = base(cls_model, steps, seeds[0]);
+        cfg.optim = parse_optim("momentum", bits_of(bits), "dynamic", true).unwrap();
+        cfg.optim.lr = args.get_f64("cls-lr", 0.05) as f32;
+        let r = run_config(&rt, cfg)?;
+        let acc = r.eval_accs.last().map(|&(_, a)| a).unwrap_or(f64::NAN);
+        let saved = (mom32_bytes.saturating_sub(bytes)) as f64 / 1e6;
+        println!(
+            "{:<22} {:<5} {:>7.3}acc {:>9.1} {:>9.1} MB  (loss {loss:.3}, unstable {unstable:.0}%)",
+            label, "CLS", acc, wall, saved
+        );
+        csv.push_str(&format!("{label},CLS,{acc:.4},{wall:.2},{bytes},{saved:.4}\n"));
+    }
+
+    let path = super::write_csv("table1.csv", &csv)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+fn bits_of(b: Bits) -> usize {
+    match b {
+        Bits::B32 => 32,
+        Bits::B8 { .. } => 8,
+    }
+}
+
+// ---------------------------------------------------------------- Table 3
+pub fn table3(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 150);
+    let preset = args.get_or("model", "nano");
+    let stable_name = format!("{preset}_stable");
+    // The paper's grid: ε, β1, β2 variations (plus small lr changes). The
+    // default grid is a 9-combo subsample; --grid full gives all 27.
+    let eps_grid = [1e-8f32, 1e-7, 1e-6];
+    let b1_grid = [0.90f32, 0.87, 0.93];
+    let b2_grid = [0.999f32, 0.99, 0.98];
+    let full = args.get_or("grid", "sub") == "full";
+    let mut combos: Vec<(f32, f32, f32)> = Vec::new();
+    for (i, &eps) in eps_grid.iter().enumerate() {
+        for (j, &b1) in b1_grid.iter().enumerate() {
+            for (k, &b2) in b2_grid.iter().enumerate() {
+                if full || (i + j + k) % 3 == 0 {
+                    combos.push((eps, b1, b2));
+                }
+            }
+        }
+    }
+    let lr = args.get_f64("lr", 4e-3) as f32;
+
+    // (dynamic, blockwise, stable, 8bit)
+    let settings: Vec<(&str, bool, bool, bool, bool)> = vec![
+        ("32-bit Adam", false, false, false, false),
+        ("32-bit Adam + StableEmb", false, false, true, false),
+        ("8-bit Adam (linear, tensorwise)", false, false, false, true),
+        ("8-bit Adam (linear) + StableEmb", false, false, true, true),
+        ("8-bit Adam + Dynamic", true, false, false, true),
+        ("8-bit Adam + Dynamic + StableEmb", true, false, true, true),
+        ("8-bit Adam + Dynamic + Blockwise", true, true, false, true),
+        ("8-bit Adam + Dyn + Block + Stable", true, true, true, true),
+    ];
+
+    println!(
+        "Table 3 — ablation on {preset} LM ({} hyper combos × {} settings, {steps} steps, lr {lr})",
+        combos.len(),
+        settings.len()
+    );
+    println!("{:<36} {:>12} {:>12}", "Setting", "Unstable %", "Median ppl");
+    let mut csv = String::from("setting,dynamic,blockwise,stable_emb,unstable_pct,median_ppl\n");
+
+    for (label, dynamic, blockwise, stable, is8) in settings {
+        let mut results = Vec::new();
+        for (ci, &(eps, b1, b2)) in combos.iter().enumerate() {
+            let mut cfg = base(if stable { &stable_name } else { preset }, steps, 500 + ci as u64);
+            let format = if dynamic { Format::Dynamic } else { Format::Linear };
+            cfg.optim = parse_optim("adam", if is8 { 8 } else { 32 }, format.name(), blockwise)?;
+            cfg.optim.lr = lr;
+            cfg.optim.eps = eps;
+            cfg.optim.beta1 = b1;
+            cfg.optim.beta2 = b2;
+            cfg.emb32 = stable && is8;
+            // grad clipping off: the paper's instability manifests as
+            // exploding gradients; clipping would mask the ablation signal.
+            cfg.grad_clip = 0.0;
+            results.push(run_config(&rt, cfg)?);
+        }
+        let (med, unstable) = median_over_seeds(&results);
+        let ppl = med.exp();
+        println!("{label:<36} {unstable:>11.0}% {ppl:>12.2}");
+        csv.push_str(&format!(
+            "{label},{dynamic},{blockwise},{stable},{unstable:.1},{ppl:.3}\n"
+        ));
+    }
+    let path = super::write_csv("table3.csv", &csv)?;
+    println!("-> {} (paper: dynamic fixes general stability, blockwise fixes large-scale)", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 4
+pub fn table4(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 150);
+    let seeds = seeds(args, 3);
+    println!("Table 4 — GLUE-like breakdown (median acc over {} seeds, {steps} steps)", seeds.len());
+    print!("{:<18}", "Model");
+    for t in &GLUE_TASKS {
+        print!("{:>7}", t.name);
+    }
+    println!("{:>7}", "Mean");
+    let mut csv = String::from("optimizer,task,median_acc\n");
+
+    for (label, kind, bits) in [
+        ("32-bit Adam", "adam", 32),
+        ("32-bit Adafactor", "adafactor", 32),
+        ("8-bit Adam", "adam", 8),
+    ] {
+        print!("{label:<18}");
+        let mut accs = Vec::new();
+        for task in &GLUE_TASKS {
+            let mut per_seed = Vec::new();
+            for &s in &seeds {
+                let mut cfg = base("cls_tiny", steps, s);
+                cfg.optim = parse_optim(kind, bits, "dynamic", true)?;
+                cfg.optim.lr = args.get_f64("lr", 1e-3) as f32;
+                let mut tr = crate::coordinator::Trainer::new(&rt, cfg)?.with_glue_task(task)?;
+                let r = tr.train()?;
+                per_seed.push(r.eval_accs.last().map(|&(_, a)| a).unwrap_or(f64::NAN));
+            }
+            let med = median(&per_seed);
+            accs.push(med);
+            print!("{:>7.3}", med);
+            csv.push_str(&format!("{label},{},{med:.4}\n", task.name));
+        }
+        println!("{:>7.3}", accs.iter().sum::<f64>() / accs.len() as f64);
+    }
+    let path = super::write_csv("table4.csv", &csv)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 7
+pub fn table7(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 200);
+    let seeds = seeds(args, 3);
+    let model = args.get_or("model", "nano_stable");
+    println!("Table 7 — AdaGrad vs Adam ({model}, {steps} steps, {} seeds)", seeds.len());
+    println!("{:<18} {:>14}", "Optimizer", "Valid ppl");
+    let mut csv = String::from("optimizer,median_ppl,unstable_pct\n");
+    for (label, kind, bits, lr) in [
+        ("32-bit Adam", "adam", 32usize, 1e-3),
+        ("8-bit Adam", "adam", 8, 1e-3),
+        ("32-bit AdaGrad", "adagrad", 32, 1e-2),
+        ("8-bit AdaGrad", "adagrad", 8, 1e-2),
+    ] {
+        let (med, unstable, _, _) = run_seeds(
+            &rt,
+            |s| {
+                let mut cfg = base(model, steps, s);
+                cfg.optim = parse_optim(kind, bits, "dynamic", true).unwrap();
+                cfg.optim.lr = args.get_f64("lr", lr) as f32;
+                cfg.emb32 = bits == 8;
+                cfg
+            },
+            &seeds,
+        )?;
+        println!("{label:<18} {:>14.2}  (unstable {unstable:.0}%)", med.exp());
+        csv.push_str(&format!("{label},{:.3},{unstable:.1}\n", med.exp()));
+    }
+    let path = super::write_csv("table7.csv", &csv)?;
+    println!("-> {} (paper: 8-bit matches Adam; AdaGrad gap persists in 8-bit)", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 8
+pub fn table8(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 200);
+    let seeds = seeds(args, 3);
+    let preset = args.get_or("model", "nano");
+    let stable_name = format!("{preset}_stable");
+    println!(
+        "Table 8 — stable-embedding component ablation ({preset}, 8-bit Adam, {steps} steps)"
+    );
+    println!(
+        "{:<12} {:<8} {:<14} {:>12}",
+        "LayerNorm", "Xavier", "32-bit state", "Median ppl"
+    );
+    let mut csv = String::from("layer_norm,xavier,state32,median_ppl,unstable_pct\n");
+    for ln in [false, true] {
+        for xavier in [false, true] {
+            for state32 in [false, true] {
+                let (med, unstable, _, _) = run_seeds(
+                    &rt,
+                    |s| {
+                        let mut cfg =
+                            base(if ln { &stable_name } else { preset }, steps, s);
+                        cfg.optim = parse_optim("adam", 8, "dynamic", true).unwrap();
+                        cfg.optim.lr = args.get_f64("lr", 1e-3) as f32;
+                        cfg.emb32 = state32;
+                        // decouple init from the graph variant
+                        cfg.emb_init_override = Some(if xavier {
+                            "xavier_uniform".to_string()
+                        } else {
+                            // fairseq init N(0, 1/sqrt(d)); d from preset
+                            "normal:1.25000000e-01".to_string()
+                        });
+                        cfg
+                    },
+                    &seeds,
+                )?;
+                println!(
+                    "{:<12} {:<8} {:<14} {:>12.2}",
+                    ln, xavier, state32, med.exp()
+                );
+                csv.push_str(&format!(
+                    "{ln},{xavier},{state32},{:.3},{unstable:.1}\n",
+                    med.exp()
+                ));
+            }
+        }
+    }
+    let path = super::write_csv("table8.csv", &csv)?;
+    println!("-> {} (paper: LayerNorm and Xavier both help; 32-bit state neutral at small scale)", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Figure 3
+pub fn fig3(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let steps = args.get_usize("steps", 150);
+    let model = args.get_or("model", "nano");
+    let stable = format!("{model}_stable");
+    let seeds = seeds(args, 2);
+    let base_lr = args.get_f64("lr", 2e-3) as f32;
+    println!("Figure 3 — hyperparameter sensitivity, 32-bit Adam vs 8-bit Adam+StableEmb");
+    let mut csv = String::from("axis,value,optimizer,median_ppl,unstable_pct\n");
+
+    type Patch = Box<dyn Fn(&mut RunConfig)>;
+    let mut axes: Vec<(&str, f64, Patch)> = Vec::new();
+    for mult in [0.5f64, 0.75, 1.0, 1.5, 2.0] {
+        axes.push((
+            "lr",
+            mult,
+            Box::new(move |c: &mut RunConfig| c.optim.lr = base_lr * mult as f32),
+        ));
+    }
+    for b1 in [0.85f64, 0.9, 0.95] {
+        axes.push(("beta1", b1, Box::new(move |c: &mut RunConfig| c.optim.beta1 = b1 as f32)));
+    }
+    for b2 in [0.98f64, 0.99, 0.995, 0.999] {
+        axes.push(("beta2", b2, Box::new(move |c: &mut RunConfig| c.optim.beta2 = b2 as f32)));
+    }
+    for eps in [1e-8f64, 1e-7, 1e-6] {
+        axes.push(("eps", eps, Box::new(move |c: &mut RunConfig| c.optim.eps = eps as f32)));
+    }
+
+    for (axis, value, patch) in &axes {
+        for (label, bits) in [("adam32", 32usize), ("adam8", 8)] {
+            let mut results = Vec::new();
+            for &s in &seeds {
+                let mut cfg = base(if bits == 8 { &stable } else { model }, steps, s);
+                cfg.optim = parse_optim("adam", bits, "dynamic", true)?;
+                cfg.optim.lr = base_lr;
+                cfg.optim.beta2 = 0.995;
+                cfg.optim.eps = 1e-7;
+                cfg.emb32 = bits == 8;
+                patch(&mut cfg);
+                results.push(run_config(&rt, cfg)?);
+            }
+            let (med, unstable) = median_over_seeds(&results);
+            csv.push_str(&format!(
+                "{axis},{value},{label},{:.3},{unstable:.1}\n",
+                med.exp()
+            ));
+        }
+        println!("  swept {axis}={value}");
+    }
+    let path = super::write_csv("fig3.csv", &csv)?;
+    println!("-> {} (paper: a steady small gap across all settings)", path.display());
+    Ok(())
+}

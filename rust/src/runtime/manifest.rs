@@ -1,0 +1,195 @@
+//! The artifact manifest — the contract between `python/compile/aot.py`
+//! and the Rust coordinator. Parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub is_embedding: bool,
+    pub size: usize,
+    /// size rounded up to a quantization-block multiple (HLO state layout).
+    pub padded: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub preset: String,
+    pub stable_embedding: bool,
+    pub task: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub n_params: usize,
+    pub train: String,
+    pub eval: String,
+    pub params: Vec<ParamEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub block: usize,
+    pub codebooks: BTreeMap<String, Vec<f32>>,
+    pub models: Vec<ModelEntry>,
+    /// optimizer kind -> tensor size -> artifact file
+    pub updates: BTreeMap<String, BTreeMap<usize, String>>,
+    /// parity-test artifacts: name -> (n, quant file, dequant file)
+    pub parity: BTreeMap<String, (usize, String, String)>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let block = v.get("block").as_usize().ok_or_else(|| anyhow!("missing block"))?;
+
+        let mut codebooks = BTreeMap::new();
+        if let Some(obj) = v.get("codebooks").as_obj() {
+            for (k, arr) in obj {
+                let vals = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("codebook {k} not array"))?
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+                    .collect();
+                codebooks.insert(k.clone(), vals);
+            }
+        }
+
+        let mut models = Vec::new();
+        for m in v.get("models").as_arr().unwrap_or(&[]) {
+            let params = m
+                .get("params")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| ParamEntry {
+                    name: p.get("name").as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    init: p.get("init").as_str().unwrap_or("zeros").to_string(),
+                    is_embedding: p.get("is_embedding").as_bool().unwrap_or(false),
+                    size: p.get("size").as_usize().unwrap_or(0),
+                    padded: p.get("padded").as_usize().unwrap_or(0),
+                })
+                .collect();
+            models.push(ModelEntry {
+                name: m.get("name").as_str().unwrap_or_default().to_string(),
+                preset: m.get("preset").as_str().unwrap_or_default().to_string(),
+                stable_embedding: m.get("stable_embedding").as_bool().unwrap_or(false),
+                task: m.get("task").as_str().unwrap_or("lm").to_string(),
+                batch: m.get("batch").as_usize().unwrap_or(1),
+                seq_len: m.get("seq_len").as_usize().unwrap_or(0),
+                vocab: m.get("vocab").as_usize().unwrap_or(0),
+                n_classes: m.get("n_classes").as_usize().unwrap_or(2),
+                n_params: m.get("n_params").as_usize().unwrap_or(0),
+                train: m.get("train").as_str().unwrap_or_default().to_string(),
+                eval: m.get("eval").as_str().unwrap_or_default().to_string(),
+                params,
+            });
+        }
+
+        let mut updates = BTreeMap::new();
+        if let Some(obj) = v.get("updates").as_obj() {
+            for (kind, sizes) in obj {
+                let mut inner = BTreeMap::new();
+                if let Some(szobj) = sizes.as_obj() {
+                    for (sz, file) in szobj {
+                        if let (Ok(n), Some(f)) = (sz.parse::<usize>(), file.as_str()) {
+                            inner.insert(n, f.to_string());
+                        }
+                    }
+                }
+                updates.insert(kind.clone(), inner);
+            }
+        }
+
+        let mut parity = BTreeMap::new();
+        if let Some(obj) = v.get("parity").as_obj() {
+            for (k, p) in obj {
+                parity.insert(
+                    k.clone(),
+                    (
+                        p.get("n").as_usize().unwrap_or(0),
+                        p.get("quant").as_str().unwrap_or_default().to_string(),
+                        p.get("dequant").as_str().unwrap_or_default().to_string(),
+                    ),
+                );
+            }
+        }
+
+        Ok(Manifest { block, codebooks, models, updates, parity })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.iter().map(|m| &m.name).collect::<Vec<_>>()))
+    }
+
+    /// HLO update artifact for an optimizer kind + tensor size, if built.
+    pub fn update_artifact(&self, kind: &str, size: usize) -> Option<&str> {
+        self.updates.get(kind).and_then(|m| m.get(&size)).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "block": 2048,
+      "codebooks": {"dynamic_signed": [-1.0, 0.0, 1.0]},
+      "models": [{
+        "name": "nano", "preset": "nano", "stable_embedding": false,
+        "task": "lm", "batch": 16, "seq_len": 64, "vocab": 512,
+        "n_classes": 2, "n_params": 100,
+        "train": "nano.train.hlo.txt", "eval": "nano.eval.hlo.txt",
+        "params": [{"name": "embed.tok", "shape": [512, 64],
+                    "init": "normal:1.25e-01", "is_embedding": true,
+                    "size": 32768, "padded": 32768}]
+      }],
+      "updates": {"adam8": {"32768": "adam8_n32768.hlo.txt"}},
+      "parity": {"quant_signed": {"n": 8192, "quant": "q.hlo.txt", "dequant": "d.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.block, 2048);
+        assert_eq!(m.codebooks["dynamic_signed"].len(), 3);
+        let model = m.model("nano").unwrap();
+        assert_eq!(model.params[0].shape, vec![512, 64]);
+        assert!(model.params[0].is_embedding);
+        assert_eq!(m.update_artifact("adam8", 32768), Some("adam8_n32768.hlo.txt"));
+        assert_eq!(m.update_artifact("adam8", 999), None);
+        assert_eq!(m.parity["quant_signed"].0, 8192);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! One compiled executable per artifact, cached by name.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+pub use manifest::{Manifest, ModelEntry, ParamEntry};
+
+/// A loaded PJRT client plus an executable cache over an artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the manifest written by `python/compile/aot.py`.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(self.dir.join("manifest.json"))
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; outputs are the elements of
+    /// the return tuple (aot.py lowers everything with return_tuple=True).
+    pub fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(file)?;
+        run_exe(&exe, inputs)
+    }
+}
+
+/// Execute a compiled executable; unpack the result tuple.
+pub fn run_exe(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let outs = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = outs
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| anyhow!("no output buffer"))?
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+}
+
+// ------------------------------------------------------------- conversions
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// i32 matrix -> rank-2 literal.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 slice -> rank-1 literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// u8 slice -> rank-1 literal (optimizer state codes).
+pub fn lit_u8(v: &[u8]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[v.len()], v)
+        .map_err(|e| anyhow!("u8 literal: {e:?}"))
+}
+
+/// f32 slice -> rank-N literal with explicit dims.
+pub fn lit_f32_shaped(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(v.len(), n);
+    let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v).reshape(&dims64).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// literal -> Vec<f32> (any shape, flattened).
+pub fn f32_of(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// literal -> Vec<u8>.
+pub fn u8_of(lit: &xla::Literal) -> Result<Vec<u8>> {
+    lit.to_vec::<u8>().map_err(|e| anyhow!("to_vec u8: {e:?}"))
+}
+
+/// literal -> f32 scalar.
+pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+/// Initialize a parameter tensor from its manifest init spec. This is the
+/// Rust half of the init contract with `model.param_specs` (python).
+pub fn init_param(spec: &ParamEntry, rng: &mut crate::util::rng::Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; spec.size];
+    match spec.init.as_str() {
+        "zeros" => {}
+        "ones" => out.iter_mut().for_each(|v| *v = 1.0),
+        "xavier_uniform" => {
+            let fan_in = spec.shape.first().copied().unwrap_or(1) as f64;
+            let fan_out = spec.shape.last().copied().unwrap_or(1) as f64;
+            let a = (6.0 / (fan_in + fan_out)).sqrt();
+            rng.fill_uniform_sym(&mut out, a);
+        }
+        s if s.starts_with("normal:") => {
+            let std: f64 = s["normal:".len()..].parse().expect("init std");
+            rng.fill_normal(&mut out, std);
+        }
+        other => panic!("unknown init spec {other:?}"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn init_param_specs() {
+        let mut rng = Rng::new(1);
+        let mk = |init: &str, shape: Vec<usize>| ParamEntry {
+            name: "t".into(),
+            shape: shape.clone(),
+            init: init.into(),
+            is_embedding: false,
+            size: shape.iter().product(),
+            padded: 2048,
+        };
+        assert!(init_param(&mk("zeros", vec![8]), &mut rng).iter().all(|&v| v == 0.0));
+        assert!(init_param(&mk("ones", vec![8]), &mut rng).iter().all(|&v| v == 1.0));
+        let xu = init_param(&mk("xavier_uniform", vec![100, 50]), &mut rng);
+        let bound = (6.0f32 / 150.0).sqrt();
+        assert!(xu.iter().all(|&v| v.abs() <= bound));
+        let nm = init_param(&mk("normal:2.0e0", vec![10000]), &mut rng);
+        let std = (nm.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / 1e4).sqrt();
+        assert!((std - 2.0).abs() < 0.1, "{std}");
+    }
+}

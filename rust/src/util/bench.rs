@@ -1,0 +1,110 @@
+//! In-tree micro-benchmark harness (criterion stand-in).
+//!
+//! `cargo bench` targets in `benches/` are plain `harness = false` binaries
+//! that call [`bench`]; it warms up, runs timed iterations until a wall
+//! budget or iteration cap is hit, and reports median / mean / p10 / p90.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} p90   ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: elements processed per second given per-iter count.
+    pub fn throughput(&self, elems_per_iter: usize) -> f64 {
+        elems_per_iter as f64 / (self.median_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure. Runs `warmup` untimed iterations, then timed
+/// iterations until `budget` elapses (min 5, max `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> BenchResult {
+    // Warmup: 2 runs or until 10% of the budget spent.
+    let warm_start = Instant::now();
+    for _ in 0..2 {
+        f();
+        if warm_start.elapsed() > budget / 10 {
+            break;
+        }
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 5 || start.elapsed() < budget) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        median_ns: samples[n / 2],
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p10_ns: samples[(n as f64 * 0.1) as usize],
+        p90_ns: samples[((n as f64 * 0.9) as usize).min(n - 1)],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", Duration::from_millis(30), 1_000, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Binary serialization helpers for checkpoints and state dumps.
+//!
+//! Format: little-endian, length-prefixed sections. Simple, versioned, and
+//! dependency-free (no serde in the offline registry).
+
+use std::io::{Read, Write};
+
+pub fn write_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+pub fn write_u64<W: Write>(w: &mut W, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+pub fn write_f32_slice<W: Write>(w: &mut W, v: &[f32]) -> std::io::Result<()> {
+    write_u64(w, v.len() as u64)?;
+    // Write in chunks to avoid per-element syscalls.
+    let mut buf = Vec::with_capacity(v.len().min(1 << 16) * 4);
+    for chunk in v.chunks(1 << 14) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+pub fn write_u8_slice<W: Write>(w: &mut W, v: &[u8]) -> std::io::Result<()> {
+    write_u64(w, v.len() as u64)?;
+    w.write_all(v)
+}
+pub fn write_str<W: Write>(w: &mut W, s: &str) -> std::io::Result<()> {
+    write_u8_slice(w, s.as_bytes())
+}
+
+pub fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+pub fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+pub fn read_f32_slice<R: Read>(r: &mut R) -> std::io::Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+pub fn read_u8_slice<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes)
+}
+pub fn read_str<R: Read>(r: &mut R) -> std::io::Result<String> {
+    let bytes = read_u8_slice(r)?;
+    String::from_utf8(bytes).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+/// Write a CSV row (no quoting needed for our numeric tables).
+pub fn csv_row(cols: &[String]) -> String {
+    cols.join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 0xDEADBEEF).unwrap();
+        write_u64(&mut buf, u64::MAX - 3).unwrap();
+        write_f32_slice(&mut buf, &[1.5, -2.25, 0.0, f32::MIN_POSITIVE]).unwrap();
+        write_u8_slice(&mut buf, &[1, 2, 3]).unwrap();
+        write_str(&mut buf, "hello/путь").unwrap();
+
+        let mut r = buf.as_slice();
+        assert_eq!(read_u32(&mut r).unwrap(), 0xDEADBEEF);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 3);
+        assert_eq!(read_f32_slice(&mut r).unwrap(), vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        assert_eq!(read_u8_slice(&mut r).unwrap(), vec![1, 2, 3]);
+        assert_eq!(read_str(&mut r).unwrap(), "hello/путь");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf = Vec::new();
+        write_f32_slice(&mut buf, &[1.0, 2.0]).unwrap();
+        buf.truncate(buf.len() - 1);
+        assert!(read_f32_slice(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn large_f32_slice_roundtrip() {
+        let v: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let mut buf = Vec::new();
+        write_f32_slice(&mut buf, &v).unwrap();
+        assert_eq!(read_f32_slice(&mut buf.as_slice()).unwrap(), v);
+    }
+}

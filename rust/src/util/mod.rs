@@ -1,0 +1,14 @@
+//! Dependency-free substrates: PRNG, statistics, parallelism, JSON, CLI
+//! args, binary IO, and a micro-benchmark harness.
+//!
+//! The offline registry only resolves the `xla` crate closure, so the usual
+//! ecosystem crates (rand, rayon, serde, clap, criterion) are re-implemented
+//! here at the scale this project needs.
+
+pub mod args;
+pub mod bench;
+pub mod io;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,206 @@
+//! Chunked data-parallelism over std scoped threads (rayon stand-in).
+//!
+//! The 8-bit optimizer hot loop is embarrassingly parallel over quantization
+//! blocks; this module gives it multi-core scaling without external crates.
+//! Block-wise quantization needs *no cross-core synchronization* (the
+//! paper's §2.1 throughput argument), so a plain chunk split is exact.
+
+/// Number of worker threads to use (capped, respects BITOPT8_THREADS).
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("BITOPT8_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
+/// `chunk_len` elements each (last chunk may be short), across threads.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync + Send,
+{
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = num_threads().min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Split the chunk index space evenly across threads; each thread walks
+    // its own contiguous run of chunks.
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    let per = chunks.len().div_ceil(threads);
+    let mut groups: Vec<Vec<(usize, &mut [T])>> = Vec::new();
+    let mut it = chunks.into_iter();
+    loop {
+        let g: Vec<_> = it.by_ref().take(per).collect();
+        if g.is_empty() {
+            break;
+        }
+        groups.push(g);
+    }
+    std::thread::scope(|s| {
+        for group in groups {
+            s.spawn(|| {
+                for (i, c) in group {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i, a_chunk, b_chunk)` over paired disjoint chunks of two slices
+/// with independent chunk lengths (e.g. 2048 codes + 1 absmax per block).
+pub fn par_chunks_pair_mut<A: Send, B: Send, F>(
+    a: &mut [A],
+    ca: usize,
+    b: &mut [B],
+    cb: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [A], &mut [B]) + Sync + Send,
+{
+    assert!(ca > 0 && cb > 0);
+    let n_chunks = a.len().div_ceil(ca);
+    assert_eq!(n_chunks.max(1), b.len().div_ceil(cb).max(1), "chunk counts differ");
+    let pairs: Vec<(usize, (&mut [A], &mut [B]))> = a
+        .chunks_mut(ca)
+        .zip(b.chunks_mut(cb))
+        .enumerate()
+        .map(|(i, p)| (i, p))
+        .collect();
+    let threads = num_threads().min(pairs.len().max(1));
+    if threads <= 1 || pairs.len() <= 1 {
+        for (i, (pa, pb)) in pairs {
+            f(i, pa, pb);
+        }
+        return;
+    }
+    let per = pairs.len().div_ceil(threads);
+    let mut groups: Vec<Vec<(usize, (&mut [A], &mut [B]))>> = Vec::new();
+    let mut it = pairs.into_iter();
+    loop {
+        let g: Vec<_> = it.by_ref().take(per).collect();
+        if g.is_empty() {
+            break;
+        }
+        groups.push(g);
+    }
+    std::thread::scope(|s| {
+        for group in groups {
+            s.spawn(|| {
+                for (i, (pa, pb)) in group {
+                    f(i, pa, pb);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over an index range, collecting results in order.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync + Send,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(threads);
+    let slices: Vec<(usize, &mut [Option<R>])> = {
+        let mut v = Vec::new();
+        let mut rest = out.as_mut_slice();
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            v.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        v
+    };
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (start, slot) in slices {
+            s.spawn(move || {
+                for (j, cell) in slot.iter_mut().enumerate() {
+                    *cell = Some(fref(start + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+/// Run two independent closures on two disjoint mutable slices in parallel.
+pub fn join<A: Send, B: Send>(fa: impl FnOnce() -> A + Send, fb: impl FnOnce() -> B + Send) -> (A, B) {
+    let mut ra = None;
+    let mut rb = None;
+    std::thread::scope(|s| {
+        s.spawn(|| ra = Some(fa()));
+        rb = Some(fb());
+    });
+    (ra.unwrap(), rb.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_touches_every_element_once() {
+        let mut data = vec![0u32; 10_000];
+        par_chunks_mut(&mut data, 257, |i, c| {
+            for v in c.iter_mut() {
+                *v += 1 + i as u32 * 0; // each element exactly once
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn par_chunks_chunk_indices_are_correct() {
+        let mut data = vec![0usize; 1000];
+        par_chunks_mut(&mut data, 100, |i, c| {
+            for v in c.iter_mut() {
+                *v = i;
+            }
+        });
+        for (j, &v) in data.iter().enumerate() {
+            assert_eq!(v, j / 100);
+        }
+    }
+
+    #[test]
+    fn par_map_ordering() {
+        let out = par_map(1000, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn join_runs_both() {
+        let (a, b) = join(|| 2 + 2, || "ok");
+        assert_eq!(a, 4);
+        assert_eq!(b, "ok");
+    }
+
+    #[test]
+    fn par_chunks_short_input() {
+        let mut data = vec![0u8; 3];
+        par_chunks_mut(&mut data, 1024, |_, c| {
+            for v in c.iter_mut() {
+                *v = 7;
+            }
+        });
+        assert_eq!(data, vec![7, 7, 7]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Engine-parity integration tests: the native Rust quantizer/optimizer
+//! and the AOT Pallas/HLO kernels must agree on the same inputs.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they skip
+//! with a notice when the manifest is missing so plain `cargo test` works
+//! on a fresh checkout.
+
+use bitopt8::optim::{build, Bits, OptimConfig, StateTensor};
+use bitopt8::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
+use bitopt8::quant::{BlockQuantizer, Quantized, BLOCK};
+use bitopt8::runtime::{self, Runtime};
+use bitopt8::util::rng::Rng;
+use std::sync::Arc;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("pjrt client"))
+}
+
+#[test]
+fn codebooks_match_manifest_bitwise() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    for (name, native) in [
+        ("dynamic_signed", dynamic_signed()),
+        ("dynamic_unsigned", dynamic_unsigned()),
+        ("linear_signed", bitopt8::quant::linear::linear_signed()),
+        ("linear_unsigned", bitopt8::quant::linear::linear_unsigned()),
+    ] {
+        let from_python = &manifest.codebooks[name];
+        assert_eq!(from_python.len(), native.len(), "{name} length");
+        for (i, (a, b)) in from_python.iter().zip(native.values()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name}[{i}]: python {a} != rust {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantize_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    for (key, signed) in [("quant_signed", true), ("quant_unsigned", false)] {
+        let (n, quant_file, dequant_file) = manifest.parity[key].clone();
+        let mut rng = Rng::new(0xA11CE);
+        let mut x: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+        if !signed {
+            x.iter_mut().for_each(|v| *v = v.abs());
+        }
+        // HLO path
+        let outs = rt.run(&quant_file, &[runtime::lit_f32(&x)]).unwrap();
+        let codes_hlo = runtime::u8_of(&outs[0]).unwrap();
+        let absmax_hlo = runtime::f32_of(&outs[1]).unwrap();
+        // native path
+        let cb = if signed { dynamic_signed() } else { dynamic_unsigned() };
+        let bq = BlockQuantizer::new(Arc::new(cb), manifest.block);
+        let q = bq.quantize(&x);
+        assert_eq!(q.codes, codes_hlo, "{key}: codes differ");
+        assert_eq!(q.absmax, absmax_hlo, "{key}: absmax differ");
+        // HLO dequant matches native dequant exactly
+        let outs = rt
+            .run(
+                &dequant_file,
+                &[runtime::lit_u8(&codes_hlo).unwrap(), runtime::lit_f32(&absmax_hlo)],
+            )
+            .unwrap();
+        let deq_hlo = runtime::f32_of(&outs[0]).unwrap();
+        assert_eq!(bq.dequantize(&q), deq_hlo, "{key}: dequant differs");
+    }
+}
+
+#[test]
+fn adam8_artifact_matches_native_step() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    // pick an artifact size present in the manifest
+    let (&n, artifact) = manifest.updates["adam8"].iter().next().expect("adam8 artifacts");
+    let artifact = artifact.clone();
+    let npad = n.div_ceil(manifest.block) * manifest.block;
+    let nb = npad / manifest.block;
+
+    let mut rng = Rng::new(0xADA);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let m0: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let r0: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.003).powi(2) as f32).collect();
+
+    let (lr, b1, b2, eps, wd) = (0.01f32, 0.9f32, 0.995f32, 1e-7f32, 0.0f32);
+    let t = 3u64;
+
+    // ---- native step with preloaded state --------------------------------
+    let mut cfg = OptimConfig::adam(lr, Bits::b8_dynamic());
+    cfg.beta1 = b1;
+    cfg.beta2 = b2;
+    cfg.eps = eps;
+    cfg.weight_decay = wd;
+    let mut opt = build(&cfg, n, None);
+    opt.set_t(t - 1); // step() will advance to t
+    for (name, st) in opt.states_mut() {
+        let src = if name == "m" { &m0 } else { &r0 };
+        match st {
+            StateTensor::Q8 { q, codebook } => {
+                let bq = BlockQuantizer::new(codebook.clone(), q.block);
+                bq.quantize_into(src, q);
+            }
+            StateTensor::F32(_) => panic!("expected quantized state"),
+        }
+    }
+    let mut p_native = p0.clone();
+    opt.step(&mut p_native, &g);
+
+    // ---- HLO step on the same quantized starting state -------------------
+    // quantize the initial state exactly like the native engine, but into
+    // the padded layout the artifact expects
+    let pad = |v: &[f32]| {
+        let mut out = v.to_vec();
+        out.resize(npad, 0.0);
+        out
+    };
+    let cb1 = Arc::new(dynamic_signed());
+    let cb2 = Arc::new(dynamic_unsigned());
+    let bq1 = BlockQuantizer::new(cb1.clone(), manifest.block);
+    let bq2 = BlockQuantizer::new(cb2.clone(), manifest.block);
+    let q1 = bq1.quantize(&pad(&m0));
+    let q2 = bq2.quantize(&pad(&r0));
+    assert_eq!(q1.codes.len(), npad);
+    assert_eq!(q1.absmax.len(), nb);
+
+    let bias1 = 1.0 - b1.powi(t as i32);
+    let bias2 = 1.0 - b2.powi(t as i32);
+    let hp = [lr, b1, b2, eps, wd, bias1, bias2, 0.0f32];
+    let outs = rt
+        .run(
+            &artifact,
+            &[
+                runtime::lit_f32(&hp),
+                runtime::lit_f32(&p0),
+                runtime::lit_f32(&g),
+                runtime::lit_u8(&q1.codes).unwrap(),
+                runtime::lit_f32(&q1.absmax),
+                runtime::lit_u8(&q2.codes).unwrap(),
+                runtime::lit_f32(&q2.absmax),
+            ],
+        )
+        .unwrap();
+    let p_hlo = runtime::f32_of(&outs[0]).unwrap();
+    let codes1_hlo = runtime::u8_of(&outs[1]).unwrap();
+    let absmax1_hlo = runtime::f32_of(&outs[2]).unwrap();
+
+    // params agree to float tolerance (XLA may fuse to FMA)
+    assert_eq!(p_hlo.len(), n);
+    let mut max_rel = 0f32;
+    for (a, b) in p_native.iter().zip(&p_hlo) {
+        let rel = (a - b).abs() / a.abs().max(1e-6);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-5, "param divergence {max_rel}");
+
+    // state codes: compare dequantized values (codes may differ ±1 at
+    // exact decision boundaries under FMA contraction)
+    let q1_hlo = Quantized {
+        codes: codes1_hlo,
+        absmax: absmax1_hlo,
+        len: npad,
+        block: manifest.block,
+    };
+    let m_hlo = bq1.dequantize(&q1_hlo);
+    let m_native = match &opt.states()[0].1 {
+        StateTensor::Q8 { .. } => opt.states()[0].1.to_f32(),
+        _ => unreachable!(),
+    };
+    let mut mismatches = 0;
+    for i in 0..n {
+        let (a, b) = (m_native[i], m_hlo[i]);
+        if (a - b).abs() > 1e-6 + 0.05 * a.abs() {
+            mismatches += 1;
+        }
+    }
+    assert!(
+        mismatches < n / 1000 + 1,
+        "state divergence in {mismatches}/{n} elements"
+    );
+}
+
+#[test]
+fn momentum8_artifact_first_step_initializes_with_gradient() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let (&n, artifact) = manifest.updates["momentum8"].iter().next().expect("momentum8");
+    let npad = n.div_ceil(manifest.block) * manifest.block;
+    let nb = npad / manifest.block;
+    let mut rng = Rng::new(0x5EED);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let cb = Arc::new(dynamic_signed());
+    let zero = cb.encode(0.0);
+    let hp = [0.1f32, 0.9, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]; // t = 1
+    let outs = rt
+        .run(
+            artifact,
+            &[
+                runtime::lit_f32(&hp),
+                runtime::lit_f32(&p0),
+                runtime::lit_f32(&g),
+                runtime::lit_u8(&vec![zero; npad]).unwrap(),
+                runtime::lit_f32(&vec![0.0; nb]),
+            ],
+        )
+        .unwrap();
+    let p_new = runtime::f32_of(&outs[0]).unwrap();
+    // m_0 = g_0 and the update uses the *in-register* (pre-quantization)
+    // state — Figure 1's pipeline quantizes only for storage. So the first
+    // step is exactly p0 - lr*g.
+    for i in 0..n {
+        let expect = p0[i] - 0.1 * g[i];
+        assert!(
+            (p_new[i] - expect).abs() < 1e-6 + 1e-6 * expect.abs(),
+            "i={i}: {} vs {expect}",
+            p_new[i]
+        );
+    }
+    // and the stored state round-trips to ~g
+    let codes = runtime::u8_of(&outs[1]).unwrap();
+    let absmax = runtime::f32_of(&outs[2]).unwrap();
+    let bq = BlockQuantizer::new(cb, manifest.block);
+    let m_stored = bq.dequantize(&Quantized { codes, absmax, len: npad, block: manifest.block });
+    for i in 0..n {
+        assert!(
+            (m_stored[i] - g[i]).abs() <= 0.35 * g[i].abs() + 1e-4,
+            "i={i}: stored {} vs g {}",
+            m_stored[i],
+            g[i]
+        );
+    }
+}

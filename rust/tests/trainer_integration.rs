@@ -1,0 +1,183 @@
+//! End-to-end coordinator tests over the real AOT artifacts: training
+//! reduces loss with both engines, determinism holds, the stability
+//! detector fires on divergent configs, and the GLUE-like cls path learns.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use bitopt8::config::{parse_optim, Engine, RunConfig, Schedule};
+use bitopt8::coordinator::Trainer;
+use bitopt8::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json not found (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("pjrt client"))
+}
+
+fn nano_cfg(steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "nano".into();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 4;
+    cfg.seed = 7;
+    cfg.optim = parse_optim("adam", 8, "dynamic", true).unwrap();
+    cfg.optim.lr = 3e-3;
+    cfg.schedule = Schedule::Constant;
+    cfg
+}
+
+#[test]
+fn native_8bit_adam_reduces_lm_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = Trainer::new(&rt, nano_cfg(40)).unwrap();
+    let res = tr.train().unwrap();
+    assert!(!res.unstable, "unexpected instability: {:?}", res.reason);
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first - 1.0, "loss {first} -> {last}");
+    assert!(res.final_eval < first, "eval {}", res.final_eval);
+}
+
+#[test]
+fn hlo_engine_runs_and_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(30);
+    cfg.engine = Engine::Hlo;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    assert!(res.hlo_updated_tensors > 0, "HLO path not exercised");
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first - 0.8, "loss {first} -> {last}");
+}
+
+#[test]
+fn engines_agree_on_early_trajectory() {
+    // The two engines implement the same update; trajectories must match
+    // closely for the first steps (they slowly drift apart after — f32
+    // non-associativity under XLA fusion).
+    let Some(rt) = runtime() else { return };
+    let run = |engine: Engine| {
+        let mut cfg = nano_cfg(5);
+        cfg.engine = engine;
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        tr.train().unwrap().losses
+    };
+    let native = run(Engine::Native);
+    let hlo = run(Engine::Hlo);
+    for (i, (a, b)) in native.iter().zip(&hlo).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-2 * (1.0 + a.abs()),
+            "step {i}: native {a} vs hlo {b}"
+        );
+    }
+}
+
+#[test]
+fn same_seed_same_run() {
+    let Some(rt) = runtime() else { return };
+    let run = || {
+        let mut tr = Trainer::new(&rt, nano_cfg(10)).unwrap();
+        tr.train().unwrap().losses
+    };
+    assert_eq!(run(), run(), "training must be deterministic per seed");
+}
+
+#[test]
+fn different_seed_different_run() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(10);
+    cfg.seed = 1234;
+    let a = Trainer::new(&rt, nano_cfg(10)).unwrap().train().unwrap().losses;
+    let b = Trainer::new(&rt, cfg).unwrap().train().unwrap().losses;
+    assert_ne!(a, b);
+}
+
+#[test]
+fn absurd_lr_triggers_instability_detector() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(80);
+    cfg.optim.lr = 2.0; // guaranteed divergence
+    cfg.grad_clip = 0.0;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    assert!(res.unstable, "2.0 lr should diverge");
+    assert!(res.steps_done < 80, "run should stop early");
+}
+
+#[test]
+fn stable_embedding_model_trains() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(30);
+    cfg.model = "nano_stable".into();
+    cfg.emb32 = true;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    assert!(!res.unstable);
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first - 0.8, "loss {first} -> {last}");
+}
+
+#[test]
+fn emb32_policy_increases_state_bytes() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(1);
+    cfg.model = "nano_stable".into();
+    let t_plain = Trainer::new(&rt, cfg.clone()).unwrap();
+    cfg.emb32 = true;
+    let t_emb32 = Trainer::new(&rt, cfg).unwrap();
+    assert!(t_emb32.state_bytes() > t_plain.state_bytes());
+}
+
+#[test]
+fn state_snapshot_covers_all_tensors() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = Trainer::new(&rt, nano_cfg(3)).unwrap();
+    tr.train().unwrap();
+    let snap = tr.state_snapshot();
+    // adam: two states per tensor
+    assert_eq!(snap.len(), tr.model.params.len() * 2);
+    assert!(snap.iter().all(|(_, v)| v.iter().all(|x| x.is_finite())));
+    // first-moment state must be non-zero after training
+    let nonzero = snap
+        .iter()
+        .filter(|(name, v)| name.ends_with("::m") && v.iter().any(|&x| x != 0.0))
+        .count();
+    assert!(nonzero > 0);
+}
+
+#[test]
+fn jsonl_metrics_written() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join(format!("bitopt8_it_{}", std::process::id()));
+    let path = dir.join("m.jsonl");
+    let mut cfg = nano_cfg(5);
+    cfg.log_jsonl = Some(path.to_string_lossy().to_string());
+    Trainer::new(&rt, cfg).unwrap().train().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 5);
+    assert!(text.contains("\"loss\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn glue_cls_model_learns_above_chance() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    if manifest.model("cls_tiny").is_err() {
+        eprintln!("SKIP: cls_tiny not in artifacts");
+        return;
+    }
+    let mut cfg = nano_cfg(60);
+    cfg.model = "cls_tiny".into();
+    cfg.optim.lr = 1e-3;
+    let task = &bitopt8::data::glue::GLUE_TASKS[4]; // SST-2
+    let mut tr = Trainer::new(&rt, cfg).unwrap().with_glue_task(task).unwrap();
+    let res = tr.train().unwrap();
+    let acc = res.eval_accs.last().map(|&(_, a)| a).unwrap_or(0.0);
+    assert!(acc > 0.6, "SST-2-like accuracy {acc} not above chance");
+}
