@@ -12,6 +12,7 @@ use std::time::Duration;
 use bitopt8::quant::{dynamic_tree, BlockQuantizer, BLOCK};
 use bitopt8::util::args::Args;
 use bitopt8::util::bench::{bench, black_box};
+use bitopt8::util::parallel;
 use bitopt8::util::rng::Rng;
 
 fn main() {
@@ -32,17 +33,15 @@ fn main() {
     ] {
         let bq = BlockQuantizer { codebook: cb.clone(), block };
         let mut q = bq.quantize(&x);
-        let saved = std::env::var("BITOPT8_THREADS").ok();
-        if let Some(t) = threads {
-            std::env::set_var("BITOPT8_THREADS", t.to_string());
-        }
-        let r = bench(label, budget, 100, || {
-            bq.quantize_into(black_box(&x), &mut q);
-        });
-        match saved {
-            Some(v) => std::env::set_var("BITOPT8_THREADS", v),
-            None => std::env::remove_var("BITOPT8_THREADS"),
-        }
+        let run = || {
+            bench(label, budget, 100, || {
+                bq.quantize_into(black_box(&x), &mut q);
+            })
+        };
+        let r = match threads {
+            Some(t) => parallel::with_threads(t, run),
+            None => run(),
+        };
         println!(
             "{label:<34} {:>14.2} {:>12.2}",
             (n as f64 * 4.0) / r.median_ns,

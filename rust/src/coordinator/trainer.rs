@@ -18,7 +18,7 @@ use crate::config::{Engine, RunConfig};
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::stability::StabilityDetector;
 use crate::data::{corpus::Corpus, glue::GlueDataset};
-use crate::optim::{self, Bits, OptimKind, Optimizer};
+use crate::optim::{self, Bits, FusedStep, OptimKind, Optimizer};
 use crate::runtime::{self, ModelEntry, Runtime};
 use crate::util::json::num;
 use crate::util::rng::Rng;
@@ -220,7 +220,7 @@ impl<'rt> Trainer<'rt> {
         let step_lr = self.cfg.schedule.lr_at(self.cfg.optim.lr, self.step);
 
         // ---- forward/backward through the AOT train artifact -------------
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        let mut inputs: Vec<runtime::Literal> = Vec::with_capacity(self.params.len() + 2);
         for (vals, spec) in self.params.iter().zip(&self.model.params) {
             inputs.push(runtime::lit_f32_shaped(vals, &spec.shape)?);
         }
@@ -285,14 +285,34 @@ impl<'rt> Trainer<'rt> {
         }
 
         // ---- optimizer update (native or HLO engine) ---------------------
+        for opt in self.opts.iter_mut() {
+            opt.set_lr(step_lr);
+        }
+        // HLO tensors run through PJRT serially (the runtime is not
+        // thread-safe); 32-bit-policy and artifact-less tensors fall
+        // through to the native engine below.
         for i in 0..self.params.len() {
-            self.opts[i].set_lr(step_lr);
             if self.hlo[i].is_some() {
                 self.hlo_update(i, step_lr, &grads[i])?;
-            } else {
-                self.opts[i].step(&mut self.params[i], &grads[i]);
             }
         }
+        // Native tensors: every (tensor, block) work item of this step goes
+        // into ONE pool batch, so inter-tensor parallelism covers small
+        // tensors and pool dispatch is paid once per step. Bit-identical
+        // to stepping tensors serially (see optim::engine).
+        let mut fused = FusedStep::new();
+        for (((opt, p), g), hlo) in self
+            .opts
+            .iter_mut()
+            .zip(self.params.iter_mut())
+            .zip(grads.iter())
+            .zip(self.hlo.iter())
+        {
+            if hlo.is_none() {
+                fused.push(opt.as_mut(), p.as_mut_slice(), g.as_slice());
+            }
+        }
+        fused.run();
 
         self.detector.observe(loss);
         self.step += 1;
@@ -344,7 +364,7 @@ impl<'rt> Trainer<'rt> {
         let mut losses = Vec::new();
         let mut accs = Vec::new();
         for _ in 0..self.cfg.eval_batches.max(1) {
-            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+            let mut inputs: Vec<runtime::Literal> = Vec::with_capacity(self.params.len() + 2);
             for (vals, spec) in self.params.iter().zip(&self.model.params) {
                 inputs.push(runtime::lit_f32_shaped(vals, &spec.shape)?);
             }

@@ -13,7 +13,7 @@
 //! first moment dominates: ≈4 bytes/param ≈ half of 32-bit Adam — exactly
 //! the "competitive but still 2× 8-bit Adam" memory row in Table 1.
 
-use super::state::StateTensor;
+use super::state::{step_blocks, BlockView, StateTensor};
 use super::{OptimConfig, Optimizer};
 
 const EPS1: f32 = 1e-30; // regularizer added to g² (paper's ε₁)
@@ -104,16 +104,20 @@ impl Optimizer for Adafactor {
             }
         }
 
-        // First moment + apply.
-        let StateTensor::F32(m) = &mut self.m else { unreachable!("adafactor m is f32") };
-        for i in 0..n {
-            m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * u[i];
-            let mut step = cfg.lr * m[i];
-            if cfg.weight_decay != 0.0 {
-                step += cfg.lr * cfg.weight_decay * params[i];
+        // First moment + apply: elementwise, so it runs through the shared
+        // block engine (u takes the "grads" slot).
+        let block = crate::quant::BLOCK.min(n.max(1));
+        step_blocks(params, &u, &mut self.m, None, block, move |v: BlockView| {
+            let BlockView { params, grads: u_b, s1: m, .. } = v;
+            for i in 0..params.len() {
+                m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * u_b[i];
+                let mut step = cfg.lr * m[i];
+                if cfg.weight_decay != 0.0 {
+                    step += cfg.lr * cfg.weight_decay * params[i];
+                }
+                params[i] -= step;
             }
-            params[i] -= step;
-        }
+        });
     }
 
     fn state_bytes(&self) -> usize {

@@ -6,7 +6,7 @@
 //! optionally uses stochastic rounding, which Appendix H suggests helps for
 //! AdaGrad-style accumulators.
 
-use super::state::{for_each_block, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
 use super::{make_state, OptimConfig, Optimizer};
 
 pub struct Adagrad {
@@ -23,24 +23,32 @@ impl Adagrad {
 
 impl Optimizer for Adagrad {
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.begin_step(params, grads).expect("adagrad is block-local").execute();
+    }
+
+    fn is_block_local(&self) -> bool {
+        true
+    }
+
+    fn begin_step<'a>(
+        &'a mut self,
+        params: &'a mut [f32],
+        grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
         self.t += 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        for_each_block(params, grads, &mut self.acc, None, block, |ctx| {
-            let mut scratch: Vec<f32> = Vec::new();
-            {
-                let acc = ctx.s1.load(&mut scratch);
-                for i in 0..ctx.params.len() {
-                    let mut g = ctx.grads[i];
-                    if cfg.weight_decay != 0.0 {
-                        g += cfg.weight_decay * ctx.params[i];
-                    }
-                    acc[i] += g * g;
-                    ctx.params[i] -= cfg.lr * g / (acc[i].max(0.0).sqrt() + cfg.eps);
+        Some(block_steps(params, grads, &mut self.acc, None, block, move |v: BlockView| {
+            let BlockView { params, grads, s1: acc, .. } = v;
+            for i in 0..params.len() {
+                let mut g = grads[i];
+                if cfg.weight_decay != 0.0 {
+                    g += cfg.weight_decay * params[i];
                 }
+                acc[i] += g * g;
+                params[i] -= cfg.lr * g / (acc[i].max(0.0).sqrt() + cfg.eps);
             }
-            ctx.s1.store(&scratch);
-        });
+        }))
     }
 
     fn state_bytes(&self) -> usize {

@@ -5,7 +5,7 @@
 //! requantize. m uses the signed codebook, r (strictly positive) the
 //! unsigned one (§2.2).
 
-use super::state::{for_each_block, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
 use super::{make_state, OptimConfig, OptimKind, Optimizer};
 
 pub struct Adam {
@@ -59,47 +59,51 @@ impl Adam {
 
 impl Optimizer for Adam {
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.begin_step(params, grads).expect("adam is block-local").execute();
+    }
+
+    fn is_block_local(&self) -> bool {
+        true
+    }
+
+    fn begin_step<'a>(
+        &'a mut self,
+        params: &'a mut [f32],
+        grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
         self.t += 1;
-        let t = self.t;
         let cfg = self.cfg;
-        let bias_c1 = 1.0 - cfg.beta1.powi(t as i32);
-        let bias_c2 = 1.0 - cfg.beta2.powi(t as i32);
+        let bias_c1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bias_c2 = 1.0 - cfg.beta2.powi(self.t as i32);
         let decoupled = cfg.kind == OptimKind::AdamW;
         let block = cfg.bits.state_block(params.len());
-        // Per-thread reusable scratch (§Perf: a Vec allocation per block
-        // dominated the fused loop before this).
-        thread_local! {
-            static SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
-                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
-        }
-        for_each_block(params, grads, &mut self.m, Some(&mut self.r), block, |ctx| {
-            SCRATCH.with(|cell| {
-                let (scratch_m, scratch_r) = &mut *cell.borrow_mut();
-                {
-                    let m = ctx.s1.load(scratch_m);
-                    let s2 = ctx.s2.as_mut().expect("adam has two states");
-                    let r = s2.load(scratch_r);
-                    for i in 0..ctx.params.len() {
-                        Self::update_rule(
-                            &mut ctx.params[i],
-                            ctx.grads[i],
-                            &mut m[i],
-                            &mut r[i],
-                            cfg.lr,
-                            cfg.beta1,
-                            cfg.beta2,
-                            cfg.eps,
-                            cfg.weight_decay,
-                            decoupled,
-                            bias_c1,
-                            bias_c2,
-                        );
-                    }
+        Some(block_steps(
+            params,
+            grads,
+            &mut self.m,
+            Some(&mut self.r),
+            block,
+            move |v: BlockView| {
+                let BlockView { params, grads, s1: m, s2, .. } = v;
+                let r = s2.expect("adam has two states");
+                for i in 0..params.len() {
+                    Self::update_rule(
+                        &mut params[i],
+                        grads[i],
+                        &mut m[i],
+                        &mut r[i],
+                        cfg.lr,
+                        cfg.beta1,
+                        cfg.beta2,
+                        cfg.eps,
+                        cfg.weight_decay,
+                        decoupled,
+                        bias_c1,
+                        bias_c2,
+                    );
                 }
-                ctx.s1.store(scratch_m);
-                ctx.s2.as_mut().unwrap().store(scratch_r);
-            });
-        });
+            },
+        ))
     }
 
     fn state_bytes(&self) -> usize {

@@ -1,0 +1,193 @@
+//! Fused multi-tensor step executor — the top layer of the unified
+//! block-kernel execution engine.
+//!
+//! Layering (see also `rust/src/optim/README.md`):
+//!
+//! 1. **Worker pool** (`util::parallel`) — persistent, lazily-initialized
+//!    threads; one batch dispatch per call instead of per-call spawning.
+//! 2. **Block kernel** (`optim::state::block_steps`) — one tensor's update
+//!    decomposed into independent (block) tasks; the engine owns
+//!    dequantize → update → requantize and per-thread scratch.
+//! 3. **Fused step** (this module) — all (tensor, block) work items of one
+//!    training step merged into a *single* pool batch, so inter-tensor
+//!    parallelism covers the many small tensors of a real model and pool
+//!    dispatch is paid once per step, not once per tensor.
+//!
+//! Determinism: items never share mutable state and in-block order is
+//! fixed, so the fused step is bit-identical to stepping tensors one by
+//! one, at every thread count.
+
+use std::sync::Mutex;
+
+use super::state::BlockSteps;
+use super::Optimizer;
+use crate::util::parallel;
+
+/// Whole-tensor items larger than this run on the calling thread instead
+/// of inside the pool batch: a pool worker executes nested parallel calls
+/// inline, so folding a big LAMB/Adafactor tensor into the batch would
+/// serialize its internal block loops and norms onto one core. Small
+/// whole-tensor items lose nothing and gain inter-tensor parallelism.
+const WHOLE_TENSOR_BATCH_MAX: usize = 8 * crate::quant::BLOCK;
+
+/// One training step's worth of optimizer work across many tensors,
+/// flattened into a single pool batch: every (tensor, block) item of every
+/// block-local optimizer, plus one whole-tensor item per *small* optimizer
+/// whose update needs tensor-wide reductions (LAMB, Adafactor, factored
+/// SM3; LARS is block-local after its norm prologue). Large whole-tensor
+/// items run on the calling thread, where their internal loops keep full
+/// pool parallelism.
+#[derive(Default)]
+pub struct FusedStep<'a> {
+    blocks: Vec<BlockSteps<'a>>,
+    whole: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'a>>>>,
+    caller: Vec<Box<dyn FnOnce() + Send + 'a>>,
+}
+
+impl<'a> FusedStep<'a> {
+    pub fn new() -> FusedStep<'a> {
+        FusedStep { blocks: Vec::new(), whole: Vec::new(), caller: Vec::new() }
+    }
+
+    /// Queue one tensor's update (the optimizer's step prologue — `t`
+    /// advance, bias corrections, norms — runs here; the block work runs
+    /// at [`FusedStep::run`]).
+    pub fn push(&mut self, opt: &'a mut dyn Optimizer, params: &'a mut [f32], grads: &'a [f32]) {
+        if opt.is_block_local() {
+            let steps = opt.begin_step(params, grads).expect("block-local optimizer");
+            self.blocks.push(steps);
+        } else if params.len() > WHOLE_TENSOR_BATCH_MAX {
+            self.caller.push(Box::new(move || opt.step(params, grads)));
+        } else {
+            let task = Box::new(move || opt.step(params, grads)) as Box<dyn FnOnce() + Send + 'a>;
+            self.whole.push(Mutex::new(Some(task)));
+        }
+    }
+
+    /// Total number of queued work items (pool batch items + caller-side
+    /// whole-tensor items).
+    pub fn n_items(&self) -> usize {
+        self.blocks.iter().map(|b| b.n_blocks()).sum::<usize>()
+            + self.whole.len()
+            + self.caller.len()
+    }
+
+    /// Execute everything queued. Large whole-tensor items run first on
+    /// this thread (each internally parallel across the pool); the rest —
+    /// every block item plus small whole-tensor items — runs as one pool
+    /// batch, small whole items scheduled ahead of the block backlog.
+    pub fn run(self) {
+        let FusedStep { blocks, whole, caller } = self;
+        for task in caller {
+            task();
+        }
+        let n_whole = whole.len();
+        let total_blocks: usize = blocks.iter().map(|b| b.n_blocks()).sum();
+        let n = n_whole + total_blocks;
+        if n == 0 {
+            return;
+        }
+        // prefix offsets of each tensor's blocks in the flattened index
+        let mut offsets = Vec::with_capacity(blocks.len());
+        let mut acc = 0usize;
+        for b in &blocks {
+            offsets.push(acc);
+            acc += b.n_blocks();
+        }
+        let blocks_ref = &blocks;
+        let whole_ref = &whole;
+        parallel::run_indexed(n, move |i| {
+            if i < n_whole {
+                let task = whole_ref[i].lock().unwrap_or_else(|e| e.into_inner()).take();
+                if let Some(task) = task {
+                    task();
+                }
+            } else {
+                let j = i - n_whole;
+                // last tensor whose offset is <= j (empty tensors are
+                // skipped naturally: their range contains no j)
+                let k = offsets.partition_point(|&o| o <= j) - 1;
+                blocks_ref[k].run_block(j - offsets[k]);
+            }
+        });
+    }
+}
+
+/// Step every tensor through the fused engine — what the trainer's native
+/// path does each training step. Bit-identical to the serial
+/// `for i { opts[i].step(&mut params[i], &grads[i]) }` loop.
+pub fn fused_update(
+    opts: &mut [Box<dyn Optimizer>],
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+) {
+    assert_eq!(opts.len(), params.len());
+    assert_eq!(opts.len(), grads.len());
+    let mut fused = FusedStep::new();
+    for ((opt, p), g) in opts.iter_mut().zip(params.iter_mut()).zip(grads.iter()) {
+        fused.push(opt.as_mut(), p.as_mut_slice(), g.as_slice());
+    }
+    fused.run();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{build, Bits, OptimConfig, OptimKind};
+    use crate::util::rng::Rng;
+
+    type Fleet = (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+    fn fleet(kinds: &[(OptimKind, usize)], bits: Bits) -> Fleet {
+        let mut rng = Rng::new(77);
+        let mut opts = Vec::new();
+        let mut params = Vec::new();
+        let mut grads = Vec::new();
+        for &(kind, n) in kinds {
+            let mut cfg = OptimConfig::adam(0.01, bits);
+            cfg.kind = kind;
+            opts.push(build(&cfg, n, None));
+            params.push((0..n).map(|_| rng.normal() as f32).collect());
+            grads.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect());
+        }
+        (opts, params, grads)
+    }
+
+    #[test]
+    fn fused_matches_serial_stepping_bitwise() {
+        // mixed workload: block-local (adam, momentum) and whole-tensor
+        // (lamb) optimizers, sizes from sub-block to multi-block
+        let kinds = [
+            (OptimKind::Adam, 3usize),
+            (OptimKind::Adam, 2048),
+            (OptimKind::Momentum, 5000),
+            (OptimKind::Lamb, 1024),  // small whole-tensor -> pool batch
+            (OptimKind::Lamb, 20000), // large whole-tensor -> caller side
+            (OptimKind::Adam, 2049),
+        ];
+        for bits in [Bits::B32, Bits::b8_dynamic()] {
+            let (mut o_serial, mut p_serial, g) = fleet(&kinds, bits);
+            let (mut o_fused, mut p_fused, _) = fleet(&kinds, bits);
+            for _ in 0..3 {
+                for i in 0..o_serial.len() {
+                    o_serial[i].step(&mut p_serial[i], &g[i]);
+                }
+                fused_update(&mut o_fused, &mut p_fused, &g);
+            }
+            assert_eq!(p_serial, p_fused, "params diverged ({})", bits.describe());
+            for (a, b) in o_serial.iter().zip(&o_fused) {
+                for ((na, sa), (nb, sb)) in a.states().iter().zip(b.states().iter()) {
+                    assert_eq!(na, nb);
+                    assert_eq!(sa.to_f32(), sb.to_f32(), "state {na} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_fused_step_is_a_no_op() {
+        let fused = FusedStep::new();
+        assert_eq!(fused.n_items(), 0);
+        fused.run();
+    }
+}

@@ -7,7 +7,7 @@
 //! w −= lr · trust · u.
 
 use super::lars::l2_norm;
-use super::state::{for_each_block, StateTensor};
+use super::state::{step_blocks, BlockView, StateTensor};
 use super::{make_state, OptimConfig, Optimizer};
 
 pub struct Lamb {
@@ -32,6 +32,9 @@ impl Lamb {
 }
 
 impl Optimizer for Lamb {
+    // Not block-local: the trust ratio is a whole-tensor reduction *between*
+    // the moment update and the apply, so the fused engine schedules LAMB
+    // tensors as whole-tensor items (inter-tensor parallelism still holds).
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
         self.t += 1;
         let cfg = self.cfg;
@@ -41,29 +44,22 @@ impl Optimizer for Lamb {
         // Pass 1: update moments, materialize the un-trust-scaled update u.
         {
             let u = &mut self.u;
-            // params are only read in pass 1 (wd term); split borrow via raw
-            // chunks: use the block walker on u as the "params" slot.
+            // params are only read in pass 1 (wd term); split borrow by
+            // using the block engine on u in the "params" slot.
             let block = cfg.bits.state_block(u.len());
             let p_ro: &[f32] = params;
-            for_each_block(u, grads, &mut self.m, Some(&mut self.r), block, |ctx| {
-                let mut scratch_m: Vec<f32> = Vec::new();
-                let mut scratch_r: Vec<f32> = Vec::new();
-                {
-                    let m = ctx.s1.load(&mut scratch_m);
-                    let s2 = ctx.s2.as_mut().expect("lamb has two states");
-                    let r = s2.load(&mut scratch_r);
-                    for i in 0..ctx.params.len() {
-                        let g = ctx.grads[i];
-                        m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
-                        r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * g * g;
-                        let m_hat = m[i] / bias_c1;
-                        let r_hat = r[i] / bias_c2;
-                        ctx.params[i] = m_hat / (r_hat.sqrt() + cfg.eps)
-                            + cfg.weight_decay * p_ro[ctx.start + i];
-                    }
+            step_blocks(u, grads, &mut self.m, Some(&mut self.r), block, |v: BlockView| {
+                let BlockView { params: u_b, grads, s1: m, s2, start } = v;
+                let r = s2.expect("lamb has two states");
+                for i in 0..u_b.len() {
+                    let g = grads[i];
+                    m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
+                    r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * g * g;
+                    let m_hat = m[i] / bias_c1;
+                    let r_hat = r[i] / bias_c2;
+                    u_b[i] = m_hat / (r_hat.sqrt() + cfg.eps)
+                        + cfg.weight_decay * p_ro[start + i];
                 }
-                ctx.s1.store(&scratch_m);
-                ctx.s2.as_mut().unwrap().store(&scratch_r);
             });
         }
 

@@ -6,7 +6,7 @@
 //! w −= m. One tensor = one "layer" (the coordinator builds per-tensor
 //! optimizers).
 
-use super::state::{for_each_block, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
 use super::{make_state, OptimConfig, Optimizer};
 use crate::util::parallel;
 
@@ -38,8 +38,23 @@ pub(crate) fn l2_norm(x: &[f32]) -> f64 {
 
 impl Optimizer for Lars {
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.begin_step(params, grads).expect("lars is block-local").execute();
+    }
+
+    fn is_block_local(&self) -> bool {
+        true
+    }
+
+    fn begin_step<'a>(
+        &'a mut self,
+        params: &'a mut [f32],
+        grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
         self.t += 1;
         let cfg = self.cfg;
+        // Per-tensor prologue: the trust ratio needs whole-tensor norms of
+        // the *pre-update* values, so it runs here; the block tasks are
+        // then independent.
         let w_norm = l2_norm(params) as f32;
         let g_norm = l2_norm(grads) as f32;
         let trust = if w_norm > 0.0 && g_norm > 0.0 {
@@ -49,18 +64,14 @@ impl Optimizer for Lars {
         };
         let scaled_lr = cfg.lr * trust;
         let block = cfg.bits.state_block(params.len());
-        for_each_block(params, grads, &mut self.m, None, block, |ctx| {
-            let mut scratch: Vec<f32> = Vec::new();
-            {
-                let m = ctx.s1.load(&mut scratch);
-                for i in 0..ctx.params.len() {
-                    let g = ctx.grads[i] + cfg.weight_decay * ctx.params[i];
-                    m[i] = cfg.beta1 * m[i] + scaled_lr * g;
-                    ctx.params[i] -= m[i];
-                }
+        Some(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
+            let BlockView { params, grads, s1: m, .. } = v;
+            for i in 0..params.len() {
+                let g = grads[i] + cfg.weight_decay * params[i];
+                m[i] = cfg.beta1 * m[i] + scaled_lr * g;
+                params[i] -= m[i];
             }
-            ctx.s1.store(&scratch);
-        });
+        }))
     }
 
     fn state_bytes(&self) -> usize {

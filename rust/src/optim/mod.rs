@@ -13,17 +13,25 @@
 //! The 8-bit variants follow §2 of the paper exactly: state blocks are
 //! dequantized to 32-bit scratch, updated, and requantized — one block at a
 //! time, in parallel, with no cross-block synchronization.
+//!
+//! Execution goes through the unified block-kernel engine (see
+//! `rust/src/optim/README.md`): optimizers supply an elementwise kernel to
+//! [`state::block_steps`], which owns the load/update/store dance; the
+//! coordinator merges every tensor's block tasks into one pool batch per
+//! training step via [`engine::FusedStep`].
 
 pub mod adafactor;
 pub mod adagrad;
 pub mod adam;
+pub mod engine;
 pub mod lamb;
 pub mod lars;
 pub mod momentum;
 pub mod sm3;
 pub mod state;
 
-pub use state::{for_each_block, BlockCtx, StateBlockMut, StateTensor};
+pub use engine::{fused_update, FusedStep};
+pub use state::{block_steps, step_blocks, BlockSteps, BlockView, StateTensor};
 
 use crate::quant::{Format, BLOCK};
 
@@ -160,6 +168,23 @@ impl OptimConfig {
 pub trait Optimizer: Send {
     /// Apply one update. `params` and `grads` are the flattened tensor.
     fn step(&mut self, params: &mut [f32], grads: &[f32]);
+    /// Whether the update touches each quantization block independently
+    /// (after an optional per-tensor prologue), i.e. whether `begin_step`
+    /// yields block tasks that the fused multi-tensor engine can schedule.
+    fn is_block_local(&self) -> bool {
+        false
+    }
+    /// Decompose one update into pool-schedulable block tasks. Runs the
+    /// whole per-step prologue (advance `t`, bias corrections, norms);
+    /// the returned tasks perform the block updates. `None` when the
+    /// optimizer is not block-local — callers fall back to [`Self::step`].
+    fn begin_step<'a>(
+        &'a mut self,
+        _params: &'a mut [f32],
+        _grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
+        None
+    }
     /// Optimizer-state footprint in bytes (Table 1 "Mem saved" accounting).
     fn state_bytes(&self) -> usize;
     fn name(&self) -> String;

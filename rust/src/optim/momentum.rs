@@ -4,7 +4,7 @@
 //! `m_t = β1 m_{t-1} + g_t`, `w_t = w_{t-1} − α m_t`, with `m_0 = g_0`
 //! (the first step uses the raw gradient).
 
-use super::state::{for_each_block, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
 use super::{make_state, OptimConfig, Optimizer};
 
 pub struct Momentum {
@@ -21,25 +21,33 @@ impl Momentum {
 
 impl Optimizer for Momentum {
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.begin_step(params, grads).expect("momentum is block-local").execute();
+    }
+
+    fn is_block_local(&self) -> bool {
+        true
+    }
+
+    fn begin_step<'a>(
+        &'a mut self,
+        params: &'a mut [f32],
+        grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
         self.t += 1;
         let first = self.t == 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        for_each_block(params, grads, &mut self.m, None, block, |ctx| {
-            let mut scratch: Vec<f32> = Vec::new();
-            {
-                let m = ctx.s1.load(&mut scratch);
-                for i in 0..ctx.params.len() {
-                    let mut g = ctx.grads[i];
-                    if cfg.weight_decay != 0.0 {
-                        g += cfg.weight_decay * ctx.params[i];
-                    }
-                    m[i] = if first { g } else { cfg.beta1 * m[i] + g };
-                    ctx.params[i] -= cfg.lr * m[i];
+        Some(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
+            let BlockView { params, grads, s1: m, .. } = v;
+            for i in 0..params.len() {
+                let mut g = grads[i];
+                if cfg.weight_decay != 0.0 {
+                    g += cfg.weight_decay * params[i];
                 }
+                m[i] = if first { g } else { cfg.beta1 * m[i] + g };
+                params[i] -= cfg.lr * m[i];
             }
-            ctx.s1.store(&scratch);
-        });
+        }))
     }
 
     fn state_bytes(&self) -> usize {

@@ -7,17 +7,16 @@
 //!   w −= lr · g / √ν;  R_i = max_j ν_ij;  C_j = max_i ν_ij
 //! 1-D tensors use a single full accumulator (equivalent to AdaGrad).
 
-use super::state::StateTensor;
+use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
 use super::{OptimConfig, Optimizer};
 
 pub struct Sm3 {
     cfg: OptimConfig,
     row: Vec<f32>,
     col: Vec<f32>,
-    acc: Vec<f32>, // 1-D fallback
+    /// 1-D fallback accumulator (empty when factored).
+    acc: StateTensor,
     shape: Option<(usize, usize)>,
-    /// Placeholder so `states()` has something to expose for analysis.
-    empty: StateTensor,
     t: u64,
 }
 
@@ -30,9 +29,8 @@ impl Sm3 {
             cfg,
             row: vec![0.0; rows],
             col: vec![0.0; cols],
-            acc: if factored { Vec::new() } else { vec![0.0; n] },
+            acc: StateTensor::new_f32(if factored { 0 } else { n }),
             shape,
-            empty: StateTensor::new_f32(0),
             t: 0,
         }
     }
@@ -44,38 +42,64 @@ impl Sm3 {
 
 impl Optimizer for Sm3 {
     fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        if self.shape.is_none() {
+            // 1-D fallback (≡ AdaGrad) is block-local and runs through the
+            // shared engine.
+            self.begin_step(params, grads).expect("1-D sm3 is block-local").execute();
+            return;
+        }
         self.t += 1;
         let cfg = self.cfg;
-        if let Some((rows, cols)) = self.shape {
-            let mut new_row = vec![0.0f32; rows];
-            let mut new_col = vec![0.0f32; cols];
-            for i in 0..rows {
-                for j in 0..cols {
-                    let idx = i * cols + j;
-                    let g = grads[idx];
-                    let nu = self.row[i].min(self.col[j]) + g * g;
-                    params[idx] -= cfg.lr * g / (nu.sqrt() + cfg.eps.max(1e-12));
-                    if nu > new_row[i] {
-                        new_row[i] = nu;
-                    }
-                    if nu > new_col[j] {
-                        new_col[j] = nu;
-                    }
+        let (rows, cols) = self.shape.expect("factored");
+        let mut new_row = vec![0.0f32; rows];
+        let mut new_col = vec![0.0f32; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let idx = i * cols + j;
+                let g = grads[idx];
+                let nu = self.row[i].min(self.col[j]) + g * g;
+                params[idx] -= cfg.lr * g / (nu.sqrt() + cfg.eps.max(1e-12));
+                if nu > new_row[i] {
+                    new_row[i] = nu;
+                }
+                if nu > new_col[j] {
+                    new_col[j] = nu;
                 }
             }
-            self.row = new_row;
-            self.col = new_col;
-        } else {
+        }
+        self.row = new_row;
+        self.col = new_col;
+    }
+
+    fn is_block_local(&self) -> bool {
+        // The factored update couples every element of a row/column through
+        // the shared accumulators; only the 1-D fallback is block-local.
+        self.shape.is_none()
+    }
+
+    fn begin_step<'a>(
+        &'a mut self,
+        params: &'a mut [f32],
+        grads: &'a [f32],
+    ) -> Option<BlockSteps<'a>> {
+        if self.shape.is_some() {
+            return None;
+        }
+        self.t += 1;
+        let cfg = self.cfg;
+        let block = crate::quant::BLOCK.min(params.len().max(1));
+        Some(block_steps(params, grads, &mut self.acc, None, block, move |v: BlockView| {
+            let BlockView { params, grads, s1: acc, .. } = v;
             for i in 0..params.len() {
                 let g = grads[i];
-                self.acc[i] += g * g;
-                params[i] -= cfg.lr * g / (self.acc[i].sqrt() + cfg.eps.max(1e-12));
+                acc[i] += g * g;
+                params[i] -= cfg.lr * g / (acc[i].sqrt() + cfg.eps.max(1e-12));
             }
-        }
+        }))
     }
 
     fn state_bytes(&self) -> usize {
-        (self.row.len() + self.col.len() + self.acc.len()) * 4
+        (self.row.len() + self.col.len()) * 4 + self.acc.bytes()
     }
 
     fn name(&self) -> String {
@@ -87,11 +111,11 @@ impl Optimizer for Sm3 {
     }
 
     fn states(&self) -> Vec<(&'static str, &StateTensor)> {
-        vec![("acc", &self.empty)]
+        vec![("acc", &self.acc)]
     }
 
     fn states_mut(&mut self) -> Vec<(&'static str, &mut StateTensor)> {
-        vec![("acc", &mut self.empty)]
+        vec![("acc", &mut self.acc)]
     }
 
     fn set_t(&mut self, t: u64) {

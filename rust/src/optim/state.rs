@@ -1,16 +1,27 @@
-//! Optimizer-state storage: 32-bit or 8-bit block-wise quantized.
+//! Optimizer-state storage and the shared block-kernel engine.
 //!
 //! The paper's update (§2, Figure 1): dequantize the 8-bit state block to
 //! 32-bit *in registers*, perform the update, requantize for storage. Here
-//! a "register block" is a scratch `Vec<f32>` of one quantization block;
-//! blocks are processed independently and in parallel, mirroring the
-//! per-core independence that makes block-wise quantization fast.
+//! a "register block" is a per-thread scratch `Vec<f32>` of one
+//! quantization block; blocks are processed independently and in parallel,
+//! mirroring the per-core independence that makes block-wise quantization
+//! fast.
+//!
+//! The engine owns the whole dequantize → update → requantize dance: an
+//! optimizer only supplies a [`BlockView`] kernel (its elementwise update
+//! rule) to [`block_steps`]/[`step_blocks`]. The returned [`BlockSteps`]
+//! decomposes one tensor's update into independent block tasks, which
+//! either run immediately on the worker pool ([`BlockSteps::execute`]) or
+//! get merged with every other tensor's tasks into one fused batch
+//! (`optim::engine::FusedStep`). Scratch buffers are thread-local and
+//! shared by every optimizer and tensor, so the hot loop allocates nothing.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::quant::blockwise::{dequantize_block, quantize_block};
 use crate::quant::{Codebook, Quantized};
-use crate::util::parallel;
+use crate::util::parallel::{self, SendPtr};
 
 /// How a state tensor is stored.
 #[derive(Clone)]
@@ -61,8 +72,7 @@ impl StateTensor {
             StateTensor::Q8 { q, codebook } => {
                 let mut out = vec![0.0f32; q.len];
                 for b in 0..q.n_blocks() {
-                    let lo = b * q.block;
-                    let hi = (lo + q.block).min(q.len);
+                    let (lo, hi) = q.block_range(b);
                     dequantize_block(codebook, &q.codes[lo..hi], q.absmax[b], &mut out[lo..hi]);
                 }
                 out
@@ -71,61 +81,99 @@ impl StateTensor {
     }
 }
 
-/// A mutable view of one block of a state tensor.
-pub enum StateBlockMut<'a> {
-    F32(&'a mut [f32]),
-    Q8 { codes: &'a mut [u8], absmax: &'a mut f32, codebook: &'a Codebook },
-}
-
-impl<'a> StateBlockMut<'a> {
-    /// Dequantize into `scratch` and return the working slice. For F32
-    /// state this is the storage itself (no copy).
-    pub fn load<'s>(&'s mut self, scratch: &'s mut Vec<f32>) -> &'s mut [f32]
-    where
-        'a: 's,
-    {
-        match self {
-            StateBlockMut::F32(v) => v,
-            StateBlockMut::Q8 { codes, absmax, codebook } => {
-                scratch.resize(codes.len(), 0.0);
-                dequantize_block(codebook, codes, **absmax, scratch);
-                scratch
-            }
-        }
-    }
-
-    /// Requantize the worked-on slice back into storage (no-op for F32,
-    /// where `load` handed out the storage directly).
-    pub fn store(&mut self, worked: &[f32]) {
-        if let StateBlockMut::Q8 { codes, absmax, codebook } = self {
-            **absmax = quantize_block(codebook, worked, codes);
-        }
-    }
-}
-
-/// One block's worth of optimizer-step inputs.
-pub struct BlockCtx<'a> {
+/// One block's worth of optimizer-step inputs, with states already
+/// dequantized to f32 working slices. For F32 states the slice *is* the
+/// storage (updated in place); for Q8 it is thread-local scratch that the
+/// engine requantizes after the kernel returns.
+pub struct BlockView<'a> {
     /// Global element offset of this block.
     pub start: usize,
     pub params: &'a mut [f32],
     pub grads: &'a [f32],
-    pub s1: StateBlockMut<'a>,
+    pub s1: &'a mut [f32],
     /// Second state (None for single-state optimizers like Momentum).
-    pub s2: Option<StateBlockMut<'a>>,
+    pub s2: Option<&'a mut [f32]>,
 }
 
-/// Iterate `f` over the blocks of (params, grads, state1[, state2]) in
-/// parallel. All tensors share the same block partition, taken from the
-/// quantized state's block size (or `fallback_block` if all states are F32).
-pub fn for_each_block<F>(
-    params: &mut [f32],
-    grads: &[f32],
-    s1: &mut StateTensor,
-    s2: Option<&mut StateTensor>,
+thread_local! {
+    /// Per-thread dequantization scratch (one block per state), reused by
+    /// every optimizer and tensor (§Perf: a Vec allocation per block
+    /// dominated the fused loop before this).
+    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Type-erased per-state storage pointers for the block runner. Safety
+/// contract: block index `b` only touches elements `[b*block, (b+1)*block)`
+/// of `codes`/storage and `absmax[b]`, so distinct blocks are disjoint.
+#[derive(Clone, Copy)]
+enum StateParts<'a> {
+    F32(SendPtr<f32>),
+    Q8 { codes: SendPtr<u8>, absmax: SendPtr<f32>, codebook: &'a Codebook },
+}
+
+fn state_parts(s: &mut StateTensor, block: usize, n: usize) -> StateParts<'_> {
+    match s {
+        StateTensor::F32(v) => {
+            assert_eq!(v.len(), n, "state length mismatch");
+            StateParts::F32(SendPtr(v.as_mut_ptr()))
+        }
+        StateTensor::Q8 { q, codebook } => {
+            assert_eq!(q.block, block, "state block sizes must agree");
+            assert_eq!(q.len, n, "state length mismatch");
+            StateParts::Q8 {
+                codes: SendPtr(q.codes.as_mut_ptr()),
+                absmax: SendPtr(q.absmax.as_mut_ptr()),
+                codebook: &**codebook,
+            }
+        }
+    }
+}
+
+/// One tensor's decomposed update: `n_blocks` independent block tasks that
+/// the pool — or the fused multi-tensor engine — may run in any order, on
+/// any thread, each exactly once per step. Results are bit-identical at
+/// every schedule because blocks share no mutable state and in-block
+/// element order is fixed.
+pub struct BlockSteps<'a> {
+    n_blocks: usize,
+    run: Box<dyn Fn(usize) + Sync + Send + 'a>,
+}
+
+impl<'a> BlockSteps<'a> {
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Run one block. Callable concurrently for distinct `b`; calling the
+    /// same `b` twice within one step is a logic error (it would re-apply
+    /// the update).
+    pub fn run_block(&self, b: usize) {
+        debug_assert!(b < self.n_blocks);
+        (self.run)(b)
+    }
+
+    /// Run every block of this tensor on the worker pool (the single-tensor
+    /// step path).
+    pub fn execute(self) {
+        parallel::run_indexed(self.n_blocks, |b| self.run_block(b));
+    }
+}
+
+/// Decompose one optimizer update into block tasks. The engine owns block
+/// partitioning (taken from the quantized state's block size, or
+/// `fallback_block` if all states are F32), state dequantization into
+/// thread-local scratch, the kernel call, and requantization.
+pub fn block_steps<'a, F>(
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    s1: &'a mut StateTensor,
+    s2: Option<&'a mut StateTensor>,
     fallback_block: usize,
-    f: F,
-) where
-    F: Fn(&mut BlockCtx) + Sync + Send,
+    kernel: F,
+) -> BlockSteps<'a>
+where
+    F: Fn(BlockView) + Sync + Send + 'a,
 {
     let n = params.len();
     assert_eq!(grads.len(), n);
@@ -138,85 +186,92 @@ pub fn for_each_block<F>(
         (_, Some(StateTensor::Q8 { q, .. })) => q.block,
         _ => fallback_block.min(n.max(1)),
     };
+    let n_blocks = n.div_ceil(block);
+    let p1 = state_parts(s1, block, n);
+    let p2 = s2.map(|s| state_parts(s, block, n));
+    let params_ptr = SendPtr(params.as_mut_ptr());
 
-    // Build per-block views by zipping chunk iterators over every tensor.
-    enum Parts<'a> {
-        F32(std::slice::ChunksMut<'a, f32>),
-        Q8 {
-            codes: std::slice::ChunksMut<'a, u8>,
-            absmax: std::slice::IterMut<'a, f32>,
-            codebook: &'a Codebook,
-        },
-    }
-    impl<'a> Parts<'a> {
-        fn next_block(&mut self) -> StateBlockMut<'a> {
-            match self {
-                Parts::F32(it) => StateBlockMut::F32(it.next().expect("block count")),
-                Parts::Q8 { codes, absmax, codebook } => StateBlockMut::Q8 {
-                    codes: codes.next().expect("block count"),
-                    absmax: absmax.next().expect("block count"),
-                    codebook,
+    let run = move |b: usize| {
+        let lo = b * block;
+        let hi = (lo + block).min(n);
+        let len = hi - lo;
+        // SAFETY: distinct blocks cover disjoint ranges of every tensor,
+        // and the scheduler runs each block exactly once per step while
+        // the borrows captured by this closure are alive.
+        let params_b = unsafe { std::slice::from_raw_parts_mut(params_ptr.0.add(lo), len) };
+        let grads_b = &grads[lo..hi];
+        SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            let (scratch1, scratch2) = (&mut scratch.0, &mut scratch.1);
+            // Load: F32 state hands out its storage (in-place update);
+            // Q8 dequantizes into this thread's scratch.
+            let s1_work: &mut [f32] = match p1 {
+                StateParts::F32(ptr) => unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(lo), len)
                 },
-            }
-        }
-    }
-    fn parts(s: &mut StateTensor, block: usize) -> Parts<'_> {
-        match s {
-            StateTensor::F32(v) => Parts::F32(v.chunks_mut(block)),
-            StateTensor::Q8 { q, codebook } => {
-                assert_eq!(q.block, block, "state block sizes must agree");
-                Parts::Q8 {
-                    codes: q.codes.chunks_mut(block),
-                    absmax: q.absmax.iter_mut(),
-                    codebook,
+                StateParts::Q8 { codes, absmax, codebook } => {
+                    let codes_b = unsafe { std::slice::from_raw_parts(codes.0.add(lo), len) };
+                    let am = unsafe { *absmax.0.add(b) };
+                    scratch1.resize(len, 0.0);
+                    dequantize_block(codebook, codes_b, am, scratch1);
+                    scratch1
                 }
-            }
-        }
-    }
-
-    let n_blocks = n.div_ceil(block).max(1);
-    let mut p1 = parts(s1, block);
-    let mut p2 = s2.map(|s| parts(s, block));
-    let mut ctxs: Vec<BlockCtx> = Vec::with_capacity(n_blocks);
-    for (b, p_chunk) in params.chunks_mut(block).enumerate() {
-        let start = b * block;
-        ctxs.push(BlockCtx {
-            start,
-            grads: &grads[start..start + p_chunk.len()],
-            params: p_chunk,
-            s1: p1.next_block(),
-            s2: p2.as_mut().map(|p| p.next_block()),
-        });
-    }
-
-    // Distribute blocks across threads.
-    let threads = parallel::num_threads().min(ctxs.len().max(1));
-    if threads <= 1 || ctxs.len() <= 1 {
-        for mut ctx in ctxs {
-            f(&mut ctx);
-        }
-        return;
-    }
-    let per = ctxs.len().div_ceil(threads);
-    let mut groups: Vec<Vec<BlockCtx>> = Vec::new();
-    let mut it = ctxs.into_iter();
-    loop {
-        let g: Vec<_> = it.by_ref().take(per).collect();
-        if g.is_empty() {
-            break;
-        }
-        groups.push(g);
-    }
-    let fref = &f;
-    std::thread::scope(|s| {
-        for group in groups {
-            s.spawn(move || {
-                for mut ctx in group {
-                    fref(&mut ctx);
+            };
+            let s2_work: Option<&mut [f32]> = match p2 {
+                None => None,
+                Some(StateParts::F32(ptr)) => {
+                    Some(unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), len) })
                 }
+                Some(StateParts::Q8 { codes, absmax, codebook }) => {
+                    let codes_b = unsafe { std::slice::from_raw_parts(codes.0.add(lo), len) };
+                    let am = unsafe { *absmax.0.add(b) };
+                    scratch2.resize(len, 0.0);
+                    dequantize_block(codebook, codes_b, am, scratch2);
+                    Some(scratch2)
+                }
+            };
+
+            kernel(BlockView {
+                start: lo,
+                params: params_b,
+                grads: grads_b,
+                s1: s1_work,
+                s2: s2_work,
             });
-        }
-    });
+
+            // Store: requantize Q8 states from scratch (Figure 1 — the
+            // update itself ran on the in-register values); F32 states
+            // were updated in place.
+            if let StateParts::Q8 { codes, absmax, codebook } = p1 {
+                let codes_b = unsafe { std::slice::from_raw_parts_mut(codes.0.add(lo), len) };
+                let am = unsafe { &mut *absmax.0.add(b) };
+                *am = quantize_block(codebook, &scratch1[..len], codes_b);
+            }
+            if let Some(StateParts::Q8 { codes, absmax, codebook }) = p2 {
+                let codes_b = unsafe { std::slice::from_raw_parts_mut(codes.0.add(lo), len) };
+                let am = unsafe { &mut *absmax.0.add(b) };
+                *am = quantize_block(codebook, &scratch2[..len], codes_b);
+            }
+        });
+    };
+
+    BlockSteps { n_blocks, run: Box::new(run) }
+}
+
+/// Run a block kernel over (params, grads, state1[, state2]) immediately,
+/// in parallel on the pool — the single-tensor convenience over
+/// [`block_steps`].
+pub fn step_blocks<'a, F>(
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    s1: &'a mut StateTensor,
+    s2: Option<&'a mut StateTensor>,
+    fallback_block: usize,
+    kernel: F,
+) where
+    F: Fn(BlockView) + Sync + Send + 'a,
+{
+    block_steps(params, grads, s1, s2, fallback_block, kernel).execute()
 }
 
 #[cfg(test)]
@@ -226,24 +281,17 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
-    fn f32_state_load_is_in_place() {
+    fn f32_state_update_is_in_place() {
         let mut s = StateTensor::new_f32(10);
         if let StateTensor::F32(v) = &mut s {
             v[3] = 5.0;
         }
         let mut params = vec![0.0f32; 10];
         let grads = vec![0.0f32; 10];
-        for_each_block(&mut params, &grads, &mut s, None, 4, |ctx| {
-            let mut scratch = Vec::new();
-            {
-                let v = ctx.s1.load(&mut scratch);
-                for x in v.iter_mut() {
-                    *x += 1.0;
-                }
+        step_blocks(&mut params, &grads, &mut s, None, 4, |v| {
+            for x in v.s1.iter_mut() {
+                *x += 1.0;
             }
-            // canonical pattern: store(&scratch) — no-op for F32 (mutated in
-            // place), requantize for Q8 (worked data lives in scratch).
-            ctx.s1.store(&scratch);
         });
         assert_eq!(s.to_f32()[3], 6.0);
         assert_eq!(s.to_f32()[0], 1.0);
@@ -259,14 +307,10 @@ mod tests {
             let mut rng = Rng::new(5);
             (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
         };
-        // write grads into state through the block API
-        for_each_block(&mut params, &grads, &mut s, None, 512, |ctx| {
-            let mut scratch = Vec::new();
-            {
-                let v = ctx.s1.load(&mut scratch);
-                v.copy_from_slice(ctx.grads);
-            }
-            ctx.s1.store(&scratch);
+        // write grads into state through the block engine (the engine
+        // requantizes the worked slice after the kernel returns)
+        step_blocks(&mut params, &grads, &mut s, None, 512, |v| {
+            v.s1.copy_from_slice(v.grads);
         });
         let back = s.to_f32();
         // round-trip error bounded by dynamic-tree precision: worst-case
@@ -291,13 +335,75 @@ mod tests {
         let mut params = vec![0.0f32; 1000];
         let grads = vec![0.0f32; 1000];
         let seen = std::sync::Mutex::new(vec![false; 1000]);
-        for_each_block(&mut params, &grads, &mut s, None, 300, |ctx| {
+        step_blocks(&mut params, &grads, &mut s, None, 300, |v| {
             let mut guard = seen.lock().unwrap();
-            for i in 0..ctx.params.len() {
-                assert!(!guard[ctx.start + i]);
-                guard[ctx.start + i] = true;
+            for i in 0..v.params.len() {
+                assert!(!guard[v.start + i]);
+                guard[v.start + i] = true;
             }
         });
         assert!(seen.into_inner().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn deferred_block_steps_run_out_of_order() {
+        // The fused engine may interleave blocks arbitrarily; running them
+        // manually in reverse must produce the same result as execute().
+        let n = 1024;
+        let cb = Arc::new(dynamic_signed());
+        let grads: Vec<f32> = {
+            let mut rng = Rng::new(9);
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+        };
+        let run = |reverse: bool| -> (Vec<f32>, Vec<f32>) {
+            let mut s = StateTensor::new_q8(n, cb.clone(), 256);
+            let mut params = vec![1.0f32; n];
+            let steps = block_steps(&mut params, &grads, &mut s, None, 256, |v| {
+                for i in 0..v.params.len() {
+                    v.s1[i] = 0.9 * v.s1[i] + v.grads[i];
+                    v.params[i] -= 0.1 * v.s1[i];
+                }
+            });
+            assert_eq!(steps.n_blocks(), 4);
+            if reverse {
+                for b in (0..steps.n_blocks()).rev() {
+                    steps.run_block(b);
+                }
+                drop(steps); // release the borrows before reading results
+            } else {
+                steps.execute();
+            }
+            (params, s.to_f32())
+        };
+        let (p_fwd, s_fwd) = run(false);
+        let (p_rev, s_rev) = run(true);
+        assert_eq!(p_fwd, p_rev);
+        assert_eq!(s_fwd, s_rev);
+    }
+
+    #[test]
+    fn two_state_q8_blocks_share_scratch_correctly() {
+        let cb = Arc::new(dynamic_signed());
+        let n = 700;
+        let mut s1 = StateTensor::new_q8(n, cb.clone(), 256);
+        let mut s2 = StateTensor::new_q8(n, cb, 256);
+        let mut params = vec![0.0f32; n];
+        let grads: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        step_blocks(&mut params, &grads, &mut s1, Some(&mut s2), 256, |v| {
+            let s2 = v.s2.expect("two states");
+            for i in 0..v.params.len() {
+                v.s1[i] = v.grads[i];
+                s2[i] = -v.grads[i];
+            }
+        });
+        let a = s1.to_f32();
+        let b = s2.to_f32();
+        for i in 0..n {
+            let g = grads[i];
+            let tol = 0.35 * g.abs() + 1e-3;
+            // if the two states had collided in scratch, b would hold +g
+            assert!((a[i] - g).abs() <= tol, "s1[{i}] {} vs {g}", a[i]);
+            assert!((b[i] + g).abs() <= tol, "s2[{i}] {} vs {}", b[i], -g);
+        }
     }
 }

@@ -43,6 +43,13 @@ impl Quantized {
         self.absmax.len()
     }
 
+    /// Element range `[lo, hi)` covered by block `b` (last block may be
+    /// short) — the one place the block partition arithmetic lives.
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        let lo = b * self.block;
+        (lo, (lo + self.block).min(self.len))
+    }
+
     /// Total storage in bytes (codes + absmax).
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.absmax.len() * 4

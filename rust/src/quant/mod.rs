@@ -20,7 +20,7 @@ pub mod sram_quantiles;
 pub use blockwise::{BlockQuantizer, Quantized, BLOCK};
 pub use codebook::Codebook;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// The quantization formats the paper evaluates (Tables 3 & 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,36 +55,59 @@ impl Format {
         }
     }
 
+    fn index(&self) -> usize {
+        match self {
+            Format::Dynamic => 0,
+            Format::Linear => 1,
+            Format::Quantile => 2,
+            Format::InverseDynamic => 3,
+        }
+    }
+
     /// Codebook for signed state tensors (momentum / first Adam state).
+    ///
+    /// Memoized process-wide: building a codebook includes its 16K-entry
+    /// LUT (and, for `Quantile`, a 1M-sample Monte-Carlo draw), which used
+    /// to be re-done once per parameter tensor.
     pub fn signed_codebook(&self) -> Arc<Codebook> {
-        Arc::new(match self {
-            Format::Dynamic => dynamic_tree::dynamic_signed(),
-            Format::Linear => linear::linear_signed(),
-            Format::Quantile => quantile::quantile_normal(),
-            Format::InverseDynamic => dynamic_tree::inverse_dynamic_signed(),
-        })
+        static CACHE: [OnceLock<Arc<Codebook>>; 4] = [const { OnceLock::new() }; 4];
+        CACHE[self.index()]
+            .get_or_init(|| {
+                Arc::new(match self {
+                    Format::Dynamic => dynamic_tree::dynamic_signed(),
+                    Format::Linear => linear::linear_signed(),
+                    Format::Quantile => quantile::quantile_normal(),
+                    Format::InverseDynamic => dynamic_tree::inverse_dynamic_signed(),
+                })
+            })
+            .clone()
     }
 
     /// Codebook for non-negative state tensors (second Adam state, AdaGrad
-    /// accumulator).
+    /// accumulator). Memoized like [`Format::signed_codebook`].
     pub fn unsigned_codebook(&self) -> Arc<Codebook> {
-        Arc::new(match self {
-            Format::Dynamic => dynamic_tree::dynamic_unsigned(),
-            Format::Linear => linear::linear_unsigned(),
-            // Quantile of the squared-normal (chi²₁) distribution.
-            Format::Quantile => {
-                use crate::util::rng::Rng;
-                let mut rng = Rng::new(0x51_51_51);
-                let data: Vec<f32> = (0..1_000_000)
-                    .map(|_| {
-                        let g = rng.normal();
-                        (g * g) as f32
-                    })
-                    .collect();
-                quantile::quantile_from_data(&data)
-            }
-            Format::InverseDynamic => dynamic_tree::inverse_dynamic_unsigned(),
-        })
+        static CACHE: [OnceLock<Arc<Codebook>>; 4] = [const { OnceLock::new() }; 4];
+        CACHE[self.index()]
+            .get_or_init(|| {
+                Arc::new(match self {
+                    Format::Dynamic => dynamic_tree::dynamic_unsigned(),
+                    Format::Linear => linear::linear_unsigned(),
+                    // Quantile of the squared-normal (chi²₁) distribution.
+                    Format::Quantile => {
+                        use crate::util::rng::Rng;
+                        let mut rng = Rng::new(0x51_51_51);
+                        let data: Vec<f32> = (0..1_000_000)
+                            .map(|_| {
+                                let g = rng.normal();
+                                (g * g) as f32
+                            })
+                            .collect();
+                        quantile::quantile_from_data(&data)
+                    }
+                    Format::InverseDynamic => dynamic_tree::inverse_dynamic_unsigned(),
+                })
+            })
+            .clone()
     }
 }
 
@@ -106,5 +129,18 @@ mod tests {
             assert!(f.signed_codebook().len() > 100);
             assert!(f.unsigned_codebook().len() > 100);
         }
+    }
+
+    #[test]
+    fn codebooks_are_memoized_per_format() {
+        for f in [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic] {
+            assert!(Arc::ptr_eq(&f.signed_codebook(), &f.signed_codebook()));
+            assert!(Arc::ptr_eq(&f.unsigned_codebook(), &f.unsigned_codebook()));
+        }
+        // distinct formats must not collide in the cache
+        assert!(!Arc::ptr_eq(
+            &Format::Dynamic.signed_codebook(),
+            &Format::Linear.signed_codebook()
+        ));
     }
 }

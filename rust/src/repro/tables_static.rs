@@ -9,6 +9,7 @@ use crate::quant::error::{abs_quant_error, relative_adam_error};
 use crate::quant::Format;
 use crate::util::args::Args;
 use crate::util::bench::{bench, black_box};
+use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
@@ -63,17 +64,12 @@ pub fn table5(args: &Args) -> Result<()> {
             let mut opt = build(&cfg, n, None);
             let mut params = vec![0.0f32; n];
             let label = format!("{}/{}", kind.name(), bits.describe());
-            let prev = std::env::var("BITOPT8_THREADS").ok();
-            if single_thread {
-                std::env::set_var("BITOPT8_THREADS", "1");
-            }
-            let res = bench(&label, budget, 200, || {
-                opt.step(black_box(&mut params), black_box(&grads));
-            });
-            match prev {
-                Some(v) => std::env::set_var("BITOPT8_THREADS", v),
-                None => std::env::remove_var("BITOPT8_THREADS"),
-            }
+            let run = || {
+                bench(&label, budget, 200, || {
+                    opt.step(black_box(&mut params), black_box(&grads));
+                })
+            };
+            let res = if single_thread { parallel::with_threads(1, run) } else { run() };
             // scale to 1B params
             let ms_per_1b = res.median_ns * 1e-6 * (1e9 / n as f64);
             row.push(ms_per_1b);

@@ -4,8 +4,19 @@
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`.
 //! One compiled executable per artifact, cached by name.
+//!
+//! The `xla` crate (and with it the whole PJRT toolchain) sits behind the
+//! optional `pjrt` cargo feature. Without it, [`pjrt_stub`] supplies the
+//! same API surface with every entry point returning a clear runtime error,
+//! so offline builds compile every target and the native engine keeps
+//! working.
 
 pub mod manifest;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
+#[cfg(not(feature = "pjrt"))]
+use pjrt_stub as xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -15,6 +26,12 @@ use std::rc::Rc;
 use anyhow::{anyhow, Result};
 
 pub use manifest::{Manifest, ModelEntry, ParamEntry};
+/// The literal type the coordinator traffics in (real or stubbed).
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
+/// The literal type the coordinator traffics in (real or stubbed).
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::Literal;
 
 /// A loaded PJRT client plus an executable cache over an artifact dir.
 pub struct Runtime {

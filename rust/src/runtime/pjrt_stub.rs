@@ -1,0 +1,111 @@
+//! Compile-time stand-in for the `xla` crate when the `pjrt` feature is
+//! disabled.
+//!
+//! Mirrors exactly the slice of the xla-rs API this crate uses, so every
+//! target still builds offline (no XLA/PJRT toolchain); each entry point
+//! fails at runtime with a clear message instead. The native engine
+//! (`Engine::Native` over `optim::*`) never touches these types — only the
+//! AOT forward/backward artifacts and the `Engine::Hlo` optimizer path do.
+
+use std::path::Path;
+
+/// The error every stubbed entry point returns.
+pub const PJRT_DISABLED: &str = "bitopt8 was built without the `pjrt` feature: PJRT/XLA execution \
+     (the AOT forward/backward artifacts and Engine::Hlo) is unavailable. \
+     Rebuild with `cargo build --features pjrt`.";
+
+pub struct Error(pub &'static str);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn err<T>() -> Result<T, Error> {
+    Err(Error(PJRT_DISABLED))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        err()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        err()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        err()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    // the type parameter mirrors xla-rs (`execute::<Literal>`); unused here
+    #[allow(clippy::extra_unused_type_parameters)]
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        err()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        err()
+    }
+}
+
+/// Only the variant this crate constructs.
+pub enum ElementType {
+    U8,
+}
+
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        err()
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, Error> {
+        err()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        err()
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        err()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        err()
+    }
+}

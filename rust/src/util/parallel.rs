@@ -1,12 +1,239 @@
-//! Chunked data-parallelism over std scoped threads (rayon stand-in).
+//! Chunked data-parallelism over a persistent worker pool (rayon stand-in).
 //!
 //! The 8-bit optimizer hot loop is embarrassingly parallel over quantization
 //! blocks; this module gives it multi-core scaling without external crates.
 //! Block-wise quantization needs *no cross-core synchronization* (the
 //! paper's §2.1 throughput argument), so a plain chunk split is exact.
+//!
+//! Unlike the original `std::thread::scope`-per-call design, workers are
+//! spawned once (lazily, process-wide) and parked between calls, so the
+//! per-`step()` dispatch cost is a mutex hand-off instead of OS thread
+//! creation — the difference between "parallel for big tensors" and
+//! "parallel for every tensor of a real model". `BITOPT8_THREADS` is
+//! resolved once at pool init; use [`set_num_threads`]/[`with_threads`] to
+//! change the degree at runtime (benches, parity tests).
+//!
+//! Determinism: every primitive partitions work identically at every thread
+//! count, and items never share mutable state, so results are bit-identical
+//! whether they run inline, on 1 worker, or on 64.
 
-/// Number of worker threads to use (capped, respects BITOPT8_THREADS).
-pub fn num_threads() -> usize {
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Raw mutable pointer the pool is allowed to share across threads.
+///
+/// Safety contract (on the code constructing one): distinct task indices
+/// must touch disjoint memory through it, and the batch must not outlive
+/// the pointee (the pool's submit call blocks until every task finished,
+/// which is what makes borrowing stack data sound).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Lifetime-erased pointer to the batch closure. See [`SendPtr`] contract.
+#[derive(Clone, Copy)]
+struct TaskFn(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskFn {}
+unsafe impl Sync for TaskFn {}
+
+/// Lock helper that shrugs off poisoning: pool state stays consistent
+/// across task panics (panics are caught per task and re-thrown on the
+/// submitting thread, which may unwind while holding the submit lock).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Done {
+    finished: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// One `run_indexed` call: `n` tasks claimed off a shared atomic counter.
+struct Batch {
+    f: TaskFn,
+    n: usize,
+    /// How many pool workers may join (the submitter participates on top).
+    cap: usize,
+    next: AtomicUsize,
+    joined: AtomicUsize,
+    done: Mutex<Done>,
+    done_cv: Condvar,
+}
+
+impl Batch {
+    /// Claim and run tasks until the index space is exhausted.
+    fn work(&self) {
+        let mut finished = 0usize;
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // SAFETY: the closure pointer may only be dereferenced while a
+            // claimed index < n is in flight: its completion has not been
+            // counted yet, so `done.finished < n` and the submitter is
+            // still blocked in `run_batch`, keeping the closure (and
+            // everything it borrows) alive. A late worker that finds the
+            // index space exhausted never touches the pointer.
+            let f = unsafe { &*self.f.0 };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                if panic.is_none() {
+                    panic = Some(p);
+                }
+            }
+            finished += 1;
+        }
+        if finished > 0 {
+            let mut done = lock(&self.done);
+            done.finished += finished;
+            if done.panic.is_none() {
+                done.panic = panic;
+            }
+            if done.finished >= self.n {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct JobSlot {
+    /// Bumped once per installed batch so parked workers can tell a new
+    /// batch from the one they already drained.
+    gen: u64,
+    batch: Option<Arc<Batch>>,
+}
+
+struct PoolShared {
+    job: Mutex<JobSlot>,
+    work_cv: Condvar,
+}
+
+/// The process-wide worker pool.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    /// Serializes top-level batches (nested calls run inline instead).
+    submit: Mutex<()>,
+    /// Worker threads spawned so far (grown on demand).
+    spawned: Mutex<usize>,
+    /// Effective parallelism for the next batch.
+    threads: AtomicUsize,
+}
+
+thread_local! {
+    /// Set while this thread is executing pool tasks; nested parallel calls
+    /// then run inline (sequentially) instead of re-entering the pool.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_main(shared: Arc<PoolShared>) {
+    IN_WORKER.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let batch = {
+            let mut slot = lock(&shared.job);
+            loop {
+                if slot.gen != seen {
+                    seen = slot.gen;
+                    if let Some(b) = &slot.batch {
+                        break b.clone();
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        if batch.joined.fetch_add(1, Ordering::Relaxed) < batch.cap {
+            batch.work();
+        }
+    }
+}
+
+impl Pool {
+    fn new() -> Pool {
+        Pool {
+            shared: Arc::new(PoolShared {
+                job: Mutex::new(JobSlot { gen: 0, batch: None }),
+                work_cv: Condvar::new(),
+            }),
+            submit: Mutex::new(()),
+            spawned: Mutex::new(0),
+            threads: AtomicUsize::new(default_threads()),
+        }
+    }
+
+    fn ensure_workers(&self, helpers: usize) {
+        let mut spawned = lock(&self.spawned);
+        while *spawned < helpers {
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("bitopt8-pool-{}", *spawned))
+                .spawn(move || worker_main(shared))
+                .expect("spawn pool worker");
+            *spawned += 1;
+        }
+    }
+
+    /// Run `f(0..n)` across the submitter plus up to `threads - 1` workers,
+    /// blocking until every index has finished (or re-throwing the first
+    /// task panic).
+    fn run_batch(&self, f: &(dyn Fn(usize) + Sync), n: usize, threads: usize) {
+        let _submit = lock(&self.submit);
+        self.ensure_workers(threads - 1);
+        // SAFETY: lifetime erasure only; this call keeps `f` alive until
+        // `done.finished == n` below, and no task runs after that.
+        let erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let batch = Arc::new(Batch {
+            f: TaskFn(erased),
+            n,
+            cap: threads - 1,
+            next: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            done: Mutex::new(Done { finished: 0, panic: None }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut slot = lock(&self.shared.job);
+            slot.gen = slot.gen.wrapping_add(1);
+            slot.batch = Some(batch.clone());
+        }
+        self.shared.work_cv.notify_all();
+
+        IN_WORKER.with(|c| c.set(true));
+        batch.work();
+        IN_WORKER.with(|c| c.set(false));
+
+        let panic = {
+            let mut done = lock(&batch.done);
+            while done.finished < n {
+                done = batch.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+            }
+            done.panic.take()
+        };
+        {
+            let mut slot = lock(&self.shared.job);
+            slot.batch = None;
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The lazily-initialized process-wide pool.
+pub fn pool() -> &'static Pool {
+    POOL.get_or_init(Pool::new)
+}
+
+/// Initial thread count: `BITOPT8_THREADS` (read once, at pool init) or the
+/// hardware parallelism.
+fn default_threads() -> usize {
     if let Ok(s) = std::env::var("BITOPT8_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
             return n.max(1);
@@ -15,42 +242,88 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Current effective worker count (cached — no env lookup on the hot path).
+pub fn num_threads() -> usize {
+    pool().threads.load(Ordering::Relaxed)
+}
+
+/// Change the effective worker count for subsequent calls (workers are
+/// grown on demand; shrinking just leaves the extras parked).
+pub fn set_num_threads(n: usize) {
+    pool().threads.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with the thread count temporarily set to `n` (restored on exit,
+/// including on panic). The setting is process-global, so concurrent
+/// callers racing on it still get *correct* results — every primitive is
+/// deterministic in the thread count — just an arbitrary parallelism.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_num_threads(self.0);
+        }
+    }
+    let _restore = Restore(num_threads());
+    set_num_threads(n);
+    f()
+}
+
+/// Core primitive: call `f(i)` for every `i in 0..n` across the pool,
+/// returning when all are done. Each index runs exactly once; panics are
+/// re-thrown here after the batch drains. Calls from inside a pool task
+/// run inline (no nested parallelism).
+pub fn run_indexed<F: Fn(usize) + Sync>(n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 || n == 1 || IN_WORKER.with(|c| c.get()) {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    pool().run_batch(&f, n, threads);
+}
+
+/// Run a heterogeneous set of one-shot tasks on the pool, blocking until
+/// all complete. The fused multi-tensor optimizer step feeds every
+/// (tensor, block) work item of one training step through this.
+pub fn submit_all<'s>(tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    let slots: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 's>>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    run_indexed(n, |i| {
+        if let Some(task) = lock(&slots[i]).take() {
+            task();
+        }
+    });
+}
+
 /// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
-/// `chunk_len` elements each (last chunk may be short), across threads.
+/// `chunk_len` elements each (last chunk may be short), across the pool.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync + Send,
 {
     assert!(chunk_len > 0);
-    let n_chunks = data.len().div_ceil(chunk_len);
-    let threads = num_threads().min(n_chunks.max(1));
-    if threads <= 1 || n_chunks <= 1 {
-        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, c);
-        }
+    let len = data.len();
+    if len == 0 {
         return;
     }
-    // Split the chunk index space evenly across threads; each thread walks
-    // its own contiguous run of chunks.
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
-    let per = chunks.len().div_ceil(threads);
-    let mut groups: Vec<Vec<(usize, &mut [T])>> = Vec::new();
-    let mut it = chunks.into_iter();
-    loop {
-        let g: Vec<_> = it.by_ref().take(per).collect();
-        if g.is_empty() {
-            break;
-        }
-        groups.push(g);
-    }
-    std::thread::scope(|s| {
-        for group in groups {
-            s.spawn(|| {
-                for (i, c) in group {
-                    f(i, c);
-                }
-            });
-        }
+    let n_chunks = len.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    run_indexed(n_chunks, move |i| {
+        let lo = i * chunk_len;
+        let n = chunk_len.min(len - lo);
+        // SAFETY: chunk i covers [lo, lo + n) — disjoint across indices,
+        // each index claimed exactly once, and `data` outlives the call.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), n) };
+        f(i, chunk);
     });
 }
 
@@ -66,39 +339,22 @@ pub fn par_chunks_pair_mut<A: Send, B: Send, F>(
     F: Fn(usize, &mut [A], &mut [B]) + Sync + Send,
 {
     assert!(ca > 0 && cb > 0);
-    let n_chunks = a.len().div_ceil(ca);
-    assert_eq!(n_chunks.max(1), b.len().div_ceil(cb).max(1), "chunk counts differ");
-    let pairs: Vec<(usize, (&mut [A], &mut [B]))> = a
-        .chunks_mut(ca)
-        .zip(b.chunks_mut(cb))
-        .enumerate()
-        .map(|(i, p)| (i, p))
-        .collect();
-    let threads = num_threads().min(pairs.len().max(1));
-    if threads <= 1 || pairs.len() <= 1 {
-        for (i, (pa, pb)) in pairs {
-            f(i, pa, pb);
-        }
+    let (la, lb) = (a.len(), b.len());
+    let n_chunks = la.div_ceil(ca);
+    assert_eq!(n_chunks.max(1), lb.div_ceil(cb).max(1), "chunk counts differ");
+    if la == 0 {
         return;
     }
-    let per = pairs.len().div_ceil(threads);
-    let mut groups: Vec<Vec<(usize, (&mut [A], &mut [B]))>> = Vec::new();
-    let mut it = pairs.into_iter();
-    loop {
-        let g: Vec<_> = it.by_ref().take(per).collect();
-        if g.is_empty() {
-            break;
-        }
-        groups.push(g);
-    }
-    std::thread::scope(|s| {
-        for group in groups {
-            s.spawn(|| {
-                for (i, (pa, pb)) in group {
-                    f(i, pa, pb);
-                }
-            });
-        }
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    run_indexed(n_chunks, move |i| {
+        let (lo_a, lo_b) = (i * ca, i * cb);
+        let (na, nb) = (ca.min(la - lo_a), cb.min(lb - lo_b));
+        // SAFETY: as in `par_chunks_mut`, per-index ranges are disjoint in
+        // both slices and the borrows outlive the blocking call.
+        let sa = unsafe { std::slice::from_raw_parts_mut(pa.0.add(lo_a), na) };
+        let sb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(lo_b), nb) };
+        f(i, sa, sb);
     });
 }
 
@@ -107,59 +363,52 @@ pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Sync + Send,
 {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let per = n.div_ceil(threads);
-    let slices: Vec<(usize, &mut [Option<R>])> = {
-        let mut v = Vec::new();
-        let mut rest = out.as_mut_slice();
-        let mut start = 0;
-        while !rest.is_empty() {
-            let take = per.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            v.push((start, head));
-            start += take;
-            rest = tail;
-        }
-        v
-    };
-    let fref = &f;
-    std::thread::scope(|s| {
-        for (start, slot) in slices {
-            s.spawn(move || {
-                for (j, cell) in slot.iter_mut().enumerate() {
-                    *cell = Some(fref(start + j));
-                }
-            });
-        }
+    let base = SendPtr(out.as_mut_ptr());
+    run_indexed(n, move |i| {
+        // SAFETY: one slot per index, written exactly once.
+        unsafe { *base.0.add(i) = Some(f(i)) };
     });
     out.into_iter().map(|o| o.expect("all slots filled")).collect()
 }
 
-/// Run two independent closures on two disjoint mutable slices in parallel.
-pub fn join<A: Send, B: Send>(fa: impl FnOnce() -> A + Send, fb: impl FnOnce() -> B + Send) -> (A, B) {
+/// Run two independent closures in parallel (pool-backed).
+pub fn join<A: Send, B: Send>(
+    fa: impl FnOnce() -> A + Send,
+    fb: impl FnOnce() -> B + Send,
+) -> (A, B) {
     let mut ra = None;
     let mut rb = None;
-    std::thread::scope(|s| {
-        s.spawn(|| ra = Some(fa()));
-        rb = Some(fb());
-    });
+    {
+        let (pra, prb) = (&mut ra, &mut rb);
+        let ta = Box::new(move || *pra = Some(fa())) as Box<dyn FnOnce() + Send + '_>;
+        let tb = Box::new(move || *prb = Some(fb())) as Box<dyn FnOnce() + Send + '_>;
+        submit_all(vec![ta, tb]);
+    }
     (ra.unwrap(), rb.unwrap())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Serializes tests that touch the process-global thread count (the
+    /// default test harness runs tests concurrently; without this,
+    /// `with_threads_restores_count` could observe another test's
+    /// temporary setting).
+    static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+    fn threads_locked() -> MutexGuard<'static, ()> {
+        THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn par_chunks_mut_touches_every_element_once() {
         let mut data = vec![0u32; 10_000];
-        par_chunks_mut(&mut data, 257, |i, c| {
+        par_chunks_mut(&mut data, 257, |_, c| {
             for v in c.iter_mut() {
-                *v += 1 + i as u32 * 0; // each element exactly once
+                *v += 1; // each element exactly once
             }
         });
         assert!(data.iter().all(|&v| v == 1));
@@ -202,5 +451,100 @@ mod tests {
             }
         });
         assert_eq!(data, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn submit_all_runs_every_task_once() {
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..100)
+            .map(|i| {
+                let c = &counter;
+                Box::new(move || {
+                    c.fetch_add(i + 1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        submit_all(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 100 * 101 / 2);
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_inline_without_deadlock() {
+        let _g = threads_locked();
+        let out = with_threads(4, || {
+            par_map(16, |i| {
+                // nested call from (potentially) a worker thread
+                let inner = par_map(8, move |j| i * 8 + j);
+                inner.into_iter().sum::<usize>()
+            })
+        });
+        let total: usize = out.into_iter().sum();
+        assert_eq!(total, (0..128).sum::<usize>());
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_batches() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            for round in 0..200 {
+                let mut data = vec![0usize; 513];
+                par_chunks_mut(&mut data, 32, |_, c| {
+                    for v in c.iter_mut() {
+                        *v = round;
+                    }
+                });
+                assert!(data.iter().all(|&v| v == round));
+            }
+        });
+    }
+
+    #[test]
+    fn with_threads_restores_count() {
+        let _g = threads_locked();
+        let before = num_threads();
+        with_threads(3, || assert_eq!(num_threads(), 3));
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let _g = threads_locked();
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                par_map(1000, |i| {
+                    let x = (i as f32).sqrt().sin();
+                    x.to_bits()
+                })
+            })
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(4));
+        assert_eq!(one, run(9));
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let _g = threads_locked();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                run_indexed(64, |i| {
+                    if i == 37 {
+                        panic!("boom in task");
+                    }
+                });
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must reach the submitter");
+        // the pool must stay functional afterwards
+        let mut data = vec![0u32; 4096];
+        with_threads(4, || {
+            par_chunks_mut(&mut data, 64, |_, c| {
+                for v in c.iter_mut() {
+                    *v += 1;
+                }
+            });
+        });
+        assert!(data.iter().all(|&v| v == 1));
     }
 }

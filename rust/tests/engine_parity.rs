@@ -7,7 +7,7 @@
 
 use bitopt8::optim::{build, Bits, OptimConfig, StateTensor};
 use bitopt8::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
-use bitopt8::quant::{BlockQuantizer, Quantized, BLOCK};
+use bitopt8::quant::{BlockQuantizer, Quantized};
 use bitopt8::runtime::{self, Runtime};
 use bitopt8::util::rng::Rng;
 use std::sync::Arc;

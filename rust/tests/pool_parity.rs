@@ -1,0 +1,254 @@
+//! Parity tests for the unified block-kernel execution engine.
+//!
+//! The engine contract (and the paper's §2.1 argument): the block partition
+//! and the in-block update order never change, so the pooled / fused
+//! implementation is **bit-identical** to the sequential path — at every
+//! thread count, for every optimizer, at every precision. These tests pin
+//! that down:
+//!
+//! * every optimizer × {B32, B8 dynamic, B8 linear} × threads {1, 4,
+//!   default} produces bit-identical params and states,
+//! * the fused multi-tensor step equals per-tensor stepping exactly,
+//! * 8-bit Adam matches an independent reference built from the public
+//!   quantizer API (pinning the dequantize → update → requantize semantics
+//!   of the seed implementation).
+
+use std::sync::Mutex;
+
+use bitopt8::optim::{build, engine::fused_update, Bits, OptimConfig, OptimKind, Optimizer};
+use bitopt8::quant::{BlockQuantizer, Format, BLOCK};
+use bitopt8::util::parallel;
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle the process-global thread count. (Results
+/// are thread-count-invariant, so racing would still pass — this just makes
+/// each test measure what it claims to.)
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const ALL_KINDS: [OptimKind; 8] = [
+    OptimKind::Adam,
+    OptimKind::AdamW,
+    OptimKind::Momentum,
+    OptimKind::Lamb,
+    OptimKind::Lars,
+    OptimKind::Adafactor,
+    OptimKind::Adagrad,
+    OptimKind::Sm3,
+];
+
+fn bit_configs() -> [Bits; 3] {
+    [
+        Bits::B32,
+        Bits::B8 { format: Format::Dynamic, blockwise: true },
+        Bits::B8 { format: Format::Linear, blockwise: true },
+    ]
+}
+
+/// `steps` updates of one optimizer on a quadratic; returns the final
+/// params and dequantized states.
+fn trajectory(
+    kind: OptimKind,
+    bits: Bits,
+    threads: Option<usize>,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    // 64*72 = 4608 spans three 2048-blocks (last one ragged) and factors
+    // as a true 2-D shape for Adafactor/SM3.
+    let (rows, cols) = (64usize, 72usize);
+    let n = rows * cols;
+    let mut cfg = OptimConfig::adam(0.01, bits);
+    cfg.kind = kind;
+    let mut opt = build(&cfg, n, Some((rows, cols)));
+    let mut rng = Rng::new(0xC0FFEE);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let run = |opt: &mut Box<dyn Optimizer>, p: &mut Vec<f32>| {
+        for _ in 0..steps {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(p, &g);
+        }
+    };
+    match threads {
+        Some(t) => parallel::with_threads(t, || run(&mut opt, &mut p)),
+        None => run(&mut opt, &mut p),
+    }
+    let states = opt.states().into_iter().map(|(_, s)| s.to_f32()).collect();
+    (p, states)
+}
+
+#[test]
+fn every_optimizer_is_bit_identical_across_thread_counts() {
+    let _g = locked();
+    for kind in ALL_KINDS {
+        for bits in bit_configs() {
+            // threads = 1 IS the seed's sequential path: the pool inlines
+            // the whole batch on the calling thread in index order.
+            let (p_seq, s_seq) = trajectory(kind, bits, Some(1), 5);
+            let (p_par, s_par) = trajectory(kind, bits, Some(4), 5);
+            let (p_def, s_def) = trajectory(kind, bits, None, 5);
+            assert!(p_seq.iter().all(|v| v.is_finite()));
+            assert_eq!(
+                p_seq, p_par,
+                "{} {} params diverged between 1 and 4 threads",
+                kind.name(),
+                bits.describe()
+            );
+            assert_eq!(
+                p_seq, p_def,
+                "{} {} params diverged between 1 and default threads",
+                kind.name(),
+                bits.describe()
+            );
+            assert_eq!(s_seq, s_par, "{} {} states diverged", kind.name(), bits.describe());
+            assert_eq!(s_seq, s_def, "{} {} states diverged", kind.name(), bits.describe());
+        }
+    }
+}
+
+type Fleet = (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+/// Build a many-tensor fleet: mixed sizes (sub-block, exactly one block,
+/// ragged multi-block) and mixed optimizers (block-local and whole-tensor).
+fn fleet(bits: Bits) -> Fleet {
+    let spec: Vec<(OptimKind, usize)> = vec![
+        (OptimKind::Adam, 1),
+        (OptimKind::Adam, 173),
+        (OptimKind::Adam, 2048),
+        (OptimKind::Adam, 2049),
+        (OptimKind::Momentum, 4096),
+        (OptimKind::Momentum, 31),
+        (OptimKind::Adagrad, 5000),
+        (OptimKind::Lars, 777),
+        (OptimKind::Lamb, 1500),
+        (OptimKind::Lamb, 20000), // above the whole-tensor batch cutoff
+        (OptimKind::Adafactor, 1024),
+        (OptimKind::Sm3, 900),
+    ];
+    let mut rng = Rng::new(0xF1EE7);
+    let mut opts = Vec::new();
+    let mut params = Vec::new();
+    let mut grads = Vec::new();
+    for (kind, n) in spec {
+        let mut cfg = OptimConfig::adam(0.005, bits);
+        cfg.kind = kind;
+        opts.push(build(&cfg, n, None));
+        params.push((0..n).map(|_| rng.normal() as f32).collect());
+        grads.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect());
+    }
+    (opts, params, grads)
+}
+
+#[test]
+fn fused_step_matches_per_tensor_stepping_bitwise() {
+    let _g = locked();
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for threads in [1usize, 4] {
+            parallel::with_threads(threads, || {
+                let (mut o_serial, mut p_serial, grads) = fleet(bits);
+                let (mut o_fused, mut p_fused, _) = fleet(bits);
+                for _ in 0..4 {
+                    for i in 0..o_serial.len() {
+                        o_serial[i].step(&mut p_serial[i], &grads[i]);
+                    }
+                    fused_update(&mut o_fused, &mut p_fused, &grads);
+                }
+                assert_eq!(
+                    p_serial,
+                    p_fused,
+                    "fused vs serial params diverged ({}, {threads} threads)",
+                    bits.describe()
+                );
+                for (a, b) in o_serial.iter().zip(&o_fused) {
+                    assert_eq!(a.t(), b.t());
+                    for ((name, sa), (_, sb)) in a.states().iter().zip(b.states().iter()) {
+                        assert_eq!(sa.to_f32(), sb.to_f32(), "state {name} diverged");
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn adam8_engine_matches_quantizer_level_reference() {
+    let _g = locked();
+    let n = 2048 * 2 + 300; // ragged third block
+    let (lr, b1, b2, eps) = (0.02f32, 0.9f32, 0.995f32, 1e-7f32);
+    let steps = 4;
+
+    let mut rng = Rng::new(0x5EF);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    // --- engine path ------------------------------------------------------
+    let mut cfg = OptimConfig::adam(lr, Bits::b8_dynamic());
+    cfg.beta1 = b1;
+    cfg.beta2 = b2;
+    cfg.eps = eps;
+    let mut opt = build(&cfg, n, None);
+    let mut p_engine: Vec<f32> = vec![0.5; n];
+    parallel::with_threads(4, || {
+        for _ in 0..steps {
+            let g: Vec<f32> = p_engine.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p_engine, &g);
+        }
+    });
+
+    // --- independent reference over the public quantizer API --------------
+    // Figure 1 semantics: dequantize state, run the exact 32-bit rule on
+    // the in-register values, requantize for storage.
+    let bq_m = BlockQuantizer::new(Format::Dynamic.signed_codebook(), BLOCK);
+    let bq_r = BlockQuantizer::new(Format::Dynamic.unsigned_codebook(), BLOCK);
+    let zeros = vec![0.0f32; n];
+    let mut qm = bq_m.quantize(&zeros);
+    let mut qr = bq_r.quantize(&zeros);
+    let mut p_ref: Vec<f32> = vec![0.5; n];
+    for t in 1..=steps as i32 {
+        let g: Vec<f32> = p_ref.iter().zip(&target).map(|(a, b)| a - b).collect();
+        let mut m = bq_m.dequantize(&qm);
+        let mut r = bq_r.dequantize(&qr);
+        let bias1 = 1.0 - b1.powi(t);
+        let bias2 = 1.0 - b2.powi(t);
+        for i in 0..n {
+            bitopt8::optim::adam::Adam::update_rule(
+                &mut p_ref[i],
+                g[i],
+                &mut m[i],
+                &mut r[i],
+                lr,
+                b1,
+                b2,
+                eps,
+                0.0,
+                false,
+                bias1,
+                bias2,
+            );
+        }
+        bq_m.quantize_into(&m, &mut qm);
+        bq_r.quantize_into(&r, &mut qr);
+    }
+
+    assert_eq!(p_engine, p_ref, "engine diverged from the quantizer-level reference");
+    let states = opt.states();
+    assert_eq!(states[0].1.to_f32(), bq_m.dequantize(&qm), "first moment diverged");
+    assert_eq!(states[1].1.to_f32(), bq_r.dequantize(&qr), "second moment diverged");
+}
+
+#[test]
+fn fused_step_handles_degenerate_tensors() {
+    let _g = locked();
+    let mut opts: Vec<Box<dyn Optimizer>> = vec![
+        build(&OptimConfig::adam(0.01, Bits::b8_dynamic()), 1, None),
+        build(&OptimConfig::adam(0.01, Bits::B32), 2, None),
+    ];
+    let mut params = vec![vec![1.0f32], vec![1.0f32, 2.0]];
+    let grads = vec![vec![0.5f32], vec![0.5f32, 0.25]];
+    parallel::with_threads(4, || fused_update(&mut opts, &mut params, &grads));
+    assert!(params.iter().flatten().all(|v| v.is_finite()));
+    assert_eq!(opts[0].t(), 1);
+    assert_eq!(opts[1].t(), 1);
+}
