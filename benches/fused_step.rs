@@ -1,71 +1,198 @@
-//! Fused multi-tensor stepping vs per-tensor stepping on a many-small-
-//! tensors workload — the regime real models live in (dozens of LayerNorm /
-//! bias / projection tensors per block) and the one the persistent pool +
-//! fused engine target: per-tensor dispatch amortizes to one pool batch
-//! per training step, and inter-tensor parallelism covers tensors smaller
-//! than one quantization block.
+//! Fused multi-tensor stepping vs per-tensor stepping — the regime real
+//! models live in (dozens of LayerNorm / bias / projection tensors per
+//! block) and the one the phased fused engine targets: per-tensor dispatch
+//! amortizes to one pool batch per phase per training step, and
+//! inter-tensor parallelism covers tensors smaller than one quantization
+//! block.
 //!
-//! Run: `cargo bench --bench fused_step [-- --tensors 48 --n 4096]`
+//! Two workloads:
+//! * `adam_many_small` — many equal small Adam tensors (block-local,
+//!   single-phase plans);
+//! * `reduction_mix` — a realistic embedding/projection/bias tensor-count
+//!   mix stepped by the reduction-bearing optimizers (LAMB, Adafactor,
+//!   factored SM3), whose two-/three-phase plans used to fall back to
+//!   caller-side whole-tensor execution.
+//!
+//! Emits machine-readable results to `BENCH_fused_step.json` (repo root)
+//! so the perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench fused_step [-- --tensors 48 --n 4096
+//!       --budget-ms 1200 --out BENCH_fused_step.json]`
 
 use std::time::Duration;
 
-use bitopt8::optim::{build, engine::fused_update, Bits, OptimConfig, Optimizer};
+use bitopt8::optim::{build, engine::fused_update, Bits, OptimConfig, OptimKind, Optimizer};
 use bitopt8::util::args::Args;
 use bitopt8::util::bench::bench;
+use bitopt8::util::json::{num, obj, s, Json};
 use bitopt8::util::parallel;
 use bitopt8::util::rng::Rng;
 
 type Fleet = (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
 
-fn fleet(n_tensors: usize, n: usize, bits: Bits) -> Fleet {
+/// `(kind, elements, 2-D shape)` per tensor.
+type Spec = (OptimKind, usize, Option<(usize, usize)>);
+
+fn fleet(spec: &[Spec], bits: Bits) -> Fleet {
     let mut rng = Rng::new(42);
     let mut opts = Vec::new();
     let mut params: Vec<Vec<f32>> = Vec::new();
     let mut grads: Vec<Vec<f32>> = Vec::new();
-    for _ in 0..n_tensors {
-        opts.push(build(&OptimConfig::adam(1e-3, bits), n, None));
+    for &(kind, n, shape) in spec {
+        let mut cfg = OptimConfig::adam(1e-3, bits);
+        cfg.kind = kind;
+        opts.push(build(&cfg, n, shape));
         params.push((0..n).map(|_| rng.normal() as f32).collect());
         grads.push((0..n).map(|_| rng.normal() as f32 * 0.01).collect());
     }
     (opts, params, grads)
 }
 
+/// Many equal small tensors (the PR-1 workload).
+fn adam_many_small(n_tensors: usize, n: usize) -> Vec<Spec> {
+    (0..n_tensors).map(|_| (OptimKind::Adam, n, None)).collect()
+}
+
+/// Realistic per-layer mix for one reduction-bearing optimizer: a couple
+/// of large projections, several medium matrices, many bias/norm vectors.
+fn reduction_mix(kind: OptimKind, layers: usize) -> Vec<Spec> {
+    let mut spec: Vec<Spec> = Vec::new();
+    for _ in 0..layers {
+        spec.push((kind, 256 * 1024, Some((256, 1024)))); // attention proj
+        spec.push((kind, 128 * 512, Some((128, 512)))); // mlp in
+        spec.push((kind, 512 * 128, Some((512, 128)))); // mlp out
+        for _ in 0..6 {
+            spec.push((kind, 1024, None)); // biases / norms
+        }
+    }
+    spec
+}
+
+struct Entry {
+    workload: &'static str,
+    optimizer: &'static str,
+    bits: String,
+    variant: &'static str,
+    us_per_step: f64,
+    iters: usize,
+    speedup_vs_per_tensor: f64,
+}
+
+fn run_workload(
+    workload: &'static str,
+    optimizer: &'static str,
+    spec: &[Spec],
+    bits: Bits,
+    budget: Duration,
+    out: &mut Vec<Entry>,
+) {
+    let mut base_us = 0.0f64;
+    for (variant, fused) in [("per-tensor", false), ("fused", true)] {
+        let (mut opts, mut params, grads) = fleet(spec, bits);
+        let r = bench(variant, budget, 2000, || {
+            if fused {
+                fused_update(&mut opts, &mut params, &grads);
+            } else {
+                for i in 0..opts.len() {
+                    opts[i].step(&mut params[i], &grads[i]);
+                }
+            }
+        });
+        let us = r.median_ns / 1e3;
+        if !fused {
+            base_us = us;
+        }
+        println!(
+            "{:<16} {:<10} {:<22} {:<12} {:>12.1} µs/step {:>8.2}x",
+            workload,
+            optimizer,
+            bits.describe(),
+            variant,
+            us,
+            base_us / us
+        );
+        out.push(Entry {
+            workload,
+            optimizer,
+            bits: bits.describe(),
+            variant,
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_per_tensor: base_us / us,
+        });
+    }
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let n_tensors = args.get_usize("tensors", 48);
     let n = args.get_usize("n", 4096);
+    let layers = args.get_usize("layers", 2);
     let budget = Duration::from_millis(args.get_u64("budget-ms", 1200));
+    let out_path = args.get_or("out", "BENCH_fused_step.json").to_string();
 
     println!(
-        "fused_step: {n_tensors} tensors x {n} params, {} threads",
+        "fused_step: adam {n_tensors}x{n}, reduction mix {layers} layers, {} threads",
         parallel::num_threads()
     );
-    println!("{:<28} {:>14} {:>16}", "config", "µs/step", "vs per-tensor");
+    let mut entries: Vec<Entry> = Vec::new();
     for bits in [Bits::B32, Bits::b8_dynamic()] {
-        let mut base_us = 0.0f64;
-        for (label, fused) in [("per-tensor step()", false), ("fused multi-tensor", true)] {
-            let (mut opts, mut params, grads) = fleet(n_tensors, n, bits);
-            let r = bench(label, budget, 2000, || {
-                if fused {
-                    fused_update(&mut opts, &mut params, &grads);
-                } else {
-                    for i in 0..opts.len() {
-                        opts[i].step(&mut params[i], &grads[i]);
-                    }
-                }
-            });
-            let us = r.median_ns / 1e3;
-            if !fused {
-                base_us = us;
-            }
-            println!(
-                "{:<28} {:>14.1} {:>15.2}x",
-                format!("{} {label}", bits.describe()),
-                us,
-                base_us / us
-            );
-        }
+        run_workload(
+            "adam_many_small",
+            "adam",
+            &adam_many_small(n_tensors, n),
+            bits,
+            budget,
+            &mut entries,
+        );
     }
-    println!("\n(speedup from one pool batch per step instead of one dispatch per tensor;");
-    println!(" grows with tensor count and core count — small tensors alone cannot fill cores)");
+    // LAMB exercises the quantized two-phase plan; Adafactor and SM3 are
+    // 32-bit by construction, so bench them once.
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        let spec = reduction_mix(OptimKind::Lamb, layers);
+        run_workload("reduction_mix", "lamb", &spec, bits, budget, &mut entries);
+    }
+    run_workload(
+        "reduction_mix",
+        "adafactor",
+        &reduction_mix(OptimKind::Adafactor, layers),
+        Bits::B32,
+        budget,
+        &mut entries,
+    );
+    run_workload(
+        "reduction_mix",
+        "sm3",
+        &reduction_mix(OptimKind::Sm3, layers),
+        Bits::B32,
+        budget,
+        &mut entries,
+    );
+
+    let results: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("workload", s(e.workload)),
+                ("optimizer", s(e.optimizer)),
+                ("bits", s(&e.bits)),
+                ("variant", s(e.variant)),
+                ("us_per_step", num(e.us_per_step)),
+                ("iters", num(e.iters as f64)),
+                ("speedup_vs_per_tensor", num(e.speedup_vs_per_tensor)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("fused_step")),
+        ("threads", num(parallel::num_threads() as f64)),
+        ("tensors", num(n_tensors as f64)),
+        ("n", num(n as f64)),
+        ("layers", num(layers as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n").expect("write bench json");
+    println!("\nwrote {out_path} ({} results)", entries.len());
+    println!("(speedup from one pool batch per phase per step instead of one dispatch per");
+    println!(" tensor; grows with tensor count and core count)");
 }

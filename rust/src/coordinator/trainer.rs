@@ -296,10 +296,12 @@ impl<'rt> Trainer<'rt> {
                 self.hlo_update(i, step_lr, &grads[i])?;
             }
         }
-        // Native tensors: every (tensor, block) work item of this step goes
-        // into ONE pool batch, so inter-tensor parallelism covers small
-        // tensors and pool dispatch is paid once per step. Bit-identical
-        // to stepping tensors serially (see optim::engine).
+        // Native tensors: every tensor's phased plan executes phase-aligned
+        // — all tensors' phase-k items as ONE pool batch (reductions
+        // included), combines between barriers — so inter-tensor
+        // parallelism covers small tensors and pool dispatch is paid per
+        // phase, not per tensor. Bit-identical to stepping tensors serially
+        // (see optim::engine).
         let mut fused = FusedStep::new();
         for (((opt, p), g), hlo) in self
             .opts

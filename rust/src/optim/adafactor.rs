@@ -13,8 +13,10 @@
 //! first moment dominates: ≈4 bytes/param ≈ half of 32-bit Adam — exactly
 //! the "competitive but still 2× 8-bit Adam" memory row in Table 1.
 
-use super::state::{step_blocks, BlockView, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, Grid, Phase, StateTensor, StepPlan};
 use super::{OptimConfig, Optimizer};
+use crate::util::parallel::Shared;
+use crate::util::reduce;
 
 const EPS1: f32 = 1e-30; // regularizer added to g² (paper's ε₁)
 const CLIP_D: f32 = 1.0; // update RMS clip threshold
@@ -28,6 +30,14 @@ pub struct Adafactor {
     col: Vec<f32>,
     /// ...or the full second moment for 1-D tensors.
     v: Vec<f32>,
+    /// Per-step update direction u = g/√v̂ (reused buffer, not state).
+    u: Vec<f32>,
+    /// Per-chunk ‖u‖² partials for the RMS clip.
+    partials: Vec<f64>,
+    /// Σ_i R_i (factored v̂ normalizer), written by the stats combine.
+    row_sum: f32,
+    /// RMS clip scale, written by the u combine, read by the apply phase.
+    clip: f32,
     shape: Option<(usize, usize)>,
     t: u64,
 }
@@ -43,6 +53,10 @@ impl Adafactor {
             row: vec![0.0; rows],
             col: vec![0.0; cols],
             v: if factored { Vec::new() } else { vec![0.0; n] },
+            u: vec![0.0; n],
+            partials: vec![0.0; reduce::n_chunks(n)],
+            row_sum: 0.0,
+            clip: 1.0,
             shape,
             t: 0,
         }
@@ -54,63 +68,120 @@ impl Adafactor {
 }
 
 impl Optimizer for Adafactor {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+    /// Factored tensors: three phases — (A) row/col statistics, each slot
+    /// written by exactly one item, with the Σ R_i fold as combine; (B)
+    /// u = g/√v̂ plus per-chunk ‖u‖² partials, with the RMS-clip fold as
+    /// combine; (C) block-local first-moment update + apply. 1-D tensors
+    /// skip phase A (v is elementwise) and run two phases.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
         let b2 = cfg.beta2;
         let bias_c2 = 1.0 - b2.powi(self.t as i32);
         let n = params.len();
+        assert_eq!(self.u.len(), n);
+        let nc = reduce::n_chunks(n);
+        self.partials.resize(nc, 0.0);
+        // SAFETY (all `Shared` uses below): within each phase items write
+        // disjoint slots (row/col chunks, u chunks, partial slots, param
+        // blocks); combines run alone between phase barriers; reads of a
+        // phase's output happen only after its barrier. `plan`'s `&'a mut
+        // self` borrow keeps every target alive for the plan's lifetime.
+        let partials = Shared::new(&mut self.partials);
+        let row_sum = Shared::new(std::slice::from_mut(&mut self.row_sum));
+        let clip = Shared::new(std::slice::from_mut(&mut self.clip));
+        let u_sh = Shared::new(&mut self.u);
 
-        // Update second-moment statistics and compute v̂ lookup.
-        let vhat_at: Box<dyn Fn(usize) -> f32> = if let Some((rows, cols)) = self.shape {
-            for (i, r) in self.row.iter_mut().enumerate() {
-                let mut s = 0.0f32;
-                for j in 0..cols {
-                    let g = grads[i * cols + j];
-                    s += g * g + EPS1;
-                }
-                *r = b2 * *r + (1.0 - b2) * s;
-            }
-            for (j, c) in self.col.iter_mut().enumerate() {
-                let mut s = 0.0f32;
-                for i in 0..rows {
-                    let g = grads[i * cols + j];
-                    s += g * g + EPS1;
-                }
-                *c = b2 * *c + (1.0 - b2) * s;
-            }
-            let row_sum: f32 = self.row.iter().sum::<f32>().max(EPS1);
-            let row = self.row.clone();
-            let col = self.col.clone();
-            Box::new(move |idx: usize| {
-                let (i, j) = (idx / cols, idx % cols);
-                (row[i] * col[j] / row_sum / bias_c2).max(EPS1)
-            })
-        } else {
-            for (v, &g) in self.v.iter_mut().zip(grads) {
-                *v = b2 * *v + (1.0 - b2) * (g * g + EPS1);
-            }
-            let v = self.v.clone();
-            Box::new(move |idx: usize| (v[idx] / bias_c2).max(EPS1))
+        let mut plan = StepPlan::new();
+
+        // RMS-clip combine, shared by both layouts (captures are Copy, so
+        // the closure is too; only the taken branch consumes one).
+        let u_combine = move || {
+            let p = unsafe { partials.range(0, nc) };
+            let rms = (reduce::fold(p) / n as f64).sqrt() as f32;
+            unsafe { clip.write(0, if rms > CLIP_D { CLIP_D / rms } else { 1.0 }) };
         };
 
-        // u = g/√v̂, RMS-clipped.
-        let mut u: Vec<f32> = (0..n).map(|i| grads[i] / vhat_at(i).sqrt()).collect();
-        let rms = (u.iter().map(|&x| x as f64 * x as f64).sum::<f64>() / n as f64).sqrt() as f32;
-        if rms > CLIP_D {
-            let s = CLIP_D / rms;
-            for x in u.iter_mut() {
-                *x *= s;
-            }
+        if let Some((rows, cols)) = self.shape {
+            let row_sh = Shared::new(&mut self.row);
+            let col_sh = Shared::new(&mut self.col);
+            // ---- phase A: factored statistics, tiled into single-writer
+            // row/col items (see `state::Grid`).
+            let grid = Grid::new(rows, cols);
+            let stats_items = BlockSteps::from_fn(grid.n_items(), move |it| {
+                if let Some((r0, r1)) = grid.row_range(it) {
+                    let r = unsafe { row_sh.range_mut(r0, r1) };
+                    for (i, slot) in (r0..r1).zip(r.iter_mut()) {
+                        let mut s = 0.0f32;
+                        for &g in &grads[i * cols..(i + 1) * cols] {
+                            s += g * g + EPS1;
+                        }
+                        *slot = b2 * *slot + (1.0 - b2) * s;
+                    }
+                } else {
+                    let (c0, c1) = grid.col_range(it);
+                    let c = unsafe { col_sh.range_mut(c0, c1) };
+                    for (j, slot) in (c0..c1).zip(c.iter_mut()) {
+                        let mut s = 0.0f32;
+                        for i in 0..rows {
+                            let g = grads[i * cols + j];
+                            s += g * g + EPS1;
+                        }
+                        *slot = b2 * *slot + (1.0 - b2) * s;
+                    }
+                }
+            });
+            // Combine: Σ R_i in fixed row order (the v̂ normalizer).
+            let stats_combine = move || {
+                let r = unsafe { row_sh.range(0, rows) };
+                unsafe { row_sum.write(0, r.iter().sum::<f32>().max(EPS1)) };
+            };
+            plan.push(Phase::with_combine(stats_items, stats_combine));
+
+            // ---- phase B: u = g/√v̂ + per-chunk RMS partials (reads the
+            // phase-A statistics after the barrier).
+            let u_items = BlockSteps::from_fn(nc, move |c| {
+                let (lo, hi) = reduce::chunk_bounds(n, c);
+                let u = unsafe { u_sh.range_mut(lo, hi) };
+                let row = unsafe { row_sh.range(0, rows) };
+                let col = unsafe { col_sh.range(0, cols) };
+                let rs = unsafe { row_sum.read(0) };
+                for (idx, slot) in (lo..hi).zip(u.iter_mut()) {
+                    let (i, j) = (idx / cols, idx % cols);
+                    let vhat = (row[i] * col[j] / rs / bias_c2).max(EPS1);
+                    *slot = grads[idx] / vhat.sqrt();
+                }
+                unsafe { partials.write(c, reduce::sum_sq(u)) };
+            });
+            plan.push(Phase::with_combine(u_items, u_combine));
+        } else {
+            // ---- 1-D: v is elementwise, so the stats update fuses into
+            // the u phase (two phases total).
+            let v_sh = Shared::new(&mut self.v);
+            let u_items = BlockSteps::from_fn(nc, move |c| {
+                let (lo, hi) = reduce::chunk_bounds(n, c);
+                let u = unsafe { u_sh.range_mut(lo, hi) };
+                let v = unsafe { v_sh.range_mut(lo, hi) };
+                for k in 0..u.len() {
+                    let g = grads[lo + k];
+                    v[k] = b2 * v[k] + (1.0 - b2) * (g * g + EPS1);
+                    let vhat = (v[k] / bias_c2).max(EPS1);
+                    u[k] = g / vhat.sqrt();
+                }
+                unsafe { partials.write(c, reduce::sum_sq(u)) };
+            });
+            plan.push(Phase::with_combine(u_items, u_combine));
         }
 
-        // First moment + apply: elementwise, so it runs through the shared
-        // block engine (u takes the "grads" slot).
+        // ---- final phase: first moment + apply (block engine, u in the
+        // "grads" slot) ---------------------------------------------------
         let block = crate::quant::BLOCK.min(n.max(1));
-        step_blocks(params, &u, &mut self.m, None, block, move |v: BlockView| {
+        let u_ro: &'a [f32] = unsafe { u_sh.range(0, n) };
+        let apply = block_steps(params, u_ro, &mut self.m, None, block, move |v: BlockView| {
             let BlockView { params, grads: u_b, s1: m, .. } = v;
+            let s = unsafe { clip.read(0) };
             for i in 0..params.len() {
-                m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * u_b[i];
+                m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * (s * u_b[i]);
                 let mut step = cfg.lr * m[i];
                 if cfg.weight_decay != 0.0 {
                     step += cfg.lr * cfg.weight_decay * params[i];
@@ -118,9 +189,16 @@ impl Optimizer for Adafactor {
                 params[i] -= step;
             }
         });
+        plan.push(Phase::new(apply));
+        plan
     }
 
     fn state_bytes(&self) -> usize {
+        // Deliberately excludes the persistent `u`/`partials` scratch:
+        // Table 1 accounts optimizer *state*, and the module-header claim
+        // ("≈ half of 32-bit Adam") plus the memory test pin that
+        // semantics. (LAMB opts the other way for its scratch; both
+        // choices are documented at their definition.)
         self.m.bytes() + (self.row.len() + self.col.len() + self.v.len()) * 4
     }
 

@@ -6,7 +6,7 @@
 //! optionally uses stochastic rounding, which Appendix H suggests helps for
 //! AdaGrad-style accumulators.
 
-use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
+use super::state::{block_steps, BlockView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
 
 pub struct Adagrad {
@@ -22,33 +22,29 @@ impl Adagrad {
 }
 
 impl Optimizer for Adagrad {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
-        self.begin_step(params, grads).expect("adagrad is block-local").execute();
-    }
-
-    fn is_block_local(&self) -> bool {
-        true
-    }
-
-    fn begin_step<'a>(
-        &'a mut self,
-        params: &'a mut [f32],
-        grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
+    // Fully block-local: one phase, no combine.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        Some(block_steps(params, grads, &mut self.acc, None, block, move |v: BlockView| {
-            let BlockView { params, grads, s1: acc, .. } = v;
-            for i in 0..params.len() {
-                let mut g = grads[i];
-                if cfg.weight_decay != 0.0 {
-                    g += cfg.weight_decay * params[i];
+        StepPlan::single(block_steps(
+            params,
+            grads,
+            &mut self.acc,
+            None,
+            block,
+            move |v: BlockView| {
+                let BlockView { params, grads, s1: acc, .. } = v;
+                for i in 0..params.len() {
+                    let mut g = grads[i];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * params[i];
+                    }
+                    acc[i] += g * g;
+                    params[i] -= cfg.lr * g / (acc[i].max(0.0).sqrt() + cfg.eps);
                 }
-                acc[i] += g * g;
-                params[i] -= cfg.lr * g / (acc[i].max(0.0).sqrt() + cfg.eps);
-            }
-        }))
+            },
+        ))
     }
 
     fn state_bytes(&self) -> usize {

@@ -5,7 +5,7 @@
 //! requantize. m uses the signed codebook, r (strictly positive) the
 //! unsigned one (§2.2).
 
-use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
+use super::state::{block_steps, BlockView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, OptimKind, Optimizer};
 
 pub struct Adam {
@@ -58,26 +58,15 @@ impl Adam {
 }
 
 impl Optimizer for Adam {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
-        self.begin_step(params, grads).expect("adam is block-local").execute();
-    }
-
-    fn is_block_local(&self) -> bool {
-        true
-    }
-
-    fn begin_step<'a>(
-        &'a mut self,
-        params: &'a mut [f32],
-        grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
+    // Fully block-local: one phase, no combine.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
         let bias_c1 = 1.0 - cfg.beta1.powi(self.t as i32);
         let bias_c2 = 1.0 - cfg.beta2.powi(self.t as i32);
         let decoupled = cfg.kind == OptimKind::AdamW;
         let block = cfg.bits.state_block(params.len());
-        Some(block_steps(
+        StepPlan::single(block_steps(
             params,
             grads,
             &mut self.m,

@@ -5,111 +5,83 @@
 //!
 //! 1. **Worker pool** (`util::parallel`) — persistent, lazily-initialized
 //!    threads; one batch dispatch per call instead of per-call spawning.
-//! 2. **Block kernel** (`optim::state::block_steps`) — one tensor's update
-//!    decomposed into independent (block) tasks; the engine owns
+//! 2. **Phased block plan** (`optim::state::StepPlan`) — one tensor's
+//!    update decomposed into phases of independent (block) tasks with
+//!    deterministic combines between them; the engine owns
 //!    dequantize → update → requantize and per-thread scratch.
-//! 3. **Fused step** (this module) — all (tensor, block) work items of one
-//!    training step merged into a *single* pool batch, so inter-tensor
-//!    parallelism covers the many small tensors of a real model and pool
-//!    dispatch is paid once per step, not once per tensor.
+//! 3. **Fused step** (this module) — the phase-`k` items of *every* tensor
+//!    merged into a single pool batch, then all phase-`k` combines in
+//!    tensor order, then phase `k+1`. One pool batch per phase per
+//!    training step — never one per tensor — and every optimizer,
+//!    including the reduction-bearing ones (LARS, LAMB, Adafactor,
+//!    factored SM3), executes fully inside the batch.
 //!
-//! Determinism: items never share mutable state and in-block order is
-//! fixed, so the fused step is bit-identical to stepping tensors one by
-//! one, at every thread count.
+//! Determinism: items never share mutable state, in-block order is fixed,
+//! combines fold partials in fixed order between barriers — so the fused
+//! step is bit-identical to stepping tensors one by one, at every thread
+//! count.
 
-use std::sync::Mutex;
-
-use super::state::BlockSteps;
+use super::state::StepPlan;
 use super::Optimizer;
 use crate::util::parallel;
 
-/// Whole-tensor items larger than this run on the calling thread instead
-/// of inside the pool batch: a pool worker executes nested parallel calls
-/// inline, so folding a big LAMB/Adafactor tensor into the batch would
-/// serialize its internal block loops and norms onto one core. Small
-/// whole-tensor items lose nothing and gain inter-tensor parallelism.
-const WHOLE_TENSOR_BATCH_MAX: usize = 8 * crate::quant::BLOCK;
-
-/// One training step's worth of optimizer work across many tensors,
-/// flattened into a single pool batch: every (tensor, block) item of every
-/// block-local optimizer, plus one whole-tensor item per *small* optimizer
-/// whose update needs tensor-wide reductions (LAMB, Adafactor, factored
-/// SM3; LARS is block-local after its norm prologue). Large whole-tensor
-/// items run on the calling thread, where their internal loops keep full
-/// pool parallelism.
+/// One training step's worth of optimizer work across many tensors: every
+/// tensor's phased plan, executed phase-aligned — all tensors' phase-A
+/// items as one pool batch, a barrier, the (tiny, ordered) combines, then
+/// all phase-B items, and so on to the deepest plan.
 #[derive(Default)]
 pub struct FusedStep<'a> {
-    blocks: Vec<BlockSteps<'a>>,
-    whole: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'a>>>>,
-    caller: Vec<Box<dyn FnOnce() + Send + 'a>>,
+    plans: Vec<StepPlan<'a>>,
 }
 
 impl<'a> FusedStep<'a> {
     pub fn new() -> FusedStep<'a> {
-        FusedStep { blocks: Vec::new(), whole: Vec::new(), caller: Vec::new() }
+        FusedStep { plans: Vec::new() }
     }
 
-    /// Queue one tensor's update (the optimizer's step prologue — `t`
-    /// advance, bias corrections, norms — runs here; the block work runs
-    /// at [`FusedStep::run`]).
+    /// Queue one tensor's update (the optimizer's cheap step prologue —
+    /// `t` advance, bias corrections — runs here; all block work and all
+    /// reductions run at [`FusedStep::run`]).
     pub fn push(&mut self, opt: &'a mut dyn Optimizer, params: &'a mut [f32], grads: &'a [f32]) {
-        if opt.is_block_local() {
-            let steps = opt.begin_step(params, grads).expect("block-local optimizer");
-            self.blocks.push(steps);
-        } else if params.len() > WHOLE_TENSOR_BATCH_MAX {
-            self.caller.push(Box::new(move || opt.step(params, grads)));
-        } else {
-            let task = Box::new(move || opt.step(params, grads)) as Box<dyn FnOnce() + Send + 'a>;
-            self.whole.push(Mutex::new(Some(task)));
-        }
+        self.plans.push(opt.plan(params, grads));
     }
 
-    /// Total number of queued work items (pool batch items + caller-side
-    /// whole-tensor items).
+    /// Total number of queued work items across all phases.
     pub fn n_items(&self) -> usize {
-        self.blocks.iter().map(|b| b.n_blocks()).sum::<usize>()
-            + self.whole.len()
-            + self.caller.len()
+        self.plans.iter().map(|p| p.n_items()).sum()
     }
 
-    /// Execute everything queued. Large whole-tensor items run first on
-    /// this thread (each internally parallel across the pool); the rest —
-    /// every block item plus small whole-tensor items — runs as one pool
-    /// batch, small whole items scheduled ahead of the block backlog.
-    pub fn run(self) {
-        let FusedStep { blocks, whole, caller } = self;
-        for task in caller {
-            task();
-        }
-        let n_whole = whole.len();
-        let total_blocks: usize = blocks.iter().map(|b| b.n_blocks()).sum();
-        let n = n_whole + total_blocks;
-        if n == 0 {
-            return;
-        }
-        // prefix offsets of each tensor's blocks in the flattened index
-        let mut offsets = Vec::with_capacity(blocks.len());
-        let mut acc = 0usize;
-        for b in &blocks {
-            offsets.push(acc);
-            acc += b.n_blocks();
-        }
-        let blocks_ref = &blocks;
-        let whole_ref = &whole;
-        parallel::run_indexed(n, move |i| {
-            if i < n_whole {
-                let task = whole_ref[i].lock().unwrap_or_else(|e| e.into_inner()).take();
-                if let Some(task) = task {
-                    task();
-                }
-            } else {
-                let j = i - n_whole;
-                // last tensor whose offset is <= j (empty tensors are
-                // skipped naturally: their range contains no j)
-                let k = offsets.partition_point(|&o| o <= j) - 1;
-                blocks_ref[k].run_block(j - offsets[k]);
+    /// Execute everything queued. For each phase index `k` (up to the
+    /// deepest plan): run every tensor's phase-`k` items as ONE pool batch,
+    /// then run the phase-`k` combines serially in tensor order. Tensors
+    /// with fewer phases simply contribute no items to later batches.
+    pub fn run(mut self) {
+        let n_phases = self.plans.iter().map(|p| p.n_phases()).max().unwrap_or(0);
+        for k in 0..n_phases {
+            // prefix offsets of each plan's phase-k items in the batch
+            let mut offsets = Vec::with_capacity(self.plans.len());
+            let mut total = 0usize;
+            for p in &self.plans {
+                offsets.push(total);
+                total += p.phase_items(k);
             }
-        });
+            if total > 0 {
+                let plans = &self.plans;
+                let offsets = &offsets;
+                parallel::run_indexed(total, move |j| {
+                    // last plan whose offset is <= j (plans with no items
+                    // in this phase are skipped naturally: their range
+                    // contains no j)
+                    let p = offsets.partition_point(|&o| o <= j) - 1;
+                    plans[p].run_item(k, j - offsets[p]);
+                });
+            }
+            for plan in self.plans.iter_mut() {
+                if let Some(combine) = plan.take_combine(k) {
+                    combine();
+                }
+            }
+        }
     }
 }
 
@@ -155,14 +127,14 @@ mod tests {
 
     #[test]
     fn fused_matches_serial_stepping_bitwise() {
-        // mixed workload: block-local (adam, momentum) and whole-tensor
-        // (lamb) optimizers, sizes from sub-block to multi-block
+        // mixed workload: single-phase (adam, momentum) and multi-phase
+        // (lamb) plans, sizes from sub-block to large multi-block
         let kinds = [
             (OptimKind::Adam, 3usize),
             (OptimKind::Adam, 2048),
             (OptimKind::Momentum, 5000),
-            (OptimKind::Lamb, 1024),  // small whole-tensor -> pool batch
-            (OptimKind::Lamb, 20000), // large whole-tensor -> caller side
+            (OptimKind::Lamb, 1024),
+            (OptimKind::Lamb, 20000), // many blocks, phased reductions
             (OptimKind::Adam, 2049),
         ];
         for bits in [Bits::B32, Bits::b8_dynamic()] {

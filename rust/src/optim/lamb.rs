@@ -5,10 +5,18 @@
 //!
 //! u = m̂/(√r̂ + ε) + wd·w;  trust = ‖w‖/‖u‖ (1 if either is 0);
 //! w −= lr · trust · u.
+//!
+//! Two-phase plan: phase A updates the quantized moments block by block,
+//! materializes u, and emits per-chunk ‖w‖²/‖u‖² partials (the canonical
+//! `util::reduce` reduction); the combine folds them in fixed chunk order
+//! into the trust ratio; phase B applies `w −= lr·trust·u` block-locally.
+//! No whole-tensor pass remains — every item runs inside the fused
+//! engine's pool batches.
 
-use super::lars::l2_norm;
-use super::state::{step_blocks, BlockView, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
+use crate::util::parallel::Shared;
+use crate::util::reduce;
 
 pub struct Lamb {
     cfg: OptimConfig,
@@ -16,6 +24,10 @@ pub struct Lamb {
     r: StateTensor,
     /// Per-step update direction (reused buffer; not optimizer state).
     u: Vec<f32>,
+    /// Phase-A norm partials: `[w chunks | u chunks]`.
+    partials: Vec<f64>,
+    /// lr·trust, written by the combine, read by phase B.
+    scale: f32,
     t: u64,
 }
 
@@ -26,53 +38,101 @@ impl Lamb {
             m: make_state(&cfg.bits, n, true),
             r: make_state(&cfg.bits, n, false),
             u: vec![0.0; n],
+            partials: vec![0.0; 2 * reduce::n_chunks(n)],
+            scale: 0.0,
             t: 0,
         }
     }
 }
 
 impl Optimizer for Lamb {
-    // Not block-local: the trust ratio is a whole-tensor reduction *between*
-    // the moment update and the apply, so the fused engine schedules LAMB
-    // tensors as whole-tensor items (inter-tensor parallelism still holds).
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
         let bias_c1 = 1.0 - cfg.beta1.powi(self.t as i32);
         let bias_c2 = 1.0 - cfg.beta2.powi(self.t as i32);
+        let n = params.len();
+        assert_eq!(self.u.len(), n);
+        let nc = reduce::n_chunks(n);
+        self.partials.resize(2 * nc, 0.0);
+        // SAFETY (all `Shared` uses below): phase-A items write disjoint
+        // chunks of u and disjoint partial slots, and only read params; the
+        // combine runs alone after the phase-A barrier; phase-B items write
+        // disjoint param chunks and read u/scale after the barrier. `plan`'s
+        // `&'a mut self` borrow keeps every target alive for the plan.
+        let partials = Shared::new(&mut self.partials);
+        let scale = Shared::new(std::slice::from_mut(&mut self.scale));
+        let params_sh = Shared::new(params);
+        let u_sh = Shared::new(&mut self.u);
 
-        // Pass 1: update moments, materialize the un-trust-scaled update u.
-        {
-            let u = &mut self.u;
-            // params are only read in pass 1 (wd term); split borrow by
-            // using the block engine on u in the "params" slot.
-            let block = cfg.bits.state_block(u.len());
-            let p_ro: &[f32] = params;
-            step_blocks(u, grads, &mut self.m, Some(&mut self.r), block, |v: BlockView| {
+        // Phase A: moment update + u, via the block engine with u in the
+        // "params" slot (real params are only read, for the wd term and the
+        // ‖w‖ partial). State blocks are either one reduce-chunk or the
+        // whole tensor, so chunks never straddle items.
+        let block = cfg.bits.state_block(n);
+        // Single-writer contract for the partial slots: every phase-A item
+        // must cover whole reduce-chunks, i.e. state blocks are CHUNK-
+        // aligned or the tensor is one item.
+        debug_assert!(
+            block % reduce::CHUNK == 0 || block >= n,
+            "phase-A partials need chunk-aligned state blocks (block {block}, n {n})"
+        );
+        let u_slot: &'a mut [f32] = unsafe { u_sh.range_mut(0, n) };
+        let phase_a = block_steps(
+            u_slot,
+            grads,
+            &mut self.m,
+            Some(&mut self.r),
+            block,
+            move |v: BlockView| {
                 let BlockView { params: u_b, grads, s1: m, s2, start } = v;
                 let r = s2.expect("lamb has two states");
+                let w = unsafe { params_sh.range(start, start + u_b.len()) };
                 for i in 0..u_b.len() {
                     let g = grads[i];
                     m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
                     r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * g * g;
                     let m_hat = m[i] / bias_c1;
                     let r_hat = r[i] / bias_c2;
-                    u_b[i] = m_hat / (r_hat.sqrt() + cfg.eps)
-                        + cfg.weight_decay * p_ro[start + i];
+                    u_b[i] = m_hat / (r_hat.sqrt() + cfg.eps) + cfg.weight_decay * w[i];
                 }
-            });
-        }
+                // Per-chunk norm partials for the chunks this item covers.
+                let mut lo = 0usize;
+                while lo < u_b.len() {
+                    let c = (start + lo) / reduce::CHUNK;
+                    let hi = (lo + reduce::CHUNK).min(u_b.len());
+                    unsafe {
+                        partials.write(c, reduce::sum_sq(&w[lo..hi]));
+                        partials.write(nc + c, reduce::sum_sq(&u_b[lo..hi]));
+                    }
+                    lo = hi;
+                }
+            },
+        );
+        // Combine: fold partials in fixed chunk order -> trust ratio.
+        let combine = move || {
+            let p = unsafe { partials.range(0, 2 * nc) };
+            let w_norm = reduce::fold(&p[..nc]).sqrt() as f32;
+            let u_norm = reduce::fold(&p[nc..]).sqrt() as f32;
+            let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
+            unsafe { scale.write(0, cfg.lr * trust) };
+        };
 
-        // Trust ratio from whole-tensor norms.
-        let w_norm = l2_norm(params) as f32;
-        let u_norm = l2_norm(&self.u) as f32;
-        let trust = if w_norm > 0.0 && u_norm > 0.0 { w_norm / u_norm } else { 1.0 };
-        let step = cfg.lr * trust;
+        // Phase B: apply, block-locally.
+        let phase_b = BlockSteps::from_fn(nc, move |c| {
+            let (lo, hi) = reduce::chunk_bounds(n, c);
+            let p = unsafe { params_sh.range_mut(lo, hi) };
+            let u = unsafe { u_sh.range(lo, hi) };
+            let step = unsafe { scale.read(0) };
+            for i in 0..p.len() {
+                p[i] -= step * u[i];
+            }
+        });
 
-        // Pass 2: apply.
-        for (p, &u) in params.iter_mut().zip(self.u.iter()) {
-            *p -= step * u;
-        }
+        let mut plan = StepPlan::new();
+        plan.push(Phase::with_combine(phase_a, combine));
+        plan.push(Phase::new(phase_b));
+        plan
     }
 
     fn state_bytes(&self) -> usize {

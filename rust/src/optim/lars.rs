@@ -5,10 +5,17 @@
 //! trust λ = η·‖w‖ / (‖g‖ + wd·‖w‖ + ε); m = β·m + lr·λ·(g + wd·w);
 //! w −= m. One tensor = one "layer" (the coordinator builds per-tensor
 //! optimizers).
+//!
+//! Two-phase plan: phase A computes per-chunk ‖w‖²/‖g‖² partials (the
+//! canonical `util::reduce` reduction), the combine folds them in fixed
+//! chunk order into the trust ratio, and phase B is the block-local
+//! momentum update — so the whole step, norms included, runs inside the
+//! fused engine's pool batches.
 
-use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
-use crate::util::parallel;
+use crate::util::parallel::Shared;
+use crate::util::reduce;
 
 /// Default trust coefficient η from the LARS paper.
 pub const TRUST_COEFF: f32 = 0.001;
@@ -16,62 +23,80 @@ pub const TRUST_COEFF: f32 = 0.001;
 pub struct Lars {
     cfg: OptimConfig,
     m: StateTensor,
+    /// Phase-A norm partials: `[w chunks | g chunks]` (not optimizer state).
+    partials: Vec<f64>,
+    /// lr·trust, written by the combine, read by phase B.
+    scaled_lr: f32,
     t: u64,
 }
 
 impl Lars {
     pub fn new(cfg: OptimConfig, n: usize) -> Lars {
-        Lars { cfg, m: make_state(&cfg.bits, n, true), t: 0 }
+        Lars {
+            cfg,
+            m: make_state(&cfg.bits, n, true),
+            partials: vec![0.0; 2 * reduce::n_chunks(n)],
+            scaled_lr: 0.0,
+            t: 0,
+        }
     }
-}
-
-/// ‖x‖₂ computed in parallel chunks with f64 accumulation.
-pub(crate) fn l2_norm(x: &[f32]) -> f64 {
-    let chunks = x.len().div_ceil(1 << 16).max(1);
-    let partial = parallel::par_map(chunks, |c| {
-        let lo = c * (1 << 16);
-        let hi = (lo + (1 << 16)).min(x.len());
-        x[lo..hi].iter().map(|&v| v as f64 * v as f64).sum::<f64>()
-    });
-    partial.into_iter().sum::<f64>().sqrt()
 }
 
 impl Optimizer for Lars {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
-        self.begin_step(params, grads).expect("lars is block-local").execute();
-    }
-
-    fn is_block_local(&self) -> bool {
-        true
-    }
-
-    fn begin_step<'a>(
-        &'a mut self,
-        params: &'a mut [f32],
-        grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
-        // Per-tensor prologue: the trust ratio needs whole-tensor norms of
-        // the *pre-update* values, so it runs here; the block tasks are
-        // then independent.
-        let w_norm = l2_norm(params) as f32;
-        let g_norm = l2_norm(grads) as f32;
-        let trust = if w_norm > 0.0 && g_norm > 0.0 {
-            TRUST_COEFF * w_norm / (g_norm + cfg.weight_decay * w_norm + 1e-9)
-        } else {
-            1.0
+        let n = params.len();
+        let nc = reduce::n_chunks(n);
+        self.partials.resize(2 * nc, 0.0);
+        // SAFETY (all `Shared` uses below): phase-A items write disjoint
+        // partial slots and only read params; the combine runs after the
+        // phase-A barrier and alone; phase-B items write disjoint param
+        // chunks and read `scaled_lr` after the barrier. `plan`'s `&'a mut
+        // self` borrow keeps every target alive for the plan's lifetime.
+        let partials = Shared::new(&mut self.partials);
+        let scaled_lr = Shared::new(std::slice::from_mut(&mut self.scaled_lr));
+        let params_sh = Shared::new(params);
+
+        // Phase A: per-chunk norm partials of the *pre-update* values.
+        let phase_a = BlockSteps::from_fn(nc, move |c| {
+            let (lo, hi) = reduce::chunk_bounds(n, c);
+            let w = unsafe { params_sh.range(lo, hi) };
+            unsafe {
+                partials.write(c, reduce::sum_sq(w));
+                partials.write(nc + c, reduce::sum_sq(&grads[lo..hi]));
+            }
+        });
+        // Combine: fold partials in fixed chunk order -> trust ratio.
+        let combine = move || {
+            let p = unsafe { partials.range(0, 2 * nc) };
+            let w_norm = reduce::fold(&p[..nc]).sqrt() as f32;
+            let g_norm = reduce::fold(&p[nc..]).sqrt() as f32;
+            let trust = if w_norm > 0.0 && g_norm > 0.0 {
+                TRUST_COEFF * w_norm / (g_norm + cfg.weight_decay * w_norm + 1e-9)
+            } else {
+                1.0
+            };
+            unsafe { scaled_lr.write(0, cfg.lr * trust) };
         };
-        let scaled_lr = cfg.lr * trust;
-        let block = cfg.bits.state_block(params.len());
-        Some(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
+
+        // Phase B: block-local momentum update.
+        let block = cfg.bits.state_block(n);
+        let params_b: &'a mut [f32] = unsafe { params_sh.range_mut(0, n) };
+        let phase_b = block_steps(params_b, grads, &mut self.m, None, block, move |v: BlockView| {
             let BlockView { params, grads, s1: m, .. } = v;
+            let scaled_lr = unsafe { scaled_lr.read(0) };
             for i in 0..params.len() {
                 let g = grads[i] + cfg.weight_decay * params[i];
                 m[i] = cfg.beta1 * m[i] + scaled_lr * g;
                 params[i] -= m[i];
             }
-        }))
+        });
+
+        let mut plan = StepPlan::new();
+        plan.push(Phase::with_combine(phase_a, combine));
+        plan.push(Phase::new(phase_b));
+        plan
     }
 
     fn state_bytes(&self) -> usize {
@@ -123,14 +148,6 @@ mod tests {
             weight_decay: 0.0,
             bits,
         }
-    }
-
-    #[test]
-    fn l2_norm_matches_naive() {
-        let mut rng = Rng::new(9);
-        let x: Vec<f32> = (0..200_000).map(|_| rng.normal() as f32).collect();
-        let naive: f64 = x.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
-        assert!((l2_norm(&x) - naive).abs() < 1e-6 * naive);
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //! time, in parallel, with no cross-block synchronization.
 //!
 //! Execution goes through the unified block-kernel engine (see
-//! `rust/src/optim/README.md`): optimizers supply an elementwise kernel to
-//! [`state::block_steps`], which owns the load/update/store dance; the
-//! coordinator merges every tensor's block tasks into one pool batch per
-//! training step via [`engine::FusedStep`].
+//! `rust/src/optim/README.md`): every optimizer decomposes its update into
+//! a phased [`state::StepPlan`] — parallel block items, deterministic
+//! combines between phase barriers — built on [`state::block_steps`],
+//! which owns the load/update/store dance; the coordinator merges every
+//! tensor's phase-aligned items into one pool batch per phase per training
+//! step via [`engine::FusedStep`].
 
 pub mod adafactor;
 pub mod adagrad;
@@ -31,7 +33,7 @@ pub mod sm3;
 pub mod state;
 
 pub use engine::{fused_update, FusedStep};
-pub use state::{block_steps, step_blocks, BlockSteps, BlockView, StateTensor};
+pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 
 use crate::quant::{Format, BLOCK};
 
@@ -166,24 +168,19 @@ impl OptimConfig {
 /// (Adafactor/SM3) need the tensor boundary, so the coordinator builds one
 /// instance per parameter tensor.
 pub trait Optimizer: Send {
+    /// Decompose one update into a phased plan of pool-schedulable block
+    /// tasks. Runs the cheap per-step prologue here (advance `t`, bias
+    /// corrections); everything heavier — including tensor-wide reductions,
+    /// expressed as per-block partials + an ordered combine — lives inside
+    /// the plan's phases, so the fused engine can batch it with every other
+    /// tensor's work.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a>;
     /// Apply one update. `params` and `grads` are the flattened tensor.
-    fn step(&mut self, params: &mut [f32], grads: &[f32]);
-    /// Whether the update touches each quantization block independently
-    /// (after an optional per-tensor prologue), i.e. whether `begin_step`
-    /// yields block tasks that the fused multi-tensor engine can schedule.
-    fn is_block_local(&self) -> bool {
-        false
-    }
-    /// Decompose one update into pool-schedulable block tasks. Runs the
-    /// whole per-step prologue (advance `t`, bias corrections, norms);
-    /// the returned tasks perform the block updates. `None` when the
-    /// optimizer is not block-local — callers fall back to [`Self::step`].
-    fn begin_step<'a>(
-        &'a mut self,
-        _params: &'a mut [f32],
-        _grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
-        None
+    /// The provided implementation runs the plan in its canonical phase
+    /// order, which is what makes per-tensor stepping bit-identical to the
+    /// fused multi-tensor engine.
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.plan(params, grads).execute();
     }
     /// Optimizer-state footprint in bytes (Table 1 "Mem saved" accounting).
     fn state_bytes(&self) -> usize;

@@ -4,7 +4,7 @@
 //! `m_t = β1 m_{t-1} + g_t`, `w_t = w_{t-1} − α m_t`, with `m_0 = g_0`
 //! (the first step uses the raw gradient).
 
-use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
+use super::state::{block_steps, BlockView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
 
 pub struct Momentum {
@@ -20,24 +20,13 @@ impl Momentum {
 }
 
 impl Optimizer for Momentum {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
-        self.begin_step(params, grads).expect("momentum is block-local").execute();
-    }
-
-    fn is_block_local(&self) -> bool {
-        true
-    }
-
-    fn begin_step<'a>(
-        &'a mut self,
-        params: &'a mut [f32],
-        grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
+    // Fully block-local: one phase, no combine.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let first = self.t == 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        Some(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
+        StepPlan::single(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
             let BlockView { params, grads, s1: m, .. } = v;
             for i in 0..params.len() {
                 let mut g = grads[i];

@@ -7,13 +7,18 @@
 //!   w −= lr · g / √ν;  R_i = max_j ν_ij;  C_j = max_i ν_ij
 //! 1-D tensors use a single full accumulator (equivalent to AdaGrad).
 
-use super::state::{block_steps, BlockSteps, BlockView, StateTensor};
+use super::state::{block_steps, BlockSteps, BlockView, Grid, Phase, StateTensor, StepPlan};
 use super::{OptimConfig, Optimizer};
+use crate::util::parallel::Shared;
 
 pub struct Sm3 {
     cfg: OptimConfig,
     row: Vec<f32>,
     col: Vec<f32>,
+    /// Next-step accumulators, staged during the parallel phase and
+    /// installed by the combine (each slot has exactly one writer).
+    new_row: Vec<f32>,
+    new_col: Vec<f32>,
     /// 1-D fallback accumulator (empty when factored).
     acc: StateTensor,
     shape: Option<(usize, usize)>,
@@ -29,6 +34,8 @@ impl Sm3 {
             cfg,
             row: vec![0.0; rows],
             col: vec![0.0; cols],
+            new_row: vec![0.0; rows],
+            new_col: vec![0.0; cols],
             acc: StateTensor::new_f32(if factored { 0 } else { n }),
             shape,
             t: 0,
@@ -41,61 +48,87 @@ impl Sm3 {
 }
 
 impl Optimizer for Sm3 {
-    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
-        if self.shape.is_none() {
-            // 1-D fallback (≡ AdaGrad) is block-local and runs through the
-            // shared engine.
-            self.begin_step(params, grads).expect("1-D sm3 is block-local").execute();
-            return;
-        }
+    /// Factored tensors: one parallel phase + a combine. Row items own
+    /// whole rows (param update + staged R_i = max_j ν); col items own
+    /// whole columns (staged C_j = max_i ν, recomputing ν from the *old*
+    /// accumulators — a couple of flops per element buys single-writer
+    /// slots and no cross-item scratch). The combine installs the staged
+    /// accumulators. 1-D tensors run the block-local AdaGrad-style plan.
+    fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
-        let (rows, cols) = self.shape.expect("factored");
-        let mut new_row = vec![0.0f32; rows];
-        let mut new_col = vec![0.0f32; cols];
-        for i in 0..rows {
-            for j in 0..cols {
-                let idx = i * cols + j;
-                let g = grads[idx];
-                let nu = self.row[i].min(self.col[j]) + g * g;
-                params[idx] -= cfg.lr * g / (nu.sqrt() + cfg.eps.max(1e-12));
-                if nu > new_row[i] {
-                    new_row[i] = nu;
+        let Some((rows, cols)) = self.shape else {
+            let block = crate::quant::BLOCK.min(params.len().max(1));
+            return StepPlan::single(block_steps(
+                params,
+                grads,
+                &mut self.acc,
+                None,
+                block,
+                move |v: BlockView| {
+                    let BlockView { params, grads, s1: acc, .. } = v;
+                    for i in 0..params.len() {
+                        let g = grads[i];
+                        acc[i] += g * g;
+                        params[i] -= cfg.lr * g / (acc[i].sqrt() + cfg.eps.max(1e-12));
+                    }
+                },
+            ));
+        };
+        // SAFETY (all `Shared` uses below): within the phase, row items
+        // write disjoint param rows and staged-row slots, col items write
+        // disjoint staged-col slots, and `row`/`col` are only read; the
+        // combine runs alone after the barrier. `plan`'s `&'a mut self`
+        // borrow keeps every target alive for the plan's lifetime.
+        let row_sh = Shared::new(&mut self.row);
+        let col_sh = Shared::new(&mut self.col);
+        let new_row_sh = Shared::new(&mut self.new_row);
+        let new_col_sh = Shared::new(&mut self.new_col);
+        let params_sh = Shared::new(params);
+        let grid = Grid::new(rows, cols);
+        let items = BlockSteps::from_fn(grid.n_items(), move |it| {
+            let row = unsafe { row_sh.range(0, rows) };
+            let col = unsafe { col_sh.range(0, cols) };
+            if let Some((r0, r1)) = grid.row_range(it) {
+                let nr = unsafe { new_row_sh.range_mut(r0, r1) };
+                let p = unsafe { params_sh.range_mut(r0 * cols, r1 * cols) };
+                for i in r0..r1 {
+                    let mut mx = 0.0f32;
+                    for j in 0..cols {
+                        let idx = i * cols + j;
+                        let g = grads[idx];
+                        let nu = row[i].min(col[j]) + g * g;
+                        p[idx - r0 * cols] -= cfg.lr * g / (nu.sqrt() + cfg.eps.max(1e-12));
+                        if nu > mx {
+                            mx = nu;
+                        }
+                    }
+                    nr[i - r0] = mx;
                 }
-                if nu > new_col[j] {
-                    new_col[j] = nu;
+            } else {
+                let (c0, c1) = grid.col_range(it);
+                let nc_slots = unsafe { new_col_sh.range_mut(c0, c1) };
+                for j in c0..c1 {
+                    let mut mx = 0.0f32;
+                    for i in 0..rows {
+                        let g = grads[i * cols + j];
+                        let nu = row[i].min(col[j]) + g * g;
+                        if nu > mx {
+                            mx = nu;
+                        }
+                    }
+                    nc_slots[j - c0] = mx;
                 }
             }
-        }
-        self.row = new_row;
-        self.col = new_col;
-    }
-
-    fn is_block_local(&self) -> bool {
-        // The factored update couples every element of a row/column through
-        // the shared accumulators; only the 1-D fallback is block-local.
-        self.shape.is_none()
-    }
-
-    fn begin_step<'a>(
-        &'a mut self,
-        params: &'a mut [f32],
-        grads: &'a [f32],
-    ) -> Option<BlockSteps<'a>> {
-        if self.shape.is_some() {
-            return None;
-        }
-        self.t += 1;
-        let cfg = self.cfg;
-        let block = crate::quant::BLOCK.min(params.len().max(1));
-        Some(block_steps(params, grads, &mut self.acc, None, block, move |v: BlockView| {
-            let BlockView { params, grads, s1: acc, .. } = v;
-            for i in 0..params.len() {
-                let g = grads[i];
-                acc[i] += g * g;
-                params[i] -= cfg.lr * g / (acc[i].sqrt() + cfg.eps.max(1e-12));
-            }
-        }))
+        });
+        // Combine: install the staged accumulators.
+        let combine = move || unsafe {
+            row_sh.range_mut(0, rows).copy_from_slice(new_row_sh.range(0, rows));
+            col_sh.range_mut(0, cols).copy_from_slice(new_col_sh.range(0, cols));
+        };
+        let mut plan = StepPlan::new();
+        plan.push(Phase::with_combine(items, combine));
+        plan
     }
 
     fn state_bytes(&self) -> usize {

@@ -10,11 +10,15 @@
 //! The engine owns the whole dequantize → update → requantize dance: an
 //! optimizer only supplies a [`BlockView`] kernel (its elementwise update
 //! rule) to [`block_steps`]/[`step_blocks`]. The returned [`BlockSteps`]
-//! decomposes one tensor's update into independent block tasks, which
-//! either run immediately on the worker pool ([`BlockSteps::execute`]) or
-//! get merged with every other tensor's tasks into one fused batch
-//! (`optim::engine::FusedStep`). Scratch buffers are thread-local and
-//! shared by every optimizer and tensor, so the hot loop allocates nothing.
+//! decomposes one tensor's update into independent block tasks;
+//! [`StepPlan`] strings such task sets into *phases* with deterministic
+//! combines between barriers, which is how tensor-wide reductions (LAMB
+//! trust ratios, Adafactor statistics, SM3 maxes) stay block-local. Plans
+//! either run immediately on the worker pool ([`StepPlan::execute`]) or
+//! get merged phase-aligned with every other tensor's plan into one batch
+//! per phase (`optim::engine::FusedStep`). Scratch buffers are
+//! thread-local and shared by every optimizer and tensor, so the hot loop
+//! allocates nothing.
 
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -141,6 +145,16 @@ pub struct BlockSteps<'a> {
 }
 
 impl<'a> BlockSteps<'a> {
+    /// Wrap an arbitrary set of `n` independent, disjoint work items as
+    /// block tasks — for phase items that are not quantization blocks
+    /// (reduction partials, row/column statistic chunks).
+    pub fn from_fn<F>(n: usize, f: F) -> BlockSteps<'a>
+    where
+        F: Fn(usize) + Sync + Send + 'a,
+    {
+        BlockSteps { n_blocks: n, run: Box::new(f) }
+    }
+
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
     }
@@ -157,6 +171,152 @@ impl<'a> BlockSteps<'a> {
     /// step path).
     pub fn execute(self) {
         parallel::run_indexed(self.n_blocks, |b| self.run_block(b));
+    }
+}
+
+/// One phase of a [`StepPlan`]: a set of independent parallel items plus an
+/// optional `combine` that runs *after every item of this phase across all
+/// fused tensors* has completed (the engine's barrier) and before any item
+/// of the next phase starts. The combine folds per-item partials in fixed
+/// order, so reductions stay deterministic at every thread count.
+pub struct Phase<'a> {
+    items: BlockSteps<'a>,
+    combine: Option<Box<dyn FnOnce() + Send + Sync + 'a>>,
+}
+
+impl<'a> Phase<'a> {
+    pub fn new(items: BlockSteps<'a>) -> Phase<'a> {
+        Phase { items, combine: None }
+    }
+
+    pub fn with_combine<F>(items: BlockSteps<'a>, combine: F) -> Phase<'a>
+    where
+        F: FnOnce() + Send + Sync + 'a,
+    {
+        Phase { items, combine: Some(Box::new(combine)) }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.items.n_blocks()
+    }
+}
+
+/// One tensor's full update as a sequence of phases — the decomposed form
+/// every optimizer hands to the engine. Single-pass optimizers (Adam,
+/// Momentum, AdaGrad, 1-D SM3) have one phase and no combine; the
+/// reduction-bearing optimizers (LARS, LAMB, Adafactor, factored SM3) put
+/// per-block partials in early phases, fold them in combines, and finish
+/// with the block-local apply.
+///
+/// Execution contract: within a phase, items may run in any order on any
+/// thread (they are disjoint); phases are separated by a barrier; combines
+/// run exactly once between the barriers. Both the serial path
+/// ([`StepPlan::execute`]) and the fused multi-tensor engine
+/// (`optim::engine::FusedStep`) follow this same canonical order, which is
+/// why they are bit-identical.
+#[derive(Default)]
+pub struct StepPlan<'a> {
+    phases: Vec<Phase<'a>>,
+}
+
+impl<'a> StepPlan<'a> {
+    pub fn new() -> StepPlan<'a> {
+        StepPlan { phases: Vec::new() }
+    }
+
+    /// The common single-phase plan (block-local optimizers).
+    pub fn single(items: BlockSteps<'a>) -> StepPlan<'a> {
+        let mut plan = StepPlan::new();
+        plan.push(Phase::new(items));
+        plan
+    }
+
+    pub fn push(&mut self, phase: Phase<'a>) {
+        self.phases.push(phase);
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Item count of phase `k` (0 past the last phase, so the fused engine
+    /// can iterate to the max phase count over all tensors).
+    pub fn phase_items(&self, k: usize) -> usize {
+        self.phases.get(k).map_or(0, |p| p.n_items())
+    }
+
+    /// Total work items across all phases.
+    pub fn n_items(&self) -> usize {
+        self.phases.iter().map(|p| p.n_items()).sum()
+    }
+
+    /// Run one item of phase `k`. Callable concurrently for distinct `i`;
+    /// the caller must respect the phase barrier and run each item exactly
+    /// once.
+    pub fn run_item(&self, k: usize, i: usize) {
+        self.phases[k].items.run_block(i);
+    }
+
+    /// Take phase `k`'s combine (the engine runs it after the phase-`k`
+    /// barrier). `None` if the phase has no combine or it was taken.
+    pub fn take_combine(&mut self, k: usize) -> Option<Box<dyn FnOnce() + Send + Sync + 'a>> {
+        self.phases.get_mut(k).and_then(|p| p.combine.take())
+    }
+
+    /// Execute the whole plan on the worker pool, phase by phase — the
+    /// single-tensor `Optimizer::step` path. Canonical order: phase items
+    /// (parallel), then the phase's combine, then the next phase.
+    pub fn execute(self) {
+        for phase in self.phases {
+            phase.items.execute();
+            if let Some(combine) = phase.combine {
+                combine();
+            }
+        }
+    }
+}
+
+/// Tiling of a (rows × cols) tensor into single-writer phase items for the
+/// factored optimizers (Adafactor, SM3): `n_row_items` items each owning a
+/// contiguous range of whole rows, then `n_col_items` items each owning a
+/// range of whole columns — so every row/col statistic slot has exactly
+/// one writer and no cross-item scratch is needed. Items are sized to
+/// ~one reduction chunk of elements each.
+#[derive(Clone, Copy)]
+pub(crate) struct Grid {
+    rows: usize,
+    cols: usize,
+    rpi: usize,
+    cpi: usize,
+    n_row_items: usize,
+}
+
+impl Grid {
+    pub(crate) fn new(rows: usize, cols: usize) -> Grid {
+        let rpi = (crate::util::reduce::CHUNK / cols).max(1);
+        let cpi = (crate::util::reduce::CHUNK / rows).max(1);
+        Grid { rows, cols, rpi, cpi, n_row_items: rows.div_ceil(rpi) }
+    }
+
+    pub(crate) fn n_items(&self) -> usize {
+        self.n_row_items + self.cols.div_ceil(self.cpi)
+    }
+
+    /// `Some((r0, r1))` when item `it` is a row item, else `None` (use
+    /// [`Grid::col_range`]).
+    pub(crate) fn row_range(&self, it: usize) -> Option<(usize, usize)> {
+        if it < self.n_row_items {
+            let r0 = it * self.rpi;
+            Some((r0, (r0 + self.rpi).min(self.rows)))
+        } else {
+            None
+        }
+    }
+
+    /// Column range of a non-row item.
+    pub(crate) fn col_range(&self, it: usize) -> (usize, usize) {
+        let c0 = (it - self.n_row_items) * self.cpi;
+        (c0, (c0 + self.cpi).min(self.cols))
     }
 }
 

@@ -21,7 +21,12 @@ pub struct Codebook {
     midpoints: Vec<f32>,
     /// Per-bucket (lo, hi) code range — the §Perf fast path: most buckets
     /// resolve to a single code, the rest to a 1–3 step binary search.
+    /// Empty when the codebook has an analytic encoder instead.
     lut: Vec<(u8, u8)>,
+    /// Analytic O(1) code-index candidate (exponent/mantissa bit math),
+    /// exact after a ≤±1 fixup against `midpoints` — replaces the LUT for
+    /// codebooks with closed-form structure (the dynamic-tree formats).
+    analytic: Option<fn(f32) -> usize>,
     name: &'static str,
 }
 
@@ -44,7 +49,28 @@ fn from_monotone(m: u32) -> f32 {
 }
 
 impl Codebook {
-    pub fn new(name: &'static str, mut values: Vec<f32>) -> Codebook {
+    pub fn new(name: &'static str, values: Vec<f32>) -> Codebook {
+        Self::build(name, values, None)
+    }
+
+    /// Codebook with an analytic encode: `candidate(x)` computes a code
+    /// index from the bit structure of `x` in O(1), accurate to ±1;
+    /// [`Codebook::encode`] resolves it exactly against the midpoints. No
+    /// bucket LUT is built (32 KiB and its cache pressure saved per
+    /// codebook).
+    pub fn new_analytic(
+        name: &'static str,
+        values: Vec<f32>,
+        candidate: fn(f32) -> usize,
+    ) -> Codebook {
+        Self::build(name, values, Some(candidate))
+    }
+
+    fn build(
+        name: &'static str,
+        mut values: Vec<f32>,
+        analytic: Option<fn(f32) -> usize>,
+    ) -> Codebook {
         assert!(!values.is_empty() && values.len() <= 256, "codebook size");
         values.sort_by(|a, b| a.partial_cmp(b).expect("finite codebook"));
         let midpoints = values
@@ -53,25 +79,30 @@ impl Codebook {
             .collect::<Vec<f32>>();
         // Build the bucket LUT: for each bucket of the monotone-bits space,
         // the code range spanned by its value interval [lo_f, hi_f].
+        // Skipped when an analytic encoder supersedes it.
         let encode_exact =
             |mids: &[f32], x: f32| -> u8 { mids.partition_point(|&m| m <= x) as u8 };
         let shift = 32 - LUT_BITS;
-        let lut = (0..LUT_SIZE)
-            .map(|bucket| {
-                let lo_bits = (bucket as u32) << shift;
-                let hi_bits = lo_bits | ((1u32 << shift) - 1);
-                let lo_f = from_monotone(lo_bits);
-                let hi_f = from_monotone(hi_bits);
-                let c_lo = if lo_f.is_nan() { 0 } else { encode_exact(&midpoints, lo_f) };
-                let c_hi = if hi_f.is_nan() {
-                    (values.len() - 1) as u8
-                } else {
-                    encode_exact(&midpoints, hi_f)
-                };
-                (c_lo.min(c_hi), c_lo.max(c_hi))
-            })
-            .collect();
-        Codebook { values, midpoints, lut, name }
+        let lut = if analytic.is_some() {
+            Vec::new()
+        } else {
+            (0..LUT_SIZE)
+                .map(|bucket| {
+                    let lo_bits = (bucket as u32) << shift;
+                    let hi_bits = lo_bits | ((1u32 << shift) - 1);
+                    let lo_f = from_monotone(lo_bits);
+                    let hi_f = from_monotone(hi_bits);
+                    let c_lo = if lo_f.is_nan() { 0 } else { encode_exact(&midpoints, lo_f) };
+                    let c_hi = if hi_f.is_nan() {
+                        (values.len() - 1) as u8
+                    } else {
+                        encode_exact(&midpoints, hi_f)
+                    };
+                    (c_lo.min(c_hi), c_lo.max(c_hi))
+                })
+                .collect()
+        };
+        Codebook { values, midpoints, lut, analytic, name }
     }
 
     pub fn name(&self) -> &'static str {
@@ -105,6 +136,21 @@ impl Codebook {
     /// native and HLO engines agree bit-for-bit.
     #[inline(always)]
     pub fn encode(&self, x: f32) -> u8 {
+        if let Some(candidate) = self.analytic {
+            // Analytic fast path: O(1) bit-math candidate, then an exact
+            // ≤±1 fixup against the true decision boundaries so the result
+            // is bit-identical to `encode_reference` (including its
+            // ties-round-up rule). The loops also keep NaN/±inf on the
+            // reference behavior: every comparison is false for NaN.
+            let mut c = candidate(x).min(self.values.len() - 1);
+            while c > 0 && self.midpoints[c - 1] > x {
+                c -= 1;
+            }
+            while c < self.midpoints.len() && self.midpoints[c] <= x {
+                c += 1;
+            }
+            return c as u8;
+        }
         // Fast path: bucket LUT on the monotone integer view. Exact — the
         // bucket's (lo, hi) code range brackets the answer; equal bounds
         // (the common case) need no search at all.
@@ -263,16 +309,40 @@ mod tests {
 
     #[test]
     fn lut_encode_matches_reference_exhaustively() {
-        // Pin the §Perf fast path to the reference bit-for-bit on every
-        // codebook, sweeping values, decision boundaries, and denormals.
+        // Pin the §Perf fast paths — the bucket LUT *and* the analytic
+        // dynamic-tree encode — to the reference bit-for-bit on every
+        // codebook, sweeping values, decision boundaries, decade
+        // boundaries, and denormals.
         for cb in [
             crate::quant::dynamic_tree::dynamic_signed(),
             crate::quant::dynamic_tree::dynamic_unsigned(),
+            crate::quant::dynamic_tree::inverse_dynamic_signed(),
+            crate::quant::dynamic_tree::inverse_dynamic_unsigned(),
             crate::quant::linear::linear_signed(),
             crate::quant::linear::linear_unsigned(),
             simple(),
         ] {
             let mut probes: Vec<f32> = Vec::new();
+            // decimal decade boundaries (the analytic encode's hardest
+            // inputs), both signs, ± a few ulps
+            for e in 0..=9i32 {
+                let bits = 10f32.powi(-e).to_bits() as i64;
+                for d in -3i64..=3 {
+                    let v = f32::from_bits((bits + d).clamp(0, u32::MAX as i64) as u32);
+                    probes.push(v);
+                    probes.push(-v);
+                }
+            }
+            // subnormals and extremes
+            probes.extend_from_slice(&[
+                f32::MIN_POSITIVE,
+                -f32::MIN_POSITIVE,
+                1e-45,
+                -1e-45,
+                f32::MAX,
+                f32::MIN,
+                3.4e38,
+            ]);
             for &v in cb.values() {
                 for d in [-2i32, -1, 0, 1, 2] {
                     // nudge by ulps around each representable value

@@ -65,6 +65,76 @@ fn tree_magnitudes(extra_fraction_bit: bool, inverse: bool) -> Vec<f64> {
     out
 }
 
+/// Analytic encode (no LUT, no full binary search): the dynamic tree's
+/// closed-form structure — decimal decades × uniformly spaced in-decade
+/// midpoints — lets a code-index *candidate* be computed in O(1) from the
+/// float's exponent and mantissa. `Codebook::encode` then resolves the
+/// candidate exactly (≤±1) against the true decision boundaries, so the
+/// result is pinned bit-for-bit to `Codebook::encode_reference`.
+///
+/// Position of magnitude `ax` within the ascending positive values
+/// `[1e-7, tree magnitudes…]`: 0 for the denormal-like code, else derived
+/// from the decade `e` (number of leading-zero exponent bits in Figure 2)
+/// and the linear in-decade slot `k`.
+fn magnitude_pos(ax: f64, extra_fraction_bit: bool) -> usize {
+    let top: u32 = if extra_fraction_bit { 7 } else { 6 };
+    if ax <= 1e-7 {
+        return 0;
+    }
+    // Decade from the binary exponent: floor(log2 ax) is exact bit math on
+    // the f64 representation; ×log10(2) approximates -log10(ax) to within
+    // one decade, and one comparison per side lands it exactly in
+    // (0.1·10⁻ᵉ, 10⁻ᵉ].
+    let e2 = ((ax.to_bits() >> 52) as i64 - 1023) as f64;
+    let guess = (-(e2 * std::f64::consts::LOG10_2)).floor() as i64;
+    let mut e = guess.clamp(0, 6) as usize;
+    while e > 0 && ax > DECADE_SCALE[e] {
+        e -= 1;
+    }
+    while e < 6 && ax <= DECADE_SCALE[e] * 0.1 {
+        e += 1;
+    }
+    // In-decade slot: values sit at 0.1 + step·(k + ½) (midpoints of the
+    // uniform linspace), so the nearest slot is floor of the rescaled
+    // mantissa part.
+    let nd = 1usize << (top - e as u32);
+    let step = 0.9 / nd as f64;
+    let t = (ax / DECADE_SCALE[e] - 0.1) / step;
+    let k = (t.floor() as i64).clamp(0, nd as i64 - 1) as usize;
+    // Decades e' > e hold 2^(top-e') magnitudes each; +1 for the 1e-7 code.
+    if extra_fraction_bit {
+        nd - 1 + k
+    } else {
+        nd + k
+    }
+}
+
+/// Candidate code index for [`dynamic_signed`] (sorted layout:
+/// 127 negatives ↓, 0.0 at 127, 1e-7 at 128, 127 positives ↑).
+fn candidate_signed(x: f32) -> usize {
+    if x.is_nan() {
+        return 0; // encode_reference: no midpoint compares ≤ NaN
+    }
+    if x == 0.0 {
+        return 127;
+    }
+    let pos = magnitude_pos(x.abs() as f64, false);
+    if x > 0.0 {
+        128 + pos
+    } else {
+        127 - pos
+    }
+}
+
+/// Candidate code index for [`dynamic_unsigned`] (sorted layout: 0.0,
+/// 1e-7, 254 magnitudes ↑).
+fn candidate_unsigned(x: f32) -> usize {
+    if x.is_nan() || x <= 0.0 {
+        return 0;
+    }
+    1 + magnitude_pos(x as f64, true)
+}
+
 /// Signed dynamic tree quantization ("dynamic quantization" for the first
 /// Adam state / momentum). 256 values: ±(127 tree magnitudes), 0, 1e-7.
 pub fn dynamic_signed() -> Codebook {
@@ -77,7 +147,7 @@ pub fn dynamic_signed() -> Codebook {
     }
     vals.push(0.0);
     vals.push(1e-7);
-    Codebook::new("dynamic_signed", vals)
+    Codebook::new_analytic("dynamic_signed", vals, candidate_signed)
 }
 
 /// Unsigned dynamic quantization (§2.2): sign bit re-purposed as a fixed
@@ -88,7 +158,7 @@ pub fn dynamic_unsigned() -> Codebook {
     let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
     vals.push(0.0);
     vals.push(1e-7);
-    Codebook::new("dynamic_unsigned", vals)
+    Codebook::new_analytic("dynamic_unsigned", vals, candidate_unsigned)
 }
 
 /// Inverse dynamic quantization (Appendix F.1): exponent direction swapped —
@@ -232,6 +302,50 @@ mod tests {
                     "missing mirror of {v}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn analytic_encode_matches_reference_densely() {
+        // The analytic candidate + fixup must reproduce nearest-midpoint
+        // search exactly across the full dynamic range (log-uniform sweep,
+        // both signs), not just at the curated probes of the codebook test.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD74);
+        for cb in [dynamic_signed(), dynamic_unsigned()] {
+            for _ in 0..200_000 {
+                // magnitude log-uniform in [1e-12, 10), sign ± at random
+                let exp = rng.uniform_range(-12.0, 1.0);
+                let mag = 10f64.powf(exp) as f32;
+                let x = if rng.uniform() < 0.5 { mag } else { -mag };
+                assert_eq!(
+                    cb.encode(x),
+                    cb.encode_reference(x),
+                    "{}: x = {x} ({:#010x})",
+                    cb.name(),
+                    x.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_candidate_stays_within_fixup_margin() {
+        // The fixup in `Codebook::encode` is O(1) only because the bit-math
+        // candidate lands next to the true code (±1 in the interior, one
+        // more near decade boundaries); pin that margin.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD75);
+        let signed = dynamic_signed();
+        let unsigned = dynamic_unsigned();
+        for _ in 0..100_000 {
+            let exp = rng.uniform_range(-12.0, 1.0);
+            let mag = 10f64.powf(exp) as f32;
+            let x = if rng.uniform() < 0.5 { mag } else { -mag };
+            let ds = candidate_signed(x) as i64 - signed.encode_reference(x) as i64;
+            assert!(ds.abs() <= 2, "signed candidate off by {ds} at {x}");
+            let du = candidate_unsigned(x) as i64 - unsigned.encode_reference(x) as i64;
+            assert!(du.abs() <= 2, "unsigned candidate off by {du} at {x}");
         }
     }
 

@@ -10,5 +10,6 @@ pub mod bench;
 pub mod io;
 pub mod json;
 pub mod parallel;
+pub mod reduce;
 pub mod rng;
 pub mod stats;

@@ -34,6 +34,77 @@ pub struct SendPtr<T>(pub *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// A slice view that many phase closures may capture by copy, for code
+/// (the phased optimizer plans) where the borrow checker cannot see that
+/// accesses are disjoint-per-item within a phase and sequenced by a
+/// barrier across phases.
+///
+/// Safety contract (on the code constructing one): within one phase,
+/// distinct item indices touch disjoint ranges; a range written in phase k
+/// is only read in phases > k (the engine's barrier provides the
+/// happens-before edge); and every access happens while the source slice
+/// outlives the plan (the pool blocks until each batch drains).
+#[derive(Clone, Copy)]
+pub struct Shared<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for Shared<T> {}
+unsafe impl<T: Send> Sync for Shared<T> {}
+
+impl<T> Shared<T> {
+    pub fn new(s: &mut [T]) -> Shared<T> {
+        Shared { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shared view of `[lo, hi)`. The caller picks the result lifetime.
+    ///
+    /// # Safety
+    /// The type-level contract: the range must not be written concurrently,
+    /// the source slice must outlive the chosen `'r`, and `hi <= len`.
+    pub unsafe fn range<'r>(&self, lo: usize, hi: usize) -> &'r [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
+    }
+
+    /// Mutable view of `[lo, hi)`. The caller picks the result lifetime.
+    ///
+    /// # Safety
+    /// The type-level contract: this item must be the range's only accessor
+    /// within its phase, the source slice must outlive the chosen `'r`, and
+    /// `hi <= len`.
+    pub unsafe fn range_mut<'r>(&self, lo: usize, hi: usize) -> &'r mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+
+    /// # Safety
+    /// As [`Shared::range`], for the single element `i`.
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// # Safety
+    /// As [`Shared::range_mut`], for the single element `i`.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
 /// Lifetime-erased pointer to the batch closure. See [`SendPtr`] contract.
 #[derive(Clone, Copy)]
 struct TaskFn(*const (dyn Fn(usize) + Sync));

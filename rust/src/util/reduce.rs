@@ -1,0 +1,107 @@
+//! The canonical deterministic two-phase reduction.
+//!
+//! Every tensor-wide reduction in the optimizer engine (LARS/LAMB trust
+//! ratios, Adafactor's RMS clip, factored statistics) is computed the same
+//! way: **phase 1** produces one partial per fixed-size chunk (serial,
+//! in-order, f64 accumulation), **phase 2** folds the partials in chunk
+//! order. Both phases are order-fixed, so the result is bit-identical no
+//! matter how the chunk partials are scheduled across threads — the same
+//! contract the block-kernel engine gives elementwise updates.
+//!
+//! The fused engine runs phase 1 as pool items inside its per-step batch
+//! (`optim::state::StepPlan`); [`l2_norm`] is the standalone convenience
+//! that runs both phases immediately on the pool.
+
+use crate::util::parallel;
+
+/// Chunk size of the canonical reduction: the quantization block size, so
+/// that reduction partials line up one-to-one with the engine's block work
+/// items (the phased plans' single-writer contract depends on this).
+pub const CHUNK: usize = crate::quant::BLOCK;
+
+/// Number of partials for a tensor of `len` elements.
+pub fn n_chunks(len: usize) -> usize {
+    len.div_ceil(CHUNK).max(1)
+}
+
+/// Element range `[lo, hi)` of chunk `c`.
+pub fn chunk_bounds(len: usize, c: usize) -> (usize, usize) {
+    let lo = c * CHUNK;
+    (lo.min(len), (lo + CHUNK).min(len))
+}
+
+/// Phase-1 kernel: in-order f64 sum of squares of one chunk.
+pub fn sum_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v as f64 * v as f64).sum::<f64>()
+}
+
+/// Phase-2 kernel: fold partials in chunk order (the fixed order is what
+/// makes the two-phase reduction deterministic at every thread count).
+pub fn fold(partials: &[f64]) -> f64 {
+    partials.iter().sum::<f64>()
+}
+
+/// ‖x‖₂ via the canonical two-phase reduction, phase 1 parallel on the
+/// worker pool.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let partials = parallel::par_map(n_chunks(x.len()), |c| {
+        let (lo, hi) = chunk_bounds(x.len(), c);
+        sum_sq(&x[lo..hi])
+    });
+    fold(&partials).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for len in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 7] {
+            let nc = n_chunks(len);
+            let mut covered = 0usize;
+            for c in 0..nc {
+                let (lo, hi) = chunk_bounds(len, c);
+                assert_eq!(lo, covered.min(len));
+                covered = hi;
+            }
+            assert_eq!(covered.min(len), len);
+        }
+    }
+
+    #[test]
+    fn l2_norm_matches_naive() {
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..200_000).map(|_| rng.normal() as f32).collect();
+        let naive: f64 = x.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        assert!((l2_norm(&x) - naive).abs() < 1e-6 * naive);
+    }
+
+    #[test]
+    fn l2_norm_is_thread_count_invariant() {
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+        let one = parallel::with_threads(1, || l2_norm(&x));
+        let four = parallel::with_threads(4, || l2_norm(&x));
+        assert_eq!(one.to_bits(), four.to_bits());
+    }
+
+    #[test]
+    fn two_phase_equals_standalone() {
+        // The fused engine computes partials itself and folds them; that
+        // must equal l2_norm exactly.
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..3 * CHUNK + 123).map(|_| rng.normal() as f32).collect();
+        let partials: Vec<f64> = (0..n_chunks(x.len()))
+            .map(|c| {
+                let (lo, hi) = chunk_bounds(x.len(), c);
+                sum_sq(&x[lo..hi])
+            })
+            .collect();
+        assert_eq!(fold(&partials).sqrt().to_bits(), l2_norm(&x).to_bits());
+    }
+}

@@ -1,14 +1,17 @@
 //! Parity tests for the unified block-kernel execution engine.
 //!
-//! The engine contract (and the paper's §2.1 argument): the block partition
-//! and the in-block update order never change, so the pooled / fused
-//! implementation is **bit-identical** to the sequential path — at every
-//! thread count, for every optimizer, at every precision. These tests pin
-//! that down:
+//! The engine contract (and the paper's §2.1 argument): the block
+//! partition, the in-block update order, and the combine fold order never
+//! change, so the pooled / fused phased implementation is **bit-identical**
+//! to the sequential path — at every thread count, for every optimizer, at
+//! every precision. These tests pin that down:
 //!
 //! * every optimizer × {B32, B8 dynamic, B8 linear} × threads {1, 4,
 //!   default} produces bit-identical params and states,
 //! * the fused multi-tensor step equals per-tensor stepping exactly,
+//!   including the reduction-bearing optimizers whose phased plans put
+//!   tensor-wide norms/statistics inside the batch (LAMB, Adafactor,
+//!   factored SM3),
 //! * 8-bit Adam matches an independent reference built from the public
 //!   quantizer API (pinning the dequantize → update → requantize semantics
 //!   of the seed implementation).
@@ -123,8 +126,9 @@ fn fleet(bits: Bits) -> Fleet {
         (OptimKind::Momentum, 31),
         (OptimKind::Adagrad, 5000),
         (OptimKind::Lars, 777),
+        (OptimKind::AdamW, 300),
         (OptimKind::Lamb, 1500),
-        (OptimKind::Lamb, 20000), // above the whole-tensor batch cutoff
+        (OptimKind::Lamb, 20000), // many-block phased reductions
         (OptimKind::Adafactor, 1024),
         (OptimKind::Sm3, 900),
     ];
@@ -142,12 +146,20 @@ fn fleet(bits: Bits) -> Fleet {
     (opts, params, grads)
 }
 
+/// Run `f` at a given thread count, or at the ambient default.
+fn at_threads<R>(threads: Option<usize>, f: impl FnOnce() -> R) -> R {
+    match threads {
+        Some(t) => parallel::with_threads(t, f),
+        None => f(),
+    }
+}
+
 #[test]
 fn fused_step_matches_per_tensor_stepping_bitwise() {
     let _g = locked();
     for bits in [Bits::B32, Bits::b8_dynamic()] {
-        for threads in [1usize, 4] {
-            parallel::with_threads(threads, || {
+        for threads in [Some(1usize), Some(4), None] {
+            at_threads(threads, || {
                 let (mut o_serial, mut p_serial, grads) = fleet(bits);
                 let (mut o_fused, mut p_fused, _) = fleet(bits);
                 for _ in 0..4 {
@@ -159,7 +171,7 @@ fn fused_step_matches_per_tensor_stepping_bitwise() {
                 assert_eq!(
                     p_serial,
                     p_fused,
-                    "fused vs serial params diverged ({}, {threads} threads)",
+                    "fused vs serial params diverged ({}, {threads:?} threads)",
                     bits.describe()
                 );
                 for (a, b) in o_serial.iter().zip(&o_fused) {
@@ -171,6 +183,95 @@ fn fused_step_matches_per_tensor_stepping_bitwise() {
             });
         }
     }
+}
+
+/// Fleet of only the reduction-bearing optimizers, with true 2-D shapes so
+/// Adafactor and SM3 take their factored (multi-phase) paths. Ragged sizes
+/// stress chunk/item boundaries.
+fn reduction_fleet(bits: Bits) -> Fleet {
+    let spec: Vec<(OptimKind, usize, Option<(usize, usize)>)> = vec![
+        (OptimKind::Lamb, 64 * 72, Some((64, 72))),
+        (OptimKind::Lamb, 5000, None),
+        (OptimKind::Lamb, 2048, None),
+        (OptimKind::Adafactor, 64 * 72, Some((64, 72))),
+        (OptimKind::Adafactor, 33 * 127, Some((33, 127))),
+        (OptimKind::Adafactor, 700, None),
+        (OptimKind::Sm3, 64 * 72, Some((64, 72))),
+        (OptimKind::Sm3, 129 * 31, Some((129, 31))),
+        (OptimKind::Sm3, 513, None),
+        (OptimKind::Lars, 4100, None),
+    ];
+    let mut rng = Rng::new(0xB10C);
+    let mut opts = Vec::new();
+    let mut params = Vec::new();
+    let mut grads = Vec::new();
+    for (kind, n, shape) in spec {
+        let mut cfg = OptimConfig::adam(0.005, bits);
+        cfg.kind = kind;
+        opts.push(build(&cfg, n, shape));
+        params.push((0..n).map(|_| rng.normal() as f32).collect());
+        grads.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect());
+    }
+    (opts, params, grads)
+}
+
+#[test]
+fn phased_plans_match_serial_bitwise_for_reduction_optimizers() {
+    // The tentpole contract: LAMB / Adafactor / factored SM3 / LARS run
+    // their tensor-wide reductions as phased block plans *inside* the
+    // fused batch, and stay bit-identical to per-tensor stepping at every
+    // thread count.
+    let _g = locked();
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for threads in [Some(1usize), Some(4), None] {
+            at_threads(threads, || {
+                let (mut o_serial, mut p_serial, grads) = reduction_fleet(bits);
+                let (mut o_fused, mut p_fused, _) = reduction_fleet(bits);
+                for _ in 0..5 {
+                    for i in 0..o_serial.len() {
+                        o_serial[i].step(&mut p_serial[i], &grads[i]);
+                    }
+                    fused_update(&mut o_fused, &mut p_fused, &grads);
+                }
+                assert_eq!(
+                    p_serial,
+                    p_fused,
+                    "phased fused vs serial params diverged ({}, {threads:?} threads)",
+                    bits.describe()
+                );
+                for (a, b) in o_serial.iter().zip(&o_fused) {
+                    assert_eq!(a.t(), b.t());
+                    for ((name, sa), (_, sb)) in a.states().iter().zip(b.states().iter()) {
+                        assert_eq!(
+                            sa.to_f32(),
+                            sb.to_f32(),
+                            "{}: state {name} diverged",
+                            a.name()
+                        );
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn phased_plans_are_thread_count_invariant() {
+    // Same fleet, full trajectories at 1 / 4 / default threads must agree
+    // bit-for-bit (the combine folds partials in fixed order).
+    let _g = locked();
+    let run = |threads: Option<usize>| -> Vec<Vec<f32>> {
+        at_threads(threads, || {
+            let (mut opts, mut params, grads) = reduction_fleet(Bits::b8_dynamic());
+            for _ in 0..5 {
+                fused_update(&mut opts, &mut params, &grads);
+            }
+            params
+        })
+    };
+    let p1 = run(Some(1));
+    assert_eq!(p1, run(Some(4)));
+    assert_eq!(p1, run(None));
 }
 
 #[test]
