@@ -1,10 +1,13 @@
 //! Quickstart: the paper's "two-line change" — swap a 32-bit optimizer for
 //! the 8-bit one — shown on a toy regression, plus direct use of the
-//! block-wise quantizer. No artifacts needed (pure native engine).
+//! block-wise quantizer and the parameter-group surface (per-tensor
+//! precision policy, §2.3). No artifacts needed (pure native engine).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use bitopt8::optim::{build, Bits, OptimConfig};
+use bitopt8::optim::{
+    build, Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer, TensorInfo,
+};
 use bitopt8::quant::{dynamic_tree, BlockQuantizer, BLOCK};
 use bitopt8::util::rng::Rng;
 use std::sync::Arc;
@@ -53,4 +56,26 @@ fn main() {
         );
     }
     println!("same trajectory quality, 4x smaller optimizer state.");
+
+    // ---- parameter groups: per-tensor precision policy (§2.3) -------------
+    // One spec drives a whole model: 8-bit dynamic block-wise everywhere,
+    // except the embedding tensors which keep 32-bit state (the
+    // stable-embedding policy), spelled as a single group override.
+    let spec = OptimSpec::with_groups(
+        OptimConfig::adam(1e-3, Bits::b8_dynamic()),
+        vec![GroupOverride::emb32()],
+    );
+    let tensors: Vec<TensorInfo> = [
+        ("embed.tok", 50_000 * 64),
+        ("embed.pos", 512 * 64),
+        ("block0.attn.wq", 64 * 64),
+        ("block0.mlp.w1", 64 * 256),
+        ("lm_head", 64 * 50_000),
+    ]
+    .into_iter()
+    .map(|(name, size)| TensorInfo { name: name.into(), size, shape: None, padded: size })
+    .collect();
+    let popt = ParamOptimizer::build(spec, &tensors, None).expect("valid spec");
+    println!("\nmixed-precision group layout:");
+    println!("{}", popt.describe());
 }

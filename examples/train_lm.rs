@@ -36,7 +36,11 @@ fn main() -> Result<()> {
         cfg.eval_batches = 8;
         cfg.optim = parse_optim("adam", bits, "dynamic", true)?;
         cfg.optim.lr = args.get_f64("lr", 6e-4) as f32;
-        cfg.emb32 = bits == 8;
+        if bits == 8 {
+            // §2.3 stable-embedding policy as a parameter group: embedding
+            // tensors keep 32-bit optimizer state, everything else is 8-bit.
+            cfg.push_emb32();
+        }
         cfg.schedule = Schedule::WarmupLinear { warmup: steps / 10, total: steps };
         cfg.engine = if args.get_or("engine", "native") == "hlo" {
             Engine::Hlo
@@ -54,6 +58,7 @@ fn main() -> Result<()> {
             tr.n_params() as f64 / 1e6,
             tr.state_bytes() as f64 / 1e6
         );
+        println!("{}", tr.param_optimizer().describe());
         let mut last_log = std::time::Instant::now();
         let mut losses = Vec::new();
         for step in 0..steps {

@@ -1,14 +1,64 @@
-//! Typed run configuration: model, optimizer, data, schedule, engine.
+//! Typed run configuration: model, optimizer (base config + parameter
+//! groups), data, schedule, engine.
 //!
 //! Loaded from a TOML file (`configs/*.toml`), overridable from the CLI
-//! (`--lr 0.01 --optimizer adam8 ...`). Every experiment in
-//! EXPERIMENTS.md is a RunConfig.
+//! (`--lr 0.01 --optimizer adam8 --override "embed.*:bits=32" ...`). Every
+//! experiment in EXPERIMENTS.md is a RunConfig.
+//!
+//! # TOML reference
+//!
+//! ```toml
+//! [model]
+//! name = "tiny_stable"      # manifest model
+//! emb32 = true              # sugar: append the §2.3 stable-embedding
+//!                           # override (embed.tok|embed.pos -> bits = 32)
+//!
+//! [optimizer]               # the BASE config every tensor starts from
+//! kind = "adam"             # adam|adamw|momentum|lamb|lars|adafactor|adagrad|sm3
+//! bits = 8                  # 8 or 32
+//! format = "dynamic"        # dynamic|linear|quantile|inverse-dynamic
+//! blockwise = true          # block-wise (§2.1) vs tensor-wide normalization
+//! lr = 1.6e-2
+//! beta1 = 0.9
+//! beta2 = 0.995
+//! eps = 1e-7
+//! weight_decay = 0.0
+//!
+//! # Parameter groups: ordered overrides on the base config, first match
+//! # wins (glob patterns: `*`, `?`, `|` alternation). Any subset of
+//! # bits/format/blockwise/lr/weight_decay/beta1/beta2/eps may be set.
+//! [[optimizer.group]]
+//! pattern = "embed.tok|embed.pos"
+//! bits = 32                 # stable-embedding policy, spelled explicitly
+//!
+//! [[optimizer.group]]
+//! pattern = "lm_head"
+//! lr = 6e-3
+//!
+//! [train]
+//! steps = 300
+//! warmup = 30               # 0 = constant LR schedule
+//! eval_every = 50
+//! eval_batches = 8
+//! seed = 42
+//! grad_clip = 1.0
+//! engine = "native"         # native | hlo
+//! artifacts_dir = "artifacts"
+//!
+//! [data]
+//! noise = 0.25
+//! ```
+//!
+//! CLI: `--override "pattern:key=val[,key=val]"` adds groups ahead of the
+//! file's (`;` separates several), `--emb32` appends the stable-embedding
+//! sugar. Unsupported combinations (e.g. `adafactor` with `bits = 8`, or
+//! `quantile` without block-wise normalization) are rejected at parse time.
 
 pub mod toml;
 
 use anyhow::{anyhow, Result};
 
-use crate::optim::{Bits, OptimConfig, OptimKind};
+use crate::optim::{Bits, GroupOverride, OptimConfig, OptimKind, OptimSpec};
 use crate::quant::Format;
 use crate::util::args::Args;
 use toml::TomlDoc;
@@ -67,9 +117,13 @@ impl Schedule {
 pub struct RunConfig {
     /// Manifest model name, e.g. "tiny" or "tiny_stable".
     pub model: String,
+    /// Base optimizer config (the default parameter group).
     pub optim: OptimConfig,
-    /// 32-bit optimizer state for embedding tensors (§2.3 policy).
-    pub emb32: bool,
+    /// Ordered per-group overrides (first matching pattern wins); together
+    /// with `optim` this forms the run's `OptimSpec`. The historical
+    /// `emb32` flag is [`RunConfig::push_emb32`] sugar appending the §2.3
+    /// stable-embedding override.
+    pub groups: Vec<GroupOverride>,
     /// Override the token-embedding init (Table 8 ablates Xavier vs the
     /// fairseq normal init independently of the LayerNorm graph change).
     pub emb_init_override: Option<String>,
@@ -91,7 +145,7 @@ impl Default for RunConfig {
         RunConfig {
             model: "tiny".into(),
             optim: OptimConfig::adam(1e-3, Bits::B32),
-            emb32: false,
+            groups: Vec::new(),
             emb_init_override: None,
             steps: 200,
             eval_every: 50,
@@ -113,7 +167,6 @@ impl RunConfig {
         let d = TomlDoc::parse(text)?;
         let mut cfg = RunConfig::default();
         cfg.model = d.str_or("model", "name", &cfg.model);
-        cfg.emb32 = d.bool_or("model", "emb32", cfg.emb32);
         cfg.steps = d.usize_or("train", "steps", cfg.steps);
         cfg.eval_every = d.usize_or("train", "eval_every", cfg.eval_every);
         cfg.eval_batches = d.usize_or("train", "eval_batches", cfg.eval_batches);
@@ -143,6 +196,23 @@ impl RunConfig {
         cfg.optim.eps = d.f64_or("optimizer", "eps", cfg.optim.eps as f64) as f32;
         cfg.optim.weight_decay =
             d.f64_or("optimizer", "weight_decay", cfg.optim.weight_decay as f64) as f32;
+
+        // Parameter groups, in declaration order; the `emb32` sugar (lowest
+        // priority — explicit groups win on first-match) goes last. A
+        // single-bracket [optimizer.group] would land in `sections` and be
+        // silently dropped — catch the typo here.
+        if d.sections.contains_key("optimizer.group") {
+            return Err(anyhow!(
+                "[optimizer.group] must be an array-of-tables: write [[optimizer.group]]"
+            ));
+        }
+        for table in d.tables("optimizer.group") {
+            cfg.groups.push(GroupOverride::from_table(table)?);
+        }
+        if d.bool_or("model", "emb32", false) {
+            cfg.push_emb32();
+        }
+        cfg.optim_spec().validate()?;
         Ok(cfg)
     }
 
@@ -150,6 +220,17 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading config {path}: {e}"))?;
         Self::from_toml(&text)
+    }
+
+    /// The run's optimizer spec: base config + parameter groups.
+    pub fn optim_spec(&self) -> OptimSpec {
+        OptimSpec::with_groups(self.optim, self.groups.clone())
+    }
+
+    /// Append the §2.3 stable-embedding policy (the historical `emb32`
+    /// flag) as a group override: 32-bit state for the embedding tensors.
+    pub fn push_emb32(&mut self) {
+        self.groups.push(GroupOverride::emb32());
     }
 
     /// Apply `--key value` CLI overrides on top of the file config.
@@ -194,29 +275,50 @@ impl RunConfig {
         if let Some(v) = a.get("artifacts") {
             self.artifacts_dir = v.to_string();
         }
+        // CLI groups take precedence over the file's (first match wins), so
+        // they are *prepended* in their own declaration order.
+        if let Some(v) = a.get("override") {
+            let mut cli: Vec<GroupOverride> = Vec::new();
+            for part in v.split(';') {
+                let part = part.trim();
+                if !part.is_empty() {
+                    cli.push(GroupOverride::parse(part)?);
+                }
+            }
+            cli.append(&mut self.groups);
+            self.groups = cli;
+        }
         if a.flag("emb32") {
-            self.emb32 = true;
+            self.push_emb32();
         }
         if let Some(v) = a.get("log") {
             self.log_jsonl = Some(v.to_string());
         }
+        self.optim_spec().validate()?;
         Ok(())
     }
 
     pub fn describe(&self) -> String {
+        let groups = if self.groups.is_empty() {
+            "-".to_string()
+        } else {
+            self.groups.iter().map(|g| g.describe()).collect::<Vec<_>>().join(" ")
+        };
         format!(
-            "{} | {} | steps={} seed={} engine={} emb32={}",
+            "{} | {} | steps={} seed={} engine={} groups={}",
             self.model,
             self.optim.describe(),
             self.steps,
             self.seed,
             self.engine.name(),
-            self.emb32
+            groups
         )
     }
 }
 
 /// Build an OptimConfig from string pieces (shared by TOML + CLI paths).
+/// Unsupported combinations are rejected here — parse time — rather than
+/// silently falling back at construction.
 pub fn parse_optim(kind: &str, bits: usize, format: &str, blockwise: bool) -> Result<OptimConfig> {
     let kind = OptimKind::parse(kind).ok_or_else(|| anyhow!("unknown optimizer {kind:?}"))?;
     let format = Format::parse(format).ok_or_else(|| anyhow!("unknown format {format:?}"))?;
@@ -231,6 +333,7 @@ pub fn parse_optim(kind: &str, bits: usize, format: &str, blockwise: bool) -> Re
         cfg.beta1 = 0.9;
         cfg.beta2 = 0.0;
     }
+    crate::optim::validate_config(&cfg)?;
     Ok(cfg)
 }
 
@@ -260,11 +363,67 @@ engine = "native"
         )
         .unwrap();
         assert_eq!(cfg.model, "tiny_stable");
-        assert!(cfg.emb32);
+        assert_eq!(cfg.groups.len(), 1, "emb32 sugar appended");
+        assert_eq!(cfg.groups[0].describe(), "embed.tok|embed.pos:bits=32");
         assert_eq!(cfg.optim.bits, Bits::b8_dynamic());
         assert!((cfg.optim.lr - 0.0163).abs() < 1e-9);
         assert_eq!(cfg.steps, 300);
         assert!(matches!(cfg.schedule, Schedule::WarmupLinear { warmup: 30, total: 300 }));
+    }
+
+    #[test]
+    fn toml_group_tables_parse_in_order() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[optimizer]
+kind = "adam"
+bits = 8
+
+[[optimizer.group]]
+pattern = "embed.tok|embed.pos"
+bits = 32
+
+[[optimizer.group]]
+pattern = "lm_head"
+lr = 0.006
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.groups.len(), 2);
+        let spec = cfg.optim_spec();
+        assert_eq!(spec.resolve("embed.tok").0.bits, Bits::B32);
+        assert_eq!(spec.resolve("lm_head").1, 2);
+        assert!((spec.resolve("lm_head").0.lr - 0.006).abs() < 1e-9);
+        assert_eq!(spec.resolve("block0.attn.wq").1, 0);
+    }
+
+    #[test]
+    fn toml_rejects_invalid_combos_at_parse_time() {
+        // adafactor cannot run 8-bit states
+        let err = RunConfig::from_toml("[optimizer]\nkind = \"adafactor\"\nbits = 8\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("adafactor"), "{err:#}");
+        // quantile requires blockwise normalization
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 8\nformat = \"quantile\"\nblockwise = false\n"
+        )
+        .is_err());
+        // a group resolving to an unsupported combo is also caught
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"adafactor\"\n\n[[optimizer.group]]\npattern = \"embed.*\"\nbits = 8\n"
+        )
+        .is_err());
+        // bad group key
+        assert!(RunConfig::from_toml(
+            "[[optimizer.group]]\npattern = \"x\"\nbogus = 1\n"
+        )
+        .is_err());
+        // single-bracket typo would silently drop the group — rejected
+        let err = RunConfig::from_toml(
+            "[optimizer.group]\npattern = \"embed.tok|embed.pos\"\nbits = 32\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("[[optimizer.group]]"), "{err:#}");
     }
 
     #[test]
@@ -278,7 +437,31 @@ engine = "native"
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.optim.bits, Bits::b8_dynamic());
         assert_eq!(cfg.steps, 5);
-        assert!(cfg.emb32);
+        assert_eq!(cfg.groups.len(), 1);
+        assert_eq!(cfg.groups[0].describe(), "embed.tok|embed.pos:bits=32");
+    }
+
+    #[test]
+    fn cli_override_flag_prepends_groups() {
+        let mut cfg = RunConfig::default();
+        cfg.optim = parse_optim("adam", 8, "dynamic", true).unwrap();
+        cfg.groups.push(GroupOverride::parse("embed.*:bits=32").unwrap());
+        let args = Args::parse(
+            ["train", "--override", "embed.tok:lr=0.5;lm_head:bits=32"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.groups.len(), 3);
+        // CLI groups come first: embed.tok hits the CLI lr override, not
+        // the file's 32-bit group
+        let spec = cfg.optim_spec();
+        let (tok, g) = spec.resolve("embed.tok");
+        assert_eq!(g, 1);
+        assert_eq!(tok.bits, Bits::b8_dynamic());
+        assert!((tok.lr - 0.5).abs() < 1e-9);
+        assert_eq!(spec.resolve("embed.pos").1, 3, "file group still matches");
+        assert_eq!(spec.resolve("lm_head").0.bits, Bits::B32);
     }
 
     #[test]
@@ -294,5 +477,8 @@ engine = "native"
     fn parse_optim_rejects_bad_bits() {
         assert!(parse_optim("adam", 16, "dynamic", true).is_err());
         assert!(parse_optim("bogus", 8, "dynamic", true).is_err());
+        assert!(parse_optim("adafactor", 8, "dynamic", true).is_err());
+        assert!(parse_optim("sm3", 8, "dynamic", true).is_err());
+        assert!(parse_optim("adafactor", 32, "dynamic", true).is_ok());
     }
 }

@@ -1,6 +1,7 @@
 //! Minimal TOML-subset parser (the `toml` crate is not in the offline
 //! registry). Supports what run configs need: `[section]` headers,
-//! `key = value` with strings, integers, floats, booleans, and comments.
+//! `[[section]]` array-of-tables headers (parameter groups), `key = value`
+//! with strings, integers, floats, booleans, and comments.
 
 use std::collections::BTreeMap;
 
@@ -42,19 +43,35 @@ impl TomlValue {
     }
 }
 
+/// One table's worth of key/value pairs.
+pub type Table = BTreeMap<String, TomlValue>;
+
 /// Parsed document: section -> key -> value. Top-level keys live under "".
+/// `[[name]]` headers append tables to `arrays[name]` instead (TOML
+/// array-of-tables; used by `[[optimizer.group]]`).
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
-    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+    pub sections: BTreeMap<String, Table>,
+    pub arrays: BTreeMap<String, Vec<Table>>,
 }
 
 impl TomlDoc {
     pub fn parse(text: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
+        let mut in_array = false;
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[") {
+                let name = name
+                    .strip_suffix("]]")
+                    .ok_or_else(|| anyhow!("line {}: unterminated [[section]]", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.arrays.entry(section.clone()).or_default().push(Table::new());
+                in_array = true;
                 continue;
             }
             if let Some(name) = line.strip_prefix('[') {
@@ -63,6 +80,7 @@ impl TomlDoc {
                     .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
                 section = name.trim().to_string();
                 doc.sections.entry(section.clone()).or_default();
+                in_array = false;
                 continue;
             }
             let (k, v) = line
@@ -70,16 +88,23 @@ impl TomlDoc {
                 .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
             let value = parse_value(v.trim())
                 .ok_or_else(|| anyhow!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
-            doc.sections
-                .entry(section.clone())
-                .or_default()
-                .insert(k.trim().to_string(), value);
+            let table = if in_array {
+                doc.arrays.get_mut(&section).and_then(|v| v.last_mut()).expect("open array table")
+            } else {
+                doc.sections.entry(section.clone()).or_default()
+            };
+            table.insert(k.trim().to_string(), value);
         }
         Ok(doc)
     }
 
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// The tables of a `[[name]]` array-of-tables (empty if absent).
+    pub fn tables(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
@@ -182,5 +207,37 @@ steps = 300
     fn errors_on_garbage() {
         assert!(TomlDoc::parse("[unterminated").is_err());
         assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("[[unterminated").is_err());
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let d = TomlDoc::parse(
+            r#"
+[optimizer]
+kind = "adam"
+
+[[optimizer.group]]
+pattern = "embed.*"
+bits = 32
+
+[[optimizer.group]]
+pattern = "head"
+lr = 0.01
+
+[train]
+steps = 5
+"#,
+        )
+        .unwrap();
+        let groups = d.tables("optimizer.group");
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].get("pattern").and_then(|v| v.as_str()), Some("embed.*"));
+        assert_eq!(groups[0].get("bits").and_then(|v| v.as_i64()), Some(32));
+        assert_eq!(groups[1].get("lr").and_then(|v| v.as_f64()), Some(0.01));
+        // surrounding plain sections are unaffected
+        assert_eq!(d.str_or("optimizer", "kind", "?"), "adam");
+        assert_eq!(d.usize_or("train", "steps", 0), 5);
+        assert!(d.tables("nope").is_empty());
     }
 }

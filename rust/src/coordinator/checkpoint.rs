@@ -1,30 +1,42 @@
-//! Checkpointing: parameters + optimizer state + step + RNG.
+//! Checkpointing: parameters + optimizer state + step + RNG, keyed by
+//! tensor name and parameter group (format v2).
 //!
 //! Quantized states are stored *dequantized* (f32). This is lossless:
 //! quantization is idempotent (`q(dq(q(x))) == q(x)`, pinned by the quant
 //! property tests), and the per-block absmax of a dequantized block equals
 //! the stored absmax exactly, so re-quantizing on load reproduces the
-//! codes bit-for-bit.
+//! codes bit-for-bit. Restore matches tensors **by name** (not position),
+//! so a checkpoint survives reorderings of the tensor list and mixed
+//! 8-bit/32-bit group layouts restore each tensor at its own precision.
 
+use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufReader, BufWriter};
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::optim::Optimizer;
+use crate::optim::ParamOptimizer;
 use crate::util::io::*;
 use crate::util::rng::Rng;
 
 const MAGIC: u32 = 0xB1707_8_0;
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// One tensor's checkpoint payload.
+pub struct TensorCheckpoint {
+    pub name: String,
+    /// Parameter-group index at capture time (informational).
+    pub group: u64,
+    pub params: Vec<f32>,
+    /// Named dequantized optimizer states.
+    pub states: Vec<(String, Vec<f32>)>,
+}
 
 pub struct Checkpoint {
     pub step: u64,
     pub rng_state: [u64; 4],
-    pub params: Vec<Vec<f32>>,
-    /// per tensor: named dequantized states
-    pub states: Vec<Vec<(String, Vec<f32>)>>,
+    pub tensors: Vec<TensorCheckpoint>,
 }
 
 impl Checkpoint {
@@ -32,18 +44,23 @@ impl Checkpoint {
         step: u64,
         rng: &Rng,
         params: &[Vec<f32>],
-        opts: &[Box<dyn Optimizer>],
+        popt: &ParamOptimizer,
     ) -> Checkpoint {
-        let states = opts
-            .iter()
-            .map(|o| {
-                o.states()
+        assert_eq!(params.len(), popt.n_tensors(), "params/optimizer tensor count");
+        let tensors = (0..popt.n_tensors())
+            .map(|i| TensorCheckpoint {
+                name: popt.tensor_name(i).to_string(),
+                group: popt.group_of(i) as u64,
+                params: params[i].clone(),
+                states: popt
+                    .opt(i)
+                    .states()
                     .into_iter()
                     .map(|(n, s)| (n.to_string(), s.to_f32()))
-                    .collect()
+                    .collect(),
             })
             .collect();
-        Checkpoint { step, rng_state: rng.state(), params: params.to_vec(), states }
+        Checkpoint { step, rng_state: rng.state(), tensors }
     }
 
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
@@ -53,17 +70,16 @@ impl Checkpoint {
         write_u32(&mut w, MAGIC)?;
         write_u32(&mut w, VERSION)?;
         write_u64(&mut w, self.step)?;
-        for s in self.rng_state {
-            write_u64(&mut w, s)?;
+        for st in self.rng_state {
+            write_u64(&mut w, st)?;
         }
-        write_u64(&mut w, self.params.len() as u64)?;
-        for p in &self.params {
-            write_f32_slice(&mut w, p)?;
-        }
-        write_u64(&mut w, self.states.len() as u64)?;
-        for per_tensor in &self.states {
-            write_u64(&mut w, per_tensor.len() as u64)?;
-            for (name, vals) in per_tensor {
+        write_u64(&mut w, self.tensors.len() as u64)?;
+        for t in &self.tensors {
+            write_str(&mut w, &t.name)?;
+            write_u64(&mut w, t.group)?;
+            write_f32_slice(&mut w, &t.params)?;
+            write_u64(&mut w, t.states.len() as u64)?;
+            for (name, vals) in &t.states {
                 write_str(&mut w, name)?;
                 write_f32_slice(&mut w, vals)?;
             }
@@ -83,42 +99,64 @@ impl Checkpoint {
         }
         let step = read_u64(&mut r)?;
         let mut rng_state = [0u64; 4];
-        for s in rng_state.iter_mut() {
-            *s = read_u64(&mut r)?;
-        }
-        let np = read_u64(&mut r)? as usize;
-        let mut params = Vec::with_capacity(np);
-        for _ in 0..np {
-            params.push(read_f32_slice(&mut r)?);
+        for st in rng_state.iter_mut() {
+            *st = read_u64(&mut r)?;
         }
         let nt = read_u64(&mut r)? as usize;
-        let mut states = Vec::with_capacity(nt);
+        let mut tensors = Vec::with_capacity(nt);
         for _ in 0..nt {
+            let name = read_str(&mut r)?;
+            let group = read_u64(&mut r)?;
+            let params = read_f32_slice(&mut r)?;
             let k = read_u64(&mut r)? as usize;
-            let mut per = Vec::with_capacity(k);
+            let mut states = Vec::with_capacity(k);
             for _ in 0..k {
-                let name = read_str(&mut r)?;
-                per.push((name, read_f32_slice(&mut r)?));
+                let sname = read_str(&mut r)?;
+                states.push((sname, read_f32_slice(&mut r)?));
             }
-            states.push(per);
+            tensors.push(TensorCheckpoint { name, group, params, states });
         }
-        Ok(Checkpoint { step, rng_state, params, states })
+        Ok(Checkpoint { step, rng_state, tensors })
     }
 
-    /// Restore into live optimizers (requantizes 8-bit states losslessly).
-    pub fn restore(
-        &self,
-        params: &mut Vec<Vec<f32>>,
-        opts: &mut [Box<dyn Optimizer>],
-    ) -> Result<()> {
-        anyhow::ensure!(self.params.len() == params.len(), "tensor count mismatch");
-        *params = self.params.clone();
-        for (per_tensor, opt) in self.states.iter().zip(opts.iter_mut()) {
+    /// Restore into a live [`ParamOptimizer`] + parameter set, matching
+    /// tensors by name (requantizes 8-bit states losslessly).
+    pub fn restore(&self, params: &mut [Vec<f32>], popt: &mut ParamOptimizer) -> Result<()> {
+        anyhow::ensure!(
+            self.tensors.len() == popt.n_tensors(),
+            "tensor count mismatch: checkpoint {} vs model {}",
+            self.tensors.len(),
+            popt.n_tensors()
+        );
+        anyhow::ensure!(params.len() == popt.n_tensors(), "params/optimizer tensor count");
+        let by_name: BTreeMap<&str, &TensorCheckpoint> =
+            self.tensors.iter().map(|t| (t.name.as_str(), t)).collect();
+        for i in 0..popt.n_tensors() {
+            let name = popt.tensor_name(i).to_string();
+            let t = by_name
+                .get(name.as_str())
+                .ok_or_else(|| anyhow!("checkpoint has no tensor {name:?}"))?;
+            anyhow::ensure!(
+                t.params.len() == params[i].len(),
+                "tensor {name:?}: param len {} vs {}",
+                t.params.len(),
+                params[i].len()
+            );
+            params[i].copy_from_slice(&t.params);
+            let opt = popt.opt_mut(i);
             opt.set_t(self.step);
-            for ((name, vals), (live_name, live)) in
-                per_tensor.iter().zip(opt.states_mut().into_iter())
-            {
-                anyhow::ensure!(name == live_name, "state name mismatch {name} vs {live_name}");
+            let live_states = opt.states_mut();
+            anyhow::ensure!(
+                live_states.len() == t.states.len(),
+                "tensor {name:?}: state count {} vs {}",
+                t.states.len(),
+                live_states.len()
+            );
+            for ((sname, vals), (live_name, live)) in t.states.iter().zip(live_states) {
+                anyhow::ensure!(
+                    sname == live_name,
+                    "tensor {name:?}: state name {sname} vs {live_name}"
+                );
                 match live {
                     crate::optim::StateTensor::F32(v) => {
                         anyhow::ensure!(v.len() == vals.len(), "state len mismatch");
@@ -139,51 +177,97 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::{build, Bits, OptimConfig};
+    use crate::optim::{Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer, TensorInfo};
     use crate::util::rng::Rng;
 
+    fn tensors() -> Vec<TensorInfo> {
+        [("embed.tok", 4096usize), ("block0.attn.wq", 2048), ("lm_head", 3000)]
+            .into_iter()
+            .map(|(name, size)| TensorInfo {
+                name: name.to_string(),
+                size,
+                shape: None,
+                padded: size.next_multiple_of(2048),
+            })
+            .collect()
+    }
+
+    /// Mixed 8-bit/32-bit group layout (embeddings 32-bit via the emb32
+    /// sugar) built over synthetic tensors.
+    fn mixed_popt() -> ParamOptimizer {
+        let spec = OptimSpec::with_groups(
+            OptimConfig::adam(0.01, Bits::b8_dynamic()),
+            vec![GroupOverride::emb32()],
+        );
+        ParamOptimizer::build(spec, &tensors(), None).unwrap()
+    }
+
     #[test]
-    fn roundtrip_preserves_training_trajectory() {
+    fn roundtrip_preserves_training_trajectory_mixed_groups() {
         // Train A for 10 steps, checkpoint at 5; restoring into B and
         // re-running steps 6..10 must give identical params (8-bit states
-        // included, thanks to idempotent requantization).
-        let n = 4096;
-        let cfg = OptimConfig::adam(0.01, Bits::b8_dynamic());
+        // included, thanks to idempotent requantization; the 32-bit
+        // embedding group restores at full precision).
         let mut rng = Rng::new(1);
-        let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-
-        let grads = |p: &[f32]| -> Vec<f32> {
-            p.iter().zip(&target).map(|(a, b)| a - b).collect()
+        let shapes: Vec<usize> = tensors().iter().map(|t| t.size).collect();
+        let targets: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let grads = |params: &[Vec<f32>]| -> Vec<Vec<f32>> {
+            params
+                .iter()
+                .zip(&targets)
+                .map(|(p, t)| p.iter().zip(t).map(|(a, b)| a - b).collect())
+                .collect()
         };
 
-        let mut p_a = vec![0.0f32; n];
-        let mut opt_a = vec![build(&cfg, n, None)];
+        let mut popt_a = mixed_popt();
+        assert!(popt_a.tensor_cfg(0).bits == Bits::B32, "embed.tok in the 32-bit group");
+        assert!(popt_a.tensor_cfg(1).bits == Bits::b8_dynamic());
+        let mut p_a: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
         for _ in 0..5 {
             let g = grads(&p_a);
-            opt_a[0].step(&mut p_a, &g);
+            popt_a.step_native(&mut p_a, &g);
         }
         let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.bin");
-        Checkpoint::capture(5, &Rng::new(9), &[p_a.clone()], &opt_a)
-            .save(&path)
-            .unwrap();
+        Checkpoint::capture(5, &Rng::new(9), &p_a, &popt_a).save(&path).unwrap();
         for _ in 0..5 {
             let g = grads(&p_a);
-            opt_a[0].step(&mut p_a, &g);
+            popt_a.step_native(&mut p_a, &g);
         }
 
         let loaded = Checkpoint::load(&path).unwrap();
         assert_eq!(loaded.step, 5);
-        let mut p_b = vec![vec![0.0f32; n]];
-        let mut opt_b = vec![build(&cfg, n, None)];
-        loaded.restore(&mut p_b, &mut opt_b).unwrap();
+        assert_eq!(loaded.tensors.len(), 3);
+        assert_eq!(loaded.tensors[0].name, "embed.tok");
+        assert_eq!(loaded.tensors[0].group, 1, "embedding group recorded");
+        assert_eq!(loaded.tensors[1].group, 0);
+
+        let mut popt_b = mixed_popt();
+        let mut p_b: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
+        loaded.restore(&mut p_b, &mut popt_b).unwrap();
+        assert_eq!(popt_b.opt(0).t(), 5);
         for _ in 0..5 {
-            let g = grads(&p_b[0]);
-            opt_b[0].step(&mut p_b[0], &g);
+            let g = grads(&p_b);
+            popt_b.step_native(&mut p_b, &g);
         }
-        assert_eq!(p_a, p_b[0], "trajectories diverged after restore");
+        assert_eq!(p_a, p_b, "trajectories diverged after restore");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_layout() {
+        let popt = mixed_popt();
+        let params: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
+        let mut ck = Checkpoint::capture(1, &Rng::new(2), &params, &popt);
+        ck.tensors[1].name = "renamed".into();
+        let mut popt_b = mixed_popt();
+        let mut p_b = params.clone();
+        let err = ck.restore(&mut p_b, &mut popt_b).unwrap_err();
+        assert!(format!("{err:#}").contains("block0.attn.wq"), "{err:#}");
     }
 
     #[test]

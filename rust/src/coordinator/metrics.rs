@@ -46,6 +46,14 @@ impl JsonlSink {
         self.write(&obj(pairs))
     }
 
+    /// A typed one-off record (e.g. the run-start "groups" record carrying
+    /// the per-parameter-group layout and state bytes).
+    pub fn record(&mut self, kind: &str, extra: Vec<(&str, Json)>) -> Result<()> {
+        let mut pairs = vec![("kind", s(kind))];
+        pairs.extend(extra);
+        self.write(&obj(pairs))
+    }
+
     pub fn flush(&mut self) -> Result<()> {
         self.w.flush()?;
         Ok(())

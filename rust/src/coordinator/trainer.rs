@@ -1,12 +1,14 @@
-//! The training coordinator: owns parameters, optimizer state, the data
-//! pipeline and the step loop; drives the AOT train/eval artifacts through
-//! PJRT and applies optimizer updates with either engine:
+//! The training coordinator: owns parameters, the data pipeline and the
+//! step loop; drives the AOT train/eval artifacts through PJRT and applies
+//! optimizer updates through the model-level [`ParamOptimizer`], which owns
+//! every tensor's optimizer (resolved from the run's `OptimSpec`: base
+//! config + parameter-group overrides) with either engine:
 //!
 //! * `Engine::Native` — the fused multi-threaded Rust 8-bit optimizer
 //!   (production hot path; `optim::*`).
 //! * `Engine::Hlo` — the AOT Pallas kernels (`adam8_n*.hlo.txt`), i.e. the
-//!   L1 layer executing through PJRT. Tensors whose policy is 32-bit
-//!   state (stable-embedding §2.3) or whose size has no HLO artifact fall
+//!   L1 layer executing through PJRT. Tensors whose *resolved* group
+//!   config is 32-bit (stable-embedding §2.3) or has no HLO artifact fall
 //!   back to the native path; `RunResult::hlo_updated_tensors` reports how
 //!   many went through HLO so tests can assert the path is exercised.
 
@@ -15,32 +17,22 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::{Engine, RunConfig};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::stability::StabilityDetector;
 use crate::data::{corpus::Corpus, glue::GlueDataset};
-use crate::optim::{self, Bits, FusedStep, OptimKind, Optimizer};
+use crate::optim::{GroupReport, HloEnv, ParamOptimizer, TensorInfo};
 use crate::runtime::{self, ModelEntry, Runtime};
-use crate::util::json::num;
+use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
-
-/// 8-bit optimizer state mirrored for the HLO engine (padded layout).
-struct HloState {
-    artifact: String,
-    codes1: Vec<u8>,
-    absmax1: Vec<f32>,
-    codes2: Vec<u8>,
-    absmax2: Vec<f32>,
-    /// momentum artifacts carry a single state
-    single_state: bool,
-}
 
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     pub model: ModelEntry,
     pub cfg: RunConfig,
     pub params: Vec<Vec<f32>>,
-    opts: Vec<Box<dyn Optimizer>>,
-    hlo: Vec<Option<HloState>>,
+    /// Per-tensor optimizers + HLO mirrors, grouped by the run's OptimSpec.
+    popt: ParamOptimizer,
     corpus: Option<Corpus>,
     glue: Option<GlueDataset>,
     data_rng: Rng,
@@ -59,6 +51,8 @@ pub struct RunResult {
     pub reason: Option<&'static str>,
     pub final_eval: f64,
     pub state_bytes: usize,
+    /// Per parameter group: (label, optimizer-state bytes).
+    pub group_state_bytes: Vec<(String, usize)>,
     pub wall_secs: f64,
     pub steps_done: usize,
     pub hlo_updated_tensors: usize,
@@ -96,27 +90,28 @@ impl<'rt> Trainer<'rt> {
             })
             .collect();
 
-        // Per-tensor optimizers with the stable-embedding 32-bit policy.
-        let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
-        for p in &model.params {
-            let mut ocfg = cfg.optim;
-            if cfg.emb32 && p.is_embedding {
-                ocfg.bits = Bits::B32;
-            }
-            let shape = if p.shape.len() == 2 { Some((p.shape[0], p.shape[1])) } else { None };
-            opts.push(optim::build(&ocfg, p.size, shape));
-        }
-
-        // HLO-engine state mirrors where applicable.
-        let mut hlo: Vec<Option<HloState>> = Vec::new();
-        for (p, opt) in model.params.iter().zip(&opts) {
-            let entry = if cfg.engine == Engine::Hlo {
-                Self::make_hlo_state(&manifest, &cfg, p.size, p.padded, opt.as_ref())
-            } else {
-                None
-            };
-            hlo.push(entry);
-        }
+        // Per-tensor optimizers through the parameter-group surface: each
+        // tensor's effective config (precision, hyperparameters, HLO
+        // artifact eligibility) is resolved from the spec at build time.
+        let tensors: Vec<TensorInfo> = model
+            .params
+            .iter()
+            .map(|p| TensorInfo {
+                name: p.name.clone(),
+                size: p.size,
+                shape: if p.shape.len() == 2 { Some((p.shape[0], p.shape[1])) } else { None },
+                padded: p.padded,
+            })
+            .collect();
+        let artifact_for =
+            |kind: &str, size: usize| manifest.update_artifact(kind, size).map(str::to_string);
+        let hlo_env = if cfg.engine == Engine::Hlo {
+            Some(HloEnv { block: manifest.block, artifact_for: &artifact_for })
+        } else {
+            None
+        };
+        let popt = ParamOptimizer::build(cfg.optim_spec(), &tensors, hlo_env)
+            .with_context(|| format!("building optimizer for model {:?}", model.name))?;
 
         let (corpus, glue) = if model.task == "lm" {
             (Some(Corpus::with_params(model.vocab, cfg.seed, 1.1, cfg.data_noise)), None)
@@ -129,18 +124,33 @@ impl<'rt> Trainer<'rt> {
             (None, Some(GlueDataset::generate(&task, model.vocab, model.seq_len, cfg.seed)))
         };
 
-        let metrics = match &cfg.log_jsonl {
+        let mut metrics = match &cfg.log_jsonl {
             Some(path) => Some(JsonlSink::create(path)?),
             None => None,
         };
+        if let Some(sink) = metrics.as_mut() {
+            let entries: Vec<Json> = popt
+                .group_reports()
+                .iter()
+                .map(|g| {
+                    obj(vec![
+                        ("group", s(&g.label)),
+                        ("config", s(&g.config)),
+                        ("tensors", num(g.tensors as f64)),
+                        ("params", num(g.params as f64)),
+                        ("state_bytes", num(g.state_bytes as f64)),
+                    ])
+                })
+                .collect();
+            sink.record("groups", vec![("groups", Json::Arr(entries))])?;
+        }
 
         Ok(Trainer {
             rt,
             model,
             cfg,
             params,
-            opts,
-            hlo,
+            popt,
             corpus,
             glue,
             data_rng,
@@ -167,42 +177,18 @@ impl<'rt> Trainer<'rt> {
         Ok(self)
     }
 
-    fn make_hlo_state(
-        manifest: &runtime::Manifest,
-        cfg: &RunConfig,
-        size: usize,
-        padded: usize,
-        opt: &dyn Optimizer,
-    ) -> Option<HloState> {
-        // Only quantized Adam/Momentum have HLO artifacts; 32-bit-policy
-        // tensors (emb32) keep the native engine.
-        let quantized = opt.states().iter().any(|(_, s)| s.is_quantized());
-        if !quantized {
-            return None;
-        }
-        let (kind_key, single) = match cfg.optim.kind {
-            OptimKind::Adam | OptimKind::AdamW => ("adam8", false),
-            OptimKind::Momentum => ("momentum8", true),
-            _ => return None,
-        };
-        let artifact = manifest.update_artifact(kind_key, size)?.to_string();
-        let cb_signed = crate::quant::dynamic_tree::dynamic_signed();
-        let zero = cb_signed.encode(0.0);
-        let cb_unsigned = crate::quant::dynamic_tree::dynamic_unsigned();
-        let zero_u = cb_unsigned.encode(0.0);
-        let nb = padded / manifest.block;
-        Some(HloState {
-            artifact,
-            codes1: vec![zero; padded],
-            absmax1: vec![0.0; nb],
-            codes2: if single { Vec::new() } else { vec![zero_u; padded] },
-            absmax2: if single { Vec::new() } else { vec![0.0; nb] },
-            single_state: single,
-        })
+    /// The model-level optimizer (group layout, per-tensor configs).
+    pub fn param_optimizer(&self) -> &ParamOptimizer {
+        &self.popt
     }
 
     pub fn state_bytes(&self) -> usize {
-        self.opts.iter().map(|o| o.state_bytes()).sum()
+        self.popt.state_bytes()
+    }
+
+    /// Per parameter group: tensor count, params, state bytes.
+    pub fn group_reports(&self) -> Vec<GroupReport> {
+        self.popt.group_reports()
     }
 
     pub fn n_params(&self) -> usize {
@@ -217,6 +203,7 @@ impl<'rt> Trainer<'rt> {
 
     /// One training step; returns the loss.
     pub fn train_step(&mut self) -> Result<f64> {
+        // Default-group scheduled LR (metrics; per-group LRs are set below).
         let step_lr = self.cfg.schedule.lr_at(self.cfg.optim.lr, self.step);
 
         // ---- forward/backward through the AOT train artifact -------------
@@ -285,15 +272,17 @@ impl<'rt> Trainer<'rt> {
         }
 
         // ---- optimizer update (native or HLO engine) ---------------------
-        for opt in self.opts.iter_mut() {
-            opt.set_lr(step_lr);
-        }
+        // Per-group LR scheduling: each tensor's LR comes from its group's
+        // base LR through the run schedule.
+        let schedule = self.cfg.schedule;
+        let step = self.step;
+        self.popt.schedule_lr(|base| schedule.lr_at(base, step));
         // HLO tensors run through PJRT serially (the runtime is not
         // thread-safe); 32-bit-policy and artifact-less tensors fall
         // through to the native engine below.
         for i in 0..self.params.len() {
-            if self.hlo[i].is_some() {
-                self.hlo_update(i, step_lr, &grads[i])?;
+            if self.popt.has_hlo(i) {
+                self.hlo_update(i, &grads[i])?;
             }
         }
         // Native tensors: every tensor's phased plan executes phase-aligned
@@ -302,19 +291,7 @@ impl<'rt> Trainer<'rt> {
         // parallelism covers small tensors and pool dispatch is paid per
         // phase, not per tensor. Bit-identical to stepping tensors serially
         // (see optim::engine).
-        let mut fused = FusedStep::new();
-        for (((opt, p), g), hlo) in self
-            .opts
-            .iter_mut()
-            .zip(self.params.iter_mut())
-            .zip(grads.iter())
-            .zip(self.hlo.iter())
-        {
-            if hlo.is_none() {
-                fused.push(opt.as_mut(), p.as_mut_slice(), g.as_slice());
-            }
-        }
-        fused.run();
+        self.popt.step_native(&mut self.params, &grads);
 
         self.detector.observe(loss);
         self.step += 1;
@@ -324,19 +301,20 @@ impl<'rt> Trainer<'rt> {
         Ok(loss)
     }
 
-    /// Apply the update for tensor `i` through its HLO artifact.
-    fn hlo_update(&mut self, i: usize, lr: f32, grads: &[f32]) -> Result<()> {
-        let o = &mut self.opts[i];
-        o.set_t(o.t() + 1);
-        let t = o.t();
-        let cfg = &self.cfg.optim;
-        let st = self.hlo[i].as_mut().expect("hlo state");
+    /// Apply the update for tensor `i` through its HLO artifact. The
+    /// artifact and the hyperparameter vector both come from the tensor's
+    /// *resolved* group config (not any global config).
+    fn hlo_update(&mut self, i: usize, grads: &[f32]) -> Result<()> {
+        let (opt, st, ocfg) = self.popt.hlo_parts_mut(i).expect("hlo tensor");
+        opt.set_t(opt.t() + 1);
+        let t = opt.t();
+        let lr = opt.lr();
         let hp: [f32; 8] = if st.single_state {
-            [lr, cfg.beta1, cfg.weight_decay, if t <= 1 { 1.0 } else { 0.0 }, 0.0, 0.0, 0.0, 0.0]
+            [lr, ocfg.beta1, ocfg.weight_decay, if t <= 1 { 1.0 } else { 0.0 }, 0.0, 0.0, 0.0, 0.0]
         } else {
-            let bias1 = 1.0 - cfg.beta1.powi(t as i32);
-            let bias2 = 1.0 - cfg.beta2.powi(t as i32);
-            [lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay, bias1, bias2, 0.0]
+            let bias1 = 1.0 - ocfg.beta1.powi(t as i32);
+            let bias2 = 1.0 - ocfg.beta2.powi(t as i32);
+            [lr, ocfg.beta1, ocfg.beta2, ocfg.eps, ocfg.weight_decay, bias1, bias2, 0.0]
         };
         let mut inputs = vec![
             runtime::lit_f32(&hp),
@@ -411,7 +389,13 @@ impl<'rt> Trainer<'rt> {
         let t0 = Instant::now();
         let mut res = RunResult {
             state_bytes: self.state_bytes(),
-            hlo_updated_tensors: self.hlo.iter().filter(|h| h.is_some()).count(),
+            group_state_bytes: self
+                .popt
+                .group_reports()
+                .into_iter()
+                .map(|g| (g.label, g.state_bytes))
+                .collect(),
+            hlo_updated_tensors: self.popt.n_hlo(),
             ..Default::default()
         };
         for _ in 0..self.cfg.steps {
@@ -446,15 +430,42 @@ impl<'rt> Trainer<'rt> {
         Ok(res)
     }
 
+    /// Capture a checkpoint (params + per-tensor optimizer states keyed by
+    /// tensor name and group + step + data RNG). Refuses on the HLO engine:
+    /// HLO tensors keep their moments in the PJRT-side state mirrors, which
+    /// the checkpoint format does not carry — capturing would silently
+    /// record the zero-initialized native states instead.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        anyhow::ensure!(
+            self.popt.n_hlo() == 0,
+            "checkpointing is not supported with Engine::Hlo ({} tensors hold their \
+             optimizer state in HLO mirrors)",
+            self.popt.n_hlo()
+        );
+        Ok(Checkpoint::capture(self.step as u64, &self.data_rng, &self.params, &self.popt))
+    }
+
+    /// Restore a checkpoint captured from an equivalently-configured run
+    /// (tensors are matched by name; 8-bit states requantize losslessly).
+    /// The stability detector is reset: history from any discarded
+    /// post-checkpoint steps must not leak into the resumed run.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            self.popt.n_hlo() == 0,
+            "restoring is not supported with Engine::Hlo ({} tensors hold their \
+             optimizer state in HLO mirrors)",
+            self.popt.n_hlo()
+        );
+        ck.restore(&mut self.params, &mut self.popt)?;
+        self.data_rng = Rng::from_state(ck.rng_state);
+        self.step = ck.step as usize;
+        self.detector = StabilityDetector::new();
+        Ok(())
+    }
+
     /// Dequantized snapshots of every optimizer state (Figure 4 capture).
     pub fn state_snapshot(&self) -> Vec<(String, Vec<f32>)> {
-        let mut out = Vec::new();
-        for (spec, opt) in self.model.params.iter().zip(&self.opts) {
-            for (name, st) in opt.states() {
-                out.push((format!("{}::{}", spec.name, name), st.to_f32()));
-            }
-        }
-        out
+        self.popt.state_snapshot()
     }
 }
 

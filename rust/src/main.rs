@@ -2,17 +2,24 @@
 //! and quantization analysis.
 //!
 //! ```text
-//! bitopt8 train   [--config cfg.toml] [--model tiny_stable] [--optimizer adam8] ...
+//! bitopt8 train   [--config cfg.toml] [--model tiny_stable] [--optimizer adam8]
+//!                 [--override "pattern:key=val,..."] [--emb32] [--dry-run] ...
 //! bitopt8 repro   table1|table2|...|table8|fig3 [--steps N] [--seeds K]
 //! bitopt8 analyze fig2|fig4|fig5|fig6 [--n N]
 //! bitopt8 info    [--artifacts DIR]
 //! ```
+//!
+//! `train --dry-run` parses + validates the config (base optimizer,
+//! parameter groups, unsupported combos) and prints the resolved group
+//! layout over a representative LM tensor set — no artifacts needed, so CI
+//! smoke-checks every example TOML with it.
 
 use anyhow::Result;
 
 use bitopt8::analysis;
 use bitopt8::config::RunConfig;
 use bitopt8::coordinator::Trainer;
+use bitopt8::optim::{ParamOptimizer, TensorInfo};
 use bitopt8::quant::{dynamic_tree, linear, quantile, Format};
 use bitopt8::repro;
 use bitopt8::runtime::Runtime;
@@ -42,6 +49,43 @@ fn main() -> Result<()> {
     }
 }
 
+/// A representative transformer-LM tensor listing for `--dry-run` group
+/// resolution (mirrors `python/compile/model.py::param_specs` naming).
+fn dry_run_tensors() -> Vec<TensorInfo> {
+    let (v, d, s, ff) = (512usize, 64usize, 64usize, 256usize);
+    let mut t: Vec<(String, usize, Option<(usize, usize)>)> = vec![
+        ("embed.tok".into(), v * d, Some((v, d))),
+        ("embed.pos".into(), s * d, Some((s, d))),
+        ("embed.ln.bias".into(), d, None),
+        ("embed.ln.scale".into(), d, None),
+        ("final_ln.bias".into(), d, None),
+        ("final_ln.scale".into(), d, None),
+        ("lm_head".into(), d * v, Some((d, v))),
+    ];
+    for b in 0..2 {
+        let p = format!("block{b}");
+        t.push((format!("{p}.ln1.bias"), d, None));
+        t.push((format!("{p}.ln1.scale"), d, None));
+        t.push((format!("{p}.ln2.bias"), d, None));
+        t.push((format!("{p}.ln2.scale"), d, None));
+        for w in ["wq", "wk", "wv", "wo"] {
+            t.push((format!("{p}.attn.{w}"), d * d, Some((d, d))));
+        }
+        t.push((format!("{p}.mlp.w1"), d * ff, Some((d, ff))));
+        t.push((format!("{p}.mlp.b1"), ff, None));
+        t.push((format!("{p}.mlp.w2"), ff * d, Some((ff, d))));
+        t.push((format!("{p}.mlp.b2"), d, None));
+    }
+    t.into_iter()
+        .map(|(name, size, shape)| TensorInfo {
+            name,
+            size,
+            shape,
+            padded: size.next_multiple_of(2048),
+        })
+        .collect()
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::from_file(path)?,
@@ -49,6 +93,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.apply_args(args)?;
     println!("run: {}", cfg.describe());
+    if args.flag("dry-run") {
+        // Parse/build validation only: resolve the spec over a
+        // representative tensor set and print the group layout.
+        let popt = ParamOptimizer::build(cfg.optim_spec(), &dry_run_tensors(), None)?;
+        println!("{}", popt.describe());
+        println!("dry run OK (config parses, spec validates, optimizers build)");
+        return Ok(());
+    }
     let rt = Runtime::new(&cfg.artifacts_dir)?;
     let mut tr = Trainer::new(&rt, cfg)?;
     println!(
@@ -57,6 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         tr.n_params() as f64 / 1e6,
         tr.state_bytes() as f64 / 1e6,
     );
+    println!("{}", tr.param_optimizer().describe());
     let res = tr.train()?;
     println!("{} tensors updated via the HLO (Pallas) engine", res.hlo_updated_tensors);
     let first = res.losses.first().copied().unwrap_or(f64::NAN);

@@ -1,0 +1,754 @@
+//! Parameter groups: glob-style per-tensor config overrides and the
+//! model-level [`ParamOptimizer`] that owns every tensor's optimizer.
+//!
+//! The paper's headline usability claim is a drop-in replacement that only
+//! needs a two-line change — `GlobalOptimManager.override_config` in
+//! bitsandbytes — whose essential power is *per-parameter policy*: keep the
+//! stable embedding layer (§2.3) in 32-bit state while everything else runs
+//! 8-bit. This module is that surface:
+//!
+//! * [`Pattern`] — glob-style tensor-name pattern (`*`, `?`, and `|`
+//!   alternation).
+//! * [`GroupOverride`] — a pattern plus optional `bits` / `format` /
+//!   `blockwise` / `lr` / `weight_decay` / `beta1` / `beta2` / `eps`
+//!   overrides, parseable from `"pattern:key=val,key=val"` (the CLI
+//!   `--override` syntax) or a `[[optimizer.group]]` TOML table.
+//! * [`ParamOptimizer`] — built from an [`OptimSpec`](super::OptimSpec)
+//!   (base config + ordered overrides, first match wins) and the model's
+//!   tensor list; owns the per-tensor `Box<dyn Optimizer>`s and their HLO
+//!   mirrors, resolves each tensor's effective config at build time,
+//!   drives the fused phased step and per-group LR scheduling, and reports
+//!   `state_bytes` per group.
+//!
+//! The historical `emb32` trainer flag is sugar: [`GroupOverride::emb32`]
+//! is the equivalent `embed.tok|embed.pos: bits=32` override (exact names
+//! rather than `embed.*`, because the stable-embedding graph also has
+//! `embed.ln.*` LayerNorm tensors that the historical flag left 8-bit —
+//! the sugar is pinned bit-identical to the flag by
+//! `rust/tests/param_groups.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::spec::OptimSpec;
+use super::{Bits, FusedStep, OptimConfig, Optimizer};
+use crate::config::toml::TomlValue;
+use crate::quant::Format;
+
+// ------------------------------------------------------------------ Pattern
+
+/// Glob-style tensor-name pattern: `*` matches any (possibly empty) run,
+/// `?` matches one character, `|` separates alternatives (any may match).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pattern(String);
+
+impl Pattern {
+    pub fn new(s: &str) -> Result<Pattern> {
+        ensure!(!s.trim().is_empty(), "empty tensor-name pattern");
+        ensure!(
+            s.split('|').all(|alt| !alt.trim().is_empty()),
+            "pattern {s:?} has an empty alternative"
+        );
+        Ok(Pattern(s.trim().to_string()))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    pub fn matches(&self, name: &str) -> bool {
+        self.0.split('|').any(|alt| glob_match(alt.trim().as_bytes(), name.as_bytes()))
+    }
+}
+
+/// Iterative glob matcher with single-`*` backtracking (linear time).
+fn glob_match(pat: &[u8], text: &[u8]) -> bool {
+    let (mut p, mut t) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while t < text.len() {
+        if p < pat.len() && (pat[p] == b'?' || pat[p] == text[t]) {
+            p += 1;
+            t += 1;
+        } else if p < pat.len() && pat[p] == b'*' {
+            star = p;
+            mark = t;
+            p += 1;
+        } else if star != usize::MAX {
+            p = star + 1;
+            mark += 1;
+            t = mark;
+        } else {
+            return false;
+        }
+    }
+    while p < pat.len() && pat[p] == b'*' {
+        p += 1;
+    }
+    p == pat.len()
+}
+
+// ------------------------------------------------------------ GroupOverride
+
+/// One parameter group: a name pattern carrying optional config overrides.
+/// Unset fields inherit from the spec's base config. Overrides are applied
+/// first-match-wins in declaration order.
+#[derive(Clone, Debug, Default)]
+pub struct GroupOverride {
+    pub pattern: Option<Pattern>,
+    /// State precision: 8 or 32 (validated at parse time).
+    pub bits: Option<u32>,
+    pub format: Option<Format>,
+    pub blockwise: Option<bool>,
+    pub lr: Option<f32>,
+    pub weight_decay: Option<f32>,
+    pub beta1: Option<f32>,
+    pub beta2: Option<f32>,
+    pub eps: Option<f32>,
+}
+
+impl GroupOverride {
+    pub fn new(pattern: Pattern) -> GroupOverride {
+        GroupOverride { pattern: Some(pattern), ..GroupOverride::default() }
+    }
+
+    /// The §2.3 stable-embedding policy (the historical `emb32` flag) as a
+    /// group override. Exact embedding names, not `embed.*`: the stable
+    /// graph also has `embed.ln.{scale,bias}` tensors which the historical
+    /// flag kept 8-bit, and the sugar is pinned bit-identical to the flag.
+    pub fn emb32() -> GroupOverride {
+        GroupOverride::parse("embed.tok|embed.pos:bits=32").expect("static emb32 sugar")
+    }
+
+    /// Parse the CLI form `"pattern:key=val[,key=val...]"`, e.g.
+    /// `"embed.*:bits=32"` or `"block?.attn.*:lr=1e-4,weight_decay=0.1"`.
+    pub fn parse(text: &str) -> Result<GroupOverride> {
+        let (pat, rest) = text
+            .split_once(':')
+            .ok_or_else(|| anyhow!("override {text:?}: expected \"pattern:key=val[,key=val]\""))?;
+        let mut ov = GroupOverride::new(Pattern::new(pat)?);
+        for kv in rest.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("override {text:?}: bad pair {kv:?} (want key=val)"))?;
+            ov.set(k.trim(), v.trim())?;
+        }
+        ensure!(ov.has_effect(), "override {text:?} sets nothing");
+        Ok(ov)
+    }
+
+    /// Parse a `[[optimizer.group]]` TOML table (`pattern = "..."` plus any
+    /// override keys).
+    pub fn from_table(table: &BTreeMap<String, TomlValue>) -> Result<GroupOverride> {
+        let pat = table
+            .get("pattern")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("[[optimizer.group]] needs a string `pattern`"))?;
+        let mut ov = GroupOverride::new(Pattern::new(pat)?);
+        for (k, v) in table {
+            if k == "pattern" {
+                continue;
+            }
+            let text = match v {
+                TomlValue::Str(s) => s.clone(),
+                TomlValue::Int(i) => i.to_string(),
+                TomlValue::Float(f) => format!("{f}"),
+                TomlValue::Bool(b) => b.to_string(),
+            };
+            ov.set(k, &text)?;
+        }
+        ensure!(ov.has_effect(), "[[optimizer.group]] {pat:?} sets nothing");
+        Ok(ov)
+    }
+
+    /// Set one override key from its string form (shared TOML/CLI parser).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f32_of = |k: &str, v: &str| -> Result<f32> {
+            v.parse::<f32>().map_err(|_| anyhow!("override key {k}: bad number {v:?}"))
+        };
+        match key {
+            "bits" => {
+                let b: u32 =
+                    val.parse().map_err(|_| anyhow!("override key bits: bad value {val:?}"))?;
+                ensure!(b == 8 || b == 32, "bits must be 8 or 32, got {b}");
+                self.bits = Some(b);
+            }
+            "format" => {
+                self.format =
+                    Some(Format::parse(val).ok_or_else(|| anyhow!("unknown format {val:?}"))?);
+            }
+            "blockwise" => {
+                self.blockwise = Some(
+                    val.parse::<bool>()
+                        .map_err(|_| anyhow!("blockwise must be true or false, got {val:?}"))?,
+                );
+            }
+            "lr" => self.lr = Some(f32_of("lr", val)?),
+            "weight_decay" | "wd" => self.weight_decay = Some(f32_of("weight_decay", val)?),
+            "beta1" | "beta" => self.beta1 = Some(f32_of("beta1", val)?),
+            "beta2" => self.beta2 = Some(f32_of("beta2", val)?),
+            "eps" => self.eps = Some(f32_of("eps", val)?),
+            other => {
+                return Err(anyhow!(
+                    "unknown override key {other:?} (known: bits, format, blockwise, lr, \
+                     weight_decay, beta1, beta2, eps)"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    pub fn has_effect(&self) -> bool {
+        self.bits.is_some()
+            || self.format.is_some()
+            || self.blockwise.is_some()
+            || self.lr.is_some()
+            || self.weight_decay.is_some()
+            || self.beta1.is_some()
+            || self.beta2.is_some()
+            || self.eps.is_some()
+    }
+
+    pub fn pattern(&self) -> &Pattern {
+        self.pattern.as_ref().expect("GroupOverride built without a pattern")
+    }
+
+    /// Resolve: the base config with this group's overrides applied.
+    pub fn apply(&self, base: &OptimConfig) -> OptimConfig {
+        let mut cfg = *base;
+        if self.bits.is_some() || self.format.is_some() || self.blockwise.is_some() {
+            let (b0, f0, bw0) = match cfg.bits {
+                Bits::B32 => (32, Format::Dynamic, true),
+                Bits::B8 { format, blockwise } => (8, format, blockwise),
+            };
+            cfg.bits = match self.bits.unwrap_or(b0) {
+                32 => Bits::B32,
+                _ => Bits::B8 {
+                    format: self.format.unwrap_or(f0),
+                    blockwise: self.blockwise.unwrap_or(bw0),
+                },
+            };
+        }
+        if let Some(v) = self.lr {
+            cfg.lr = v;
+        }
+        if let Some(v) = self.weight_decay {
+            cfg.weight_decay = v;
+        }
+        if let Some(v) = self.beta1 {
+            cfg.beta1 = v;
+        }
+        if let Some(v) = self.beta2 {
+            cfg.beta2 = v;
+        }
+        if let Some(v) = self.eps {
+            cfg.eps = v;
+        }
+        cfg
+    }
+
+    /// Sanity of this override *against a base config* (parse-time errors
+    /// instead of silent fallbacks; see also `spec::validate_config`).
+    pub fn check_against(&self, base: &OptimConfig) -> Result<()> {
+        let resolved_bits = self.bits.unwrap_or(match base.bits {
+            Bits::B32 => 32,
+            Bits::B8 { .. } => 8,
+        });
+        if resolved_bits == 32 && (self.format.is_some() || self.blockwise.is_some()) {
+            return Err(anyhow!(
+                "group {:?} sets format/blockwise but resolves to 32-bit state \
+                 (add bits = 8 or drop the quantization keys)",
+                self.pattern().as_str()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonical `pattern:key=val,...` form (round-trips through `parse`).
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(b) = self.bits {
+            parts.push(format!("bits={b}"));
+        }
+        if let Some(f) = self.format {
+            parts.push(format!("format={}", f.name()));
+        }
+        if let Some(b) = self.blockwise {
+            parts.push(format!("blockwise={b}"));
+        }
+        if let Some(v) = self.lr {
+            parts.push(format!("lr={v}"));
+        }
+        if let Some(v) = self.weight_decay {
+            parts.push(format!("weight_decay={v}"));
+        }
+        if let Some(v) = self.beta1 {
+            parts.push(format!("beta1={v}"));
+        }
+        if let Some(v) = self.beta2 {
+            parts.push(format!("beta2={v}"));
+        }
+        if let Some(v) = self.eps {
+            parts.push(format!("eps={v}"));
+        }
+        format!("{}:{}", self.pattern().as_str(), parts.join(","))
+    }
+}
+
+// ----------------------------------------------------------- ParamOptimizer
+
+/// What [`ParamOptimizer::build`] needs to know about one model tensor.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    /// Element count.
+    pub size: usize,
+    /// (rows, cols) for 2-D tensors — enables factored second moments.
+    pub shape: Option<(usize, usize)>,
+    /// Size rounded up to a quantization-block multiple (HLO state layout);
+    /// unused when no HLO environment is supplied.
+    pub padded: usize,
+}
+
+/// HLO-engine build environment: the artifact block size plus a lookup from
+/// (optimizer kind key, tensor size) to the compiled artifact file.
+pub struct HloEnv<'a> {
+    pub block: usize,
+    pub artifact_for: &'a dyn Fn(&str, usize) -> Option<String>,
+}
+
+/// 8-bit optimizer state mirrored for the HLO engine (padded layout).
+pub struct HloMirror {
+    pub artifact: String,
+    pub codes1: Vec<u8>,
+    pub absmax1: Vec<f32>,
+    pub codes2: Vec<u8>,
+    pub absmax2: Vec<f32>,
+    /// momentum artifacts carry a single state
+    pub single_state: bool,
+}
+
+/// Per-group summary for reporting (`state_bytes`, CLI/metrics output).
+#[derive(Clone, Debug)]
+pub struct GroupReport {
+    /// "default" for the base config, else the group's pattern.
+    pub label: String,
+    /// Resolved config description (e.g. "8-bit[dynamic,blockwise] adam").
+    pub config: String,
+    pub tensors: usize,
+    pub params: usize,
+    pub state_bytes: usize,
+}
+
+struct TensorSlot {
+    name: String,
+    /// 0 = default group (base config); g+1 = spec.groups[g].
+    group: usize,
+    cfg: OptimConfig,
+    size: usize,
+    opt: Box<dyn Optimizer>,
+    hlo: Option<HloMirror>,
+}
+
+/// The model-level optimizer: every tensor's `Box<dyn Optimizer>` (plus its
+/// HLO mirror when the HLO engine is active), with each tensor's effective
+/// config resolved from an [`OptimSpec`] at build time. Replaces the
+/// trainer's parallel `opts`/`hlo` vectors and the hard-coded `emb32`
+/// special case.
+pub struct ParamOptimizer {
+    spec: OptimSpec,
+    slots: Vec<TensorSlot>,
+}
+
+impl ParamOptimizer {
+    /// Resolve every tensor's config (first matching group wins), validate
+    /// it, and build the per-tensor optimizers. With an [`HloEnv`], tensors
+    /// whose *resolved* config has a compiled update artifact additionally
+    /// get an [`HloMirror`] — the artifact is derived from the per-tensor
+    /// resolved kind and precision, not from any global config.
+    pub fn build(
+        spec: OptimSpec,
+        tensors: &[TensorInfo],
+        hlo: Option<HloEnv<'_>>,
+    ) -> Result<ParamOptimizer> {
+        spec.validate()?;
+        let mut slots = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            let (cfg, group) = spec.resolve(&t.name);
+            let opt = super::build(&cfg, t.size, t.shape);
+            let mirror = hlo.as_ref().and_then(|env| Self::make_hlo_mirror(&cfg, t, env));
+            slots.push(TensorSlot {
+                name: t.name.clone(),
+                group,
+                cfg,
+                size: t.size,
+                opt,
+                hlo: mirror,
+            });
+        }
+        Ok(ParamOptimizer { spec, slots })
+    }
+
+    /// HLO mirror for one tensor, from its *resolved* config. Artifacts
+    /// exist only for quantized Adam/AdamW/Momentum in the paper's dynamic
+    /// block-wise layout; everything else (including 32-bit-policy groups)
+    /// stays on the native engine.
+    fn make_hlo_mirror(cfg: &OptimConfig, t: &TensorInfo, env: &HloEnv<'_>) -> Option<HloMirror> {
+        if !matches!(cfg.bits, Bits::B8 { format: Format::Dynamic, blockwise: true }) {
+            return None;
+        }
+        let (kind_key, single) = cfg.kind.hlo_kind_key()?;
+        let artifact = (env.artifact_for)(kind_key, t.size)?;
+        let zero = Format::Dynamic.signed_codebook().encode(0.0);
+        let zero_u = Format::Dynamic.unsigned_codebook().encode(0.0);
+        let nb = t.padded / env.block;
+        Some(HloMirror {
+            artifact,
+            codes1: vec![zero; t.padded],
+            absmax1: vec![0.0; nb],
+            codes2: if single { Vec::new() } else { vec![zero_u; t.padded] },
+            absmax2: if single { Vec::new() } else { vec![0.0; nb] },
+            single_state: single,
+        })
+    }
+
+    pub fn spec(&self) -> &OptimSpec {
+        &self.spec
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn tensor_name(&self, i: usize) -> &str {
+        &self.slots[i].name
+    }
+
+    /// Resolved effective config of tensor `i`.
+    pub fn tensor_cfg(&self, i: usize) -> &OptimConfig {
+        &self.slots[i].cfg
+    }
+
+    /// Group index of tensor `i` (0 = default, g+1 = spec.groups[g]).
+    pub fn group_of(&self, i: usize) -> usize {
+        self.slots[i].group
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.name == name)
+    }
+
+    pub fn opt(&self, i: usize) -> &dyn Optimizer {
+        self.slots[i].opt.as_ref()
+    }
+
+    pub fn opt_mut(&mut self, i: usize) -> &mut dyn Optimizer {
+        self.slots[i].opt.as_mut()
+    }
+
+    /// Total optimizer-state footprint (Table 1 "Mem saved" accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.opt.state_bytes()).sum()
+    }
+
+    /// Tensors updated through the HLO engine.
+    pub fn n_hlo(&self) -> usize {
+        self.slots.iter().filter(|s| s.hlo.is_some()).count()
+    }
+
+    pub fn has_hlo(&self, i: usize) -> bool {
+        self.slots[i].hlo.is_some()
+    }
+
+    /// Mutable access to tensor `i`'s optimizer + HLO mirror (plus its
+    /// resolved config) — the coordinator's HLO dispatch path.
+    pub fn hlo_parts_mut(
+        &mut self,
+        i: usize,
+    ) -> Option<(&mut dyn Optimizer, &mut HloMirror, OptimConfig)> {
+        let slot = &mut self.slots[i];
+        let cfg = slot.cfg;
+        let opt = slot.opt.as_mut();
+        slot.hlo.as_mut().map(|h| (opt, h, cfg))
+    }
+
+    /// Per-group LR scheduling: set each tensor's learning rate from its
+    /// *group's* base LR through the caller's schedule.
+    pub fn schedule_lr(&mut self, lr_at: impl Fn(f32) -> f32) {
+        for slot in self.slots.iter_mut() {
+            let lr = lr_at(slot.cfg.lr);
+            slot.opt.set_lr(lr);
+        }
+    }
+
+    /// One fused native training step over every tensor that is not on the
+    /// HLO engine: all tensors' phased plans merged phase-aligned into one
+    /// pool batch per phase (see `optim::engine`). Bit-identical to
+    /// stepping the tensors serially.
+    pub fn step_native(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(self.slots.len(), params.len());
+        assert_eq!(self.slots.len(), grads.len());
+        let mut fused = FusedStep::new();
+        for ((slot, p), g) in self.slots.iter_mut().zip(params.iter_mut()).zip(grads.iter()) {
+            if slot.hlo.is_none() {
+                fused.push(slot.opt.as_mut(), p.as_mut_slice(), g.as_slice());
+            }
+        }
+        fused.run();
+    }
+
+    /// Per-group breakdown (every group reported, matched or not, plus the
+    /// default group first).
+    pub fn group_reports(&self) -> Vec<GroupReport> {
+        let n_groups = self.spec.groups.len() + 1;
+        let mut reports: Vec<GroupReport> = (0..n_groups)
+            .map(|g| GroupReport {
+                label: self.spec.group_label(g),
+                config: String::new(),
+                tensors: 0,
+                params: 0,
+                state_bytes: 0,
+            })
+            .collect();
+        for slot in &self.slots {
+            let r = &mut reports[slot.group];
+            if r.config.is_empty() {
+                r.config = slot.cfg.describe();
+            }
+            r.tensors += 1;
+            r.params += slot.size;
+            r.state_bytes += slot.opt.state_bytes();
+        }
+        // Groups with no matching tensor still show their would-be config.
+        for (g, r) in reports.iter_mut().enumerate() {
+            if r.config.is_empty() {
+                let cfg = if g == 0 {
+                    self.spec.base
+                } else {
+                    self.spec.groups[g - 1].apply(&self.spec.base)
+                };
+                r.config = cfg.describe();
+            }
+        }
+        reports
+    }
+
+    /// Multi-line human description of the group layout.
+    pub fn describe(&self) -> String {
+        self.group_reports()
+            .iter()
+            .map(|r| {
+                format!(
+                    "group {:<24} {:<28} {:>3} tensors {:>10} params {:>10.2} KB state",
+                    r.label,
+                    r.config,
+                    r.tensors,
+                    r.params,
+                    r.state_bytes as f64 / 1e3
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Dequantized snapshots of every optimizer state, keyed
+    /// `tensor::state` (Figure 4 capture; checkpointing uses
+    /// [`ParamOptimizer::opt`]/[`ParamOptimizer::opt_mut`] directly).
+    pub fn state_snapshot(&self) -> Vec<(String, Vec<f32>)> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            for (name, st) in slot.opt.states() {
+                out.push((format!("{}::{}", slot.name, name), st.to_f32()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::OptimKind;
+    use super::*;
+
+    #[test]
+    fn glob_patterns() {
+        let p = Pattern::new("embed.*").unwrap();
+        assert!(p.matches("embed.tok"));
+        assert!(p.matches("embed.ln.bias"));
+        assert!(!p.matches("block0.embed"));
+        let p = Pattern::new("block?.attn.*").unwrap();
+        assert!(p.matches("block0.attn.wq"));
+        assert!(!p.matches("block12.attn.wq"));
+        let p = Pattern::new("*.bias").unwrap();
+        assert!(p.matches("block0.mlp.b1.bias"));
+        assert!(!p.matches("bias_less"));
+        let p = Pattern::new("embed.tok|embed.pos").unwrap();
+        assert!(p.matches("embed.tok") && p.matches("embed.pos"));
+        assert!(!p.matches("embed.ln.bias"));
+        let p = Pattern::new("*").unwrap();
+        assert!(p.matches("anything.at.all") && p.matches(""));
+        assert!(Pattern::new("").is_err());
+        assert!(Pattern::new("a||b").is_err());
+    }
+
+    #[test]
+    fn override_parse_roundtrip() {
+        let ov = GroupOverride::parse("embed.*:bits=32").unwrap();
+        assert_eq!(ov.bits, Some(32));
+        assert_eq!(ov.describe(), "embed.*:bits=32");
+        let ov =
+            GroupOverride::parse("head:bits=8,format=linear,blockwise=false,lr=0.01,wd=0.1")
+                .unwrap();
+        assert_eq!(ov.format, Some(Format::Linear));
+        assert_eq!(ov.blockwise, Some(false));
+        assert_eq!(ov.weight_decay, Some(0.1));
+        let re = GroupOverride::parse(&ov.describe()).unwrap();
+        assert_eq!(re.lr, ov.lr);
+        assert_eq!(re.format, ov.format);
+
+        assert!(GroupOverride::parse("no-colon").is_err());
+        assert!(GroupOverride::parse("p:bits=16").is_err());
+        assert!(GroupOverride::parse("p:bogus=1").is_err());
+        assert!(GroupOverride::parse("p:").is_err(), "no-op override");
+        assert!(GroupOverride::parse("p:lr=abc").is_err());
+    }
+
+    fn lm_tensors() -> Vec<TensorInfo> {
+        [
+            ("embed.tok", 512 * 64, Some((512, 64))),
+            ("embed.pos", 64 * 64, Some((64, 64))),
+            ("embed.ln.bias", 64, None),
+            ("block0.attn.wq", 64 * 64, Some((64, 64))),
+            ("block0.mlp.w1", 64 * 256, Some((64, 256))),
+            ("lm_head", 64 * 512, Some((64, 512))),
+        ]
+        .into_iter()
+        .map(|(name, size, shape)| TensorInfo {
+            name: name.to_string(),
+            size,
+            shape,
+            padded: size.next_multiple_of(2048),
+        })
+        .collect()
+    }
+
+    #[test]
+    fn first_match_wins_resolution() {
+        let base = OptimConfig::adam(1e-3, Bits::b8_dynamic());
+        let spec = OptimSpec::with_groups(
+            base,
+            vec![
+                GroupOverride::parse("embed.tok:lr=0.5").unwrap(),
+                GroupOverride::parse("embed.*:bits=32").unwrap(),
+                GroupOverride::parse("embed.tok:lr=0.9").unwrap(), // shadowed
+            ],
+        );
+        let popt = ParamOptimizer::build(spec, &lm_tensors(), None).unwrap();
+        let tok = popt.find("embed.tok").unwrap();
+        // first group wins: lr override only, still 8-bit
+        assert_eq!(popt.group_of(tok), 1);
+        assert_eq!(popt.tensor_cfg(tok).lr, 0.5);
+        assert_eq!(popt.tensor_cfg(tok).bits, Bits::b8_dynamic());
+        // embed.pos + embed.ln.bias fall to the second group
+        let pos = popt.find("embed.pos").unwrap();
+        assert_eq!(popt.group_of(pos), 2);
+        assert_eq!(popt.tensor_cfg(pos).bits, Bits::B32);
+        // non-embedding tensors keep the base
+        let wq = popt.find("block0.attn.wq").unwrap();
+        assert_eq!(popt.group_of(wq), 0);
+        assert_eq!(popt.tensor_cfg(wq).bits, Bits::b8_dynamic());
+    }
+
+    #[test]
+    fn group_reports_cover_all_tensors_and_bytes() {
+        let base = OptimConfig::adam(1e-3, Bits::b8_dynamic());
+        let spec = OptimSpec::with_groups(base, vec![GroupOverride::emb32()]);
+        let popt = ParamOptimizer::build(spec, &lm_tensors(), None).unwrap();
+        let reports = popt.group_reports();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].label, "default");
+        assert_eq!(reports.iter().map(|r| r.tensors).sum::<usize>(), popt.n_tensors());
+        assert_eq!(reports.iter().map(|r| r.state_bytes).sum::<usize>(), popt.state_bytes());
+        // the 32-bit embedding group costs ~4x more bytes per param
+        let emb = &reports[1];
+        assert_eq!(emb.tensors, 2);
+        assert!(emb.config.contains("32-bit"));
+        let per_param_emb = emb.state_bytes as f64 / emb.params as f64;
+        let per_param_def = reports[0].state_bytes as f64 / reports[0].params as f64;
+        assert!(per_param_emb > 3.0 * per_param_def, "{per_param_emb} vs {per_param_def}");
+    }
+
+    #[test]
+    fn per_group_lr_scheduling() {
+        let base = OptimConfig::adam(1e-3, Bits::B32);
+        let spec = OptimSpec::with_groups(
+            base,
+            vec![GroupOverride::parse("lm_head:lr=0.01").unwrap()],
+        );
+        let mut popt = ParamOptimizer::build(spec, &lm_tensors(), None).unwrap();
+        popt.schedule_lr(|b| b * 0.5);
+        let head = popt.find("lm_head").unwrap();
+        assert!((popt.opt(head).lr() - 0.005).abs() < 1e-9);
+        let other = popt.find("embed.tok").unwrap();
+        assert!((popt.opt(other).lr() - 0.0005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_native_matches_serial_per_tensor_stepping() {
+        use crate::util::rng::Rng;
+        let base = {
+            let mut c = OptimConfig::adam(0.01, Bits::b8_dynamic());
+            c.kind = OptimKind::AdamW;
+            c.weight_decay = 0.01;
+            c
+        };
+        let groups = vec![GroupOverride::emb32()];
+        let tensors = lm_tensors();
+        let mk_data = || {
+            let mut rng = Rng::new(99);
+            let params: Vec<Vec<f32>> = tensors
+                .iter()
+                .map(|t| (0..t.size).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let grads: Vec<Vec<f32>> = tensors
+                .iter()
+                .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+                .collect();
+            (params, grads)
+        };
+
+        let spec = OptimSpec::with_groups(base, groups.clone());
+        let mut popt = ParamOptimizer::build(spec, &tensors, None).unwrap();
+        let (mut p_fused, grads) = mk_data();
+        for _ in 0..3 {
+            popt.step_native(&mut p_fused, &grads);
+        }
+
+        // serial reference: same resolution, tensor-by-tensor stepping
+        let spec = OptimSpec::with_groups(base, groups);
+        let (mut p_serial, _) = mk_data();
+        let mut opts: Vec<Box<dyn Optimizer>> = tensors
+            .iter()
+            .map(|t| {
+                let (cfg, _) = spec.resolve(&t.name);
+                super::super::build(&cfg, t.size, t.shape)
+            })
+            .collect();
+        for _ in 0..3 {
+            for (i, opt) in opts.iter_mut().enumerate() {
+                opt.step(&mut p_serial[i], &grads[i]);
+            }
+        }
+        assert_eq!(p_fused, p_serial);
+        for (i, opt) in opts.iter().enumerate() {
+            for ((na, sa), (nb, sb)) in opt.states().iter().zip(popt.opt(i).states()) {
+                assert_eq!(*na, nb);
+                assert_eq!(sa.to_f32(), sb.to_f32());
+            }
+        }
+    }
+}

@@ -21,18 +21,32 @@
 //! which owns the load/update/store dance; the coordinator merges every
 //! tensor's phase-aligned items into one pool batch per phase per training
 //! step via [`engine::FusedStep`].
+//!
+//! Construction goes through the parameter-group surface: an
+//! [`spec::OptimSpec`] (base [`OptimConfig`] + ordered
+//! [`groups::GroupOverride`]s, first match wins) resolved per tensor by
+//! [`groups::ParamOptimizer`], which owns every tensor's optimizer (and HLO
+//! mirror) and drives the fused step and per-group LR scheduling. The §2.3
+//! stable-embedding policy is simply a `bits = 32` override on the
+//! embedding tensors ([`groups::GroupOverride::emb32`]).
 
 pub mod adafactor;
 pub mod adagrad;
 pub mod adam;
 pub mod engine;
+pub mod groups;
 pub mod lamb;
 pub mod lars;
 pub mod momentum;
 pub mod sm3;
+pub mod spec;
 pub mod state;
 
 pub use engine::{fused_update, FusedStep};
+pub use groups::{
+    GroupOverride, GroupReport, HloEnv, HloMirror, ParamOptimizer, Pattern, TensorInfo,
+};
+pub use spec::{validate_config, OptimSpec};
 pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 
 use crate::quant::{Format, BLOCK};
@@ -116,6 +130,28 @@ impl OptimKind {
             OptimKind::Adafactor => "adafactor",
             OptimKind::Adagrad => "adagrad",
             OptimKind::Sm3 => "sm3",
+        }
+    }
+
+    // ---- capability registry (drives parse-time validation and the HLO
+    // artifact selection in `groups::ParamOptimizer`) ----------------------
+
+    /// Whether this optimizer honors `bits = 8`. Adafactor and SM3 keep
+    /// their (factored) statistics in 32-bit by construction — asking for
+    /// 8-bit state is a config error, not a silent fallback
+    /// (`spec::validate_config`).
+    pub fn supports_8bit(&self) -> bool {
+        !matches!(self, OptimKind::Adafactor | OptimKind::Sm3)
+    }
+
+    /// AOT update-artifact key for the HLO engine, plus whether the
+    /// artifact carries a single state tensor. Only quantized Adam/AdamW
+    /// and Momentum have compiled Pallas kernels.
+    pub fn hlo_kind_key(&self) -> Option<(&'static str, bool)> {
+        match self {
+            OptimKind::Adam | OptimKind::AdamW => Some(("adam8", false)),
+            OptimKind::Momentum => Some(("momentum8", true)),
+            _ => None,
         }
     }
 }

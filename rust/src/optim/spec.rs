@@ -1,0 +1,213 @@
+//! `OptimSpec`: the declarative optimizer construction surface — one base
+//! [`OptimConfig`] plus an ordered list of [`GroupOverride`]s (first match
+//! wins). The spec is what configs (TOML `[[optimizer.group]]` tables, the
+//! CLI `--override` flag) parse into and what
+//! [`ParamOptimizer::build`](super::ParamOptimizer::build) consumes; it
+//! also centralizes *parse-time validation* of unsupported combinations,
+//! which previously fell through to silently-constructed fallbacks (e.g.
+//! `adafactor` with `bits = 8` built full 32-bit states without a word).
+
+use anyhow::{anyhow, Context, Result};
+
+use super::groups::GroupOverride;
+use super::{Bits, OptimConfig};
+use crate::quant::Format;
+
+/// Base optimizer config + ordered group overrides. Resolution is
+/// first-match-wins on the tensor name; tensors matching no group use the
+/// base config (group index 0).
+#[derive(Clone, Debug)]
+pub struct OptimSpec {
+    pub base: OptimConfig,
+    pub groups: Vec<GroupOverride>,
+}
+
+impl OptimSpec {
+    pub fn new(base: OptimConfig) -> OptimSpec {
+        OptimSpec { base, groups: Vec::new() }
+    }
+
+    pub fn with_groups(base: OptimConfig, groups: Vec<GroupOverride>) -> OptimSpec {
+        OptimSpec { base, groups }
+    }
+
+    /// Effective config for a tensor name, plus its group index
+    /// (0 = default/base, g+1 = `groups[g]`).
+    pub fn resolve(&self, name: &str) -> (OptimConfig, usize) {
+        for (g, ov) in self.groups.iter().enumerate() {
+            if ov.pattern().matches(name) {
+                return (ov.apply(&self.base), g + 1);
+            }
+        }
+        (self.base, 0)
+    }
+
+    /// Label for a group index as returned by [`OptimSpec::resolve`].
+    pub fn group_label(&self, group: usize) -> String {
+        if group == 0 {
+            "default".to_string()
+        } else {
+            self.groups[group - 1].pattern().as_str().to_string()
+        }
+    }
+
+    /// Validate the base config and every group's resolved config — real
+    /// errors at parse/build time instead of silent fallbacks.
+    pub fn validate(&self) -> Result<()> {
+        validate_config(&self.base).context("base optimizer config")?;
+        for (g, ov) in self.groups.iter().enumerate() {
+            let label = ov.pattern().as_str().to_string();
+            ov.check_against(&self.base)
+                .with_context(|| format!("optimizer group {} ({label:?})", g + 1))?;
+            validate_config(&ov.apply(&self.base))
+                .with_context(|| format!("optimizer group {} ({label:?})", g + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Compact one-line form: base config plus each override.
+    pub fn describe(&self) -> String {
+        if self.groups.is_empty() {
+            self.base.describe()
+        } else {
+            let ovs: Vec<String> = self.groups.iter().map(|g| g.describe()).collect();
+            format!("{} [{}]", self.base.describe(), ovs.join(" "))
+        }
+    }
+}
+
+/// Reject optimizer configs that the substrate cannot honor, instead of
+/// letting `optim::build` silently construct a fallback:
+///
+/// * `adafactor` / `sm3` with `bits = 8` — their factored row/column
+///   statistics are inherently 32-bit; the old path built full-precision
+///   states while claiming 8-bit.
+/// * `quantile` format without block-wise normalization — the quantile
+///   codebook is calibrated on unit-normalized *block* statistics (Appendix
+///   F.2 evaluates it block-wise only); a single tensor-wide block voids
+///   the calibration.
+/// * Out-of-range hyperparameters (non-finite or non-positive `lr`, betas
+///   outside `[0, 1)`, negative `eps`/`weight_decay`).
+pub fn validate_config(cfg: &OptimConfig) -> Result<()> {
+    if let Bits::B8 { format, blockwise } = cfg.bits {
+        if !cfg.kind.supports_8bit() {
+            return Err(anyhow!(
+                "{} has no 8-bit state implementation (its factored statistics are \
+                 inherently 32-bit); use bits = 32",
+                cfg.kind.name()
+            ));
+        }
+        if format == Format::Quantile && !blockwise {
+            return Err(anyhow!(
+                "quantile format requires blockwise = true (the codebook is calibrated \
+                 on unit-normalized block statistics)"
+            ));
+        }
+    }
+    if !cfg.lr.is_finite() || cfg.lr <= 0.0 {
+        return Err(anyhow!("lr must be finite and > 0, got {}", cfg.lr));
+    }
+    for (name, v) in [("beta1", cfg.beta1), ("beta2", cfg.beta2)] {
+        if !(0.0..1.0).contains(&v) {
+            return Err(anyhow!("{name} must be in [0, 1), got {v}"));
+        }
+    }
+    if cfg.eps.is_nan() || cfg.eps < 0.0 {
+        return Err(anyhow!("eps must be >= 0, got {}", cfg.eps));
+    }
+    if cfg.weight_decay.is_nan() || cfg.weight_decay < 0.0 {
+        return Err(anyhow!("weight_decay must be >= 0, got {}", cfg.weight_decay));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::OptimKind;
+    use super::*;
+
+    fn base8() -> OptimConfig {
+        OptimConfig::adam(1e-3, Bits::b8_dynamic())
+    }
+
+    #[test]
+    fn resolve_falls_back_to_base() {
+        let spec = OptimSpec::new(base8());
+        let (cfg, g) = spec.resolve("block0.attn.wq");
+        assert_eq!(g, 0);
+        assert_eq!(cfg.bits, Bits::b8_dynamic());
+        assert_eq!(spec.group_label(0), "default");
+    }
+
+    #[test]
+    fn emb32_sugar_resolves_embeddings_to_32bit() {
+        let spec = OptimSpec::with_groups(base8(), vec![GroupOverride::emb32()]);
+        for name in ["embed.tok", "embed.pos"] {
+            let (cfg, g) = spec.resolve(name);
+            assert_eq!(g, 1, "{name}");
+            assert_eq!(cfg.bits, Bits::B32, "{name}");
+        }
+        // exactly the historical flag's tensor set: embed.ln.* stays 8-bit
+        for name in ["embed.ln.bias", "embed.ln.scale", "lm_head"] {
+            let (cfg, g) = spec.resolve(name);
+            assert_eq!(g, 0, "{name}");
+            assert_eq!(cfg.bits, Bits::b8_dynamic(), "{name}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_unsupported_combos() {
+        // adafactor/sm3 + 8-bit: previously a silent 32-bit fallback
+        for kind in [OptimKind::Adafactor, OptimKind::Sm3] {
+            let mut cfg = base8();
+            cfg.kind = kind;
+            assert!(validate_config(&cfg).is_err(), "{kind:?}");
+            cfg.bits = Bits::B32;
+            assert!(validate_config(&cfg).is_ok(), "{kind:?} 32-bit");
+        }
+        // quantile requires blockwise
+        let mut cfg = OptimConfig::adam(
+            1e-3,
+            Bits::B8 { format: Format::Quantile, blockwise: false },
+        );
+        assert!(validate_config(&cfg).is_err());
+        cfg.bits = Bits::B8 { format: Format::Quantile, blockwise: true };
+        assert!(validate_config(&cfg).is_ok());
+        // linear tensorwise stays legal (Table 3 ablation row)
+        cfg.bits = Bits::B8 { format: Format::Linear, blockwise: false };
+        assert!(validate_config(&cfg).is_ok());
+        // hyperparameter ranges
+        let mut cfg = base8();
+        cfg.lr = 0.0;
+        assert!(validate_config(&cfg).is_err());
+        let mut cfg = base8();
+        cfg.beta2 = 1.0;
+        assert!(validate_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn spec_validation_covers_groups() {
+        // a group flipping an 8-bit base to adafactor-incompatible settings
+        let mut base = base8();
+        base.kind = OptimKind::Adafactor;
+        base.bits = Bits::B32;
+        let spec = OptimSpec::with_groups(
+            base,
+            vec![GroupOverride::parse("embed.*:bits=8").unwrap()],
+        );
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("adafactor"), "{err:#}");
+
+        // quantization keys on a group that resolves to 32-bit state
+        let spec = OptimSpec::with_groups(
+            OptimConfig::adam(1e-3, Bits::B32),
+            vec![GroupOverride::parse("embed.*:format=linear").unwrap()],
+        );
+        assert!(spec.validate().is_err());
+
+        // a healthy mixed-precision spec
+        let spec = OptimSpec::with_groups(base8(), vec![GroupOverride::emb32()]);
+        spec.validate().unwrap();
+        assert!(spec.describe().contains("embed.tok|embed.pos:bits=32"));
+    }
+}

@@ -79,7 +79,9 @@ pub fn table1(args: &Args) -> Result<()> {
                 let mut cfg = base(model, steps, s);
                 cfg.optim = parse_optim(kind.name(), bits_of(bits), "dynamic", true).unwrap();
                 cfg.optim.lr = args.get_f64("lr", 1e-3) as f32;
-                cfg.emb32 = emb32 && bits != Bits::B32;
+                if emb32 && bits != Bits::B32 {
+                    cfg.push_emb32();
+                }
                 cfg
             },
             &seeds,
@@ -200,7 +202,9 @@ pub fn table3(args: &Args) -> Result<()> {
             cfg.optim.eps = eps;
             cfg.optim.beta1 = b1;
             cfg.optim.beta2 = b2;
-            cfg.emb32 = stable && is8;
+            if stable && is8 {
+                cfg.push_emb32();
+            }
             // grad clipping off: the paper's instability manifests as
             // exploding gradients; clipping would mask the ablation signal.
             cfg.grad_clip = 0.0;
@@ -281,7 +285,9 @@ pub fn table7(args: &Args) -> Result<()> {
                 let mut cfg = base(model, steps, s);
                 cfg.optim = parse_optim(kind, bits, "dynamic", true).unwrap();
                 cfg.optim.lr = args.get_f64("lr", lr) as f32;
-                cfg.emb32 = bits == 8;
+                if bits == 8 {
+                    cfg.push_emb32();
+                }
                 cfg
             },
             &seeds,
@@ -319,7 +325,9 @@ pub fn table8(args: &Args) -> Result<()> {
                             base(if ln { &stable_name } else { preset }, steps, s);
                         cfg.optim = parse_optim("adam", 8, "dynamic", true).unwrap();
                         cfg.optim.lr = args.get_f64("lr", 1e-3) as f32;
-                        cfg.emb32 = state32;
+                        if state32 {
+                            cfg.push_emb32();
+                        }
                         // decouple init from the graph variant
                         cfg.emb_init_override = Some(if xavier {
                             "xavier_uniform".to_string()
@@ -386,7 +394,9 @@ pub fn fig3(args: &Args) -> Result<()> {
                 cfg.optim.lr = base_lr;
                 cfg.optim.beta2 = 0.995;
                 cfg.optim.eps = 1e-7;
-                cfg.emb32 = bits == 8;
+                if bits == 8 {
+                    cfg.push_emb32();
+                }
                 patch(&mut cfg);
                 results.push(run_config(&rt, cfg)?);
             }

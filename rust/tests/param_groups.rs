@@ -1,0 +1,184 @@
+//! Parameter-group API tests that need no AOT artifacts: the `emb32`
+//! sugar is bit-identical to the historical hard-coded flag, group
+//! resolution is first-match-wins end to end from TOML, and the shipped
+//! mixed-precision example config builds the §2.3 stable-embedding layout.
+
+use bitopt8::config::RunConfig;
+use bitopt8::optim::{
+    build, Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer, TensorInfo,
+};
+use bitopt8::util::rng::Rng;
+
+/// A stable-embedding model's tensor listing (subset of
+/// `python/compile/model.py::param_specs` for a stable preset), with the
+/// historical `is_embedding` flag alongside.
+fn stable_model_tensors() -> Vec<(TensorInfo, bool)> {
+    // `is_embedding` is true for embed.tok/embed.pos only — the stable
+    // graph's embed.ln.* LayerNorm tensors are NOT embeddings, which is
+    // exactly why the emb32 sugar uses exact names instead of `embed.*`.
+    let specs: [(&str, usize, Option<(usize, usize)>, bool); 9] = [
+        ("embed.tok", 512 * 64, Some((512, 64)), true),
+        ("embed.pos", 64 * 64, Some((64, 64)), true),
+        ("embed.ln.bias", 64, None, false),
+        ("embed.ln.scale", 64, None, false),
+        ("block0.attn.wq", 64 * 64, Some((64, 64)), false),
+        ("block0.mlp.w1", 64 * 256, Some((64, 256)), false),
+        ("final_ln.bias", 64, None, false),
+        ("final_ln.scale", 64, None, false),
+        ("lm_head", 64 * 512, Some((64, 512)), false),
+    ];
+    specs
+        .into_iter()
+        .map(|(name, size, shape, is_emb)| {
+            (
+                TensorInfo {
+                    name: name.to_string(),
+                    size,
+                    shape,
+                    padded: size.next_multiple_of(2048),
+                },
+                is_emb,
+            )
+        })
+        .collect()
+}
+
+fn synth_data(tensors: &[(TensorInfo, bool)], steps: usize) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>) {
+    let mut rng = Rng::new(0xE3B);
+    let params: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|(t, _)| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect();
+    let grads: Vec<Vec<Vec<f32>>> = (0..steps)
+        .map(|_| {
+            tensors
+                .iter()
+                .map(|(t, _)| (0..t.size).map(|_| rng.normal() as f32 * 0.02).collect())
+                .collect()
+        })
+        .collect();
+    (params, grads)
+}
+
+/// The acceptance pin: running the emb32 *sugar* through `ParamOptimizer`
+/// is bit-identical to the historical trainer policy (`if emb32 &&
+/// p.is_embedding { bits = B32 }` + serial/fused stepping).
+#[test]
+fn emb32_sugar_bit_identical_to_legacy_flag() {
+    let base = OptimConfig::adam(2e-3, Bits::b8_dynamic());
+    let tensors = stable_model_tensors();
+    let steps = 4;
+
+    // New surface: sugar override, fused step through ParamOptimizer.
+    let spec = OptimSpec::with_groups(base, vec![GroupOverride::emb32()]);
+    let infos: Vec<TensorInfo> = tensors.iter().map(|(t, _)| t.clone()).collect();
+    let mut popt = ParamOptimizer::build(spec, &infos, None).unwrap();
+    let (mut p_new, grads) = synth_data(&tensors, steps);
+    for g in &grads {
+        popt.step_native(&mut p_new, g);
+    }
+
+    // Historical policy: hard-coded is_embedding check, per-tensor build,
+    // serial stepping (bit-identical to the fused engine by contract).
+    let (mut p_old, _) = synth_data(&tensors, steps);
+    let mut opts: Vec<_> = tensors
+        .iter()
+        .map(|(t, is_emb)| {
+            let mut ocfg = base;
+            if *is_emb {
+                ocfg.bits = Bits::B32;
+            }
+            build(&ocfg, t.size, t.shape)
+        })
+        .collect();
+    for g in &grads {
+        for (i, opt) in opts.iter_mut().enumerate() {
+            opt.step(&mut p_old[i], &g[i]);
+        }
+    }
+
+    assert_eq!(p_new, p_old, "emb32 sugar diverged from the legacy flag");
+    for (i, opt) in opts.iter().enumerate() {
+        for ((na, sa), (nb, sb)) in opt.states().iter().zip(popt.opt(i).states()) {
+            assert_eq!(*na, nb);
+            assert_eq!(sa.to_f32(), sb.to_f32(), "state {nb} of tensor {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn toml_groups_resolve_first_match_wins_end_to_end() {
+    let cfg = RunConfig::from_toml(
+        r#"
+[optimizer]
+kind = "adamw"
+bits = 8
+lr = 1e-3
+weight_decay = 0.01
+
+[[optimizer.group]]
+pattern = "embed.*"
+bits = 32
+
+[[optimizer.group]]
+pattern = "*.bias|*.scale"
+bits = 32
+weight_decay = 0.0
+
+[[optimizer.group]]
+pattern = "lm_head"
+lr = 5e-4
+"#,
+    )
+    .unwrap();
+    let tensors: Vec<TensorInfo> =
+        stable_model_tensors().into_iter().map(|(t, _)| t).collect();
+    let popt = ParamOptimizer::build(cfg.optim_spec(), &tensors, None).unwrap();
+
+    // embed.ln.bias matches group 1 (embed.*) before the bias/scale group
+    let i = popt.find("embed.ln.bias").unwrap();
+    assert_eq!(popt.group_of(i), 1);
+    assert_eq!(popt.tensor_cfg(i).bits, Bits::B32);
+    assert!((popt.tensor_cfg(i).weight_decay - 0.01).abs() < 1e-9);
+    // final_ln.scale falls to the bias/scale group with its wd override
+    let i = popt.find("final_ln.scale").unwrap();
+    assert_eq!(popt.group_of(i), 2);
+    assert_eq!(popt.tensor_cfg(i).weight_decay, 0.0);
+    // lm_head keeps 8-bit but gets its own lr
+    let i = popt.find("lm_head").unwrap();
+    assert_eq!(popt.group_of(i), 3);
+    assert_eq!(popt.tensor_cfg(i).bits, Bits::b8_dynamic());
+    assert!((popt.tensor_cfg(i).lr - 5e-4).abs() < 1e-9);
+    // plain weights stay on the base config
+    let i = popt.find("block0.attn.wq").unwrap();
+    assert_eq!(popt.group_of(i), 0);
+
+    // per-group reporting covers all four groups and sums to the total
+    let reports = popt.group_reports();
+    assert_eq!(reports.len(), 4);
+    assert_eq!(reports.iter().map(|r| r.state_bytes).sum::<usize>(), popt.state_bytes());
+}
+
+/// The shipped mixed-precision example config is the §2.3 policy: parse it
+/// from disk and check the resolved layout (CI additionally `--dry-run`s
+/// every config in `configs/`).
+#[test]
+fn shipped_mixed_precision_config_builds_stable_embedding_layout() {
+    let cfg = RunConfig::from_file("configs/mixed_precision_groups.toml").unwrap();
+    assert_eq!(cfg.model, "tiny_stable");
+    assert_eq!(cfg.groups.len(), 2);
+    let tensors: Vec<TensorInfo> =
+        stable_model_tensors().into_iter().map(|(t, _)| t).collect();
+    let popt = ParamOptimizer::build(cfg.optim_spec(), &tensors, None).unwrap();
+    for name in ["embed.tok", "embed.pos"] {
+        let i = popt.find(name).unwrap();
+        assert_eq!(popt.tensor_cfg(i).bits, Bits::B32, "{name}");
+    }
+    for name in ["embed.ln.bias", "block0.attn.wq", "lm_head"] {
+        let i = popt.find(name).unwrap();
+        assert_eq!(popt.tensor_cfg(i).bits, Bits::b8_dynamic(), "{name}");
+    }
+    let reports = popt.group_reports();
+    assert_eq!(reports.len(), 3);
+    assert!(reports[1].state_bytes > 0, "32-bit embedding group populated");
+}

@@ -113,7 +113,7 @@ fn stable_embedding_model_trains() {
     let Some(rt) = runtime() else { return };
     let mut cfg = nano_cfg(30);
     cfg.model = "nano_stable".into();
-    cfg.emb32 = true;
+    cfg.push_emb32();
     let mut tr = Trainer::new(&rt, cfg).unwrap();
     let res = tr.train().unwrap();
     assert!(!res.unstable);
@@ -128,9 +128,90 @@ fn emb32_policy_increases_state_bytes() {
     let mut cfg = nano_cfg(1);
     cfg.model = "nano_stable".into();
     let t_plain = Trainer::new(&rt, cfg.clone()).unwrap();
-    cfg.emb32 = true;
+    cfg.push_emb32();
     let t_emb32 = Trainer::new(&rt, cfg).unwrap();
     assert!(t_emb32.state_bytes() > t_plain.state_bytes());
+    // the per-group breakdown singles out the 32-bit embedding group
+    let reports = t_emb32.group_reports();
+    assert_eq!(reports.len(), 2);
+    assert!(reports[1].label.contains("embed.tok"));
+    assert!(reports[1].config.contains("32-bit"));
+    assert_eq!(
+        reports.iter().map(|r| r.state_bytes).sum::<usize>(),
+        t_emb32.state_bytes()
+    );
+}
+
+#[test]
+fn toml_mixed_precision_groups_train_end_to_end() {
+    // The §2.3 stable-embedding policy expressed TOML-only: embeddings in
+    // a 32-bit group, everything else 8-bit dynamic block-wise, per-group
+    // state bytes reported.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = RunConfig::from_toml(
+        r#"
+[model]
+name = "nano_stable"
+
+[optimizer]
+kind = "adam"
+bits = 8
+lr = 3e-3
+
+[[optimizer.group]]
+pattern = "embed.tok|embed.pos"
+bits = 32
+
+[train]
+steps = 30
+eval_every = 0
+eval_batches = 4
+seed = 7
+"#,
+    )
+    .unwrap();
+    cfg.schedule = Schedule::Constant;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let popt = tr.param_optimizer();
+    let i = popt.find("embed.tok").unwrap();
+    assert_eq!(popt.group_of(i), 1);
+    let res = tr.train().unwrap();
+    assert!(!res.unstable);
+    assert_eq!(res.group_state_bytes.len(), 2);
+    assert!(res.group_state_bytes.iter().all(|(_, b)| *b > 0));
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first - 0.8, "loss {first} -> {last}");
+}
+
+#[test]
+fn trainer_checkpoint_roundtrip_resumes_identically() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(10);
+    cfg.push_emb32();
+    let dir = std::env::temp_dir().join(format!("bitopt8_tr_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("c.bin");
+
+    let mut tr_a = Trainer::new(&rt, cfg.clone()).unwrap();
+    for _ in 0..5 {
+        tr_a.train_step().unwrap();
+    }
+    tr_a.checkpoint().unwrap().save(&path).unwrap();
+    let mut tail_a = Vec::new();
+    for _ in 0..5 {
+        tail_a.push(tr_a.train_step().unwrap());
+    }
+
+    let mut tr_b = Trainer::new(&rt, cfg).unwrap();
+    tr_b.restore(&bitopt8::coordinator::Checkpoint::load(&path).unwrap()).unwrap();
+    assert_eq!(tr_b.step, 5);
+    let mut tail_b = Vec::new();
+    for _ in 0..5 {
+        tail_b.push(tr_b.train_step().unwrap());
+    }
+    assert_eq!(tail_a, tail_b, "post-restore trajectory diverged");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -159,8 +240,10 @@ fn jsonl_metrics_written() {
     cfg.log_jsonl = Some(path.to_string_lossy().to_string());
     Trainer::new(&rt, cfg).unwrap().train().unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    assert_eq!(text.lines().count(), 5);
-    assert!(text.contains("\"loss\""));
+    // one run-start "groups" record + 5 step records
+    assert_eq!(text.lines().count(), 6);
+    assert!(text.lines().next().unwrap().contains("\"groups\""));
+    assert_eq!(text.lines().filter(|l| l.contains("\"loss\"")).count(), 5);
     std::fs::remove_dir_all(&dir).ok();
 }
 
