@@ -5,13 +5,24 @@
 //! inter-tensor parallelism covers tensors smaller than one quantization
 //! block.
 //!
-//! Two workloads:
+//! Three workloads:
 //! * `adam_many_small` — many equal small Adam tensors (block-local,
 //!   single-phase plans);
 //! * `reduction_mix` — a realistic embedding/projection/bias tensor-count
 //!   mix stepped by the reduction-bearing optimizers (LAMB, Adafactor,
 //!   factored SM3), whose two-/three-phase plans used to fall back to
-//!   caller-side whole-tensor execution.
+//!   caller-side whole-tensor execution;
+//! * `streaming_overlap` — gradients *produced serially* on the main
+//!   thread (a stand-in for PJRT round-trips / runtime gradient
+//!   production): `produce-then-fused` materializes every gradient before
+//!   one fused step (the pool idles during production), `streaming`
+//!   pushes each tensor into a `StreamingStep` the moment its gradient
+//!   exists, so the pool updates tensor i while the main thread produces
+//!   gradient i+1 — the overlap win this PR's tentpole is about.
+//!
+//! The first two workloads also run a `streaming` variant: admission per
+//! tensor costs more dispatch than the fused one-batch-per-phase, which is
+//! the price streaming pays when there is nothing to overlap.
 //!
 //! Emits machine-readable results to `BENCH_fused_step.json` (repo root)
 //! so the perf trajectory is tracked across PRs.
@@ -21,7 +32,11 @@
 
 use std::time::Duration;
 
-use bitopt8::optim::{build, engine::fused_update, Bits, OptimConfig, OptimKind, Optimizer};
+use bitopt8::optim::{
+    build,
+    engine::{fused_update, streaming_update, StreamingStep},
+    Bits, OptimConfig, OptimKind, Optimizer,
+};
 use bitopt8::util::args::Args;
 use bitopt8::util::bench::bench;
 use bitopt8::util::json::{num, obj, s, Json};
@@ -75,7 +90,16 @@ struct Entry {
     variant: &'static str,
     us_per_step: f64,
     iters: usize,
-    speedup_vs_per_tensor: f64,
+    /// Speedup vs the workload's first (baseline) variant.
+    speedup_vs_base: f64,
+}
+
+fn record(e: Entry, out: &mut Vec<Entry>) {
+    println!(
+        "{:<17} {:<10} {:<22} {:<18} {:>12.1} µs/step {:>8.2}x",
+        e.workload, e.optimizer, e.bits, e.variant, e.us_per_step, e.speedup_vs_base
+    );
+    out.push(e);
 }
 
 fn run_workload(
@@ -87,39 +111,91 @@ fn run_workload(
     out: &mut Vec<Entry>,
 ) {
     let mut base_us = 0.0f64;
-    for (variant, fused) in [("per-tensor", false), ("fused", true)] {
+    for variant in ["per-tensor", "fused", "streaming"] {
         let (mut opts, mut params, grads) = fleet(spec, bits);
-        let r = bench(variant, budget, 2000, || {
-            if fused {
-                fused_update(&mut opts, &mut params, &grads);
-            } else {
+        let r = bench(variant, budget, 2000, || match variant {
+            "fused" => fused_update(&mut opts, &mut params, &grads),
+            "streaming" => streaming_update(&mut opts, &mut params, &grads),
+            _ => {
                 for i in 0..opts.len() {
                     opts[i].step(&mut params[i], &grads[i]);
                 }
             }
         });
         let us = r.median_ns / 1e3;
-        if !fused {
+        if variant == "per-tensor" {
             base_us = us;
         }
-        println!(
-            "{:<16} {:<10} {:<22} {:<12} {:>12.1} µs/step {:>8.2}x",
-            workload,
-            optimizer,
-            bits.describe(),
-            variant,
-            us,
-            base_us / us
-        );
-        out.push(Entry {
+        let e = Entry {
             workload,
             optimizer,
             bits: bits.describe(),
             variant,
             us_per_step: us,
             iters: r.iters,
-            speedup_vs_per_tensor: base_us / us,
+            speedup_vs_base: base_us / us,
+        };
+        record(e, out);
+    }
+}
+
+/// Serial "gradient production" stand-in: one pass over the buffer on the
+/// main thread (deterministic xorshift-ish fill), proportional to tensor
+/// size like a real runtime transfer.
+fn produce(grad: &mut [f32], round: usize) {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64 ^ (round as u64);
+    for v in grad.iter_mut() {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *v = ((x >> 40) as f32 / (1 << 24) as f32 - 0.5) * 0.02;
+    }
+}
+
+/// The overlap workload: serial per-tensor gradient production on the main
+/// thread, either completed before one fused step (`produce-then-fused`)
+/// or overlapped with streaming admission (`streaming`).
+fn run_overlap(
+    optimizer: &'static str,
+    spec: &[Spec],
+    bits: Bits,
+    budget: Duration,
+    out: &mut Vec<Entry>,
+) {
+    let mut base_us = 0.0f64;
+    for variant in ["produce-then-fused", "streaming"] {
+        let (mut opts, mut params, mut grads) = fleet(spec, bits);
+        let mut round = 0usize;
+        let r = bench(variant, budget, 2000, || {
+            round += 1;
+            if variant == "streaming" {
+                let mut stream = StreamingStep::new();
+                let tensors = opts.iter_mut().zip(params.iter_mut()).zip(grads.iter_mut());
+                for ((opt, p), g) in tensors {
+                    produce(g, round);
+                    let g: &[f32] = g;
+                    stream.push(opt.as_mut(), p.as_mut_slice(), g);
+                }
+                stream.finish();
+            } else {
+                for g in grads.iter_mut() {
+                    produce(g, round);
+                }
+                fused_update(&mut opts, &mut params, &grads);
+            }
         });
+        let us = r.median_ns / 1e3;
+        if variant == "produce-then-fused" {
+            base_us = us;
+        }
+        let e = Entry {
+            workload: "streaming_overlap",
+            optimizer,
+            bits: bits.describe(),
+            variant,
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_base: base_us / us,
+        };
+        record(e, out);
     }
 }
 
@@ -168,6 +244,20 @@ fn main() {
         budget,
         &mut entries,
     );
+    // The overlap workload: serial gradient production hidden behind the
+    // streaming step (adam = bandwidth-bound single-phase plans, lamb =
+    // multi-phase plans that progress via poll while later gradients are
+    // still being produced).
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        run_overlap("adam", &adam_many_small(n_tensors, n), bits, budget, &mut entries);
+    }
+    run_overlap(
+        "lamb",
+        &reduction_mix(OptimKind::Lamb, layers),
+        Bits::b8_dynamic(),
+        budget,
+        &mut entries,
+    );
 
     let results: Vec<Json> = entries
         .iter()
@@ -179,7 +269,7 @@ fn main() {
                 ("variant", s(e.variant)),
                 ("us_per_step", num(e.us_per_step)),
                 ("iters", num(e.iters as f64)),
-                ("speedup_vs_per_tensor", num(e.speedup_vs_per_tensor)),
+                ("speedup_vs_base", num(e.speedup_vs_base)),
             ])
         })
         .collect();
@@ -193,6 +283,7 @@ fn main() {
     ]);
     std::fs::write(&out_path, doc.to_string() + "\n").expect("write bench json");
     println!("\nwrote {out_path} ({} results)", entries.len());
-    println!("(speedup from one pool batch per phase per step instead of one dispatch per");
-    println!(" tensor; grows with tensor count and core count)");
+    println!("(fused: one pool batch per phase per step instead of one dispatch per tensor;");
+    println!(" streaming_overlap: the pool updates tensor i while the main thread produces");
+    println!(" gradient i+1 — the win grows with serial production cost and core count)");
 }

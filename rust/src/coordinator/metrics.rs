@@ -1,7 +1,10 @@
-//! JSONL metrics sink — one JSON object per line, append-only; the
-//! experiment harness and examples tail these files to build loss curves.
+//! JSONL metrics sink — one JSON object per line; records append within a
+//! run, and [`JsonlSink::create`] starts each run on a fresh file (a
+//! re-used `--log-jsonl` path used to silently interleave two runs'
+//! records, including two `"groups"` headers, in one file). The experiment
+//! harness and examples tail these files to build loss curves.
 
-use std::fs::{File, OpenOptions};
+use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
@@ -14,16 +17,14 @@ pub struct JsonlSink {
 }
 
 impl JsonlSink {
+    /// Open `path` for a new run, truncating any previous run's records.
     pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlSink> {
         if let Some(dir) = path.as_ref().parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let f = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path.as_ref())
+        let f = File::create(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
         Ok(JsonlSink { w: BufWriter::new(f) })
     }
@@ -85,6 +86,31 @@ mod tests {
         let rec = Json::parse(lines[0]).unwrap();
         assert_eq!(rec.get("step").as_usize(), Some(1));
         assert_eq!(rec.get("ppl").as_f64(), Some(665.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_truncates_a_previous_runs_file() {
+        // regression: append-mode create silently interleaved two runs'
+        // records (including two "groups" headers) in one file
+        let dir = std::env::temp_dir().join(format!("bitopt8_metrics_tr_{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.record("groups", vec![("groups", Json::Arr(Vec::new()))]).unwrap();
+            sink.step(1, 6.5, 1e-3, vec![]).unwrap();
+            sink.step(2, 6.4, 1e-3, vec![]).unwrap();
+        }
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.record("groups", vec![("groups", Json::Arr(Vec::new()))]).unwrap();
+            sink.step(1, 7.0, 1e-3, vec![]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "second run must start fresh:\n{text}");
+        assert_eq!(text.lines().filter(|l| l.contains("\"groups\"")).count(), 1);
+        let step = Json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(step.get("loss").as_f64(), Some(7.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,6 +11,11 @@
 //!   config is 32-bit (stable-embedding §2.3) or has no HLO artifact fall
 //!   back to the native path; `RunResult::hlo_updated_tensors` reports how
 //!   many went through HLO so tests can assert the path is exercised.
+//!
+//! When both engines are active the step is *overlapped*: the native
+//! tensors stream onto the worker pool (group-aware admission order) while
+//! this thread drives the serial PJRT dispatches, so the pool is busy
+//! during every HLO round-trip instead of idling until the HLO pass ends.
 
 use std::time::Instant;
 
@@ -21,7 +26,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::stability::StabilityDetector;
 use crate::data::{corpus::Corpus, glue::GlueDataset};
-use crate::optim::{GroupReport, HloEnv, ParamOptimizer, TensorInfo};
+use crate::optim::{GroupReport, HloDispatch, HloEnv, ParamOptimizer, TensorInfo};
 use crate::runtime::{self, ModelEntry, Runtime};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -245,20 +250,17 @@ impl<'rt> Trainer<'rt> {
         }
 
         // ---- gradient hygiene --------------------------------------------
-        let mut sq = 0.0f64;
-        let mut finite = true;
-        for g in &grads {
-            for &v in g {
-                if !v.is_finite() {
-                    finite = false;
-                    break;
-                }
-                sq += v as f64 * v as f64;
-            }
-        }
+        let (finite, sq) = grad_stats(&grads);
         if !finite {
+            // A crashed step must still leave a trace in the loss curve:
+            // record it with a `grad_crash` marker instead of vanishing
+            // from the JSONL stream.
             self.detector.report_grad_crash();
             self.step += 1;
+            if let Some(sink) = self.metrics.as_mut() {
+                let marker = vec![("grad_crash", Json::Bool(true))];
+                sink.step(self.step, loss, step_lr as f64, marker)?;
+            }
             return Ok(loss);
         }
         let gnorm = sq.sqrt();
@@ -271,27 +273,33 @@ impl<'rt> Trainer<'rt> {
             }
         }
 
-        // ---- optimizer update (native or HLO engine) ---------------------
+        // ---- optimizer update (native + HLO engines, overlapped) ---------
         // Per-group LR scheduling: each tensor's LR comes from its group's
         // base LR through the run schedule.
         let schedule = self.cfg.schedule;
         let step = self.step;
         self.popt.schedule_lr(|base| schedule.lr_at(base, step));
-        // HLO tensors run through PJRT serially (the runtime is not
-        // thread-safe); 32-bit-policy and artifact-less tensors fall
-        // through to the native engine below.
-        for i in 0..self.params.len() {
-            if self.popt.has_hlo(i) {
-                self.hlo_update(i, &grads[i])?;
+        if self.popt.n_hlo() == 0 {
+            // Pure native run: the fused step's one-pool-batch-per-phase
+            // dispatch is strictly better when there is nothing to overlap.
+            // Bit-identical to streaming and to serial stepping.
+            self.popt.step_native(&mut self.params, &grads);
+        } else {
+            // HLO engine active: stream the native tensors onto the worker
+            // pool (group-aware admission: 32-bit groups first, then
+            // descending size) and drive the serial PJRT dispatches on
+            // THIS thread meanwhile — the runtime is not thread-safe, but
+            // the pool no longer idles through every HLO round-trip.
+            let rt = self.rt;
+            let (mut stream, mut dispatches) = self.popt.stream_native(&mut self.params, &grads);
+            stream.admit_all();
+            for d in dispatches.iter_mut() {
+                Self::hlo_dispatch(rt, d)?;
+                // let drained native phases progress between round-trips
+                stream.poll();
             }
+            stream.finish();
         }
-        // Native tensors: every tensor's phased plan executes phase-aligned
-        // — all tensors' phase-k items as ONE pool batch (reductions
-        // included), combines between barriers — so inter-tensor
-        // parallelism covers small tensors and pool dispatch is paid per
-        // phase, not per tensor. Bit-identical to stepping tensors serially
-        // (see optim::engine).
-        self.popt.step_native(&mut self.params, &grads);
 
         self.detector.observe(loss);
         self.step += 1;
@@ -301,14 +309,17 @@ impl<'rt> Trainer<'rt> {
         Ok(loss)
     }
 
-    /// Apply the update for tensor `i` through its HLO artifact. The
+    /// Apply one HLO-engine tensor's update through its PJRT artifact. The
     /// artifact and the hyperparameter vector both come from the tensor's
-    /// *resolved* group config (not any global config).
-    fn hlo_update(&mut self, i: usize, grads: &[f32]) -> Result<()> {
-        let (opt, st, ocfg) = self.popt.hlo_parts_mut(i).expect("hlo tensor");
-        opt.set_t(opt.t() + 1);
-        let t = opt.t();
-        let lr = opt.lr();
+    /// *resolved* group config (not any global config). Runs on the calling
+    /// thread — PJRT is not thread-safe — while the native stream crunches
+    /// on the worker pool.
+    fn hlo_dispatch(rt: &Runtime, d: &mut HloDispatch<'_>) -> Result<()> {
+        d.opt.set_t(d.opt.t() + 1);
+        let t = d.opt.t();
+        let lr = d.opt.lr();
+        let ocfg = &d.cfg;
+        let st = &mut *d.mirror;
         let hp: [f32; 8] = if st.single_state {
             [lr, ocfg.beta1, ocfg.weight_decay, if t <= 1 { 1.0 } else { 0.0 }, 0.0, 0.0, 0.0, 0.0]
         } else {
@@ -318,8 +329,8 @@ impl<'rt> Trainer<'rt> {
         };
         let mut inputs = vec![
             runtime::lit_f32(&hp),
-            runtime::lit_f32(&self.params[i]),
-            runtime::lit_f32(grads),
+            runtime::lit_f32(d.params.as_slice()),
+            runtime::lit_f32(d.grads),
             runtime::lit_u8(&st.codes1)?,
             runtime::lit_f32(&st.absmax1),
         ];
@@ -327,8 +338,8 @@ impl<'rt> Trainer<'rt> {
             inputs.push(runtime::lit_u8(&st.codes2)?);
             inputs.push(runtime::lit_f32(&st.absmax2));
         }
-        let outputs = self.rt.run(&st.artifact, &inputs)?;
-        self.params[i] = runtime::f32_of(&outputs[0])?;
+        let outputs = rt.run(&st.artifact, &inputs)?;
+        *d.params = runtime::f32_of(&outputs[0])?;
         st.codes1 = runtime::u8_of(&outputs[1])?;
         st.absmax1 = runtime::f32_of(&outputs[2])?;
         if !st.single_state {
@@ -412,7 +423,12 @@ impl<'rt> Trainer<'rt> {
                 }
             }
         }
-        if !self.detector.is_unstable() {
+        // Post-loop eval — unless the loop's last iteration already
+        // evaluated at this step (when `steps` is a multiple of
+        // `eval_every`, this used to push the same step's eval twice and
+        // pay a second full eval pass).
+        let evaluated_here = res.evals.last().map(|&(s, _)| s) == Some(self.step);
+        if !self.detector.is_unstable() && !evaluated_here {
             let (el, acc) = self.evaluate()?;
             res.evals.push((self.step, el));
             if let Some(a) = acc {
@@ -469,6 +485,24 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
+/// Gradient-hygiene scan: whether every value is finite, plus the global
+/// squared l2 norm. Stops at the first non-finite value — the remaining
+/// tensors cannot change the verdict, and the partial norm is unusable
+/// anyway (it previously kept accumulating Inf/NaN across the leftover
+/// tensors because the early exit only broke the inner loop).
+pub(crate) fn grad_stats(grads: &[Vec<f32>]) -> (bool, f64) {
+    let mut sq = 0.0f64;
+    for g in grads {
+        for &v in g {
+            if !v.is_finite() {
+                return (false, sq);
+            }
+            sq += v as f64 * v as f64;
+        }
+    }
+    (true, sq)
+}
+
 /// Convenience used by the repro harness: run one config end to end.
 pub fn run_config(rt: &Runtime, cfg: RunConfig) -> Result<RunResult> {
     let mut tr = Trainer::new(rt, cfg)?;
@@ -486,4 +520,30 @@ pub fn median_over_seeds(results: &[RunResult]) -> (f64, f64) {
     let unstable_pct = 100.0 * (results.len() - ok.len()) as f64 / results.len().max(1) as f64;
     let med = crate::util::stats::median(&ok);
     (med, unstable_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_stats_computes_global_sq_norm() {
+        let g = vec![vec![3.0f32], vec![4.0f32]];
+        let (finite, sq) = grad_stats(&g);
+        assert!(finite);
+        assert!((sq - 25.0).abs() < 1e-12);
+        let (finite, sq) = grad_stats(&[]);
+        assert!(finite);
+        assert_eq!(sq, 0.0);
+    }
+
+    #[test]
+    fn grad_stats_stops_at_first_non_finite() {
+        // regression: the old scan broke only the inner loop, so the
+        // remaining tensors kept polluting `sq` with Inf/NaN
+        let g = vec![vec![1.0f32, f32::NAN, 2.0], vec![f32::INFINITY; 1000]];
+        let (finite, sq) = grad_stats(&g);
+        assert!(!finite);
+        assert_eq!(sq, 1.0, "scan must stop at the first non-finite value");
+    }
 }

@@ -1,29 +1,41 @@
-//! Fused multi-tensor step executor — the top layer of the unified
-//! block-kernel execution engine.
+//! Fused and streaming multi-tensor step executors — the top layers of the
+//! unified block-kernel execution engine.
 //!
 //! Layering (see also `rust/src/optim/README.md`):
 //!
 //! 1. **Worker pool** (`util::parallel`) — persistent, lazily-initialized
-//!    threads; one batch dispatch per call instead of per-call spawning.
+//!    threads; one batch dispatch per call instead of per-call spawning,
+//!    plus detached batches (`submit`/`BatchHandle`) that run while the
+//!    submitting thread keeps working.
 //! 2. **Phased block plan** (`optim::state::StepPlan`) — one tensor's
 //!    update decomposed into phases of independent (block) tasks with
 //!    deterministic combines between them; the engine owns
 //!    dequantize → update → requantize and per-thread scratch.
-//! 3. **Fused step** (this module) — the phase-`k` items of *every* tensor
-//!    merged into a single pool batch, then all phase-`k` combines in
-//!    tensor order, then phase `k+1`. One pool batch per phase per
+//! 3. **Fused step** ([`FusedStep`]) — the phase-`k` items of *every*
+//!    tensor merged into a single pool batch, then all phase-`k` combines
+//!    in tensor order, then phase `k+1`. One pool batch per phase per
 //!    training step — never one per tensor — and every optimizer,
 //!    including the reduction-bearing ones (LARS, LAMB, Adafactor,
 //!    factored SM3), executes fully inside the batch.
+//! 4. **Streaming step** ([`StreamingStep`]) — tensors admitted
+//!    incrementally, each starting on the pool at `push` while the caller
+//!    is still producing later tensors' gradients or driving the serial
+//!    PJRT dispatches of the HLO engine. Trades the fused step's
+//!    one-batch-per-phase dispatch for overlap with the producer.
 //!
 //! Determinism: items never share mutable state, in-block order is fixed,
 //! combines fold partials in fixed order between barriers — so the fused
 //! step is bit-identical to stepping tensors one by one, at every thread
-//! count.
+//! count. The streaming step additionally exploits that *tensors* never
+//! share state: each tensor walks its own phases in the canonical
+//! [`StepPlan::execute`] order, so any interleaving across tensors — any
+//! admission order, any thread count — produces the same bits.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 
 use super::state::StepPlan;
 use super::Optimizer;
-use crate::util::parallel;
+use crate::util::parallel::{self, BatchHandle, SendPtr};
 
 /// One training step's worth of optimizer work across many tensors: every
 /// tensor's phased plan, executed phase-aligned — all tensors' phase-A
@@ -83,6 +95,204 @@ impl<'a> FusedStep<'a> {
             }
         }
     }
+}
+
+/// One tensor admitted to a [`StreamingStep`]: its phased plan, heap-pinned
+/// behind a raw pointer, plus the detached batch handle of the phase
+/// currently on the pool.
+///
+/// The plan is held as a `*mut` from `Box::into_raw` rather than as a
+/// `Box`: pool tasks read the plan through a derived pointer, and moving a
+/// `Box` (return-by-value from `new`, `Vec` growth in
+/// [`StreamingStep::push`]) re-asserts its unique-ownership claim, which
+/// would invalidate those derived pointers under the aliasing model. Raw
+/// pointers carry no such claim, so moves of this struct are inert; the
+/// allocation is reboxed and freed in `Drop`, after the in-flight batch
+/// has been joined.
+struct StreamTensor<'a> {
+    /// In-flight batch for phase `phase`'s items; joined before the plan
+    /// is mutated or freed.
+    handle: Option<BatchHandle<'static>>,
+    /// Heap `StepPlan`, owned by this struct (freed in `Drop`).
+    plan: *mut StepPlan<'a>,
+    /// The phase whose items are in flight; once every phase (and its
+    /// combine) has run, `handle` is `None` and the tensor is done.
+    phase: usize,
+}
+
+impl<'a> StreamTensor<'a> {
+    fn new(plan: StepPlan<'a>) -> StreamTensor<'a> {
+        let plan = Box::into_raw(Box::new(plan));
+        let mut t = StreamTensor { handle: None, plan, phase: 0 };
+        t.launch();
+        t
+    }
+
+    /// Shared view of the plan — only used while no batch of this tensor
+    /// is in flight (launch/advance sites) so no task aliases it.
+    fn plan(&self) -> &StepPlan<'a> {
+        // SAFETY: `plan` came from Box::into_raw in `new` and is freed
+        // only in Drop, after the handle drained.
+        unsafe { &*self.plan }
+    }
+
+    /// Submit the current phase's items to the pool (non-blocking).
+    fn launch(&mut self) {
+        if self.phase >= self.plan().n_phases() {
+            return;
+        }
+        let k = self.phase;
+        let n = self.plan().phase_items(k);
+        let plan = SendPtr(self.plan as *mut StepPlan<'static>);
+        // SAFETY (task body): items of one phase touch disjoint state, each
+        // index runs exactly once, and the combine / next phase only run
+        // after the handle drained — the same contract `FusedStep::run`
+        // relies on. The 'static cast is lifetime erasure only.
+        let task = move |i| unsafe { (*plan.0).run_item(k, i) };
+        // SAFETY (submit contract): the handle cannot leak — it lives in
+        // this private struct and is joined in `advance`/`Drop` before the
+        // plan (and the `'a` data it borrows) can die.
+        self.handle = Some(unsafe { parallel::submit(n, task) });
+    }
+
+    /// Whether any phase is still in flight or queued.
+    fn pending(&self) -> bool {
+        self.handle.is_some()
+    }
+
+    /// Join the in-flight phase (participating in its remaining work), run
+    /// its combine, and start the next phase.
+    fn advance(&mut self) {
+        let Some(handle) = self.handle.take() else { return };
+        handle.wait();
+        // SAFETY: the batch drained — this thread is the plan's only
+        // accessor until the next launch.
+        let combine = unsafe { (*self.plan).take_combine(self.phase) };
+        if let Some(combine) = combine {
+            combine();
+        }
+        self.phase += 1;
+        self.launch();
+    }
+
+    /// Advance only if the in-flight phase already drained (non-blocking).
+    fn try_advance(&mut self) -> bool {
+        let ready = self.handle.as_ref().is_some_and(|h| h.is_done());
+        if ready {
+            self.advance();
+        }
+        ready
+    }
+}
+
+impl Drop for StreamTensor<'_> {
+    fn drop(&mut self) {
+        // Join any in-flight batch before freeing the plan it reads. The
+        // handle re-throws a task panic on drop (when this thread is not
+        // already unwinding); catch it so the plan is freed either way,
+        // then re-throw.
+        let handle = self.handle.take();
+        let join = catch_unwind(AssertUnwindSafe(move || drop(handle)));
+        // SAFETY: `plan` came from Box::into_raw in `new`, is freed only
+        // here, and no task can reference it once the handle drained.
+        unsafe { drop(Box::from_raw(self.plan)) };
+        if let Err(p) = join {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Streaming multi-tensor step executor — the engine's fourth layer.
+///
+/// Where [`FusedStep`] needs every tensor's plan before anything runs (the
+/// phase-`k` items of all tensors form one barrier-aligned batch), a
+/// `StreamingStep` accepts tensors incrementally: [`StreamingStep::push`]
+/// puts the new tensor's phase-0 items on the worker pool and returns,
+/// so the caller can keep producing later tensors' gradients — or drive
+/// the HLO engine's serial PJRT dispatches — while the pool crunches.
+/// Tensors advance through their phases independently:
+/// [`StreamingStep::poll`] opportunistically joins drained phases (running
+/// the combine and launching the next phase) and [`StreamingStep::finish`]
+/// drains everything.
+///
+/// Determinism: tensors never share state, and each tensor's phases run in
+/// the canonical [`StepPlan::execute`] item/combine order — so a streaming
+/// step is bit-identical to [`FusedStep`] and to serial stepping, at every
+/// thread count and for every admission order
+/// (`rust/tests/streaming_parity.rs` pins this).
+///
+/// Dropping a `StreamingStep` without [`StreamingStep::finish`] (e.g. on
+/// an error-unwind in the caller) is memory-safe — every in-flight batch
+/// is joined — but leaves un-combined tensors mid-update; the step must be
+/// considered unapplied. Do not `mem::forget` a `StreamingStep`: skipping
+/// its drop would leak the in-flight batch handles that keep the pool's
+/// borrows of `params`/`grads` sound.
+#[derive(Default)]
+pub struct StreamingStep<'a> {
+    tensors: Vec<StreamTensor<'a>>,
+}
+
+impl<'a> StreamingStep<'a> {
+    pub fn new() -> StreamingStep<'a> {
+        StreamingStep { tensors: Vec::new() }
+    }
+
+    /// Admit one tensor: the optimizer's cheap step prologue (`t` advance,
+    /// bias corrections) runs here, the plan's phase-0 items start on the
+    /// pool, and the call returns without waiting. With 1 thread the items
+    /// run inline instead — same results, no overlap.
+    pub fn push(&mut self, opt: &'a mut dyn Optimizer, params: &'a mut [f32], grads: &'a [f32]) {
+        self.tensors.push(StreamTensor::new(opt.plan(params, grads)));
+        self.poll();
+    }
+
+    /// Number of admitted tensors.
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Admitted tensors that still have phases in flight or queued.
+    pub fn n_pending(&self) -> usize {
+        self.tensors.iter().filter(|t| t.pending()).count()
+    }
+
+    /// Non-blocking progress: for every tensor whose in-flight phase has
+    /// drained, run its combine and launch its next phase. Call this
+    /// between bouts of other main-thread work (the trainer calls it
+    /// between PJRT round-trips) so multi-phase plans keep moving.
+    pub fn poll(&mut self) {
+        for t in self.tensors.iter_mut() {
+            while t.try_advance() {}
+        }
+    }
+
+    /// Drain every admitted tensor through its remaining phases, with the
+    /// calling thread participating in the pool work. After this, every
+    /// admitted tensor's update is fully applied.
+    pub fn finish(mut self) {
+        for t in self.tensors.iter_mut() {
+            while t.pending() {
+                t.advance();
+            }
+        }
+    }
+}
+
+/// Step every tensor through the streaming engine — push in index order,
+/// then drain. Bit-identical to [`fused_update`] and to the serial
+/// per-tensor loop; used by benches and parity tests.
+pub fn streaming_update(
+    opts: &mut [Box<dyn Optimizer>],
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+) {
+    assert_eq!(opts.len(), params.len());
+    assert_eq!(opts.len(), grads.len());
+    let mut stream = StreamingStep::new();
+    for ((opt, p), g) in opts.iter_mut().zip(params.iter_mut()).zip(grads.iter()) {
+        stream.push(opt.as_mut(), p.as_mut_slice(), g.as_slice());
+    }
+    stream.finish();
 }
 
 /// Step every tensor through the fused engine — what the trainer's native
@@ -161,5 +371,71 @@ mod tests {
         let fused = FusedStep::new();
         assert_eq!(fused.n_items(), 0);
         fused.run();
+    }
+
+    #[test]
+    fn streaming_matches_serial_stepping_bitwise() {
+        // same mixed workload as the fused test: single-phase and
+        // multi-phase plans, sub-block to many-block sizes
+        let kinds = [
+            (OptimKind::Adam, 3usize),
+            (OptimKind::Adam, 2048),
+            (OptimKind::Momentum, 5000),
+            (OptimKind::Lamb, 1024),
+            (OptimKind::Lamb, 20000),
+            (OptimKind::Adam, 2049),
+        ];
+        for bits in [Bits::B32, Bits::b8_dynamic()] {
+            let (mut o_serial, mut p_serial, g) = fleet(&kinds, bits);
+            let (mut o_stream, mut p_stream, _) = fleet(&kinds, bits);
+            for _ in 0..3 {
+                for i in 0..o_serial.len() {
+                    o_serial[i].step(&mut p_serial[i], &g[i]);
+                }
+                streaming_update(&mut o_stream, &mut p_stream, &g);
+            }
+            assert_eq!(p_serial, p_stream, "params diverged ({})", bits.describe());
+            for (a, b) in o_serial.iter().zip(&o_stream) {
+                for ((na, sa), (nb, sb)) in a.states().iter().zip(b.states().iter()) {
+                    assert_eq!(na, nb);
+                    assert_eq!(sa.to_f32(), sb.to_f32(), "state {na} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_push_overlaps_with_caller_work() {
+        // Push each tensor, then do unrelated main-thread work before the
+        // next push / the final finish — the stream must tolerate arbitrary
+        // delays between admissions and still match serial stepping.
+        let kinds = [(OptimKind::Lamb, 6000usize), (OptimKind::Adam, 4096), (OptimKind::Adam, 7)];
+        let (mut o_serial, mut p_serial, g) = fleet(&kinds, Bits::b8_dynamic());
+        let (mut o_stream, mut p_stream, _) = fleet(&kinds, Bits::b8_dynamic());
+        for i in 0..o_serial.len() {
+            o_serial[i].step(&mut p_serial[i], &g[i]);
+        }
+        let mut stream = StreamingStep::new();
+        let mut busy = 0u64;
+        for ((opt, p), g) in o_stream.iter_mut().zip(p_stream.iter_mut()).zip(g.iter()) {
+            stream.push(opt.as_mut(), p.as_mut_slice(), g.as_slice());
+            // stand-in for a serial PJRT round-trip on the caller thread
+            for k in 0..20_000u64 {
+                busy = busy.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            stream.poll();
+        }
+        assert!(busy != 1, "keep the busy loop observable");
+        assert_eq!(stream.n_tensors(), 3);
+        stream.finish();
+        assert_eq!(p_serial, p_stream);
+    }
+
+    #[test]
+    fn empty_streaming_step_is_a_no_op() {
+        let stream = StreamingStep::new();
+        assert_eq!(stream.n_tensors(), 0);
+        assert_eq!(stream.n_pending(), 0);
+        stream.finish();
     }
 }

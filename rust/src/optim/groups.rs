@@ -17,8 +17,11 @@
 //!   (base config + ordered overrides, first match wins) and the model's
 //!   tensor list; owns the per-tensor `Box<dyn Optimizer>`s and their HLO
 //!   mirrors, resolves each tensor's effective config at build time,
-//!   drives the fused phased step and per-group LR scheduling, and reports
-//!   `state_bytes` per group.
+//!   drives the fused phased step ([`ParamOptimizer::step_native`]) or the
+//!   streaming split ([`ParamOptimizer::stream_native`]: a [`NativeStream`]
+//!   with group-aware admission order plus the [`HloDispatch`] units the
+//!   coordinator runs serially through PJRT while the pool crunches), and
+//!   per-group LR scheduling / `state_bytes` reporting.
 //!
 //! The historical `emb32` trainer flag is sugar: [`GroupOverride::emb32`]
 //! is the equivalent `embed.tok|embed.pos: bits=32` override (exact names
@@ -32,7 +35,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, ensure, Result};
 
 use super::spec::OptimSpec;
-use super::{Bits, FusedStep, OptimConfig, Optimizer};
+use super::{Bits, FusedStep, OptimConfig, Optimizer, StreamingStep};
 use crate::config::toml::TomlValue;
 use crate::quant::Format;
 
@@ -344,6 +347,110 @@ pub struct GroupReport {
     pub state_bytes: usize,
 }
 
+/// One native tensor queued for streaming admission. The pub metadata
+/// drives (and lets tests inspect) the group-aware admission policy; the
+/// borrows feed [`StreamingStep::push`] when the tensor is admitted.
+pub struct StreamSlot<'a> {
+    /// Model tensor index.
+    pub index: usize,
+    /// Group index (0 = default).
+    pub group: usize,
+    /// Element count.
+    pub size: usize,
+    /// Resolved to 32-bit state — the bandwidth hogs, admitted first.
+    pub bits32: bool,
+    opt: &'a mut dyn Optimizer,
+    params: &'a mut [f32],
+    grads: &'a [f32],
+}
+
+/// One HLO-engine tensor's dispatch unit: everything the coordinator needs
+/// to drive the PJRT update artifact on the calling thread while the
+/// native stream crunches on the worker pool.
+pub struct HloDispatch<'a> {
+    /// Model tensor index.
+    pub index: usize,
+    /// The tensor's *resolved* group config (hyperparameter vector).
+    pub cfg: OptimConfig,
+    pub opt: &'a mut dyn Optimizer,
+    pub mirror: &'a mut HloMirror,
+    pub params: &'a mut Vec<f32>,
+    pub grads: &'a [f32],
+}
+
+/// The trainer-facing streaming path over a model's native tensors,
+/// produced by [`ParamOptimizer::stream_native`]. Admission follows the
+/// group-aware policy (32-bit groups first, then descending size, then
+/// tensor index) unless the caller picks tensors explicitly with
+/// [`NativeStream::admit_index`]; either way results are bit-identical to
+/// the fused step — admission order is a scheduling choice, never a
+/// semantic one.
+pub struct NativeStream<'a> {
+    stream: StreamingStep<'a>,
+    /// Not-yet-admitted tensors in *reverse* policy order
+    /// ([`NativeStream::admit_next`] pops the back).
+    queue: Vec<StreamSlot<'a>>,
+}
+
+impl<'a> NativeStream<'a> {
+    /// Remaining admission order (model tensor indices, policy order).
+    pub fn admission_order(&self) -> Vec<usize> {
+        self.queue.iter().rev().map(|s| s.index).collect()
+    }
+
+    /// Tensors not yet admitted.
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit the next queued tensor in policy order: its phase-0 block
+    /// items start on the pool and the call returns. `false` once
+    /// everything is admitted.
+    pub fn admit_next(&mut self) -> bool {
+        match self.queue.pop() {
+            Some(s) => {
+                self.stream.push(s.opt, s.params, s.grads);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Admit a specific tensor out of policy order (parity tests pin that
+    /// admission order cannot change results). `false` if the tensor is
+    /// not queued (already admitted, or an HLO tensor).
+    pub fn admit_index(&mut self, tensor: usize) -> bool {
+        match self.queue.iter().position(|s| s.index == tensor) {
+            Some(pos) => {
+                let s = self.queue.remove(pos);
+                self.stream.push(s.opt, s.params, s.grads);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Admit every remaining tensor, in policy order (non-blocking — the
+    /// pool keeps crunching while the caller moves on).
+    pub fn admit_all(&mut self) {
+        while self.admit_next() {}
+    }
+
+    /// Non-blocking progress on admitted tensors (see
+    /// [`StreamingStep::poll`]); call between PJRT round-trips so
+    /// multi-phase plans keep moving.
+    pub fn poll(&mut self) {
+        self.stream.poll();
+    }
+
+    /// Admit anything still queued and drain the stream; after this every
+    /// native tensor's update is fully applied.
+    pub fn finish(mut self) {
+        self.admit_all();
+        self.stream.finish();
+    }
+}
+
 struct TensorSlot {
     name: String,
     /// 0 = default group (base config); g+1 = spec.groups[g].
@@ -460,20 +567,54 @@ impl ParamOptimizer {
         self.slots.iter().filter(|s| s.hlo.is_some()).count()
     }
 
-    pub fn has_hlo(&self, i: usize) -> bool {
-        self.slots[i].hlo.is_some()
-    }
-
-    /// Mutable access to tensor `i`'s optimizer + HLO mirror (plus its
-    /// resolved config) — the coordinator's HLO dispatch path.
-    pub fn hlo_parts_mut(
-        &mut self,
-        i: usize,
-    ) -> Option<(&mut dyn Optimizer, &mut HloMirror, OptimConfig)> {
-        let slot = &mut self.slots[i];
-        let cfg = slot.cfg;
-        let opt = slot.opt.as_mut();
-        slot.hlo.as_mut().map(|h| (opt, h, cfg))
+    /// Split the model into its two execution engines for one training
+    /// step: a [`NativeStream`] over every native tensor (queued in the
+    /// group-aware admission order) and the list of [`HloDispatch`] units
+    /// the caller drives serially through PJRT while the stream crunches
+    /// on the worker pool. Tensors are disjoint between (and within) the
+    /// two, so the caller may interleave them freely; results are
+    /// bit-identical to [`ParamOptimizer::step_native`] + serial HLO
+    /// dispatch in any order.
+    pub fn stream_native<'a>(
+        &'a mut self,
+        params: &'a mut [Vec<f32>],
+        grads: &'a [Vec<f32>],
+    ) -> (NativeStream<'a>, Vec<HloDispatch<'a>>) {
+        assert_eq!(self.slots.len(), params.len());
+        assert_eq!(self.slots.len(), grads.len());
+        let mut queue: Vec<StreamSlot<'a>> = Vec::new();
+        let mut dispatches: Vec<HloDispatch<'a>> = Vec::new();
+        let tensors = self.slots.iter_mut().zip(params.iter_mut().zip(grads.iter()));
+        for (i, (slot, (p, g))) in tensors.enumerate() {
+            let TensorSlot { group, cfg, size, opt, hlo, .. } = slot;
+            match hlo.as_mut() {
+                None => queue.push(StreamSlot {
+                    index: i,
+                    group: *group,
+                    size: *size,
+                    bits32: matches!(cfg.bits, Bits::B32),
+                    opt: opt.as_mut(),
+                    params: p.as_mut_slice(),
+                    grads: g.as_slice(),
+                }),
+                Some(mirror) => dispatches.push(HloDispatch {
+                    index: i,
+                    cfg: *cfg,
+                    opt: opt.as_mut(),
+                    mirror,
+                    params: p,
+                    grads: g.as_slice(),
+                }),
+            }
+        }
+        // Admission policy (a *group* property, not an accident of tensor
+        // index): 32-bit groups first — the stable-embedding §2.3 tensors
+        // carry 4x the state bandwidth — then descending size so the big
+        // tensors keep the pool busy longest, then tensor index for
+        // determinism. Stored reversed: `admit_next` pops the back.
+        queue.sort_by_key(|s| (std::cmp::Reverse(s.bits32), std::cmp::Reverse(s.size), s.index));
+        queue.reverse();
+        (NativeStream { stream: StreamingStep::new(), queue }, dispatches)
     }
 
     /// Per-group LR scheduling: set each tensor's learning rate from its

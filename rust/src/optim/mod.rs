@@ -42,9 +42,10 @@ pub mod sm3;
 pub mod spec;
 pub mod state;
 
-pub use engine::{fused_update, FusedStep};
+pub use engine::{fused_update, streaming_update, FusedStep, StreamingStep};
 pub use groups::{
-    GroupOverride, GroupReport, HloEnv, HloMirror, ParamOptimizer, Pattern, TensorInfo,
+    GroupOverride, GroupReport, HloDispatch, HloEnv, HloMirror, NativeStream, ParamOptimizer,
+    Pattern, StreamSlot, TensorInfo,
 };
 pub use spec::{validate_config, OptimSpec};
 pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};

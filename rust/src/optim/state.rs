@@ -14,11 +14,14 @@
 //! [`StepPlan`] strings such task sets into *phases* with deterministic
 //! combines between barriers, which is how tensor-wide reductions (LAMB
 //! trust ratios, Adafactor statistics, SM3 maxes) stay block-local. Plans
-//! either run immediately on the worker pool ([`StepPlan::execute`]) or
-//! get merged phase-aligned with every other tensor's plan into one batch
-//! per phase (`optim::engine::FusedStep`). Scratch buffers are
-//! thread-local and shared by every optimizer and tensor, so the hot loop
-//! allocates nothing.
+//! have three executors, all following the same canonical item/combine
+//! order: immediately on the worker pool ([`StepPlan::execute`]), merged
+//! phase-aligned with every other tensor's plan into one batch per phase
+//! (`optim::engine::FusedStep`), or streamed — phase 0 starts the moment
+//! the tensor's gradient exists, phases advance as their batches drain
+//! (`optim::engine::StreamingStep`). Scratch buffers are thread-local and
+//! shared by every optimizer and tensor, so the hot loop allocates
+//! nothing.
 
 use std::cell::RefCell;
 use std::sync::Arc;

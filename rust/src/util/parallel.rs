@@ -13,6 +13,20 @@
 //! resolved once at pool init; use [`set_num_threads`]/[`with_threads`] to
 //! change the degree at runtime (benches, parity tests).
 //!
+//! Two submission modes share the pool:
+//!
+//! * **Blocking** ([`run_indexed`] and friends) — the submitter
+//!   participates and returns when the batch drains, which is what lets
+//!   tasks borrow stack data.
+//! * **Detached** ([`submit`] → [`BatchHandle`]) — the batch starts on the
+//!   workers and the submitting thread keeps running (producing more
+//!   tensors' gradients, driving serial PJRT dispatches) until it `wait`s.
+//!   The streaming optimizer step is built on this.
+//!
+//! Several batches may be in flight at once (a queue, drained in
+//! submission order); workers scan for unclaimed work and park when there
+//! is none.
+//!
 //! Determinism: every primitive partitions work identically at every thread
 //! count, and items never share mutable state, so results are bit-identical
 //! whether they run inline, on 1 worker, or on 64.
@@ -105,16 +119,40 @@ impl<T> Shared<T> {
     }
 }
 
-/// Lifetime-erased pointer to the batch closure. See [`SendPtr`] contract.
+/// Lifetime-erased pointer to a borrowed batch closure. See [`SendPtr`]
+/// contract.
 #[derive(Clone, Copy)]
 struct TaskFn(*const (dyn Fn(usize) + Sync));
 
 unsafe impl Send for TaskFn {}
 unsafe impl Sync for TaskFn {}
 
+/// The closure a batch runs. Blocking submissions borrow it from the
+/// submitter's stack frame (the submitter outlives the batch by
+/// construction); detached submissions move it into the batch,
+/// lifetime-erased — the [`BatchHandle`] blocks in `wait`/`Drop` before the
+/// erased borrows can end.
+enum BatchFn {
+    Borrowed(TaskFn),
+    Owned(Box<dyn Fn(usize) + Sync + Send>),
+}
+
+impl BatchFn {
+    /// # Safety
+    /// Only call while a claimed index `< n` is in flight (see the comment
+    /// in [`Batch::work`]): that is what keeps the pointee and any erased
+    /// borrows alive.
+    unsafe fn call(&self, i: usize) {
+        match self {
+            BatchFn::Borrowed(f) => (*f.0)(i),
+            BatchFn::Owned(f) => f(i),
+        }
+    }
+}
+
 /// Lock helper that shrugs off poisoning: pool state stays consistent
 /// across task panics (panics are caught per task and re-thrown on the
-/// submitting thread, which may unwind while holding the submit lock).
+/// waiting thread, which may unwind while a lock-holding caller is live).
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
@@ -124,11 +162,11 @@ struct Done {
     panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
-/// One `run_indexed` call: `n` tasks claimed off a shared atomic counter.
+/// One batch: `n` tasks claimed off a shared atomic counter.
 struct Batch {
-    f: TaskFn,
+    f: BatchFn,
     n: usize,
-    /// How many pool workers may join (the submitter participates on top).
+    /// How many pool workers may join (the waiter participates on top).
     cap: usize,
     next: AtomicUsize,
     joined: AtomicUsize,
@@ -146,14 +184,13 @@ impl Batch {
             if i >= self.n {
                 break;
             }
-            // SAFETY: the closure pointer may only be dereferenced while a
-            // claimed index < n is in flight: its completion has not been
-            // counted yet, so `done.finished < n` and the submitter is
-            // still blocked in `run_batch`, keeping the closure (and
-            // everything it borrows) alive. A late worker that finds the
-            // index space exhausted never touches the pointer.
-            let f = unsafe { &*self.f.0 };
-            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            // SAFETY: the closure may only be invoked while a claimed
+            // index < n is in flight: its completion has not been counted
+            // yet, so `done.finished < n` and the waiter is still blocked
+            // in `wait_done`, keeping the closure (and everything it
+            // borrows) alive. A late worker that finds the index space
+            // exhausted never touches the closure.
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| unsafe { self.f.call(i) })) {
                 if panic.is_none() {
                     panic = Some(p);
                 }
@@ -171,25 +208,29 @@ impl Batch {
             }
         }
     }
+
+    /// Whether this batch still has unclaimed indices a new worker could
+    /// take (claimed-but-running tasks don't count).
+    fn has_unclaimed(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n
+    }
 }
 
-struct JobSlot {
-    /// Bumped once per installed batch so parked workers can tell a new
-    /// batch from the one they already drained.
-    gen: u64,
-    batch: Option<Arc<Batch>>,
+/// Batches currently in flight, in submission order. Workers scan for the
+/// first batch with unclaimed work; each batch is removed by its waiter
+/// once every index finished.
+struct JobQueue {
+    batches: Vec<Arc<Batch>>,
 }
 
 struct PoolShared {
-    job: Mutex<JobSlot>,
+    job: Mutex<JobQueue>,
     work_cv: Condvar,
 }
 
 /// The process-wide worker pool.
 pub struct Pool {
     shared: Arc<PoolShared>,
-    /// Serializes top-level batches (nested calls run inline instead).
-    submit: Mutex<()>,
     /// Worker threads spawned so far (grown on demand).
     spawned: Mutex<usize>,
     /// Effective parallelism for the next batch.
@@ -204,23 +245,28 @@ thread_local! {
 
 fn worker_main(shared: Arc<PoolShared>) {
     IN_WORKER.with(|c| c.set(true));
-    let mut seen = 0u64;
     loop {
         let batch = {
-            let mut slot = lock(&shared.job);
+            let mut q = lock(&shared.job);
             loop {
-                if slot.gen != seen {
-                    seen = slot.gen;
-                    if let Some(b) = &slot.batch {
-                        break b.clone();
-                    }
+                // earliest batch with unclaimed work and a free join slot;
+                // drained-but-running batches are skipped via their cursor
+                let ready = q
+                    .batches
+                    .iter()
+                    .find(|b| b.has_unclaimed() && b.joined.load(Ordering::Relaxed) < b.cap);
+                if let Some(b) = ready {
+                    break b.clone();
                 }
-                slot = shared.work_cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+                q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
         if batch.joined.fetch_add(1, Ordering::Relaxed) < batch.cap {
             batch.work();
         }
+        // `batch` drops here — workers never park holding an Arc, so a
+        // detached batch's owned closure is freed promptly after its
+        // waiter dequeues it.
     }
 }
 
@@ -228,10 +274,9 @@ impl Pool {
     fn new() -> Pool {
         Pool {
             shared: Arc::new(PoolShared {
-                job: Mutex::new(JobSlot { gen: 0, batch: None }),
+                job: Mutex::new(JobQueue { batches: Vec::new() }),
                 work_cv: Condvar::new(),
             }),
-            submit: Mutex::new(()),
             spawned: Mutex::new(0),
             threads: AtomicUsize::new(default_threads()),
         }
@@ -249,17 +294,48 @@ impl Pool {
         }
     }
 
+    /// Install a batch into the queue and wake the workers (non-blocking).
+    fn enqueue(&self, batch: Arc<Batch>, helpers: usize) {
+        self.ensure_workers(helpers);
+        {
+            let mut q = lock(&self.shared.job);
+            q.batches.push(batch);
+        }
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Participate in `batch`'s remaining work, block until every index
+    /// finished, dequeue it, and return the first task panic (if any).
+    fn wait_done(&self, batch: &Arc<Batch>) -> Option<Box<dyn std::any::Any + Send>> {
+        let was_worker = IN_WORKER.with(|c| c.replace(true));
+        batch.work();
+        IN_WORKER.with(|c| c.set(was_worker));
+
+        let panic = {
+            let mut done = lock(&batch.done);
+            while done.finished < batch.n {
+                done = batch.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+            }
+            done.panic.take()
+        };
+        {
+            let mut q = lock(&self.shared.job);
+            if let Some(pos) = q.batches.iter().position(|b| Arc::ptr_eq(b, batch)) {
+                q.batches.remove(pos);
+            }
+        }
+        panic
+    }
+
     /// Run `f(0..n)` across the submitter plus up to `threads - 1` workers,
     /// blocking until every index has finished (or re-throwing the first
     /// task panic).
     fn run_batch(&self, f: &(dyn Fn(usize) + Sync), n: usize, threads: usize) {
-        let _submit = lock(&self.submit);
-        self.ensure_workers(threads - 1);
-        // SAFETY: lifetime erasure only; this call keeps `f` alive until
-        // `done.finished == n` below, and no task runs after that.
+        // SAFETY: lifetime erasure only; this call blocks in `wait_done`
+        // until every task finished, and no task runs after that.
         let erased: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         let batch = Arc::new(Batch {
-            f: TaskFn(erased),
+            f: BatchFn::Borrowed(TaskFn(erased)),
             n,
             cap: threads - 1,
             next: AtomicUsize::new(0),
@@ -267,29 +343,8 @@ impl Pool {
             done: Mutex::new(Done { finished: 0, panic: None }),
             done_cv: Condvar::new(),
         });
-        {
-            let mut slot = lock(&self.shared.job);
-            slot.gen = slot.gen.wrapping_add(1);
-            slot.batch = Some(batch.clone());
-        }
-        self.shared.work_cv.notify_all();
-
-        IN_WORKER.with(|c| c.set(true));
-        batch.work();
-        IN_WORKER.with(|c| c.set(false));
-
-        let panic = {
-            let mut done = lock(&batch.done);
-            while done.finished < n {
-                done = batch.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
-            }
-            done.panic.take()
-        };
-        {
-            let mut slot = lock(&self.shared.job);
-            slot.batch = None;
-        }
-        if let Some(p) = panic {
+        self.enqueue(batch.clone(), threads - 1);
+        if let Some(p) = self.wait_done(&batch) {
             resume_unwind(p);
         }
     }
@@ -356,6 +411,117 @@ pub fn run_indexed<F: Fn(usize) + Sync>(n: usize, f: F) {
         return;
     }
     pool().run_batch(&f, n, threads);
+}
+
+/// A detached batch in flight on the pool. The submitting thread is free
+/// to do other work while the workers crunch (the streaming optimizer step
+/// drives the serial PJRT dispatches this way); [`BatchHandle::wait`] joins
+/// the batch — the caller participates in draining it — and re-throws the
+/// first task panic.
+///
+/// Dropping the handle also waits: the closure may borrow data of lifetime
+/// `'s`, so the batch must never outlive the handle (see the [`submit`]
+/// safety contract).
+pub(crate) struct BatchHandle<'s> {
+    batch: Option<Arc<Batch>>,
+    _borrow: std::marker::PhantomData<&'s ()>,
+}
+
+impl<'s> BatchHandle<'s> {
+    /// A handle with nothing left in flight (empty or inline-run batches).
+    fn complete() -> BatchHandle<'s> {
+        BatchHandle { batch: None, _borrow: std::marker::PhantomData }
+    }
+
+    /// True once every task has finished (never blocks). A done batch still
+    /// needs [`BatchHandle::wait`] to surface panics and free its slot.
+    pub fn is_done(&self) -> bool {
+        match &self.batch {
+            None => true,
+            Some(b) => lock(&b.done).finished >= b.n,
+        }
+    }
+
+    /// Block until every task finished — participating in the remaining
+    /// work — then re-throw the first task panic, if any.
+    pub fn wait(mut self) {
+        if let Some(p) = self.drain() {
+            resume_unwind(p);
+        }
+    }
+
+    fn drain(&mut self) -> Option<Box<dyn std::any::Any + Send>> {
+        let batch = self.batch.take()?;
+        pool().wait_done(&batch)
+    }
+}
+
+impl Drop for BatchHandle<'_> {
+    fn drop(&mut self) {
+        if let Some(p) = self.drain() {
+            // re-throw task panics unless we are already unwinding (a
+            // double panic would abort)
+            if !std::thread::panicking() {
+                resume_unwind(p);
+            }
+        }
+    }
+}
+
+/// Start `f(0..n)` on the pool WITHOUT blocking: the calling thread keeps
+/// running (producing the next tensor's gradient, driving serial I/O)
+/// while up to `threads - 1` workers crunch. Wait on (or drop) the handle
+/// to join. Several detached batches may be in flight at once.
+///
+/// With one thread, or when called from inside a pool task, the batch runs
+/// inline here and the handle comes back already complete — same results,
+/// no overlap.
+///
+/// Crate-internal: the streaming engine (`optim::engine::StreamingStep`)
+/// is the supported consumer.
+///
+/// # Safety
+///
+/// The closure is lifetime-erased into the pool, so the returned handle
+/// must be waited on (or dropped — `Drop` waits) before `'s` ends. The
+/// caller must guarantee the handle cannot leak: `mem::forget`-ing it
+/// while `f` borrows non-`'static` data would let tasks run after those
+/// borrows die (use-after-free). A structurally-owned handle that is
+/// always joined (the `StreamTensor` pattern) satisfies this.
+pub(crate) unsafe fn submit<'s, F>(n: usize, f: F) -> BatchHandle<'s>
+where
+    F: Fn(usize) + Sync + Send + 's,
+{
+    if n == 0 {
+        return BatchHandle::complete();
+    }
+    let threads = num_threads();
+    if threads <= 1 || IN_WORKER.with(|c| c.get()) {
+        for i in 0..n {
+            f(i);
+        }
+        return BatchHandle::complete();
+    }
+    // SAFETY: lifetime erasure only — the handle's `wait`/`Drop` blocks
+    // until every task finished, and the handle cannot outlive `'s`, so
+    // the closure is never called after its borrows end.
+    let owned = unsafe {
+        std::mem::transmute::<
+            Box<dyn Fn(usize) + Sync + Send + 's>,
+            Box<dyn Fn(usize) + Sync + Send + 'static>,
+        >(Box::new(f))
+    };
+    let batch = Arc::new(Batch {
+        f: BatchFn::Owned(owned),
+        n,
+        cap: threads - 1,
+        next: AtomicUsize::new(0),
+        joined: AtomicUsize::new(0),
+        done: Mutex::new(Done { finished: 0, panic: None }),
+        done_cv: Condvar::new(),
+    });
+    pool().enqueue(batch.clone(), threads - 1);
+    BatchHandle { batch: Some(batch), _borrow: std::marker::PhantomData }
 }
 
 /// Run a heterogeneous set of one-shot tasks on the pool, blocking until
@@ -472,6 +638,14 @@ mod tests {
 
     fn threads_locked() -> MutexGuard<'static, ()> {
         THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Test wrapper for the unsafe `submit`: every handle in this module
+    /// is waited on or dropped in scope (never leaked), which is the
+    /// entire safety contract.
+    fn submit_t<'s, F: Fn(usize) + Sync + Send + 's>(n: usize, f: F) -> BatchHandle<'s> {
+        // SAFETY: see above — no test leaks its handle.
+        unsafe { submit(n, f) }
     }
 
     #[test]
@@ -592,6 +766,151 @@ mod tests {
         assert_eq!(one, run(2));
         assert_eq!(one, run(4));
         assert_eq!(one, run(9));
+    }
+
+    #[test]
+    fn submit_runs_every_index_and_wait_joins() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            let counter = AtomicUsize::new(0);
+            let h = submit_t(100, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            h.wait();
+            assert_eq!(counter.load(Ordering::Relaxed), 100);
+        });
+    }
+
+    #[test]
+    fn submit_does_not_block_the_submitter() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            let gate = AtomicUsize::new(0);
+            let h = submit_t(8, |_| {
+                while gate.load(Ordering::Acquire) == 0 {
+                    std::thread::yield_now();
+                }
+            });
+            // if submit had blocked until the batch drained, the gate
+            // would never open — deadlock instead of a passing test
+            gate.store(1, Ordering::Release);
+            h.wait();
+        });
+    }
+
+    #[test]
+    fn concurrent_detached_batches_all_complete() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            let counters: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+            let handles: Vec<BatchHandle<'_>> = counters
+                .iter()
+                .map(|c| {
+                    submit_t(64, move |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.wait();
+            }
+            for c in &counters {
+                assert_eq!(c.load(Ordering::Relaxed), 64);
+            }
+        });
+    }
+
+    #[test]
+    fn blocking_and_detached_batches_interleave() {
+        // A blocking run_indexed issued while a detached batch is still in
+        // flight must not lose either batch's work.
+        let _g = threads_locked();
+        with_threads(4, || {
+            let detached = AtomicUsize::new(0);
+            let h = submit_t(500, |_| {
+                detached.fetch_add(1, Ordering::Relaxed);
+            });
+            let blocking = AtomicUsize::new(0);
+            run_indexed(500, |_| {
+                blocking.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(blocking.load(Ordering::Relaxed), 500);
+            h.wait();
+            assert_eq!(detached.load(Ordering::Relaxed), 500);
+        });
+    }
+
+    #[test]
+    fn dropping_a_handle_waits_for_the_batch() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            let counter = AtomicUsize::new(0);
+            {
+                let _h = submit_t(200, |_| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            } // drop must block until the batch drains
+            assert_eq!(counter.load(Ordering::Relaxed), 200);
+        });
+    }
+
+    #[test]
+    fn is_done_reflects_batch_state() {
+        let _g = threads_locked();
+        with_threads(4, || {
+            let gate = AtomicUsize::new(0);
+            let h = submit_t(4, |_| {
+                while gate.load(Ordering::Acquire) == 0 {
+                    std::thread::yield_now();
+                }
+            });
+            assert!(!h.is_done(), "tasks cannot finish before the gate opens");
+            gate.store(1, Ordering::Release);
+            h.wait();
+            let empty = submit_t(0, |_| {});
+            assert!(empty.is_done());
+            empty.wait();
+        });
+    }
+
+    #[test]
+    fn submit_panics_rethrow_at_wait_and_pool_survives() {
+        let _g = threads_locked();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                submit_t(32, |i| {
+                    if i == 7 {
+                        panic!("boom in detached task");
+                    }
+                })
+                .wait();
+            });
+        }));
+        assert!(caught.is_err(), "detached task panic must reach wait()");
+        let mut data = vec![0u32; 1024];
+        with_threads(4, || {
+            par_chunks_mut(&mut data, 64, |_, c| {
+                for v in c.iter_mut() {
+                    *v += 1;
+                }
+            });
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn submit_runs_inline_with_one_thread() {
+        let _g = threads_locked();
+        with_threads(1, || {
+            let counter = AtomicUsize::new(0);
+            let h = submit_t(50, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            // inline execution: complete before wait
+            assert!(h.is_done());
+            assert_eq!(counter.load(Ordering::Relaxed), 50);
+            h.wait();
+        });
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Streaming-step parity tests — the PR-4 tentpole contract.
+//!
+//! The streaming engine (`optim::engine::StreamingStep`, and the trainer's
+//! `ParamOptimizer::stream_native` split on top of it) must be
+//! **bit-identical** to the fused step and to serial per-tensor stepping:
+//!
+//! * at every thread count {1, 4, default} — the pool may run phase items
+//!   in any order on any worker;
+//! * for every admission order — policy order, reversed, interleaved with
+//!   main-thread work between admissions (the trainer's PJRT round-trips);
+//! * for mixed-precision group layouts — 32-bit stable-embedding groups
+//!   next to 8-bit dynamic/linear groups, resolved per tensor.
+//!
+//! This holds because tensors never share optimizer state and each tensor
+//! walks its phases in the canonical `StepPlan::execute` order; these
+//! tests pin it so a scheduling "optimization" can never silently change
+//! results.
+
+use std::sync::Mutex;
+
+use bitopt8::optim::{
+    build, fused_update, streaming_update, Bits, GroupOverride, OptimConfig, OptimKind, OptimSpec,
+    Optimizer, ParamOptimizer, StreamingStep, TensorInfo,
+};
+use bitopt8::util::parallel;
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle the process-global thread count.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn at_threads<R>(threads: Option<usize>, f: impl FnOnce() -> R) -> R {
+    match threads {
+        Some(t) => parallel::with_threads(t, f),
+        None => f(),
+    }
+}
+
+type Fleet = (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+/// Mixed fleet: block-local single-phase plans (Adam, Momentum, AdaGrad)
+/// and multi-phase reduction plans (LAMB, LARS, factored Adafactor / SM3),
+/// sizes from sub-block to many-block ragged.
+fn fleet(bits: Bits) -> Fleet {
+    let spec: Vec<(OptimKind, usize, Option<(usize, usize)>)> = vec![
+        (OptimKind::Adam, 1, None),
+        (OptimKind::Adam, 2049, None),
+        (OptimKind::Momentum, 4096, None),
+        (OptimKind::Adagrad, 173, None),
+        (OptimKind::Lamb, 20000, None),
+        (OptimKind::Lars, 777, None),
+        (OptimKind::Adafactor, 64 * 72, Some((64, 72))),
+        (OptimKind::Sm3, 129 * 31, Some((129, 31))),
+        (OptimKind::AdamW, 300, None),
+    ];
+    let mut rng = Rng::new(0x57AE);
+    let mut opts = Vec::new();
+    let mut params = Vec::new();
+    let mut grads = Vec::new();
+    for (kind, n, shape) in spec {
+        let mut cfg = OptimConfig::adam(0.005, bits);
+        cfg.kind = kind;
+        opts.push(build(&cfg, n, shape));
+        params.push((0..n).map(|_| rng.normal() as f32).collect());
+        grads.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect());
+    }
+    (opts, params, grads)
+}
+
+fn assert_fleet_eq(a: &Fleet, b: &Fleet, what: &str) {
+    assert_eq!(a.1, b.1, "{what}: params diverged");
+    for (oa, ob) in a.0.iter().zip(&b.0) {
+        assert_eq!(oa.t(), ob.t(), "{what}: step counters diverged");
+        for ((name, sa), (_, sb)) in oa.states().iter().zip(ob.states().iter()) {
+            assert_eq!(sa.to_f32(), sb.to_f32(), "{what}: state {name} diverged");
+        }
+    }
+}
+
+#[test]
+fn streaming_matches_fused_and_serial_across_thread_counts() {
+    let _g = locked();
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for threads in [Some(1usize), Some(4), None] {
+            at_threads(threads, || {
+                let mut serial = fleet(bits);
+                let mut fused = fleet(bits);
+                let mut stream = fleet(bits);
+                for _ in 0..4 {
+                    for i in 0..serial.0.len() {
+                        serial.0[i].step(&mut serial.1[i], &serial.2[i]);
+                    }
+                    {
+                        let (o, p, g) = &mut fused;
+                        fused_update(o, p, g);
+                    }
+                    {
+                        let (o, p, g) = &mut stream;
+                        streaming_update(o, p, g);
+                    }
+                }
+                let what = format!("{} / {threads:?} threads", bits.describe());
+                assert_fleet_eq(&serial, &fused, &format!("fused vs serial ({what})"));
+                assert_fleet_eq(&serial, &stream, &format!("streaming vs serial ({what})"));
+            });
+        }
+    }
+}
+
+type Entry<'a> = (&'a mut dyn Optimizer, &'a mut [f32], &'a [f32]);
+
+/// Stream one step, admitting tensors in the given order, with optional
+/// main-thread busy work + poll between admissions (the trainer's
+/// interleaved-with-PJRT shape).
+fn stream_in_order(fl: &mut Fleet, order: &[usize], interleave: bool) {
+    let (opts, params, grads) = fl;
+    let mut entries: Vec<Option<Entry<'_>>> = opts
+        .iter_mut()
+        .zip(params.iter_mut())
+        .zip(grads.iter())
+        .map(|((o, p), g)| {
+            let o: &mut dyn Optimizer = o.as_mut();
+            Some((o, p.as_mut_slice(), g.as_slice()))
+        })
+        .collect();
+    let mut stream = StreamingStep::new();
+    let mut busy = 1u64;
+    for &i in order {
+        let (o, p, g) = entries[i].take().expect("each tensor admitted once");
+        stream.push(o, p, g);
+        if interleave {
+            // stand-in for a serial PJRT round-trip between admissions
+            for k in 0..10_000u64 {
+                busy = busy.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            stream.poll();
+        }
+    }
+    assert!(busy != 0);
+    stream.finish();
+}
+
+#[test]
+fn admission_order_cannot_change_results() {
+    let _g = locked();
+    parallel::with_threads(4, || {
+        let bits = Bits::b8_dynamic();
+        let n = fleet(bits).0.len();
+        let sorted: Vec<usize> = (0..n).collect();
+        let reversed: Vec<usize> = (0..n).rev().collect();
+        let straddled: Vec<usize> = (0..n).step_by(2).chain((0..n).skip(1).step_by(2)).collect();
+
+        let mut reference = fleet(bits);
+        for _ in 0..3 {
+            let (o, p, g) = &mut reference;
+            fused_update(o, p, g);
+        }
+        for (name, order, interleave) in [
+            ("sorted", &sorted, false),
+            ("reversed", &reversed, false),
+            ("interleaved-with-main-thread-work", &straddled, true),
+        ] {
+            let mut fl = fleet(bits);
+            for _ in 0..3 {
+                stream_in_order(&mut fl, order, interleave);
+            }
+            assert_fleet_eq(&reference, &fl, name);
+        }
+    });
+}
+
+// ---------------------------------------------------------------- groups
+
+/// An LM-shaped tensor list with distinctive sizes for the admission-policy
+/// test.
+fn lm_tensors() -> Vec<TensorInfo> {
+    [
+        ("embed.tok", 512 * 64, Some((512, 64))),
+        ("embed.pos", 64 * 64, Some((64, 64))),
+        ("embed.ln.bias", 64, None),
+        ("block0.attn.wq", 96 * 96, Some((96, 96))),
+        ("block0.mlp.w1", 64 * 256, Some((64, 256))),
+        ("lm_head", 64 * 512, Some((64, 512))),
+    ]
+    .into_iter()
+    .map(|(name, size, shape)| TensorInfo {
+        name: name.to_string(),
+        size,
+        shape,
+        padded: size.next_multiple_of(2048),
+    })
+    .collect()
+}
+
+fn mixed_precision_spec() -> OptimSpec {
+    let mut base = OptimConfig::adam(0.01, Bits::b8_dynamic());
+    base.kind = OptimKind::AdamW;
+    base.weight_decay = 0.01;
+    OptimSpec::with_groups(
+        base,
+        vec![
+            GroupOverride::emb32(),
+            GroupOverride::parse("*.bias:format=linear,lr=0.02").unwrap(),
+        ],
+    )
+}
+
+fn mk_data(tensors: &[TensorInfo]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(0xD00D);
+    let params = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let grads = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect();
+    (params, grads)
+}
+
+#[test]
+fn mixed_precision_group_stream_matches_fused_step() {
+    let _g = locked();
+    let tensors = lm_tensors();
+    for threads in [Some(1usize), Some(4), None] {
+        at_threads(threads, || {
+            // fused reference
+            let mut popt_f = ParamOptimizer::build(mixed_precision_spec(), &tensors, None).unwrap();
+            let (mut p_fused, grads) = mk_data(&tensors);
+            for _ in 0..3 {
+                popt_f.step_native(&mut p_fused, &grads);
+            }
+
+            // streaming in policy order
+            let mut popt_s = ParamOptimizer::build(mixed_precision_spec(), &tensors, None).unwrap();
+            let (mut p_stream, _) = mk_data(&tensors);
+            for _ in 0..3 {
+                let (stream, dispatches) = popt_s.stream_native(&mut p_stream, &grads);
+                assert!(dispatches.is_empty(), "no HLO env, no HLO tensors");
+                stream.finish();
+            }
+            assert_eq!(p_fused, p_stream, "streaming diverged from fused ({threads:?} threads)");
+            for i in 0..tensors.len() {
+                for ((name, sa), (_, sb)) in
+                    popt_f.opt(i).states().iter().zip(popt_s.opt(i).states().iter())
+                {
+                    assert_eq!(sa.to_f32(), sb.to_f32(), "{}: state {name}", tensors[i].name);
+                }
+            }
+
+            // streaming again, admitting in raw tensor-index order with
+            // main-thread work + polls in between (the trainer shape)
+            let mut popt_i = ParamOptimizer::build(mixed_precision_spec(), &tensors, None).unwrap();
+            let (mut p_inter, _) = mk_data(&tensors);
+            for _ in 0..3 {
+                let (mut stream, _) = popt_i.stream_native(&mut p_inter, &grads);
+                let mut busy = 1u64;
+                for t in 0..tensors.len() {
+                    assert!(stream.admit_index(t));
+                    for k in 0..5_000u64 {
+                        busy = busy.wrapping_mul(6364136223846793005).wrapping_add(k);
+                    }
+                    stream.poll();
+                }
+                assert!(busy != 0);
+                assert_eq!(stream.n_queued(), 0);
+                stream.finish();
+            }
+            assert_eq!(p_fused, p_inter, "custom admission diverged ({threads:?} threads)");
+        });
+    }
+}
+
+#[test]
+fn admission_policy_puts_32bit_groups_first_then_descending_size() {
+    let _g = locked();
+    let tensors = lm_tensors();
+    let mut popt = ParamOptimizer::build(mixed_precision_spec(), &tensors, None).unwrap();
+    let (mut params, grads) = mk_data(&tensors);
+    let (stream, _) = popt.stream_native(&mut params, &grads);
+    let order = stream.admission_order();
+    let names: Vec<&str> = order.iter().map(|&i| tensors[i].name.as_str()).collect();
+    // 32-bit stable-embedding group first (descending size), then the
+    // 8-bit tensors by descending size, index breaking ties.
+    assert_eq!(
+        names,
+        vec![
+            "embed.tok",      // 32768, bits=32
+            "embed.pos",      // 4096, bits=32
+            "lm_head",        // 32768, 8-bit
+            "block0.mlp.w1",  // 16384, 8-bit
+            "block0.attn.wq", // 9216, 8-bit
+            "embed.ln.bias",  // 64, 8-bit linear group
+        ],
+        "admission order must follow the group policy"
+    );
+    stream.finish();
+}

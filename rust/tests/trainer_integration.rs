@@ -248,6 +248,81 @@ fn jsonl_metrics_written() {
 }
 
 #[test]
+fn final_eval_not_duplicated_when_steps_align_with_eval_every() {
+    // regression: when steps is a multiple of eval_every, the post-loop
+    // eval used to re-push the in-loop eval of the same step (and pay a
+    // second full eval pass)
+    let Some(rt) = runtime() else { return };
+    let mut cfg = nano_cfg(10);
+    cfg.eval_every = 5;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    let steps: Vec<usize> = res.evals.iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 10], "evals recorded once per evaluated step");
+    assert_eq!(res.final_eval, res.evals.last().unwrap().1);
+
+    // steps NOT aligned with eval_every: the post-loop eval still runs
+    let mut cfg = nano_cfg(7);
+    cfg.eval_every = 5;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    let steps: Vec<usize> = res.evals.iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![5, 7]);
+}
+
+#[test]
+fn crashed_steps_leave_a_metrics_trace() {
+    // regression: the non-finite-gradient early return used to skip the
+    // JSONL step record entirely, so crashed steps vanished from loss
+    // curves. A huge (finite — validation rejects Inf) LR blows the params
+    // past f32 range after step 1, so step 2's forward overflows and its
+    // gradients are non-finite deterministically.
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join(format!("bitopt8_crash_{}", std::process::id()));
+    let path = dir.join("m.jsonl");
+    let mut cfg = nano_cfg(6);
+    cfg.optim.lr = 1e30;
+    cfg.grad_clip = 0.0;
+    cfg.log_jsonl = Some(path.to_string_lossy().to_string());
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let res = tr.train().unwrap();
+    assert!(res.unstable, "infinite LR must crash");
+    assert_eq!(res.reason, Some("non-finite gradients"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    // every executed step leaves a record: 1 groups header + steps_done
+    assert_eq!(
+        text.lines().count(),
+        1 + res.steps_done,
+        "crashed steps must not vanish from the JSONL stream:\n{text}"
+    );
+    assert!(
+        text.contains("\"grad_crash\":true"),
+        "the crashed step must carry the grad_crash marker:\n{text}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hlo_engine_with_streaming_overlap_matches_prior_trajectory() {
+    // The HLO path now streams native tensors onto the pool while PJRT
+    // dispatches run serially; determinism per seed must survive, and the
+    // mixed-engine run (8-bit HLO tensors + 32-bit native embeddings) must
+    // still train.
+    let Some(rt) = runtime() else { return };
+    let run = || {
+        let mut cfg = nano_cfg(8);
+        cfg.model = "nano_stable".into();
+        cfg.engine = Engine::Hlo;
+        cfg.push_emb32(); // forces a native (32-bit) group next to HLO tensors
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        let res = tr.train().unwrap();
+        assert!(res.hlo_updated_tensors > 0, "HLO path not exercised");
+        res.losses
+    };
+    assert_eq!(run(), run(), "overlapped HLO+native stepping must stay deterministic");
+}
+
+#[test]
 fn glue_cls_model_learns_above_chance() {
     let Some(rt) = runtime() else { return };
     let manifest = rt.manifest().unwrap();
