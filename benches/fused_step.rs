@@ -92,14 +92,25 @@ struct Entry {
     iters: usize,
     /// Speedup vs the workload's first (baseline) variant.
     speedup_vs_base: f64,
+    /// Optimizer-state bytes per parameter for this fleet (the footprint
+    /// axis of the 4 vs 8 vs 32-bit sweep).
+    bytes_per_element: f64,
 }
 
 fn record(e: Entry, out: &mut Vec<Entry>) {
     println!(
-        "{:<17} {:<10} {:<22} {:<18} {:>12.1} µs/step {:>8.2}x",
-        e.workload, e.optimizer, e.bits, e.variant, e.us_per_step, e.speedup_vs_base
+        "{:<17} {:<10} {:<22} {:<18} {:>12.1} µs/step {:>8.2}x {:>8.3} B/elem",
+        e.workload, e.optimizer, e.bits, e.variant, e.us_per_step, e.speedup_vs_base,
+        e.bytes_per_element
     );
     out.push(e);
+}
+
+/// Optimizer-state bytes per parameter across a fleet.
+fn fleet_bytes_per_element(opts: &[Box<dyn Optimizer>], params: &[Vec<f32>]) -> f64 {
+    let state: usize = opts.iter().map(|o| o.state_bytes()).sum();
+    let n: usize = params.iter().map(|p| p.len()).sum();
+    state as f64 / n.max(1) as f64
 }
 
 fn run_workload(
@@ -134,6 +145,35 @@ fn run_workload(
             us_per_step: us,
             iters: r.iters,
             speedup_vs_base: base_us / us,
+            bytes_per_element: fleet_bytes_per_element(&opts, &params),
+        };
+        record(e, out);
+    }
+}
+
+/// The state-width sweep: the same fused Adam workload at 32, 8, and 4
+/// bits, recording bytes/element alongside step throughput — the Table
+/// 1-style footprint/speed tradeoff at every supported code width.
+fn run_width_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
+    let mut base_us = 0.0f64;
+    for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
+        let (mut opts, mut params, grads) = fleet(spec, bits);
+        let r = bench("fused", budget, 2000, || {
+            fused_update(&mut opts, &mut params, &grads)
+        });
+        let us = r.median_ns / 1e3;
+        if bits == Bits::B32 {
+            base_us = us;
+        }
+        let e = Entry {
+            workload: "q4_width_sweep",
+            optimizer: "adam",
+            bits: bits.describe(),
+            variant: "fused",
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_base: base_us / us,
+            bytes_per_element: fleet_bytes_per_element(&opts, &params),
         };
         record(e, out);
     }
@@ -194,6 +234,7 @@ fn run_overlap(
             us_per_step: us,
             iters: r.iters,
             speedup_vs_base: base_us / us,
+            bytes_per_element: fleet_bytes_per_element(&opts, &params),
         };
         record(e, out);
     }
@@ -258,6 +299,9 @@ fn main() {
         budget,
         &mut entries,
     );
+    // The width sweep: fused Adam at 32 vs 8 vs 4 bits — bytes/element and
+    // step throughput on one axis each (the `bits=4` tentpole numbers).
+    run_width_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
 
     let results: Vec<Json> = entries
         .iter()
@@ -270,6 +314,7 @@ fn main() {
                 ("us_per_step", num(e.us_per_step)),
                 ("iters", num(e.iters as f64)),
                 ("speedup_vs_base", num(e.speedup_vs_base)),
+                ("bytes_per_element", num(e.bytes_per_element)),
             ])
         })
         .collect();

@@ -14,35 +14,41 @@ fn main() {
 
     println!("memory budget: {budget} GB (batch size 1, fp16 weights+grads)\n");
     println!(
-        "{:<24} {:>8} {:>11} {:>11} {:>11} {:>9}",
-        "model", "params", "Adam32", "Adafactor", "Adam8", "fits?"
+        "{:<24} {:>8} {:>11} {:>11} {:>11} {:>11} {:>11}",
+        "model", "params", "Adam32", "Adafactor", "Adam8", "Adam4", "fits?"
     );
     for m in KNOWN_MODELS {
         let t32 = mm.total_bytes(&m, OptStateKind::Adam32) / 1e9;
         let taf = mm.total_bytes(&m, OptStateKind::Adafactor) / 1e9;
         let t8 = mm.total_bytes(&m, OptStateKind::Adam8) / 1e9;
-        let verdict = if t8 <= budget && t32 <= budget {
-            "both"
+        let t4 = mm.total_bytes(&m, OptStateKind::Adam4) / 1e9;
+        let verdict = if t32 <= budget {
+            "all"
         } else if t8 <= budget {
-            "8-bit only"
+            "quantized"
+        } else if t4 <= budget {
+            "4-bit only"
         } else {
-            "neither"
+            "none"
         };
         println!(
-            "{:<24} {:>7.0}M {:>9.1}GB {:>9.1}GB {:>9.1}GB {:>10}",
+            "{:<24} {:>7.0}M {:>9.1}GB {:>9.1}GB {:>9.1}GB {:>9.1}GB {:>11}",
             m.name,
             m.params / 1e6,
             t32,
             taf,
             t8,
+            t4,
             verdict
         );
     }
     println!(
-        "\nstate bytes/param: Adam32 {:.2}, Adafactor {:.2}, Adam8 {:.3}, Momentum8 {:.3}",
+        "\nstate bytes/param: Adam32 {:.2}, Adafactor {:.2}, Adam8 {:.3}, Momentum8 {:.3}, \
+         Adam4 {:.3}",
         OptStateKind::Adam32.bytes_per_param(),
         OptStateKind::Adafactor.bytes_per_param(),
         OptStateKind::Adam8.bytes_per_param(),
-        OptStateKind::Momentum8.bytes_per_param()
+        OptStateKind::Momentum8.bytes_per_param(),
+        OptStateKind::Adam4.bytes_per_param()
     );
 }

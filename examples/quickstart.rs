@@ -1,7 +1,8 @@
 //! Quickstart: the paper's "two-line change" — swap a 32-bit optimizer for
-//! the 8-bit one — shown on a toy regression, plus direct use of the
-//! block-wise quantizer and the parameter-group surface (per-tensor
-//! precision policy, §2.3). No artifacts needed (pure native engine).
+//! the 8-bit (or 4-bit) one — shown on a toy regression, plus direct use
+//! of the block-wise quantizer and the parameter-group surface (per-tensor
+//! precision policy: §2.3 stable embeddings at 32-bit, attention at 4-bit
+//! per Li et al. 2023). No artifacts needed (pure native engine).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -36,7 +37,7 @@ fn main() {
     // the "two-line change": Bits::B32 -> Bits::b8_dynamic()
     let n = 1 << 20;
     let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-    for bits in [Bits::B32, Bits::b8_dynamic()] {
+    for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
         let mut opt = build(&OptimConfig::adam(0.05, bits), n, None);
         let mut p = vec![0.0f32; n];
         let t0 = std::time::Instant::now();
@@ -55,7 +56,7 @@ fn main() {
             t0.elapsed().as_secs_f64()
         );
     }
-    println!("same trajectory quality, 4x smaller optimizer state.");
+    println!("same update rule at every width: 4x (8-bit) / 8x (4-bit) smaller state.");
 
     // ---- parameter groups: per-tensor precision policy (§2.3) -------------
     // One spec drives a whole model: 8-bit dynamic block-wise everywhere,
@@ -63,7 +64,11 @@ fn main() {
     // stable-embedding policy), spelled as a single group override.
     let spec = OptimSpec::with_groups(
         OptimConfig::adam(1e-3, Bits::b8_dynamic()),
-        vec![GroupOverride::emb32()],
+        vec![
+            GroupOverride::emb32(),
+            // and the attention projections drop to 4-bit packed state
+            GroupOverride::parse("block?.attn.*:bits=4").expect("static override"),
+        ],
     );
     let tensors: Vec<TensorInfo> = [
         ("embed.tok", 50_000 * 64),

@@ -113,7 +113,7 @@ pub fn adam_error_maps(
     for i in 0..m.len() {
         let u32v = m[i] / (r[i].max(0.0).sqrt() + eps);
         let u8v = dm[i] / (dr[i].max(0.0).sqrt() + eps);
-        let cell = maps.cell(qm.codes[i], qr.codes[i]);
+        let cell = maps.cell(qm.codes.get(i), qr.codes.get(i));
         maps.usage[cell] += 1;
         let abs = (u32v - u8v).abs() as f64;
         maps.abs_err_sum[cell] += abs;

@@ -15,8 +15,10 @@
 //!
 //! [optimizer]               # the BASE config every tensor starts from
 //! kind = "adam"             # adam|adamw|momentum|lamb|lars|adafactor|adagrad|sm3
-//! bits = 8                  # 8 or 32
+//! bits = 8                  # state precision: 32, 8, or 4 (16-level
+//!                           # packed codes per Li et al. 2023)
 //! format = "dynamic"        # dynamic|linear|quantile|inverse-dynamic
+//!                           # (every format has an 8-bit and a 4-bit codebook)
 //! blockwise = true          # block-wise (§2.1) vs tensor-wide normalization
 //! lr = 1.6e-2
 //! beta1 = 0.9
@@ -34,6 +36,10 @@
 //! [[optimizer.group]]
 //! pattern = "lm_head"
 //! lr = 6e-3
+//!
+//! [[optimizer.group]]
+//! pattern = "block?.attn.*"  # 4-bit states for the attention projections
+//! bits = 4                   # format/blockwise inherit from the base
 //!
 //! [train]
 //! steps = 300
@@ -239,10 +245,13 @@ impl RunConfig {
             self.model = m.to_string();
         }
         if let Some(o) = a.get("optimizer") {
-            // shorthand: adam | adam8 | momentum8 | adafactor | ...
-            let (kind, bits) = match o.strip_suffix('8') {
-                Some(base) => (base, 8),
-                None => (o, 32),
+            // shorthand: adam | adam8 | adam4 | momentum8 | adafactor | ...
+            let (kind, bits) = if let Some(base) = o.strip_suffix('8') {
+                (base, 8)
+            } else if let Some(base) = o.strip_suffix('4') {
+                (base, 4)
+            } else {
+                (o, 32)
             };
             self.optim = parse_optim(
                 kind,
@@ -325,7 +334,8 @@ pub fn parse_optim(kind: &str, bits: usize, format: &str, blockwise: bool) -> Re
     let bits = match bits {
         32 => Bits::B32,
         8 => Bits::B8 { format, blockwise },
-        other => return Err(anyhow!("bits must be 8 or 32, got {other}")),
+        4 => Bits::B4 { format, blockwise },
+        other => return Err(anyhow!("bits must be 4, 8 or 32, got {other}")),
     };
     let mut cfg = OptimConfig::adam(1e-3, bits);
     cfg.kind = kind;
@@ -480,5 +490,43 @@ lr = 0.006
         assert!(parse_optim("adafactor", 8, "dynamic", true).is_err());
         assert!(parse_optim("sm3", 8, "dynamic", true).is_err());
         assert!(parse_optim("adafactor", 32, "dynamic", true).is_ok());
+        // 4-bit follows the same capability rules
+        assert!(parse_optim("adafactor", 4, "dynamic", true).is_err());
+        assert!(parse_optim("sm3", 4, "dynamic", true).is_err());
+        let cfg = parse_optim("adam", 4, "dynamic", true).unwrap();
+        assert_eq!(cfg.bits, Bits::b4_dynamic());
+    }
+
+    #[test]
+    fn bits4_from_toml_and_cli() {
+        // base precision straight from TOML
+        let cfg = RunConfig::from_toml("[optimizer]\nkind = \"adam\"\nbits = 4\n").unwrap();
+        assert_eq!(cfg.optim.bits, Bits::b4_dynamic());
+        // group override from TOML
+        let cfg = RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 8\n\n\
+             [[optimizer.group]]\npattern = \"block?.attn.*\"\nbits = 4\n",
+        )
+        .unwrap();
+        let spec = cfg.optim_spec();
+        assert_eq!(spec.resolve("block0.attn.wq").0.bits, Bits::b4_dynamic());
+        assert_eq!(spec.resolve("lm_head").0.bits, Bits::b8_dynamic());
+        // CLI --override and the adam4 shorthand
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            ["train", "--optimizer", "adam4", "--override", "embed.*:bits=8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optim.bits, Bits::b4_dynamic());
+        let spec = cfg.optim_spec();
+        assert_eq!(spec.resolve("embed.tok").0.bits, Bits::b8_dynamic());
+        assert_eq!(spec.resolve("block0.attn.wq").0.bits, Bits::b4_dynamic());
+        // a 4-bit group resolving onto a factored optimizer still fails
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"adafactor\"\n\n[[optimizer.group]]\npattern = \"embed.*\"\nbits = 4\n"
+        )
+        .is_err());
     }
 }

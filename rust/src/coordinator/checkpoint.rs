@@ -1,13 +1,19 @@
 //! Checkpointing: parameters + optimizer state + step + RNG, keyed by
-//! tensor name and parameter group (format v2).
+//! tensor name and parameter group.
+//!
+//! Format v3 additionally records each tensor's resolved state precision
+//! (32/8/4 bits) so tooling can audit mixed-width layouts without the
+//! config; v2 files (no precision field) still load, reporting 0 for it.
 //!
 //! Quantized states are stored *dequantized* (f32). This is lossless:
 //! quantization is idempotent (`q(dq(q(x))) == q(x)`, pinned by the quant
 //! property tests), and the per-block absmax of a dequantized block equals
 //! the stored absmax exactly, so re-quantizing on load reproduces the
-//! codes bit-for-bit. Restore matches tensors **by name** (not position),
-//! so a checkpoint survives reorderings of the tensor list and mixed
-//! 8-bit/32-bit group layouts restore each tensor at its own precision.
+//! codes bit-for-bit — at any code width, since restore requantizes into
+//! the live state's own packed buffer. Restore matches tensors **by name**
+//! (not position), so a checkpoint survives reorderings of the tensor list
+//! and mixed 4/8/32-bit group layouts restore each tensor at its own
+//! precision.
 
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -21,13 +27,19 @@ use crate::util::io::*;
 use crate::util::rng::Rng;
 
 const MAGIC: u32 = 0xB1707_8_0;
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Oldest version [`Checkpoint::load`] still reads.
+const MIN_VERSION: u32 = 2;
 
 /// One tensor's checkpoint payload.
 pub struct TensorCheckpoint {
     pub name: String,
     /// Parameter-group index at capture time (informational).
     pub group: u64,
+    /// Resolved state precision at capture time (32/8/4; 0 when loaded
+    /// from a v2 file, which predates the field). Informational — restore
+    /// always goes through the dequantized f32 payload.
+    pub state_bits: u32,
     pub params: Vec<f32>,
     /// Named dequantized optimizer states.
     pub states: Vec<(String, Vec<f32>)>,
@@ -51,6 +63,7 @@ impl Checkpoint {
             .map(|i| TensorCheckpoint {
                 name: popt.tensor_name(i).to_string(),
                 group: popt.group_of(i) as u64,
+                state_bits: popt.tensor_cfg(i).bits.bit_count(),
                 params: params[i].clone(),
                 states: popt
                     .opt(i)
@@ -77,6 +90,7 @@ impl Checkpoint {
         for t in &self.tensors {
             write_str(&mut w, &t.name)?;
             write_u64(&mut w, t.group)?;
+            write_u32(&mut w, t.state_bits)?;
             write_f32_slice(&mut w, &t.params)?;
             write_u64(&mut w, t.states.len() as u64)?;
             for (name, vals) in &t.states {
@@ -94,8 +108,9 @@ impl Checkpoint {
         if read_u32(&mut r)? != MAGIC {
             return Err(anyhow!("bad checkpoint magic"));
         }
-        if read_u32(&mut r)? != VERSION {
-            return Err(anyhow!("unsupported checkpoint version"));
+        let version = read_u32(&mut r)?;
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
         }
         let step = read_u64(&mut r)?;
         let mut rng_state = [0u64; 4];
@@ -107,6 +122,8 @@ impl Checkpoint {
         for _ in 0..nt {
             let name = read_str(&mut r)?;
             let group = read_u64(&mut r)?;
+            // v2 predates the per-tensor precision field
+            let state_bits = if version >= 3 { read_u32(&mut r)? } else { 0 };
             let params = read_f32_slice(&mut r)?;
             let k = read_u64(&mut r)? as usize;
             let mut states = Vec::with_capacity(k);
@@ -114,7 +131,7 @@ impl Checkpoint {
                 let sname = read_str(&mut r)?;
                 states.push((sname, read_f32_slice(&mut r)?));
             }
-            tensors.push(TensorCheckpoint { name, group, params, states });
+            tensors.push(TensorCheckpoint { name, group, state_bits, params, states });
         }
         Ok(Checkpoint { step, rng_state, tensors })
     }
@@ -162,8 +179,10 @@ impl Checkpoint {
                         anyhow::ensure!(v.len() == vals.len(), "state len mismatch");
                         v.copy_from_slice(vals);
                     }
-                    crate::optim::StateTensor::Q8 { q, codebook } => {
+                    crate::optim::StateTensor::Quant { q, codebook } => {
                         anyhow::ensure!(q.len == vals.len(), "state len mismatch");
+                        // quantize_into takes the width from q itself, so
+                        // 8-bit and 4-bit states restore identically
                         let bq = crate::quant::BlockQuantizer::new(codebook.clone(), q.block);
                         bq.quantize_into(vals, q);
                     }
@@ -192,12 +211,15 @@ mod tests {
             .collect()
     }
 
-    /// Mixed 8-bit/32-bit group layout (embeddings 32-bit via the emb32
-    /// sugar) built over synthetic tensors.
+    /// Mixed 4/8/32-bit group layout (embeddings 32-bit via the emb32
+    /// sugar, attention 4-bit) built over synthetic tensors.
     fn mixed_popt() -> ParamOptimizer {
         let spec = OptimSpec::with_groups(
             OptimConfig::adam(0.01, Bits::b8_dynamic()),
-            vec![GroupOverride::emb32()],
+            vec![
+                GroupOverride::emb32(),
+                GroupOverride::parse("block0.attn.*:bits=4").unwrap(),
+            ],
         );
         ParamOptimizer::build(spec, &tensors(), None).unwrap()
     }
@@ -205,9 +227,10 @@ mod tests {
     #[test]
     fn roundtrip_preserves_training_trajectory_mixed_groups() {
         // Train A for 10 steps, checkpoint at 5; restoring into B and
-        // re-running steps 6..10 must give identical params (8-bit states
-        // included, thanks to idempotent requantization; the 32-bit
-        // embedding group restores at full precision).
+        // re-running steps 6..10 must give identical params (quantized
+        // states included, thanks to idempotent requantization at every
+        // code width; the 32-bit embedding group restores at full
+        // precision).
         let mut rng = Rng::new(1);
         let shapes: Vec<usize> = tensors().iter().map(|t| t.size).collect();
         let targets: Vec<Vec<f32>> = shapes
@@ -224,7 +247,8 @@ mod tests {
 
         let mut popt_a = mixed_popt();
         assert!(popt_a.tensor_cfg(0).bits == Bits::B32, "embed.tok in the 32-bit group");
-        assert!(popt_a.tensor_cfg(1).bits == Bits::b8_dynamic());
+        assert!(popt_a.tensor_cfg(1).bits == Bits::b4_dynamic(), "attn in the 4-bit group");
+        assert!(popt_a.tensor_cfg(2).bits == Bits::b8_dynamic());
         let mut p_a: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
         for _ in 0..5 {
             let g = grads(&p_a);
@@ -244,7 +268,12 @@ mod tests {
         assert_eq!(loaded.tensors.len(), 3);
         assert_eq!(loaded.tensors[0].name, "embed.tok");
         assert_eq!(loaded.tensors[0].group, 1, "embedding group recorded");
-        assert_eq!(loaded.tensors[1].group, 0);
+        assert_eq!(loaded.tensors[1].group, 2, "attention group recorded");
+        assert_eq!(loaded.tensors[2].group, 0);
+        // v3: per-tensor resolved precision travels with the file
+        assert_eq!(loaded.tensors[0].state_bits, 32);
+        assert_eq!(loaded.tensors[1].state_bits, 4);
+        assert_eq!(loaded.tensors[2].state_bits, 8);
 
         let mut popt_b = mixed_popt();
         let mut p_b: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
@@ -268,6 +297,50 @@ mod tests {
         let mut p_b = params.clone();
         let err = ck.restore(&mut p_b, &mut popt_b).unwrap_err();
         assert!(format!("{err:#}").contains("block0.attn.wq"), "{err:#}");
+    }
+
+    #[test]
+    fn loads_v2_files_without_precision_field() {
+        // hand-write a minimal v2-layout file (no per-tensor state_bits)
+        // and check it still loads, reporting 0 for the missing field
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.bin");
+        {
+            let f = File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            write_u32(&mut w, MAGIC).unwrap();
+            write_u32(&mut w, 2).unwrap(); // the pre-width format version
+            write_u64(&mut w, 7).unwrap(); // step
+            for st in [1u64, 2, 3, 4] {
+                write_u64(&mut w, st).unwrap();
+            }
+            write_u64(&mut w, 1).unwrap(); // one tensor
+            write_str(&mut w, "embed.tok").unwrap();
+            write_u64(&mut w, 0).unwrap(); // group
+            write_f32_slice(&mut w, &[1.0, 2.0]).unwrap();
+            write_u64(&mut w, 1).unwrap(); // one state
+            write_str(&mut w, "m").unwrap();
+            write_f32_slice(&mut w, &[0.5, -0.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 7);
+        assert_eq!(ck.tensors.len(), 1);
+        assert_eq!(ck.tensors[0].state_bits, 0, "v2 has no precision field");
+        assert_eq!(ck.tensors[0].params, vec![1.0, 2.0]);
+        assert_eq!(ck.tensors[0].states[0].1, vec![0.5, -0.5]);
+        // an unknown future version is still rejected
+        {
+            let f = File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            write_u32(&mut w, MAGIC).unwrap();
+            write_u32(&mut w, VERSION + 1).unwrap();
+            w.flush().unwrap();
+        }
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

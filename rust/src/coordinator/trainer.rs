@@ -141,9 +141,11 @@ impl<'rt> Trainer<'rt> {
                     obj(vec![
                         ("group", s(&g.label)),
                         ("config", s(&g.config)),
+                        ("bits", num(g.bits as f64)),
                         ("tensors", num(g.tensors as f64)),
                         ("params", num(g.params as f64)),
                         ("state_bytes", num(g.state_bytes as f64)),
+                        ("bytes_per_param", num(g.bytes_per_param())),
                     ])
                 })
                 .collect();

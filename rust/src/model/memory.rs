@@ -8,6 +8,8 @@
 //!   Adafactor(β1>0): 4 bytes/param (+ tiny factored second moment)
 //!   8-bit Adam   : 2 bytes/param + 8/B bytes absmax overhead
 //!   8-bit Momentum: 1 byte/param + 4/B
+//!   4-bit Adam   : 1 byte/param + 8/B (two packed states at 0.5 + 4/B
+//!                  bytes/element each, per Li et al. 2023)
 //! Activation memory is estimated for batch size one at the model's native
 //! sequence length (Table 2 uses batch 1).
 
@@ -21,6 +23,7 @@ pub enum OptStateKind {
     Adafactor,
     Adam8,
     Momentum8,
+    Adam4,
 }
 
 impl OptStateKind {
@@ -31,6 +34,8 @@ impl OptStateKind {
             OptStateKind::Adafactor => 4.0,
             OptStateKind::Adam8 => 2.0 + 8.0 / BLOCK as f64,
             OptStateKind::Momentum8 => 1.0 + 4.0 / BLOCK as f64,
+            // two packed 4-bit states: 2 × (0.5 + 4/B) bytes/element
+            OptStateKind::Adam4 => 1.0 + 8.0 / BLOCK as f64,
         }
     }
 
@@ -41,6 +46,7 @@ impl OptStateKind {
             OptStateKind::Adafactor => "32-bit Adafactor",
             OptStateKind::Adam8 => "8-bit Adam",
             OptStateKind::Momentum8 => "8-bit Momentum",
+            OptStateKind::Adam4 => "4-bit Adam",
         }
     }
 }
@@ -131,6 +137,29 @@ mod tests {
         assert_eq!(mm.state_bytes(p, OptStateKind::Adam32), 8e9);
         let b8 = mm.state_bytes(p, OptStateKind::Adam8);
         assert!(b8 > 2e9 && b8 < 2.01e9, "{b8}");
+        let b4 = mm.state_bytes(p, OptStateKind::Adam4);
+        assert!(b4 > 1e9 && b4 < 1.01e9, "{b4}");
+        // 4-bit saves ~7 GB/B params vs 32-bit Adam, ~1 GB more than 8-bit
+        let saved4 = mm.saved_vs_adam32_gb(p, OptStateKind::Adam4);
+        let saved8 = mm.saved_vs_adam32_gb(p, OptStateKind::Adam8);
+        assert!(saved4 > 6.9 && saved4 < 7.1, "{saved4}");
+        assert!(saved4 > saved8);
+    }
+
+    #[test]
+    fn four_bit_admits_at_least_the_eight_bit_models() {
+        let mm = MemoryModel::default();
+        for budget in [6.0, 11.0, 24.0] {
+            let p8 = mm
+                .largest_finetunable(budget, OptStateKind::Adam8)
+                .map(|m| m.params)
+                .unwrap_or(0.0);
+            let p4 = mm
+                .largest_finetunable(budget, OptStateKind::Adam4)
+                .map(|m| m.params)
+                .unwrap_or(0.0);
+            assert!(p4 >= p8, "budget {budget}: 4-bit {p4} vs 8-bit {p8}");
+        }
     }
 
     #[test]

@@ -347,7 +347,7 @@ mod tests {
             (OptimKind::Lamb, 20000), // many blocks, phased reductions
             (OptimKind::Adam, 2049),
         ];
-        for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
             let (mut o_serial, mut p_serial, g) = fleet(&kinds, bits);
             let (mut o_fused, mut p_fused, _) = fleet(&kinds, bits);
             for _ in 0..3 {
@@ -385,7 +385,7 @@ mod tests {
             (OptimKind::Lamb, 20000),
             (OptimKind::Adam, 2049),
         ];
-        for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
             let (mut o_serial, mut p_serial, g) = fleet(&kinds, bits);
             let (mut o_stream, mut p_stream, _) = fleet(&kinds, bits);
             for _ in 0..3 {

@@ -99,7 +99,7 @@ fn glob_match(pat: &[u8], text: &[u8]) -> bool {
 #[derive(Clone, Debug, Default)]
 pub struct GroupOverride {
     pub pattern: Option<Pattern>,
-    /// State precision: 8 or 32 (validated at parse time).
+    /// State precision: 4, 8, or 32 (validated at parse time).
     pub bits: Option<u32>,
     pub format: Option<Format>,
     pub blockwise: Option<bool>,
@@ -177,7 +177,7 @@ impl GroupOverride {
             "bits" => {
                 let b: u32 =
                     val.parse().map_err(|_| anyhow!("override key bits: bad value {val:?}"))?;
-                ensure!(b == 8 || b == 32, "bits must be 8 or 32, got {b}");
+                ensure!(b == 4 || b == 8 || b == 32, "bits must be 4, 8 or 32, got {b}");
                 self.bits = Some(b);
             }
             "format" => {
@@ -224,16 +224,16 @@ impl GroupOverride {
     pub fn apply(&self, base: &OptimConfig) -> OptimConfig {
         let mut cfg = *base;
         if self.bits.is_some() || self.format.is_some() || self.blockwise.is_some() {
-            let (b0, f0, bw0) = match cfg.bits {
-                Bits::B32 => (32, Format::Dynamic, true),
-                Bits::B8 { format, blockwise } => (8, format, blockwise),
+            let (b0, f0, bw0) = match cfg.bits.quantized() {
+                None => (32, Format::Dynamic, true),
+                Some((format, blockwise, width)) => (width.bits(), format, blockwise),
             };
+            let format = self.format.unwrap_or(f0);
+            let blockwise = self.blockwise.unwrap_or(bw0);
             cfg.bits = match self.bits.unwrap_or(b0) {
                 32 => Bits::B32,
-                _ => Bits::B8 {
-                    format: self.format.unwrap_or(f0),
-                    blockwise: self.blockwise.unwrap_or(bw0),
-                },
+                4 => Bits::B4 { format, blockwise },
+                _ => Bits::B8 { format, blockwise },
             };
         }
         if let Some(v) = self.lr {
@@ -257,10 +257,7 @@ impl GroupOverride {
     /// Sanity of this override *against a base config* (parse-time errors
     /// instead of silent fallbacks; see also `spec::validate_config`).
     pub fn check_against(&self, base: &OptimConfig) -> Result<()> {
-        let resolved_bits = self.bits.unwrap_or(match base.bits {
-            Bits::B32 => 32,
-            Bits::B8 { .. } => 8,
-        });
+        let resolved_bits = self.bits.unwrap_or(base.bits.bit_count());
         if resolved_bits == 32 && (self.format.is_some() || self.blockwise.is_some()) {
             return Err(anyhow!(
                 "group {:?} sets format/blockwise but resolves to 32-bit state \
@@ -342,9 +339,24 @@ pub struct GroupReport {
     pub label: String,
     /// Resolved config description (e.g. "8-bit[dynamic,blockwise] adam").
     pub config: String,
+    /// Resolved state precision of this group (32, 8, or 4) — makes mixed
+    /// 4/8/32 runs distinguishable in the JSONL `groups` record.
+    pub bits: u32,
     pub tensors: usize,
     pub params: usize,
     pub state_bytes: usize,
+}
+
+impl GroupReport {
+    /// Optimizer-state bytes per parameter (0.0 for an unmatched group) —
+    /// the Table 1-style footprint this group actually pays.
+    pub fn bytes_per_param(&self) -> f64 {
+        if self.params == 0 {
+            0.0
+        } else {
+            self.state_bytes as f64 / self.params as f64
+        }
+    }
 }
 
 /// One native tensor queued for streaming admission. The pub metadata
@@ -647,33 +659,29 @@ impl ParamOptimizer {
     pub fn group_reports(&self) -> Vec<GroupReport> {
         let n_groups = self.spec.groups.len() + 1;
         let mut reports: Vec<GroupReport> = (0..n_groups)
-            .map(|g| GroupReport {
-                label: self.spec.group_label(g),
-                config: String::new(),
-                tensors: 0,
-                params: 0,
-                state_bytes: 0,
-            })
-            .collect();
-        for slot in &self.slots {
-            let r = &mut reports[slot.group];
-            if r.config.is_empty() {
-                r.config = slot.cfg.describe();
-            }
-            r.tensors += 1;
-            r.params += slot.size;
-            r.state_bytes += slot.opt.state_bytes();
-        }
-        // Groups with no matching tensor still show their would-be config.
-        for (g, r) in reports.iter_mut().enumerate() {
-            if r.config.is_empty() {
+            .map(|g| {
+                // Groups with no matching tensor still show their would-be
+                // resolved config and precision.
                 let cfg = if g == 0 {
                     self.spec.base
                 } else {
                     self.spec.groups[g - 1].apply(&self.spec.base)
                 };
-                r.config = cfg.describe();
-            }
+                GroupReport {
+                    label: self.spec.group_label(g),
+                    config: cfg.describe(),
+                    bits: cfg.bits.bit_count(),
+                    tensors: 0,
+                    params: 0,
+                    state_bytes: 0,
+                }
+            })
+            .collect();
+        for slot in &self.slots {
+            let r = &mut reports[slot.group];
+            r.tensors += 1;
+            r.params += slot.size;
+            r.state_bytes += slot.opt.state_bytes();
         }
         reports
     }
@@ -684,12 +692,14 @@ impl ParamOptimizer {
             .iter()
             .map(|r| {
                 format!(
-                    "group {:<24} {:<28} {:>3} tensors {:>10} params {:>10.2} KB state",
+                    "group {:<24} {:<28} {:>3} tensors {:>10} params {:>10.2} KB state \
+                     ({:.3} B/param)",
                     r.label,
                     r.config,
                     r.tensors,
                     r.params,
-                    r.state_bytes as f64 / 1e3
+                    r.state_bytes as f64 / 1e3,
+                    r.bytes_per_param()
                 )
             })
             .collect::<Vec<_>>()
@@ -750,6 +760,10 @@ mod tests {
         let re = GroupOverride::parse(&ov.describe()).unwrap();
         assert_eq!(re.lr, ov.lr);
         assert_eq!(re.format, ov.format);
+
+        let ov = GroupOverride::parse("block?.attn.*:bits=4").unwrap();
+        assert_eq!(ov.bits, Some(4));
+        assert_eq!(ov.describe(), "block?.attn.*:bits=4");
 
         assert!(GroupOverride::parse("no-colon").is_err());
         assert!(GroupOverride::parse("p:bits=16").is_err());
@@ -821,6 +835,40 @@ mod tests {
         let per_param_emb = emb.state_bytes as f64 / emb.params as f64;
         let per_param_def = reports[0].state_bytes as f64 / reports[0].params as f64;
         assert!(per_param_emb > 3.0 * per_param_def, "{per_param_emb} vs {per_param_def}");
+    }
+
+    #[test]
+    fn bits4_group_resolution_and_reporting() {
+        // a mixed 32/8/4 layout: embeddings at 32-bit, attention at 4-bit,
+        // everything else at the 8-bit base
+        let base = OptimConfig::adam(1e-3, Bits::b8_dynamic());
+        let spec = OptimSpec::with_groups(
+            base,
+            vec![
+                GroupOverride::emb32(),
+                GroupOverride::parse("block?.attn.*:bits=4").unwrap(),
+            ],
+        );
+        let popt = ParamOptimizer::build(spec, &lm_tensors(), None).unwrap();
+        let wq = popt.find("block0.attn.wq").unwrap();
+        assert_eq!(popt.tensor_cfg(wq).bits, Bits::b4_dynamic());
+        assert_eq!(popt.group_of(wq), 2);
+        let reports = popt.group_reports();
+        assert_eq!(reports[0].bits, 8);
+        assert_eq!(reports[1].bits, 32);
+        assert_eq!(reports[2].bits, 4);
+        // the 4-bit group pays about half a byte per param per state
+        // (Adam: two states => ~1.0 B/param + absmax overhead)
+        let q4 = &reports[2];
+        assert!(q4.tensors > 0);
+        assert!(
+            q4.bytes_per_param() > 0.9 && q4.bytes_per_param() < 1.1,
+            "{}",
+            q4.bytes_per_param()
+        );
+        let q8 = &reports[0];
+        assert!(q8.bytes_per_param() > 1.9 && q8.bytes_per_param() < 2.2);
+        assert!(reports[1].bytes_per_param() > 7.9);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Optimizer substrate: every optimizer the paper touches, each available
-//! with 32-bit or 8-bit block-wise quantized state.
+//! with 32-bit, 8-bit, or 4-bit block-wise quantized state (code width is
+//! a parameter of the quant substrate — see [`Bits`] and
+//! [`crate::quant::CodeWidth`]).
 //!
 //! | optimizer | states | paper use |
 //! |-----------|--------|-----------|
@@ -50,7 +52,7 @@ pub use groups::{
 pub use spec::{validate_config, OptimSpec};
 pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 
-use crate::quant::{Format, BLOCK};
+use crate::quant::{CodeWidth, Format, BLOCK};
 
 /// State precision for an optimizer instance.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -65,6 +67,12 @@ pub enum Bits {
         /// the "no block-wise" ablation rows of Table 3).
         blockwise: bool,
     },
+    /// 4-bit quantized states (Li et al. 2023): 16-level codebooks, two
+    /// codes per stored byte.
+    B4 {
+        format: Format,
+        blockwise: bool,
+    },
 }
 
 impl Bits {
@@ -72,23 +80,46 @@ impl Bits {
         Bits::B8 { format: Format::Dynamic, blockwise: true }
     }
 
+    pub fn b4_dynamic() -> Bits {
+        Bits::B4 { format: Format::Dynamic, blockwise: true }
+    }
+
     pub fn describe(&self) -> String {
-        match self {
-            Bits::B32 => "32-bit".into(),
-            Bits::B8 { format, blockwise } => format!(
-                "8-bit[{}{}]",
+        match self.quantized() {
+            None => "32-bit".into(),
+            Some((format, blockwise, width)) => format!(
+                "{}-bit[{}{}]",
+                width.bits(),
                 format.name(),
-                if *blockwise { ",blockwise" } else { ",tensorwise" }
+                if blockwise { ",blockwise" } else { ",tensorwise" }
             ),
+        }
+    }
+
+    /// Bits per stored state element (32, 8, or 4).
+    pub fn bit_count(&self) -> u32 {
+        match self.quantized() {
+            None => 32,
+            Some((_, _, width)) => width.bits(),
+        }
+    }
+
+    /// `(format, blockwise, code width)` for quantized precisions, `None`
+    /// for 32-bit — the one place the enum unfolds, so everything else
+    /// stays width-generic.
+    pub fn quantized(&self) -> Option<(Format, bool, CodeWidth)> {
+        match *self {
+            Bits::B32 => None,
+            Bits::B8 { format, blockwise } => Some((format, blockwise, CodeWidth::U8)),
+            Bits::B4 { format, blockwise } => Some((format, blockwise, CodeWidth::U4)),
         }
     }
 
     /// Block size to use for quantized state storage.
     pub fn state_block(&self, n: usize) -> usize {
-        match self {
-            Bits::B32 => BLOCK.min(n.max(1)),
-            Bits::B8 { blockwise: true, .. } => BLOCK.min(n.max(1)),
-            Bits::B8 { blockwise: false, .. } => n.max(1),
+        match self.quantized() {
+            Some((_, false, _)) => n.max(1),
+            _ => BLOCK.min(n.max(1)),
         }
     }
 }
@@ -143,6 +174,23 @@ impl OptimKind {
     /// (`spec::validate_config`).
     pub fn supports_8bit(&self) -> bool {
         !matches!(self, OptimKind::Adafactor | OptimKind::Sm3)
+    }
+
+    /// Whether this optimizer honors `bits = 4`. Same set as 8-bit: every
+    /// elementwise-state optimizer runs the identical dequantize → update →
+    /// requantize pipeline at 16 levels (Li et al. 2023 quantize exactly
+    /// these moment tensors); the factored optimizers stay 32-bit.
+    pub fn supports_4bit(&self) -> bool {
+        self.supports_8bit()
+    }
+
+    /// Width-dispatching capability check for a precision setting.
+    pub fn supports_bits(&self, bits: &Bits) -> bool {
+        match bits.quantized() {
+            None => true,
+            Some((_, _, CodeWidth::U8)) => self.supports_8bit(),
+            Some((_, _, CodeWidth::U4)) => self.supports_4bit(),
+        }
     }
 
     /// AOT update-artifact key for the HLO engine, plus whether the
@@ -251,11 +299,11 @@ pub fn build(cfg: &OptimConfig, n: usize, shape: Option<(usize, usize)>) -> Box<
 
 /// Make the signed/unsigned state tensors for a given precision config.
 pub(crate) fn make_state(bits: &Bits, n: usize, signed: bool) -> StateTensor {
-    match bits {
-        Bits::B32 => StateTensor::new_f32(n),
-        Bits::B8 { format, .. } => {
-            let cb = if signed { format.signed_codebook() } else { format.unsigned_codebook() };
-            StateTensor::new_q8(n, cb, bits.state_block(n))
+    match bits.quantized() {
+        None => StateTensor::new_f32(n),
+        Some((format, _, width)) => {
+            let cb = format.codebook(width, signed);
+            StateTensor::new_quant(n, cb, bits.state_block(n), width)
         }
     }
 }
@@ -292,7 +340,7 @@ mod tests {
             OptimKind::Adagrad,
             OptimKind::Sm3,
         ] {
-            for bits in [Bits::B32, Bits::b8_dynamic()] {
+            for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
                 let mut cfg = OptimConfig::adam(1e-3, bits);
                 cfg.kind = k;
                 let mut opt = build(&cfg, 100, Some((10, 10)));
@@ -313,6 +361,30 @@ mod tests {
         let o8 = build(&OptimConfig::adam(1e-3, Bits::b8_dynamic()), n, None);
         let ratio = o32.state_bytes() as f64 / o8.state_bytes() as f64;
         assert!(ratio > 3.9 && ratio < 4.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn four_bit_adam_uses_eighth_memory() {
+        let n = 1 << 20;
+        let o32 = build(&OptimConfig::adam(1e-3, Bits::B32), n, None);
+        let o4 = build(&OptimConfig::adam(1e-3, Bits::b4_dynamic()), n, None);
+        let ratio = o32.state_bytes() as f64 / o4.state_bytes() as f64;
+        assert!(ratio > 7.8 && ratio < 8.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bits_introspection() {
+        assert_eq!(Bits::B32.bit_count(), 32);
+        assert_eq!(Bits::b8_dynamic().bit_count(), 8);
+        assert_eq!(Bits::b4_dynamic().bit_count(), 4);
+        assert_eq!(Bits::b4_dynamic().describe(), "4-bit[dynamic,blockwise]");
+        assert_eq!(
+            Bits::B4 { format: crate::quant::Format::Linear, blockwise: false }.describe(),
+            "4-bit[linear,tensorwise]"
+        );
+        assert!(OptimKind::Adam.supports_bits(&Bits::b4_dynamic()));
+        assert!(!OptimKind::Adafactor.supports_bits(&Bits::b4_dynamic()));
+        assert!(OptimKind::Adafactor.supports_bits(&Bits::B32));
     }
 
     #[test]

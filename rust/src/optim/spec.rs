@@ -10,7 +10,7 @@
 use anyhow::{anyhow, Context, Result};
 
 use super::groups::GroupOverride;
-use super::{Bits, OptimConfig};
+use super::OptimConfig;
 use crate::quant::Format;
 
 /// Base optimizer config + ordered group overrides. Resolution is
@@ -79,22 +79,23 @@ impl OptimSpec {
 /// Reject optimizer configs that the substrate cannot honor, instead of
 /// letting `optim::build` silently construct a fallback:
 ///
-/// * `adafactor` / `sm3` with `bits = 8` — their factored row/column
-///   statistics are inherently 32-bit; the old path built full-precision
-///   states while claiming 8-bit.
+/// * `adafactor` / `sm3` with `bits = 8` or `bits = 4` — their factored
+///   row/column statistics are inherently 32-bit; the old path built
+///   full-precision states while claiming quantization.
 /// * `quantile` format without block-wise normalization — the quantile
 ///   codebook is calibrated on unit-normalized *block* statistics (Appendix
 ///   F.2 evaluates it block-wise only); a single tensor-wide block voids
-///   the calibration.
+///   the calibration. The same argument applies at every code width.
 /// * Out-of-range hyperparameters (non-finite or non-positive `lr`, betas
 ///   outside `[0, 1)`, negative `eps`/`weight_decay`).
 pub fn validate_config(cfg: &OptimConfig) -> Result<()> {
-    if let Bits::B8 { format, blockwise } = cfg.bits {
-        if !cfg.kind.supports_8bit() {
+    if let Some((format, blockwise, _)) = cfg.bits.quantized() {
+        if !cfg.kind.supports_bits(&cfg.bits) {
             return Err(anyhow!(
-                "{} has no 8-bit state implementation (its factored statistics are \
+                "{} has no {}-bit state implementation (its factored statistics are \
                  inherently 32-bit); use bits = 32",
-                cfg.kind.name()
+                cfg.kind.name(),
+                cfg.bits.bit_count()
             ));
         }
         if format == Format::Quantile && !blockwise {
@@ -123,7 +124,7 @@ pub fn validate_config(cfg: &OptimConfig) -> Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::OptimKind;
+    use super::super::{Bits, OptimKind};
     use super::*;
 
     fn base8() -> OptimConfig {
@@ -157,14 +158,28 @@ mod tests {
 
     #[test]
     fn validation_rejects_unsupported_combos() {
-        // adafactor/sm3 + 8-bit: previously a silent 32-bit fallback
+        // adafactor/sm3 + quantized state: previously a silent 32-bit
+        // fallback — rejected at every code width
         for kind in [OptimKind::Adafactor, OptimKind::Sm3] {
+            for bits in [Bits::b8_dynamic(), Bits::b4_dynamic()] {
+                let mut cfg = base8();
+                cfg.kind = kind;
+                cfg.bits = bits;
+                assert!(validate_config(&cfg).is_err(), "{kind:?} {bits:?}");
+            }
             let mut cfg = base8();
             cfg.kind = kind;
-            assert!(validate_config(&cfg).is_err(), "{kind:?}");
             cfg.bits = Bits::B32;
             assert!(validate_config(&cfg).is_ok(), "{kind:?} 32-bit");
         }
+        // the quantile-needs-blockwise rule holds at 4-bit too
+        let mut cfg = OptimConfig::adam(
+            1e-3,
+            Bits::B4 { format: Format::Quantile, blockwise: false },
+        );
+        assert!(validate_config(&cfg).is_err());
+        cfg.bits = Bits::B4 { format: Format::Quantile, blockwise: true };
+        assert!(validate_config(&cfg).is_ok());
         // quantile requires blockwise
         let mut cfg = OptimConfig::adam(
             1e-3,

@@ -26,8 +26,8 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
-use crate::quant::blockwise::{dequantize_block, quantize_block};
-use crate::quant::{Codebook, Quantized};
+use crate::quant::blockwise::{dequantize_block_codes, quantize_block_codes};
+use crate::quant::{CodeWidth, Codebook, Quantized};
 use crate::util::parallel::{self, SendPtr};
 
 /// How a state tensor is stored.
@@ -35,8 +35,10 @@ use crate::util::parallel::{self, SendPtr};
 pub enum StateTensor {
     /// Full-precision baseline (the 32-bit optimizers of Table 1).
     F32(Vec<f32>),
-    /// 8-bit block-wise quantized (codes + per-block absmax).
-    Q8 { q: Quantized, codebook: Arc<Codebook> },
+    /// Block-wise quantized (packed codes + per-block absmax); the code
+    /// width (8-bit byte-per-code or 4-bit two-per-byte) travels with the
+    /// buffer.
+    Quant { q: Quantized, codebook: Arc<Codebook> },
 }
 
 impl StateTensor {
@@ -44,15 +46,35 @@ impl StateTensor {
         StateTensor::F32(vec![0.0; n])
     }
 
+    /// Byte-per-code quantized state (the paper's 8-bit layout).
     pub fn new_q8(n: usize, codebook: Arc<Codebook>, block: usize) -> StateTensor {
+        Self::new_quant(n, codebook, block, CodeWidth::U8)
+    }
+
+    /// Width-generic quantized state.
+    pub fn new_quant(
+        n: usize,
+        codebook: Arc<Codebook>,
+        block: usize,
+        width: CodeWidth,
+    ) -> StateTensor {
+        assert!(
+            codebook.len() <= width.max_levels(),
+            "codebook {} does not fit {:?} codes",
+            codebook.name(),
+            width
+        );
         let zero = codebook.encode(0.0);
-        StateTensor::Q8 { q: Quantized::zeros(n, block.min(n.max(1)), zero), codebook }
+        StateTensor::Quant {
+            q: Quantized::zeros(n, block.min(n.max(1)), zero, width),
+            codebook,
+        }
     }
 
     pub fn len(&self) -> usize {
         match self {
             StateTensor::F32(v) => v.len(),
-            StateTensor::Q8 { q, .. } => q.len,
+            StateTensor::Quant { q, .. } => q.len,
         }
     }
 
@@ -64,23 +86,40 @@ impl StateTensor {
     pub fn bytes(&self) -> usize {
         match self {
             StateTensor::F32(v) => v.len() * 4,
-            StateTensor::Q8 { q, .. } => q.bytes(),
+            StateTensor::Quant { q, .. } => q.bytes(),
         }
     }
 
     pub fn is_quantized(&self) -> bool {
-        matches!(self, StateTensor::Q8 { .. })
+        matches!(self, StateTensor::Quant { .. })
+    }
+
+    /// Code width of the stored state (32-bit states have none).
+    pub fn code_width(&self) -> Option<CodeWidth> {
+        match self {
+            StateTensor::F32(_) => None,
+            StateTensor::Quant { q, .. } => Some(q.width()),
+        }
     }
 
     /// Dequantize the whole tensor (for checkpoints / analysis).
     pub fn to_f32(&self) -> Vec<f32> {
         match self {
             StateTensor::F32(v) => v.clone(),
-            StateTensor::Q8 { q, codebook } => {
+            StateTensor::Quant { q, codebook } => {
                 let mut out = vec![0.0f32; q.len];
+                let width = q.width();
+                let bytes = q.codes.as_bytes();
                 for b in 0..q.n_blocks() {
                     let (lo, hi) = q.block_range(b);
-                    dequantize_block(codebook, &q.codes[lo..hi], q.absmax[b], &mut out[lo..hi]);
+                    let (blo, bhi) = q.code_byte_range(b);
+                    dequantize_block_codes(
+                        codebook,
+                        width,
+                        &bytes[blo..bhi],
+                        q.absmax[b],
+                        &mut out[lo..hi],
+                    );
                 }
                 out
             }
@@ -90,8 +129,9 @@ impl StateTensor {
 
 /// One block's worth of optimizer-step inputs, with states already
 /// dequantized to f32 working slices. For F32 states the slice *is* the
-/// storage (updated in place); for Q8 it is thread-local scratch that the
-/// engine requantizes after the kernel returns.
+/// storage (updated in place); for quantized states (any code width) it is
+/// thread-local scratch that the engine requantizes after the kernel
+/// returns.
 pub struct BlockView<'a> {
     /// Global element offset of this block.
     pub start: usize,
@@ -111,12 +151,19 @@ thread_local! {
 }
 
 /// Type-erased per-state storage pointers for the block runner. Safety
-/// contract: block index `b` only touches elements `[b*block, (b+1)*block)`
-/// of `codes`/storage and `absmax[b]`, so distinct blocks are disjoint.
+/// contract: block index `b` only touches its own elements' packed bytes
+/// and `absmax[b]`, so distinct blocks are disjoint (4-bit packing keeps
+/// this true because blocks start on byte boundaries — `Quantized`
+/// enforces an even block size for multi-block `U4` tensors).
 #[derive(Clone, Copy)]
 enum StateParts<'a> {
     F32(SendPtr<f32>),
-    Q8 { codes: SendPtr<u8>, absmax: SendPtr<f32>, codebook: &'a Codebook },
+    Quant {
+        bytes: SendPtr<u8>,
+        width: CodeWidth,
+        absmax: SendPtr<f32>,
+        codebook: &'a Codebook,
+    },
 }
 
 fn state_parts(s: &mut StateTensor, block: usize, n: usize) -> StateParts<'_> {
@@ -125,11 +172,20 @@ fn state_parts(s: &mut StateTensor, block: usize, n: usize) -> StateParts<'_> {
             assert_eq!(v.len(), n, "state length mismatch");
             StateParts::F32(SendPtr(v.as_mut_ptr()))
         }
-        StateTensor::Q8 { q, codebook } => {
+        StateTensor::Quant { q, codebook } => {
             assert_eq!(q.block, block, "state block sizes must agree");
             assert_eq!(q.len, n, "state length mismatch");
-            StateParts::Q8 {
-                codes: SendPtr(q.codes.as_mut_ptr()),
+            let width = q.width();
+            // Re-check the packing invariant the parallel store relies on
+            // (`Quantized::zeros` enforces it, but the fields are public):
+            // multi-block U4 tensors need byte-aligned block starts.
+            assert!(
+                width == CodeWidth::U8 || block % 2 == 0 || n <= block,
+                "4-bit packed state needs an even block size (got {block} for {n} elements)"
+            );
+            StateParts::Quant {
+                bytes: SendPtr(q.codes.as_mut_bytes().as_mut_ptr()),
+                width,
                 absmax: SendPtr(q.absmax.as_mut_ptr()),
                 codebook: &**codebook,
             }
@@ -345,8 +401,8 @@ where
         assert_eq!(s.len(), n);
     }
     let block = match (&*s1, s2.as_deref()) {
-        (StateTensor::Q8 { q, .. }, _) => q.block,
-        (_, Some(StateTensor::Q8 { q, .. })) => q.block,
+        (StateTensor::Quant { q, .. }, _) => q.block,
+        (_, Some(StateTensor::Quant { q, .. })) => q.block,
         _ => fallback_block.min(n.max(1)),
     };
     let n_blocks = n.div_ceil(block);
@@ -367,16 +423,23 @@ where
             let scratch = &mut *cell.borrow_mut();
             let (scratch1, scratch2) = (&mut scratch.0, &mut scratch.1);
             // Load: F32 state hands out its storage (in-place update);
-            // Q8 dequantizes into this thread's scratch.
+            // quantized states dequantize their packed bytes into this
+            // thread's scratch. `width.bytes_for` maps element offsets to
+            // byte offsets — exact because blocks start at even elements.
             let s1_work: &mut [f32] = match p1 {
                 StateParts::F32(ptr) => unsafe {
                     std::slice::from_raw_parts_mut(ptr.0.add(lo), len)
                 },
-                StateParts::Q8 { codes, absmax, codebook } => {
-                    let codes_b = unsafe { std::slice::from_raw_parts(codes.0.add(lo), len) };
+                StateParts::Quant { bytes, width, absmax, codebook } => {
+                    let bytes_b = unsafe {
+                        std::slice::from_raw_parts(
+                            bytes.0.add(width.bytes_for(lo)),
+                            width.bytes_for(len),
+                        )
+                    };
                     let am = unsafe { *absmax.0.add(b) };
                     scratch1.resize(len, 0.0);
-                    dequantize_block(codebook, codes_b, am, scratch1);
+                    dequantize_block_codes(codebook, width, bytes_b, am, scratch1);
                     scratch1
                 }
             };
@@ -385,11 +448,16 @@ where
                 Some(StateParts::F32(ptr)) => {
                     Some(unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), len) })
                 }
-                Some(StateParts::Q8 { codes, absmax, codebook }) => {
-                    let codes_b = unsafe { std::slice::from_raw_parts(codes.0.add(lo), len) };
+                Some(StateParts::Quant { bytes, width, absmax, codebook }) => {
+                    let bytes_b = unsafe {
+                        std::slice::from_raw_parts(
+                            bytes.0.add(width.bytes_for(lo)),
+                            width.bytes_for(len),
+                        )
+                    };
                     let am = unsafe { *absmax.0.add(b) };
                     scratch2.resize(len, 0.0);
-                    dequantize_block(codebook, codes_b, am, scratch2);
+                    dequantize_block_codes(codebook, width, bytes_b, am, scratch2);
                     Some(scratch2)
                 }
             };
@@ -402,18 +470,28 @@ where
                 s2: s2_work,
             });
 
-            // Store: requantize Q8 states from scratch (Figure 1 — the
-            // update itself ran on the in-register values); F32 states
+            // Store: requantize quantized states from scratch (Figure 1 —
+            // the update itself ran on the in-register values); F32 states
             // were updated in place.
-            if let StateParts::Q8 { codes, absmax, codebook } = p1 {
-                let codes_b = unsafe { std::slice::from_raw_parts_mut(codes.0.add(lo), len) };
+            if let StateParts::Quant { bytes, width, absmax, codebook } = p1 {
+                let bytes_b = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        bytes.0.add(width.bytes_for(lo)),
+                        width.bytes_for(len),
+                    )
+                };
                 let am = unsafe { &mut *absmax.0.add(b) };
-                *am = quantize_block(codebook, &scratch1[..len], codes_b);
+                *am = quantize_block_codes(codebook, width, &scratch1[..len], bytes_b);
             }
-            if let Some(StateParts::Q8 { codes, absmax, codebook }) = p2 {
-                let codes_b = unsafe { std::slice::from_raw_parts_mut(codes.0.add(lo), len) };
+            if let Some(StateParts::Quant { bytes, width, absmax, codebook }) = p2 {
+                let bytes_b = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        bytes.0.add(width.bytes_for(lo)),
+                        width.bytes_for(len),
+                    )
+                };
                 let am = unsafe { &mut *absmax.0.add(b) };
-                *am = quantize_block(codebook, &scratch2[..len], codes_b);
+                *am = quantize_block_codes(codebook, width, &scratch2[..len], bytes_b);
             }
         });
     };
@@ -490,6 +568,61 @@ mod tests {
         let s8 = StateTensor::new_q8(2048 * 4, cb, 2048);
         assert_eq!(s32.bytes(), 2048 * 4 * 4);
         assert_eq!(s8.bytes(), 2048 * 4 + 4 * 4);
+        let cb4 = Arc::new(crate::quant::dynamic_tree::dynamic_signed4());
+        let s4 = StateTensor::new_quant(2048 * 4, cb4, 2048, CodeWidth::U4);
+        assert_eq!(s4.bytes(), 2048 * 2 + 4 * 4);
+        assert_eq!(s4.code_width(), Some(CodeWidth::U4));
+        assert_eq!(s32.code_width(), None);
+    }
+
+    #[test]
+    fn q4_state_roundtrips_match_quantizer_reference() {
+        // the engine's packed store path must agree bit-for-bit with the
+        // public quantizer API (including the ragged odd tail block)
+        use crate::quant::BlockQuantizer;
+        let cb = Arc::new(crate::quant::dynamic_tree::dynamic_signed4());
+        let n = 5 * 512 + 301; // ragged, odd-length tail
+        let mut s = StateTensor::new_quant(n, cb.clone(), 512, CodeWidth::U4);
+        let mut params = vec![0.0f32; n];
+        let grads: Vec<f32> = {
+            let mut rng = Rng::new(11);
+            (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
+        };
+        step_blocks(&mut params, &grads, &mut s, None, 512, |v| {
+            v.s1.copy_from_slice(v.grads);
+        });
+        let bq = BlockQuantizer::with_width(cb, 512, CodeWidth::U4);
+        let reference = bq.dequantize(&bq.quantize(&grads));
+        assert_eq!(s.to_f32(), reference);
+    }
+
+    #[test]
+    fn mixed_width_states_in_one_tensor() {
+        // a 4-bit first state alongside an 8-bit second state: widths are
+        // per-buffer, only block sizes must agree
+        let cb4 = Arc::new(crate::quant::dynamic_tree::dynamic_signed4());
+        let cb8 = Arc::new(dynamic_signed());
+        let n = 700;
+        let mut s1 = StateTensor::new_quant(n, cb4, 256, CodeWidth::U4);
+        let mut s2 = StateTensor::new_q8(n, cb8, 256);
+        let mut params = vec![0.0f32; n];
+        let grads: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        step_blocks(&mut params, &grads, &mut s1, Some(&mut s2), 256, |v| {
+            let s2 = v.s2.expect("two states");
+            for i in 0..v.params.len() {
+                v.s1[i] = v.grads[i];
+                s2[i] = -v.grads[i];
+            }
+        });
+        let a = s1.to_f32();
+        let b = s2.to_f32();
+        for i in 0..n {
+            let g = grads[i];
+            // 4-bit is coarse (16 levels) but must keep the sign and rough
+            // magnitude; 8-bit stays at its usual tolerance
+            assert!((a[i] - g).abs() <= 0.6 * g.abs() + 2e-3, "s1[{i}] {} vs {g}", a[i]);
+            assert!((b[i] + g).abs() <= 0.35 * g.abs() + 1e-3, "s2[{i}] {} vs {}", b[i], -g);
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Block-wise quantization (paper §2.1).
+//! Block-wise quantization (paper §2.1), width-generic.
 //!
 //! The input tensor is viewed as a flat sequence chunked into blocks of
 //! B = 2048 elements. Each block is normalized by its own absolute maximum
@@ -8,31 +8,46 @@
 //!   * an outlier only perturbs its own block (stability),
 //!   * the per-block max is quantized with *zero* error (absmax/N_b = ±1 and
 //!     ±1 is in the codebook).
+//!
+//! Codes are stored packed in a [`CodeBuf`]: one byte per code at
+//! [`CodeWidth::U8`] (the paper's layout) or two codes per byte at
+//! [`CodeWidth::U4`] (Li et al. 2023). All block-partition arithmetic is
+//! width-agnostic; the packed fast paths ([`quantize_block_codes`],
+//! [`dequantize_block_codes`]) encode/decode straight between f32 scratch
+//! and packed storage without an intermediate unpacked buffer.
 
 use std::sync::Arc;
 
 use super::codebook::Codebook;
+use super::codebuf::{CodeBuf, CodeWidth};
 use crate::util::parallel;
 
 /// The paper's block size.
 pub const BLOCK: usize = 2048;
 
-/// An 8-bit quantized tensor: one code per element plus one f32 absmax per
-/// block. Memory: 1 byte/element + 4/B bytes/element overhead (≈1.002
-/// bytes/element at B=2048).
+/// A quantized tensor: packed codes plus one f32 absmax per block.
+/// Memory: `bits/8` bytes/element + 4/B bytes/element overhead (≈1.002
+/// bytes/element at 8-bit B=2048, ≈0.502 at 4-bit).
 #[derive(Clone, Debug)]
 pub struct Quantized {
-    pub codes: Vec<u8>,
+    pub codes: CodeBuf,
     pub absmax: Vec<f32>,
     pub len: usize,
     pub block: usize,
 }
 
 impl Quantized {
-    pub fn zeros(len: usize, block: usize, zero_code: u8) -> Quantized {
+    pub fn zeros(len: usize, block: usize, zero_code: u8, width: CodeWidth) -> Quantized {
+        // U4 blocks must start on byte boundaries so the parallel block
+        // engine never has two blocks sharing a byte: any block size works
+        // for a single-block tensor, multi-block tensors need an even one.
+        assert!(
+            width == CodeWidth::U8 || block % 2 == 0 || len <= block,
+            "4-bit packing needs an even block size (got {block} for {len} elements)"
+        );
         let n_blocks = len.div_ceil(block).max(1);
         Quantized {
-            codes: vec![zero_code; len],
+            codes: CodeBuf::filled(width, len, zero_code),
             absmax: vec![0.0; n_blocks],
             len,
             block,
@@ -50,30 +65,58 @@ impl Quantized {
         (lo, (lo + self.block).min(self.len))
     }
 
-    /// Total storage in bytes (codes + absmax).
+    /// Packed-byte range of block `b` within `codes.as_bytes()`.
+    pub fn code_byte_range(&self, b: usize) -> (usize, usize) {
+        let (lo, hi) = self.block_range(b);
+        let width = self.codes.width();
+        (width.bytes_for(lo), width.bytes_for(lo) + width.bytes_for(hi - lo))
+    }
+
+    /// Code width of the stored codes.
+    pub fn width(&self) -> CodeWidth {
+        self.codes.width()
+    }
+
+    /// Total storage in bytes (packed codes + absmax).
     pub fn bytes(&self) -> usize {
-        self.codes.len() + self.absmax.len() * 4
+        self.codes.storage_bytes() + self.absmax.len() * 4
     }
 }
 
-/// Quantizer = codebook + block size. `block >= len` degenerates to the
-/// tensor-wide normalization of plain dynamic quantization (§1.2), which is
-/// exactly the ablation baseline in Table 3.
+/// Quantizer = codebook + block size + code width. `block >= len`
+/// degenerates to the tensor-wide normalization of plain dynamic
+/// quantization (§1.2), which is exactly the ablation baseline in Table 3.
 #[derive(Clone)]
 pub struct BlockQuantizer {
     pub codebook: Arc<Codebook>,
     pub block: usize,
+    pub width: CodeWidth,
 }
 
 impl BlockQuantizer {
+    /// Byte-per-code quantizer (the paper's 8-bit layout).
     pub fn new(codebook: Arc<Codebook>, block: usize) -> Self {
+        Self::with_width(codebook, block, CodeWidth::U8)
+    }
+
+    /// Width-generic constructor; the codebook must be indexable at the
+    /// chosen width.
+    pub fn with_width(codebook: Arc<Codebook>, block: usize, width: CodeWidth) -> Self {
         assert!(block > 0);
-        Self { codebook, block }
+        assert!(
+            codebook.len() <= width.max_levels(),
+            "codebook {} has {} levels, max {} at {:?}",
+            codebook.name(),
+            codebook.len(),
+            width.max_levels(),
+            width
+        );
+        Self { codebook, block, width }
     }
 
     /// Tensor-wide variant (single normalization constant).
     pub fn tensor_wide(codebook: Arc<Codebook>) -> Self {
-        Self { codebook, block: usize::MAX }
+        Self { codebook, block: usize::MAX, width: CodeWidth::U8 }
     }
 
     fn effective_block(&self, len: usize) -> usize {
@@ -84,21 +127,39 @@ impl BlockQuantizer {
     pub fn quantize(&self, x: &[f32]) -> Quantized {
         let block = self.effective_block(x.len());
         let zero = self.codebook.encode(0.0);
-        let mut q = Quantized::zeros(x.len(), block, zero);
+        let mut q = Quantized::zeros(x.len(), block, zero, self.width);
         self.quantize_into(x, &mut q);
         q
     }
 
-    /// Re-quantize into existing storage (hot path — no allocation).
+    /// Re-quantize into existing storage (hot path — no allocation). Width
+    /// and block size are taken from `q` itself, so the encoding codebook
+    /// must fit `q`'s width even if this quantizer was declared wider.
     pub fn quantize_into(&self, x: &[f32], q: &mut Quantized) {
         assert_eq!(x.len(), q.len);
         let block = q.block;
+        let width = q.codes.width();
+        assert!(
+            self.codebook.len() <= width.max_levels(),
+            "codebook {} has {} levels, max {} at {:?}",
+            self.codebook.name(),
+            self.codebook.len(),
+            width.max_levels(),
+            width
+        );
+        let block_bytes = width.bytes_for(block.min(q.len.max(1)));
         let cb = &*self.codebook;
-        parallel::par_chunks_pair_mut(&mut q.codes, block, &mut q.absmax, 1, |b, codes, am| {
-            let lo = b * block;
-            let xs = &x[lo..lo + codes.len()];
-            am[0] = quantize_block(cb, xs, codes);
-        });
+        parallel::par_chunks_pair_mut(
+            q.codes.as_mut_bytes(),
+            block_bytes.max(1),
+            &mut q.absmax,
+            1,
+            |b, bytes, am| {
+                let lo = b * block;
+                let hi = (lo + block).min(x.len());
+                am[0] = quantize_block_codes(cb, width, &x[lo..hi], bytes);
+            },
+        );
     }
 
     /// Dequantize a full tensor.
@@ -111,21 +172,22 @@ impl BlockQuantizer {
     pub fn dequantize_into(&self, q: &Quantized, out: &mut [f32]) {
         assert_eq!(out.len(), q.len);
         let cb = &*self.codebook;
-        let codes = &q.codes;
+        let width = q.codes.width();
+        let bytes = q.codes.as_bytes();
         let absmax = &q.absmax;
         let block = q.block;
         parallel::par_chunks_mut(out, block, |b, o| {
             let lo = b * block;
-            dequantize_block(cb, &codes[lo..lo + o.len()], absmax[b], o);
+            let blo = width.bytes_for(lo);
+            let bhi = blo + width.bytes_for(o.len());
+            dequantize_block_codes(cb, width, &bytes[blo..bhi], absmax[b], o);
         });
     }
 }
 
-/// Quantize one block: returns the block absmax (the normalization
-/// constant stored alongside the codes).
+/// Absolute maximum of one block (the normalization constant `N_b`).
 #[inline]
-pub fn quantize_block(cb: &Codebook, xs: &[f32], codes: &mut [u8]) -> f32 {
-    debug_assert_eq!(xs.len(), codes.len());
+fn block_absmax(xs: &[f32]) -> f32 {
     let mut absmax = 0.0f32;
     for &v in xs {
         let a = v.abs();
@@ -133,6 +195,15 @@ pub fn quantize_block(cb: &Codebook, xs: &[f32], codes: &mut [u8]) -> f32 {
             absmax = a;
         }
     }
+    absmax
+}
+
+/// Quantize one block into *unpacked* one-byte codes: returns the block
+/// absmax (the normalization constant stored alongside the codes).
+#[inline]
+pub fn quantize_block(cb: &Codebook, xs: &[f32], codes: &mut [u8]) -> f32 {
+    debug_assert_eq!(xs.len(), codes.len());
+    let absmax = block_absmax(xs);
     // All-zero (or empty) block: store absmax 0; normalization uses 1.0 so
     // every element encodes the exact-zero code.
     let inv = if absmax > 0.0 { 1.0 / absmax } else { 1.0 };
@@ -142,7 +213,8 @@ pub fn quantize_block(cb: &Codebook, xs: &[f32], codes: &mut [u8]) -> f32 {
     absmax
 }
 
-/// Dequantize one block: codebook lookup then denormalize by absmax.
+/// Dequantize one block of *unpacked* codes: codebook lookup then
+/// denormalize by absmax.
 #[inline]
 pub fn dequantize_block(cb: &Codebook, codes: &[u8], absmax: f32, out: &mut [f32]) {
     debug_assert_eq!(codes.len(), out.len());
@@ -151,10 +223,68 @@ pub fn dequantize_block(cb: &Codebook, codes: &[u8], absmax: f32, out: &mut [f32
     }
 }
 
+/// Width-generic block quantize straight into packed storage bytes
+/// (`bytes.len() == width.bytes_for(xs.len())`). At `U4` two encodes are
+/// fused per output byte; an odd tail leaves its dead high nibble zero so
+/// storage stays canonical for bitwise comparison.
+#[inline]
+pub fn quantize_block_codes(
+    cb: &Codebook,
+    width: CodeWidth,
+    xs: &[f32],
+    bytes: &mut [u8],
+) -> f32 {
+    match width {
+        CodeWidth::U8 => quantize_block(cb, xs, bytes),
+        CodeWidth::U4 => {
+            debug_assert_eq!(bytes.len(), xs.len().div_ceil(2));
+            debug_assert!(cb.len() <= 16, "codebook too large for 4-bit codes");
+            let absmax = block_absmax(xs);
+            let inv = if absmax > 0.0 { 1.0 / absmax } else { 1.0 };
+            let mut pairs = xs.chunks_exact(2);
+            for (b, pair) in bytes.iter_mut().zip(&mut pairs) {
+                *b = cb.encode(pair[0] * inv) | (cb.encode(pair[1] * inv) << 4);
+            }
+            if let [last] = pairs.remainder() {
+                bytes[xs.len() / 2] = cb.encode(last * inv);
+            }
+            absmax
+        }
+    }
+}
+
+/// Width-generic block dequantize straight from packed storage bytes.
+#[inline]
+pub fn dequantize_block_codes(
+    cb: &Codebook,
+    width: CodeWidth,
+    bytes: &[u8],
+    absmax: f32,
+    out: &mut [f32],
+) {
+    match width {
+        CodeWidth::U8 => dequantize_block(cb, bytes, absmax, out),
+        CodeWidth::U4 => {
+            debug_assert_eq!(bytes.len(), out.len().div_ceil(2));
+            let n = out.len();
+            let mut pairs = out.chunks_exact_mut(2);
+            for (pair, &b) in (&mut pairs).zip(bytes) {
+                pair[0] = cb.decode(b & 0x0F) * absmax;
+                pair[1] = cb.decode(b >> 4) * absmax;
+            }
+            if n % 2 == 1 {
+                out[n - 1] = cb.decode(bytes[n / 2] & 0x0F) * absmax;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
+    use crate::quant::dynamic_tree::{
+        dynamic_signed, dynamic_signed4, dynamic_unsigned, dynamic_unsigned4,
+    };
     use crate::quant::linear::linear_signed;
     use crate::util::rng::Rng;
 
@@ -180,15 +310,22 @@ mod tests {
     #[test]
     fn block_absmax_is_exact() {
         // §2.1: "block-wise quantization approximates outlier values without
-        // any error" — the per-block max must round-trip exactly.
-        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 256);
-        let mut x = data(2048, 2);
-        x[100] = 7.25; // outlier in block 0
-        x[1500] = -3.5; // negative outlier in block 5
-        let q = bq.quantize(&x);
-        let y = bq.dequantize(&q);
-        assert_eq!(y[100], 7.25);
-        assert_eq!(y[1500], -3.5);
+        // any error" — the per-block max must round-trip exactly, at every
+        // code width (±1 is in every codebook).
+        for width in [CodeWidth::U8, CodeWidth::U4] {
+            let cb = match width {
+                CodeWidth::U8 => dynamic_signed(),
+                CodeWidth::U4 => dynamic_signed4(),
+            };
+            let bq = BlockQuantizer::with_width(Arc::new(cb), 256, width);
+            let mut x = data(2048, 2);
+            x[100] = 7.25; // outlier in block 0
+            x[1500] = -3.5; // negative outlier in block 5
+            let q = bq.quantize(&x);
+            let y = bq.dequantize(&q);
+            assert_eq!(y[100], 7.25, "{width:?}");
+            assert_eq!(y[1500], -3.5, "{width:?}");
+        }
     }
 
     #[test]
@@ -200,10 +337,16 @@ mod tests {
         x_out[0] = 1e4; // enormous outlier in block 0
         let q_dirty = bq.quantize(&x_out);
         // codes in every block other than block 0 are identical
-        assert_eq!(&q_clean.codes[256..], &q_dirty.codes[256..]);
+        assert_eq!(
+            &q_clean.codes.as_bytes()[256..],
+            &q_dirty.codes.as_bytes()[256..]
+        );
         assert_eq!(&q_clean.absmax[1..], &q_dirty.absmax[1..]);
         // block 0 degraded, as expected
-        assert_ne!(&q_clean.codes[..256], &q_dirty.codes[..256]);
+        assert_ne!(
+            &q_clean.codes.as_bytes()[..256],
+            &q_dirty.codes.as_bytes()[..256]
+        );
     }
 
     #[test]
@@ -216,7 +359,7 @@ mod tests {
         x_out[0] = 1e4;
         let q = bq.quantize(&x_out);
         let zero = bq.codebook.encode(0.0);
-        let zeros = q.codes[1..].iter().filter(|&&c| c == zero).count();
+        let zeros = q.codes.to_codes()[1..].iter().filter(|&&c| c == zero).count();
         assert!(zeros > 2000, "only {zeros} squashed to zero");
     }
 
@@ -230,58 +373,115 @@ mod tests {
         for b in 0..8 {
             let lo = b * 128;
             let q_b = bq.quantize(&x[lo..lo + 128]);
-            assert_eq!(&q_full.codes[lo..lo + 128], &q_b.codes[..]);
+            assert_eq!(
+                &q_full.codes.as_bytes()[lo..lo + 128],
+                q_b.codes.as_bytes()
+            );
             assert!((q_full.absmax[b] - q_b.absmax[0]).abs() == 0.0);
         }
     }
 
     #[test]
     fn ragged_tail_block() {
-        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 100);
-        let x = data(257, 6);
-        let q = bq.quantize(&x);
-        assert_eq!(q.n_blocks(), 3);
-        let y = bq.dequantize(&q);
-        assert_eq!(y.len(), 257);
+        for width in [CodeWidth::U8, CodeWidth::U4] {
+            let cb = match width {
+                CodeWidth::U8 => dynamic_signed(),
+                CodeWidth::U4 => dynamic_signed4(),
+            };
+            let bq = BlockQuantizer::with_width(Arc::new(cb), 100, width);
+            let x = data(257, 6);
+            let q = bq.quantize(&x);
+            assert_eq!(q.n_blocks(), 3, "{width:?}");
+            let y = bq.dequantize(&q);
+            assert_eq!(y.len(), 257);
+        }
     }
 
     #[test]
     fn all_zero_tensor() {
-        let bq = BlockQuantizer::new(Arc::new(dynamic_unsigned()), BLOCK);
-        let x = vec![0.0f32; 5000];
-        let q = bq.quantize(&x);
-        let y = bq.dequantize(&q);
-        assert!(y.iter().all(|&v| v == 0.0));
+        for (cb, width) in [
+            (dynamic_unsigned(), CodeWidth::U8),
+            (dynamic_unsigned4(), CodeWidth::U4),
+        ] {
+            let bq = BlockQuantizer::with_width(Arc::new(cb), BLOCK, width);
+            let x = vec![0.0f32; 5000];
+            let q = bq.quantize(&x);
+            let y = bq.dequantize(&q);
+            assert!(y.iter().all(|&v| v == 0.0), "{width:?}");
+        }
     }
 
     #[test]
     fn quantize_into_matches_quantize() {
-        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 512);
-        let x = data(4096, 7);
-        let q1 = bq.quantize(&x);
-        let mut q2 = Quantized::zeros(x.len(), 512, bq.codebook.encode(0.0));
-        bq.quantize_into(&x, &mut q2);
-        assert_eq!(q1.codes, q2.codes);
-        assert_eq!(q1.absmax, q2.absmax);
+        for width in [CodeWidth::U8, CodeWidth::U4] {
+            let cb = match width {
+                CodeWidth::U8 => dynamic_signed(),
+                CodeWidth::U4 => dynamic_signed4(),
+            };
+            let bq = BlockQuantizer::with_width(Arc::new(cb), 512, width);
+            let x = data(4096, 7);
+            let q1 = bq.quantize(&x);
+            let mut q2 =
+                Quantized::zeros(x.len(), 512, bq.codebook.encode(0.0), width);
+            bq.quantize_into(&x, &mut q2);
+            assert_eq!(q1.codes, q2.codes, "{width:?}");
+            assert_eq!(q1.absmax, q2.absmax);
+        }
     }
 
     #[test]
     fn idempotent_roundtrip() {
-        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), 512);
-        let x = data(4096, 8);
-        let q1 = bq.quantize(&x);
-        let y1 = bq.dequantize(&q1);
-        let q2 = bq.quantize(&y1);
-        assert_eq!(q1.codes, q2.codes);
-        assert_eq!(bq.dequantize(&q2), y1);
+        for width in [CodeWidth::U8, CodeWidth::U4] {
+            let cb = match width {
+                CodeWidth::U8 => dynamic_signed(),
+                CodeWidth::U4 => dynamic_signed4(),
+            };
+            let bq = BlockQuantizer::with_width(Arc::new(cb), 512, width);
+            let x = data(4096, 8);
+            let q1 = bq.quantize(&x);
+            let y1 = bq.dequantize(&q1);
+            let q2 = bq.quantize(&y1);
+            assert_eq!(q1.codes, q2.codes, "{width:?}");
+            assert_eq!(bq.dequantize(&q2), y1);
+        }
     }
 
     #[test]
-    fn memory_overhead_is_just_over_1_byte_per_element() {
-        let bq = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+    fn memory_overhead_tracks_code_width() {
         let x = data(1 << 20, 9);
-        let q = bq.quantize(&x);
-        let bytes_per_elem = q.bytes() as f64 / x.len() as f64;
-        assert!(bytes_per_elem < 1.01, "{bytes_per_elem}");
+        let bq8 = BlockQuantizer::new(Arc::new(dynamic_signed()), BLOCK);
+        let q8 = bq8.quantize(&x);
+        let bpe8 = q8.bytes() as f64 / x.len() as f64;
+        assert!(bpe8 < 1.01, "{bpe8}");
+        let bq4 =
+            BlockQuantizer::with_width(Arc::new(dynamic_signed4()), BLOCK, CodeWidth::U4);
+        let q4 = bq4.quantize(&x);
+        let bpe4 = q4.bytes() as f64 / x.len() as f64;
+        assert!(bpe4 < 0.51, "{bpe4}");
+    }
+
+    #[test]
+    fn packed_block_helpers_match_unpacked_path() {
+        // quantize_block_codes/dequantize_block_codes at U4 must agree with
+        // encode-then-pack / unpack-then-decode elementwise, odd tails
+        // included.
+        let cb = dynamic_signed4();
+        for n in [1usize, 2, 7, 64, 101] {
+            let xs = data(n, 10 + n as u64);
+            let mut packed = vec![0u8; n.div_ceil(2)];
+            let am = quantize_block_codes(&cb, CodeWidth::U4, &xs, &mut packed);
+            // reference: unpacked encode
+            let mut codes = vec![0u8; n];
+            let am_ref = quantize_block(&cb, &xs, &mut codes);
+            assert_eq!(am, am_ref);
+            let buf = CodeBuf::from_codes(CodeWidth::U4, &codes);
+            assert_eq!(buf.as_bytes(), &packed[..], "n={n}");
+            // and back
+            let mut out = vec![0.0f32; n];
+            dequantize_block_codes(&cb, CodeWidth::U4, &packed, am, &mut out);
+            let mut out_ref = vec![0.0f32; n];
+            dequantize_block(&cb, &codes, am_ref, &mut out_ref);
+            assert_eq!(out, out_ref, "n={n}");
+        }
     }
 }

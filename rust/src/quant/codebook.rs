@@ -1,7 +1,9 @@
 //! Quantization codebooks (`Q^map` in the paper, §1.2).
 //!
-//! A codebook is a sorted list of ≤256 representable values in [-1, 1] (or
-//! [0, 1] for unsigned codes). Quantization of a normalized input is
+//! A codebook is a sorted list of representable values in [-1, 1] (or
+//! [0, 1] for unsigned codes) — any count up to 256 works, so the same
+//! abstraction serves 8-bit (256-level) and 4-bit (16-level) code widths.
+//! Quantization of a normalized input is
 //! nearest-value search (Eq. 3/4); we implement it as a binary search over
 //! the midpoints between adjacent codebook entries, which is exactly
 //! arg-min over an ordered codebook.
@@ -318,8 +320,14 @@ mod tests {
             crate::quant::dynamic_tree::dynamic_unsigned(),
             crate::quant::dynamic_tree::inverse_dynamic_signed(),
             crate::quant::dynamic_tree::inverse_dynamic_unsigned(),
+            crate::quant::dynamic_tree::dynamic_signed4(),
+            crate::quant::dynamic_tree::dynamic_unsigned4(),
+            crate::quant::dynamic_tree::inverse_dynamic_signed4(),
+            crate::quant::dynamic_tree::inverse_dynamic_unsigned4(),
             crate::quant::linear::linear_signed(),
             crate::quant::linear::linear_unsigned(),
+            crate::quant::linear::linear_signed4(),
+            crate::quant::linear::linear_unsigned4(),
             simple(),
         ] {
             let mut probes: Vec<f32> = Vec::new();

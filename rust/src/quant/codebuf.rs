@@ -1,0 +1,280 @@
+//! Packed code storage — the width-generic backbone of the quantized
+//! substrate.
+//!
+//! The paper's pipeline stores one 8-bit code per element; *Memory
+//! Efficient Optimizers with 4-bit States* (Li et al. 2023) shows the same
+//! dynamic-tree recipe works at 16 levels, halving the footprint. To make
+//! code width a parameter instead of an assumption, quantized tensors
+//! store their codes in a [`CodeBuf`]: a byte buffer plus a [`CodeWidth`]
+//! deciding how codes map onto bytes.
+//!
+//! * [`CodeWidth::U8`] — one code per byte (the paper's layout).
+//! * [`CodeWidth::U4`] — two codes per byte: element `2k` in the low
+//!   nibble of byte `k`, element `2k + 1` in the high nibble. An
+//!   odd-length buffer leaves the final high nibble zero, so equal code
+//!   sequences always produce byte-identical buffers (the parity tests
+//!   compare storage bitwise).
+//!
+//! Block-parallel safety: the block engine hands each quantization block
+//! its own byte sub-range of the buffer. For `U4` this is race-free only
+//! if blocks start on byte boundaries, i.e. at even element offsets —
+//! which [`crate::quant::Quantized`] guarantees by requiring an even block
+//! size whenever the tensor spans more than one block.
+
+/// How many bits one stored code occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeWidth {
+    /// One byte per code (up to 256 codebook levels).
+    U8,
+    /// Two codes per byte (up to 16 codebook levels).
+    U4,
+}
+
+impl CodeWidth {
+    /// Bits per stored code.
+    pub fn bits(self) -> u32 {
+        match self {
+            CodeWidth::U8 => 8,
+            CodeWidth::U4 => 4,
+        }
+    }
+
+    /// Largest codebook this width can index.
+    pub fn max_levels(self) -> usize {
+        match self {
+            CodeWidth::U8 => 256,
+            CodeWidth::U4 => 16,
+        }
+    }
+
+    /// Storage bytes for `n` codes. Also the byte offset of element `n`
+    /// when `n` is a valid packing boundary (any `n` for `U8`, even `n`
+    /// for `U4`).
+    pub fn bytes_for(self, n: usize) -> usize {
+        match self {
+            CodeWidth::U8 => n,
+            CodeWidth::U4 => n.div_ceil(2),
+        }
+    }
+}
+
+/// A sequence of `len` codes packed at a given [`CodeWidth`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeBuf {
+    bytes: Vec<u8>,
+    len: usize,
+    width: CodeWidth,
+}
+
+impl CodeBuf {
+    /// A buffer of `len` copies of `code`.
+    pub fn filled(width: CodeWidth, len: usize, code: u8) -> CodeBuf {
+        debug_assert!((code as usize) < width.max_levels(), "code exceeds width");
+        let byte = match width {
+            CodeWidth::U8 => code,
+            CodeWidth::U4 => code | (code << 4),
+        };
+        let mut bytes = vec![byte; width.bytes_for(len)];
+        if width == CodeWidth::U4 && len % 2 == 1 {
+            // keep the unused final high nibble canonically zero
+            *bytes.last_mut().expect("odd len > 0") = code;
+        }
+        CodeBuf { bytes, len, width }
+    }
+
+    /// Pack a slice of one-byte codes.
+    pub fn from_codes(width: CodeWidth, codes: &[u8]) -> CodeBuf {
+        let mut buf = CodeBuf::filled(width, codes.len(), 0);
+        buf.write_range(0, codes);
+        buf
+    }
+
+    /// Number of codes (elements), independent of packing.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn width(&self) -> CodeWidth {
+        self.width
+    }
+
+    /// Storage footprint in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Raw packed storage.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Raw packed storage, mutable — the block engine chunks this for
+    /// parallel per-block work (see the module docs for the `U4` aliasing
+    /// contract).
+    pub fn as_mut_bytes(&mut self) -> &mut [u8] {
+        &mut self.bytes
+    }
+
+    /// Code at element `i`.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        match self.width {
+            CodeWidth::U8 => self.bytes[i],
+            CodeWidth::U4 => {
+                let b = self.bytes[i / 2];
+                if i % 2 == 0 {
+                    b & 0x0F
+                } else {
+                    b >> 4
+                }
+            }
+        }
+    }
+
+    /// Store code `c` at element `i`.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, c: u8) {
+        debug_assert!(i < self.len);
+        debug_assert!((c as usize) < self.width.max_levels(), "code exceeds width");
+        match self.width {
+            CodeWidth::U8 => self.bytes[i] = c,
+            CodeWidth::U4 => {
+                let b = &mut self.bytes[i / 2];
+                if i % 2 == 0 {
+                    *b = (*b & 0xF0) | c;
+                } else {
+                    *b = (*b & 0x0F) | (c << 4);
+                }
+            }
+        }
+    }
+
+    /// Unpack elements `[lo, lo + out.len())` into one-byte codes. Handles
+    /// arbitrary (odd, byte-straddling) ranges.
+    pub fn read_range(&self, lo: usize, out: &mut [u8]) {
+        assert!(lo + out.len() <= self.len, "read_range out of bounds");
+        match self.width {
+            CodeWidth::U8 => out.copy_from_slice(&self.bytes[lo..lo + out.len()]),
+            CodeWidth::U4 => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = self.get(lo + k);
+                }
+            }
+        }
+    }
+
+    /// Pack one-byte `codes` into elements `[lo, lo + codes.len())`.
+    /// Handles arbitrary (odd, byte-straddling) ranges.
+    pub fn write_range(&mut self, lo: usize, codes: &[u8]) {
+        assert!(lo + codes.len() <= self.len, "write_range out of bounds");
+        match self.width {
+            CodeWidth::U8 => self.bytes[lo..lo + codes.len()].copy_from_slice(codes),
+            CodeWidth::U4 => {
+                for (k, &c) in codes.iter().enumerate() {
+                    self.set(lo + k, c);
+                }
+            }
+        }
+    }
+
+    /// The whole buffer as one-byte codes.
+    pub fn to_codes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.len];
+        self.read_range(0, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_codes(n: usize, levels: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.uniform() * levels as f64) as u8).collect()
+    }
+
+    #[test]
+    fn widths_account_storage() {
+        assert_eq!(CodeWidth::U8.bytes_for(5), 5);
+        assert_eq!(CodeWidth::U4.bytes_for(5), 3);
+        assert_eq!(CodeWidth::U4.bytes_for(4), 2);
+        assert_eq!(CodeWidth::U4.bytes_for(0), 0);
+        assert_eq!(CodeWidth::U4.max_levels(), 16);
+        assert_eq!(CodeWidth::U4.bits(), 4);
+    }
+
+    #[test]
+    fn roundtrip_identity_even_and_odd_lengths() {
+        for width in [CodeWidth::U8, CodeWidth::U4] {
+            for n in [0usize, 1, 2, 3, 7, 8, 255, 256, 2047, 2048, 2049] {
+                let codes = random_codes(n, width.max_levels(), n as u64 + 1);
+                let buf = CodeBuf::from_codes(width, &codes);
+                assert_eq!(buf.len(), n);
+                assert_eq!(buf.storage_bytes(), width.bytes_for(n));
+                assert_eq!(buf.to_codes(), codes, "{width:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ranged_reads_and_writes_straddle_bytes() {
+        // every (lo, len) sub-range of an odd-length U4 buffer round-trips,
+        // including ranges that start mid-byte
+        let n = 33;
+        let codes = random_codes(n, 16, 9);
+        let buf = CodeBuf::from_codes(CodeWidth::U4, &codes);
+        for lo in 0..n {
+            for len in 0..=(n - lo) {
+                let mut out = vec![0u8; len];
+                buf.read_range(lo, &mut out);
+                assert_eq!(&out[..], &codes[lo..lo + len], "lo={lo} len={len}");
+            }
+        }
+        // mid-byte writes only touch their own elements
+        let mut buf = CodeBuf::filled(CodeWidth::U4, n, 5);
+        buf.write_range(3, &[9, 10, 11]);
+        let got = buf.to_codes();
+        for (i, &c) in got.iter().enumerate() {
+            let want = match i {
+                3 => 9,
+                4 => 10,
+                5 => 11,
+                _ => 5,
+            };
+            assert_eq!(c, want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn equal_codes_give_byte_identical_buffers() {
+        // the canonical-zero tail nibble: packing the same odd-length code
+        // sequence into buffers with different histories must agree bitwise
+        let codes = random_codes(41, 16, 4);
+        let a = CodeBuf::from_codes(CodeWidth::U4, &codes);
+        let mut b = CodeBuf::filled(CodeWidth::U4, 41, 15);
+        b.write_range(0, &codes);
+        // b's tail high nibble still holds 15 from the fill — get/set level
+        // equality holds, storage differs only in the dead nibble
+        assert_eq!(a.to_codes(), b.to_codes());
+        // filled() itself zeroes the dead nibble
+        let f = CodeBuf::filled(CodeWidth::U4, 41, 0);
+        assert_eq!(*f.as_bytes().last().unwrap(), 0);
+    }
+
+    #[test]
+    fn get_set_agree_with_packing() {
+        let mut buf = CodeBuf::filled(CodeWidth::U4, 10, 0);
+        buf.set(0, 0xA);
+        buf.set(1, 0xB);
+        assert_eq!(buf.as_bytes()[0], 0xBA, "low nibble = even element");
+        assert_eq!(buf.get(0), 0xA);
+        assert_eq!(buf.get(1), 0xB);
+    }
+}

@@ -23,6 +23,13 @@
 //! mirrored for the sign: 2·127 + 2 = 256 codes.
 //! Unsigned layout (§2.2): the sign bit is re-purposed as one extra *fixed*
 //! fraction bit ⇒ decades e=0..6 with f = 7-e: 254 + 2 = 256 codes.
+//!
+//! The construction is *decade-count generic*: the same recipe at 3 decades
+//! yields the 16-level codebooks of *Memory Efficient Optimizers with 4-bit
+//! States* (Li et al. 2023) — signed: 2·7 + 2 = 16 codes with a 1e-3
+//! denormal, unsigned: 14 + 2 = 16 — served by [`dynamic_signed4`] /
+//! [`dynamic_unsigned4`] (and the inverse variants) for
+//! [`CodeWidth::U4`](super::codebuf::CodeWidth::U4) packed state.
 
 use super::codebook::Codebook;
 
@@ -44,11 +51,13 @@ fn decade_midpoints(n: usize) -> Vec<f64> {
 /// Python, so both languages build bit-identical f32 codebooks.
 const DECADE_SCALE: [f64; 7] = [1.0, 1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6];
 
-fn tree_magnitudes(extra_fraction_bit: bool, inverse: bool) -> Vec<f64> {
+fn tree_magnitudes(decades: usize, extra_fraction_bit: bool, inverse: bool) -> Vec<f64> {
+    debug_assert!(decades >= 1 && decades <= DECADE_SCALE.len());
+    let top = decades - 1;
     let mut out = Vec::new();
-    for e in 0..7usize {
+    for e in 0..decades {
         // fraction bits for this decade; inverse swaps which decade is rich.
-        let f = if inverse { e.min(6) } else { 6 - e } + usize::from(extra_fraction_bit);
+        let f = if inverse { e.min(top) } else { top - e } + usize::from(extra_fraction_bit);
         let n = 1usize << f;
         let mids = decade_midpoints(n);
         let scale = DECADE_SCALE[e];
@@ -73,12 +82,14 @@ fn tree_magnitudes(extra_fraction_bit: bool, inverse: bool) -> Vec<f64> {
 /// result is pinned bit-for-bit to `Codebook::encode_reference`.
 ///
 /// Position of magnitude `ax` within the ascending positive values
-/// `[1e-7, tree magnitudes…]`: 0 for the denormal-like code, else derived
-/// from the decade `e` (number of leading-zero exponent bits in Figure 2)
-/// and the linear in-decade slot `k`.
-fn magnitude_pos(ax: f64, extra_fraction_bit: bool) -> usize {
-    let top: u32 = if extra_fraction_bit { 7 } else { 6 };
-    if ax <= 1e-7 {
+/// `[10^-decades, tree magnitudes…]`: 0 for the denormal-like code, else
+/// derived from the decade `e` (number of leading-zero exponent bits in
+/// Figure 2) and the linear in-decade slot `k`. Decade-count generic: the
+/// 8-bit layouts use `decades = 7`, the 4-bit ones `decades = 3`.
+fn magnitude_pos(ax: f64, decades: usize, extra_fraction_bit: bool) -> usize {
+    let top: u32 = (decades - 1) as u32 + u32::from(extra_fraction_bit);
+    // the denormal-like code sits one decade below the smallest magnitude
+    if ax <= DECADE_SCALE[decades - 1] * 0.1 {
         return 0;
     }
     // Decade from the binary exponent: floor(log2 ax) is exact bit math on
@@ -87,11 +98,11 @@ fn magnitude_pos(ax: f64, extra_fraction_bit: bool) -> usize {
     // (0.1·10⁻ᵉ, 10⁻ᵉ].
     let e2 = ((ax.to_bits() >> 52) as i64 - 1023) as f64;
     let guess = (-(e2 * std::f64::consts::LOG10_2)).floor() as i64;
-    let mut e = guess.clamp(0, 6) as usize;
+    let mut e = guess.clamp(0, (decades - 1) as i64) as usize;
     while e > 0 && ax > DECADE_SCALE[e] {
         e -= 1;
     }
-    while e < 6 && ax <= DECADE_SCALE[e] * 0.1 {
+    while e < decades - 1 && ax <= DECADE_SCALE[e] * 0.1 {
         e += 1;
     }
     // In-decade slot: values sit at 0.1 + step·(k + ½) (midpoints of the
@@ -101,7 +112,9 @@ fn magnitude_pos(ax: f64, extra_fraction_bit: bool) -> usize {
     let step = 0.9 / nd as f64;
     let t = (ax / DECADE_SCALE[e] - 0.1) / step;
     let k = (t.floor() as i64).clamp(0, nd as i64 - 1) as usize;
-    // Decades e' > e hold 2^(top-e') magnitudes each; +1 for the 1e-7 code.
+    // Decades e' > e hold 2^(top-e') magnitudes each; +1 for the denormal
+    // code. Both sums telescope to the same closed forms at every decade
+    // count.
     if extra_fraction_bit {
         nd - 1 + k
     } else {
@@ -109,83 +122,138 @@ fn magnitude_pos(ax: f64, extra_fraction_bit: bool) -> usize {
     }
 }
 
-/// Candidate code index for [`dynamic_signed`] (sorted layout:
-/// 127 negatives ↓, 0.0 at 127, 1e-7 at 128, 127 positives ↑).
-fn candidate_signed(x: f32) -> usize {
+/// Candidate code index for a signed layout at `decades` decades (sorted:
+/// M negatives ↓, 0.0 at M, the denormal at M+1, M positives ↑, where
+/// M = 2^decades - 1 magnitudes per sign).
+fn candidate_signed_at(x: f32, decades: usize) -> usize {
+    let m = (1usize << decades) - 1;
     if x.is_nan() {
         return 0; // encode_reference: no midpoint compares ≤ NaN
     }
     if x == 0.0 {
-        return 127;
+        return m;
     }
-    let pos = magnitude_pos(x.abs() as f64, false);
+    let pos = magnitude_pos(x.abs() as f64, decades, false);
     if x > 0.0 {
-        128 + pos
+        m + 1 + pos
     } else {
-        127 - pos
+        m - pos
     }
 }
 
-/// Candidate code index for [`dynamic_unsigned`] (sorted layout: 0.0,
-/// 1e-7, 254 magnitudes ↑).
-fn candidate_unsigned(x: f32) -> usize {
+/// Candidate code index for an unsigned layout (sorted: 0.0, denormal,
+/// magnitudes ↑).
+fn candidate_unsigned_at(x: f32, decades: usize) -> usize {
     if x.is_nan() || x <= 0.0 {
         return 0;
     }
-    1 + magnitude_pos(x as f64, true)
+    1 + magnitude_pos(x as f64, decades, true)
+}
+
+/// Candidate for [`dynamic_signed`] (127 negatives ↓, 0.0 at 127, 1e-7 at
+/// 128, 127 positives ↑).
+fn candidate_signed(x: f32) -> usize {
+    candidate_signed_at(x, 7)
+}
+
+/// Candidate for [`dynamic_unsigned`] (0.0, 1e-7, 254 magnitudes ↑).
+fn candidate_unsigned(x: f32) -> usize {
+    candidate_unsigned_at(x, 7)
+}
+
+/// Candidate for [`dynamic_signed4`] (7 negatives ↓, 0.0 at 7, 1e-3 at 8,
+/// 7 positives ↑).
+fn candidate_signed4(x: f32) -> usize {
+    candidate_signed_at(x, 3)
+}
+
+/// Candidate for [`dynamic_unsigned4`] (0.0, 1e-3, 14 magnitudes ↑).
+fn candidate_unsigned4(x: f32) -> usize {
+    candidate_unsigned_at(x, 3)
+}
+
+/// Assemble a signed codebook from tree magnitudes: ± every magnitude,
+/// 0.0, and the denormal-like filler.
+fn signed_values(mags: &[f64], denormal: f32) -> Vec<f32> {
+    let mut vals: Vec<f32> = Vec::with_capacity(2 * mags.len() + 2);
+    for &m in mags {
+        vals.push(m as f32);
+        vals.push(-m as f32);
+    }
+    vals.push(0.0);
+    vals.push(denormal);
+    vals
+}
+
+/// Assemble an unsigned codebook: magnitudes, 0.0, denormal filler.
+fn unsigned_values(mags: &[f64], denormal: f32) -> Vec<f32> {
+    let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
+    vals.push(0.0);
+    vals.push(denormal);
+    vals
 }
 
 /// Signed dynamic tree quantization ("dynamic quantization" for the first
 /// Adam state / momentum). 256 values: ±(127 tree magnitudes), 0, 1e-7.
 pub fn dynamic_signed() -> Codebook {
-    let mags = tree_magnitudes(false, false);
+    let mags = tree_magnitudes(7, false, false);
     debug_assert_eq!(mags.len(), 127);
-    let mut vals: Vec<f32> = Vec::with_capacity(256);
-    for &m in &mags {
-        vals.push(m as f32);
-        vals.push(-m as f32);
-    }
-    vals.push(0.0);
-    vals.push(1e-7);
-    Codebook::new_analytic("dynamic_signed", vals, candidate_signed)
+    Codebook::new_analytic("dynamic_signed", signed_values(&mags, 1e-7), candidate_signed)
 }
 
 /// Unsigned dynamic quantization (§2.2): sign bit re-purposed as a fixed
 /// fraction bit, for the strictly-positive second Adam state.
 pub fn dynamic_unsigned() -> Codebook {
-    let mags = tree_magnitudes(true, false);
+    let mags = tree_magnitudes(7, true, false);
     debug_assert_eq!(mags.len(), 254);
-    let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
-    vals.push(0.0);
-    vals.push(1e-7);
-    Codebook::new_analytic("dynamic_unsigned", vals, candidate_unsigned)
+    Codebook::new_analytic("dynamic_unsigned", unsigned_values(&mags, 1e-7), candidate_unsigned)
+}
+
+/// Signed 16-level dynamic tree (Li et al. 2023): 3 decades, 7 magnitudes
+/// per sign, 0, and a 1e-3 denormal — 16 codes for 4-bit packed state.
+pub fn dynamic_signed4() -> Codebook {
+    let mags = tree_magnitudes(3, false, false);
+    debug_assert_eq!(mags.len(), 7);
+    Codebook::new_analytic("dynamic_signed4", signed_values(&mags, 1e-3), candidate_signed4)
+}
+
+/// Unsigned 16-level dynamic tree: the sign bit re-purposed as an extra
+/// fraction bit, 14 magnitudes + 0 + 1e-3 = 16 codes.
+pub fn dynamic_unsigned4() -> Codebook {
+    let mags = tree_magnitudes(3, true, false);
+    debug_assert_eq!(mags.len(), 14);
+    Codebook::new_analytic("dynamic_unsigned4", unsigned_values(&mags, 1e-3), candidate_unsigned4)
 }
 
 /// Inverse dynamic quantization (Appendix F.1): exponent direction swapped —
-/// most fraction bits go to the *smallest* decade.
+/// most fraction bits go to the *smallest* decade. The e=0 decade already
+/// contributes an exact 1.0, so the filler code sits one decade below the
+/// smallest tree magnitude.
 pub fn inverse_dynamic_signed() -> Codebook {
-    let mags = tree_magnitudes(false, true);
+    let mags = tree_magnitudes(7, false, true);
     debug_assert_eq!(mags.len(), 127);
-    let mut vals: Vec<f32> = Vec::with_capacity(256);
-    for &m in &mags {
-        vals.push(m as f32);
-        vals.push(-m as f32);
-    }
-    vals.push(0.0);
-    // the e=0 decade already contributed an exact 1.0; fill the last code
-    // with a denormal-like value below the smallest tree magnitude
-    vals.push(1e-8);
-    Codebook::new("inverse_dynamic_signed", vals)
+    Codebook::new("inverse_dynamic_signed", signed_values(&mags, 1e-8))
 }
 
 /// Inverse dynamic, unsigned variant.
 pub fn inverse_dynamic_unsigned() -> Codebook {
-    let mags = tree_magnitudes(true, true);
+    let mags = tree_magnitudes(7, true, true);
     debug_assert_eq!(mags.len(), 254);
-    let mut vals: Vec<f32> = mags.iter().map(|&m| m as f32).collect();
-    vals.push(0.0);
-    vals.push(1e-8); // e=0 decade already contains the exact 1.0
-    Codebook::new("inverse_dynamic_unsigned", vals)
+    Codebook::new("inverse_dynamic_unsigned", unsigned_values(&mags, 1e-8))
+}
+
+/// Inverse dynamic at 16 levels (4-bit state).
+pub fn inverse_dynamic_signed4() -> Codebook {
+    let mags = tree_magnitudes(3, false, true);
+    debug_assert_eq!(mags.len(), 7);
+    Codebook::new("inverse_dynamic_signed4", signed_values(&mags, 1e-4))
+}
+
+/// Inverse dynamic unsigned at 16 levels.
+pub fn inverse_dynamic_unsigned4() -> Codebook {
+    let mags = tree_magnitudes(3, true, true);
+    debug_assert_eq!(mags.len(), 14);
+    Codebook::new("inverse_dynamic_unsigned4", unsigned_values(&mags, 1e-4))
 }
 
 /// Decode the dynamic-tree *bit pattern* semantics for exposition (Figure 2
@@ -215,15 +283,57 @@ mod tests {
     }
 
     #[test]
+    fn four_bit_sizes_are_16() {
+        assert_eq!(dynamic_signed4().len(), 16);
+        assert_eq!(dynamic_unsigned4().len(), 16);
+        assert_eq!(inverse_dynamic_signed4().len(), 16);
+        assert_eq!(inverse_dynamic_unsigned4().len(), 16);
+    }
+
+    #[test]
     fn all_values_distinct_and_sorted() {
         for cb in [
             dynamic_signed(),
             dynamic_unsigned(),
             inverse_dynamic_signed(),
             inverse_dynamic_unsigned(),
+            dynamic_signed4(),
+            dynamic_unsigned4(),
+            inverse_dynamic_signed4(),
+            inverse_dynamic_unsigned4(),
         ] {
             assert!(cb.all_distinct(), "{}", cb.name());
         }
+    }
+
+    #[test]
+    fn four_bit_trees_keep_the_anchor_codes() {
+        // exact ±1 (zero-error absmax), exact 0, and a denormal one decade
+        // below the smallest magnitude — same anchors as the 8-bit layout
+        let s = dynamic_signed4();
+        assert!(s.values().contains(&1.0) && s.values().contains(&-1.0));
+        assert!(s.values().contains(&0.0));
+        assert_eq!(s.max_abs(), 1.0);
+        let smallest_pos = s
+            .values()
+            .iter()
+            .filter(|&&v| v > 0.0)
+            .fold(f32::INFINITY, |m, &v| m.min(v));
+        assert!(smallest_pos <= 1.5e-3, "{smallest_pos}");
+        let u = dynamic_unsigned4();
+        assert!(u.values().iter().all(|&v| v >= 0.0));
+        assert!(u.values().contains(&1.0) && u.values().contains(&0.0));
+    }
+
+    #[test]
+    fn four_bit_unsigned_has_double_top_decade_resolution() {
+        let count = |cb: &Codebook| {
+            cb.values()
+                .iter()
+                .filter(|&&v| v > 0.1 && v <= 1.0)
+                .count()
+        };
+        assert_eq!(count(&dynamic_unsigned4()), 2 * count(&dynamic_signed4()));
     }
 
     #[test]
@@ -312,7 +422,12 @@ mod tests {
         // both signs), not just at the curated probes of the codebook test.
         use crate::util::rng::Rng;
         let mut rng = Rng::new(0xD74);
-        for cb in [dynamic_signed(), dynamic_unsigned()] {
+        for cb in [
+            dynamic_signed(),
+            dynamic_unsigned(),
+            dynamic_signed4(),
+            dynamic_unsigned4(),
+        ] {
             for _ in 0..200_000 {
                 // magnitude log-uniform in [1e-12, 10), sign ± at random
                 let exp = rng.uniform_range(-12.0, 1.0);

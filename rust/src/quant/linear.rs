@@ -16,6 +16,19 @@ pub fn linear_unsigned() -> Codebook {
     Codebook::new("linear_unsigned", vals)
 }
 
+/// Signed linear at 16-level resolution: 15 values { i/7 : i = -7..=7 }
+/// (symmetric int4 analogue — one 4-bit code unused).
+pub fn linear_signed4() -> Codebook {
+    let vals: Vec<f32> = (-7..=7).map(|i| i as f32 / 7.0).collect();
+    Codebook::new("linear_signed4", vals)
+}
+
+/// Unsigned linear at 16-level resolution: { i/15 : i = 0..=15 }.
+pub fn linear_unsigned4() -> Codebook {
+    let vals: Vec<f32> = (0..=15).map(|i| i as f32 / 15.0).collect();
+    Codebook::new("linear_unsigned4", vals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -24,6 +37,18 @@ mod tests {
     fn sizes() {
         assert_eq!(linear_signed().len(), 255);
         assert_eq!(linear_unsigned().len(), 256);
+        assert_eq!(linear_signed4().len(), 15);
+        assert_eq!(linear_unsigned4().len(), 16);
+    }
+
+    #[test]
+    fn four_bit_endpoints_and_zero() {
+        let s = linear_signed4();
+        assert!(s.values().contains(&-1.0) && s.values().contains(&0.0));
+        assert!(s.values().contains(&1.0) && s.all_distinct());
+        let u = linear_unsigned4();
+        assert_eq!(u.values()[0], 0.0);
+        assert_eq!(*u.values().last().unwrap(), 1.0);
     }
 
     #[test]

@@ -1,16 +1,22 @@
-//! The paper's numeric-format substrate: 8-bit non-linear quantization.
+//! The paper's numeric-format substrate: non-linear quantization at a
+//! parameterized code width (8-bit per the source paper, 4-bit per Li et
+//! al. 2023).
 //!
 //! * [`codebook`] — the `Q^map` abstraction + nearest / stochastic encode.
+//! * [`codebuf`] — packed code storage ([`CodeWidth::U8`] byte-per-code,
+//!   [`CodeWidth::U4`] two-codes-per-byte).
 //! * [`dynamic_tree`] — dynamic (tree) quantization, signed / unsigned /
-//!   inverse variants (§1.3, §2.2, Appendix F.1).
+//!   inverse variants (§1.3, §2.2, Appendix F.1) at 256 or 16 levels.
 //! * [`linear`] — linear baseline (Table 3 ablation, Table 6).
 //! * [`quantile`] — lossy minimum-entropy encoding (Appendix F.2).
 //! * [`sram_quantiles`] — fast approximate quantile estimation (Appendix G).
-//! * [`blockwise`] — block-wise normalization machinery (§2.1).
+//! * [`blockwise`] — width-generic block-wise normalization machinery
+//!   (§2.1).
 //! * [`error`] — quantization / Adam error metrics (Table 6, Appendix D).
 
 pub mod blockwise;
 pub mod codebook;
+pub mod codebuf;
 pub mod dynamic_tree;
 pub mod error;
 pub mod linear;
@@ -19,6 +25,7 @@ pub mod sram_quantiles;
 
 pub use blockwise::{BlockQuantizer, Quantized, BLOCK};
 pub use codebook::Codebook;
+pub use codebuf::{CodeBuf, CodeWidth};
 
 use std::sync::{Arc, OnceLock};
 
@@ -93,22 +100,68 @@ impl Format {
                     Format::Dynamic => dynamic_tree::dynamic_unsigned(),
                     Format::Linear => linear::linear_unsigned(),
                     // Quantile of the squared-normal (chi²₁) distribution.
-                    Format::Quantile => {
-                        use crate::util::rng::Rng;
-                        let mut rng = Rng::new(0x51_51_51);
-                        let data: Vec<f32> = (0..1_000_000)
-                            .map(|_| {
-                                let g = rng.normal();
-                                (g * g) as f32
-                            })
-                            .collect();
-                        quantile::quantile_from_data(&data)
-                    }
+                    Format::Quantile => quantile::quantile_from_data(&chi2_sample()),
                     Format::InverseDynamic => dynamic_tree::inverse_dynamic_unsigned(),
                 })
             })
             .clone()
     }
+
+    /// 16-level signed codebook (4-bit packed state, Li et al. 2023).
+    /// Memoized like the 8-bit variants.
+    pub fn signed_codebook4(&self) -> Arc<Codebook> {
+        static CACHE: [OnceLock<Arc<Codebook>>; 4] = [const { OnceLock::new() }; 4];
+        CACHE[self.index()]
+            .get_or_init(|| {
+                Arc::new(match self {
+                    Format::Dynamic => dynamic_tree::dynamic_signed4(),
+                    Format::Linear => linear::linear_signed4(),
+                    Format::Quantile => quantile::quantile_normal_levels(16),
+                    Format::InverseDynamic => dynamic_tree::inverse_dynamic_signed4(),
+                })
+            })
+            .clone()
+    }
+
+    /// 16-level unsigned codebook (4-bit packed state).
+    pub fn unsigned_codebook4(&self) -> Arc<Codebook> {
+        static CACHE: [OnceLock<Arc<Codebook>>; 4] = [const { OnceLock::new() }; 4];
+        CACHE[self.index()]
+            .get_or_init(|| {
+                Arc::new(match self {
+                    Format::Dynamic => dynamic_tree::dynamic_unsigned4(),
+                    Format::Linear => linear::linear_unsigned4(),
+                    Format::Quantile => {
+                        quantile::quantile_from_data_levels(&chi2_sample(), 16)
+                    }
+                    Format::InverseDynamic => dynamic_tree::inverse_dynamic_unsigned4(),
+                })
+            })
+            .clone()
+    }
+
+    /// Width-dispatching codebook lookup — the one entry point the
+    /// optimizer substrate uses, so state construction is width-agnostic.
+    pub fn codebook(&self, width: CodeWidth, signed: bool) -> Arc<Codebook> {
+        match (width, signed) {
+            (CodeWidth::U8, true) => self.signed_codebook(),
+            (CodeWidth::U8, false) => self.unsigned_codebook(),
+            (CodeWidth::U4, true) => self.signed_codebook4(),
+            (CodeWidth::U4, false) => self.unsigned_codebook4(),
+        }
+    }
+}
+
+/// Deterministic chi²₁ sample for the unsigned quantile codebooks.
+fn chi2_sample() -> Vec<f32> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(0x51_51_51);
+    (0..1_000_000)
+        .map(|_| {
+            let g = rng.normal();
+            (g * g) as f32
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -128,6 +181,27 @@ mod tests {
         for f in [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic] {
             assert!(f.signed_codebook().len() > 100);
             assert!(f.unsigned_codebook().len() > 100);
+        }
+    }
+
+    #[test]
+    fn four_bit_codebooks_fit_their_width_for_all_formats() {
+        for f in [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic] {
+            for signed in [true, false] {
+                let cb = f.codebook(CodeWidth::U4, signed);
+                assert!(
+                    cb.len() <= CodeWidth::U4.max_levels(),
+                    "{} {:?} has {} levels",
+                    f.name(),
+                    signed,
+                    cb.len()
+                );
+                assert!(cb.len() >= 12, "{} unexpectedly coarse", f.name());
+                // width dispatch is memoized per (format, width, signedness)
+                assert!(Arc::ptr_eq(&cb, &f.codebook(CodeWidth::U4, signed)));
+                // and never collides with the 8-bit cache
+                assert!(!Arc::ptr_eq(&cb, &f.codebook(CodeWidth::U8, signed)));
+            }
         }
     }
 

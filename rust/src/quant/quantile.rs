@@ -11,11 +11,20 @@ use super::sram_quantiles::estimate_quantiles;
 /// [-1, 1] by the max-abs of the codebook (the paper normalizes values from
 /// the standard normal the same way for Figure 6).
 pub fn quantile_from_data(data: &[f32]) -> Codebook {
+    quantile_from_data_levels(data, 256)
+}
+
+/// Level-generic quantile codebook: `levels` midpoints of `levels + 1`
+/// equally spaced quantiles (Eq. 5 at 2^k levels; `levels = 16` is the
+/// 4-bit variant).
+pub fn quantile_from_data_levels(data: &[f32], levels: usize) -> Codebook {
     assert!(!data.is_empty());
-    // 2^8 + 1 boundary quantiles -> 256 midpoints (Eq. 5).
-    let qs = estimate_quantiles(data, 257);
+    assert!((2..=256).contains(&levels), "levels must be in 2..=256");
+    // 2^k + 1 boundary quantiles -> 2^k midpoints (Eq. 5).
+    let qs = estimate_quantiles(data, levels + 1);
     let mut vals: Vec<f32> = qs.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
-    debug_assert_eq!(vals.len(), 256);
+    debug_assert_eq!(vals.len(), levels);
+    let name = if levels <= 16 { "quantile4" } else { "quantile" };
     let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(f32::MIN_POSITIVE);
     for v in vals.iter_mut() {
         *v /= max_abs;
@@ -24,16 +33,22 @@ pub fn quantile_from_data(data: &[f32]) -> Codebook {
     // rounding); keep the codebook strictly sorted.
     vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
     vals.dedup();
-    Codebook::new("quantile", vals)
+    Codebook::new(name, vals)
 }
 
 /// Quantile codebook for the standard normal distribution, via a large
 /// deterministic sample — the generic "Quantile" row of Table 6 / Figure 6.
 pub fn quantile_normal() -> Codebook {
+    quantile_normal_levels(256)
+}
+
+/// Standard-normal quantile codebook at an arbitrary level count
+/// (`levels = 16` backs the 4-bit signed quantile format).
+pub fn quantile_normal_levels(levels: usize) -> Codebook {
     use crate::util::rng::Rng;
     let mut rng = Rng::new(0x9e3779b9);
     let data: Vec<f32> = (0..1_000_000).map(|_| rng.normal() as f32).collect();
-    quantile_from_data(&data)
+    quantile_from_data_levels(&data, levels)
 }
 
 #[cfg(test)]
@@ -78,6 +93,15 @@ mod tests {
         let near0 = cb.values().iter().filter(|v| v.abs() < 0.1).count();
         let tail = cb.values().iter().filter(|v| v.abs() > 0.8).count();
         assert!(near0 > tail, "near0={near0} tail={tail}");
+    }
+
+    #[test]
+    fn sixteen_level_codebook_fits_4bit_codes() {
+        let cb = quantile_normal_levels(16);
+        assert!(cb.len() <= 16 && cb.len() >= 12, "len {}", cb.len());
+        assert!(cb.all_distinct());
+        assert!(cb.max_abs() <= 1.0 + 1e-6);
+        assert_eq!(cb.name(), "quantile4");
     }
 
     #[test]

@@ -13,23 +13,27 @@ use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
-/// Table 2: largest finetunable model per GPU-memory budget, batch size 1.
+/// Table 2: largest finetunable model per GPU-memory budget, batch size 1,
+/// extended with the 4-bit Adam column (Li et al. 2023 footprint).
 pub fn table2() -> Result<()> {
     let mm = MemoryModel::default();
     println!("Table 2 — largest finetunable model (batch size 1)");
-    println!("{:<16} {:<28} {:<28}", "GPU size in GB", "32-bit Adam", "8-bit Adam");
-    let mut csv = String::from("gpu_gb,adam32,adam8\n");
+    println!(
+        "{:<16} {:<28} {:<28} {:<28}",
+        "GPU size in GB", "32-bit Adam", "8-bit Adam", "4-bit Adam"
+    );
+    let mut csv = String::from("gpu_gb,adam32,adam8,adam4\n");
+    let largest = |budget: f64, kind: OptStateKind| {
+        mm.largest_finetunable(budget, kind)
+            .map(|m| m.name.to_string())
+            .unwrap_or_else(|| "—".into())
+    };
     for budget in [6.0, 11.0, 24.0] {
-        let m32 = mm
-            .largest_finetunable(budget, OptStateKind::Adam32)
-            .map(|m| m.name.to_string())
-            .unwrap_or_else(|| "—".into());
-        let m8 = mm
-            .largest_finetunable(budget, OptStateKind::Adam8)
-            .map(|m| m.name.to_string())
-            .unwrap_or_else(|| "—".into());
-        println!("{budget:<16} {m32:<28} {m8:<28}");
-        csv.push_str(&format!("{budget},{m32},{m8}\n"));
+        let m32 = largest(budget, OptStateKind::Adam32);
+        let m8 = largest(budget, OptStateKind::Adam8);
+        let m4 = largest(budget, OptStateKind::Adam4);
+        println!("{budget:<16} {m32:<28} {m8:<28} {m4:<28}");
+        csv.push_str(&format!("{budget},{m32},{m8},{m4}\n"));
     }
     let path = super::write_csv("table2.csv", &csv)?;
     println!("-> {}", path.display());

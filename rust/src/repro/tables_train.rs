@@ -142,10 +142,7 @@ pub fn table1(args: &Args) -> Result<()> {
 }
 
 fn bits_of(b: Bits) -> usize {
-    match b {
-        Bits::B32 => 32,
-        Bits::B8 { .. } => 8,
-    }
+    b.bit_count() as usize
 }
 
 // ---------------------------------------------------------------- Table 3

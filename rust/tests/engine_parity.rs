@@ -7,7 +7,7 @@
 
 use bitopt8::optim::{build, Bits, OptimConfig, StateTensor};
 use bitopt8::quant::dynamic_tree::{dynamic_signed, dynamic_unsigned};
-use bitopt8::quant::{BlockQuantizer, Quantized};
+use bitopt8::quant::{BlockQuantizer, CodeBuf, CodeWidth, Quantized};
 use bitopt8::runtime::{self, Runtime};
 use bitopt8::util::rng::Rng;
 use std::sync::Arc;
@@ -61,7 +61,7 @@ fn quantize_artifact_matches_native() {
         let cb = if signed { dynamic_signed() } else { dynamic_unsigned() };
         let bq = BlockQuantizer::new(Arc::new(cb), manifest.block);
         let q = bq.quantize(&x);
-        assert_eq!(q.codes, codes_hlo, "{key}: codes differ");
+        assert_eq!(q.codes.to_codes(), codes_hlo, "{key}: codes differ");
         assert_eq!(q.absmax, absmax_hlo, "{key}: absmax differ");
         // HLO dequant matches native dequant exactly
         let outs = rt
@@ -105,7 +105,7 @@ fn adam8_artifact_matches_native_step() {
     for (name, st) in opt.states_mut() {
         let src = if name == "m" { &m0 } else { &r0 };
         match st {
-            StateTensor::Q8 { q, codebook } => {
+            StateTensor::Quant { q, codebook } => {
                 let bq = BlockQuantizer::new(codebook.clone(), q.block);
                 bq.quantize_into(src, q);
             }
@@ -142,9 +142,9 @@ fn adam8_artifact_matches_native_step() {
                 runtime::lit_f32(&hp),
                 runtime::lit_f32(&p0),
                 runtime::lit_f32(&g),
-                runtime::lit_u8(&q1.codes).unwrap(),
+                runtime::lit_u8(q1.codes.as_bytes()).unwrap(),
                 runtime::lit_f32(&q1.absmax),
-                runtime::lit_u8(&q2.codes).unwrap(),
+                runtime::lit_u8(q2.codes.as_bytes()).unwrap(),
                 runtime::lit_f32(&q2.absmax),
             ],
         )
@@ -165,14 +165,14 @@ fn adam8_artifact_matches_native_step() {
     // state codes: compare dequantized values (codes may differ ±1 at
     // exact decision boundaries under FMA contraction)
     let q1_hlo = Quantized {
-        codes: codes1_hlo,
+        codes: CodeBuf::from_codes(CodeWidth::U8, &codes1_hlo),
         absmax: absmax1_hlo,
         len: npad,
         block: manifest.block,
     };
     let m_hlo = bq1.dequantize(&q1_hlo);
     let m_native = match &opt.states()[0].1 {
-        StateTensor::Q8 { .. } => opt.states()[0].1.to_f32(),
+        StateTensor::Quant { .. } => opt.states()[0].1.to_f32(),
         _ => unreachable!(),
     };
     let mut mismatches = 0;
@@ -229,7 +229,12 @@ fn momentum8_artifact_first_step_initializes_with_gradient() {
     let codes = runtime::u8_of(&outs[1]).unwrap();
     let absmax = runtime::f32_of(&outs[2]).unwrap();
     let bq = BlockQuantizer::new(cb, manifest.block);
-    let m_stored = bq.dequantize(&Quantized { codes, absmax, len: npad, block: manifest.block });
+    let m_stored = bq.dequantize(&Quantized {
+        codes: CodeBuf::from_codes(CodeWidth::U8, &codes),
+        absmax,
+        len: npad,
+        block: manifest.block,
+    });
     for i in 0..n {
         assert!(
             (m_stored[i] - g[i]).abs() <= 0.35 * g[i].abs() + 1e-4,

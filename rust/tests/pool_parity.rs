@@ -6,8 +6,8 @@
 //! to the sequential path — at every thread count, for every optimizer, at
 //! every precision. These tests pin that down:
 //!
-//! * every optimizer × {B32, B8 dynamic, B8 linear} × threads {1, 4,
-//!   default} produces bit-identical params and states,
+//! * every optimizer × {B32, B8 dynamic, B8 linear, B4 dynamic} × threads
+//!   {1, 4, default} produces bit-identical params and states,
 //! * the fused multi-tensor step equals per-tensor stepping exactly,
 //!   including the reduction-bearing optimizers whose phased plans put
 //!   tensor-wide norms/statistics inside the batch (LAMB, Adafactor,
@@ -43,11 +43,12 @@ const ALL_KINDS: [OptimKind; 8] = [
     OptimKind::Sm3,
 ];
 
-fn bit_configs() -> [Bits; 3] {
+fn bit_configs() -> [Bits; 4] {
     [
         Bits::B32,
         Bits::B8 { format: Format::Dynamic, blockwise: true },
         Bits::B8 { format: Format::Linear, blockwise: true },
+        Bits::B4 { format: Format::Dynamic, blockwise: true },
     ]
 }
 
@@ -157,7 +158,7 @@ fn at_threads<R>(threads: Option<usize>, f: impl FnOnce() -> R) -> R {
 #[test]
 fn fused_step_matches_per_tensor_stepping_bitwise() {
     let _g = locked();
-    for bits in [Bits::B32, Bits::b8_dynamic()] {
+    for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
         for threads in [Some(1usize), Some(4), None] {
             at_threads(threads, || {
                 let (mut o_serial, mut p_serial, grads) = fleet(bits);

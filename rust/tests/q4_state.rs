@@ -1,0 +1,298 @@
+//! 4-bit quantized-state integration tests: the `bits = 4` group override
+//! end to end.
+//!
+//! * `CodeBuf::U4` packing property tests — pack→unpack identity for odd
+//!   and even lengths, and ranges that straddle byte/block boundaries.
+//! * The 16-entry analytic dynamic-tree codebook pinned against its
+//!   closed-form values and a brute-force nearest-value reference encode.
+//! * Q4 optimizer steps bit-identical across thread counts {1, 4, default}
+//!   with the precision resolved per parameter group from TOML and the CLI
+//!   `--override` flag — the same parity contract the 8-bit substrate is
+//!   pinned by in `pool_parity.rs`.
+
+use std::sync::Mutex;
+
+use bitopt8::config::RunConfig;
+use bitopt8::optim::{build, Bits, OptimConfig, OptimKind, Optimizer, ParamOptimizer, TensorInfo};
+use bitopt8::quant::{dynamic_tree, CodeBuf, CodeWidth};
+use bitopt8::util::args::Args;
+use bitopt8::util::parallel;
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle the process-global thread count.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------------- CodeBuf packing
+
+#[test]
+fn u4_pack_unpack_identity_for_every_parity() {
+    let mut rng = Rng::new(0x40);
+    for n in [0usize, 1, 2, 3, 15, 16, 17, 255, 256, 257, 2047, 2048, 2049, 4097] {
+        let codes: Vec<u8> = (0..n).map(|_| (rng.uniform() * 16.0) as u8).collect();
+        let buf = CodeBuf::from_codes(CodeWidth::U4, &codes);
+        assert_eq!(buf.len(), n);
+        assert_eq!(buf.storage_bytes(), n.div_ceil(2), "n={n}");
+        assert_eq!(buf.to_codes(), codes, "n={n}");
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(buf.get(i), c, "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn u4_block_boundary_straddles_roundtrip() {
+    // read/write windows crossing the 2048-element quantization-block
+    // boundary (and its byte image at 1024) must not disturb neighbours
+    let n = 3 * 2048 + 33; // ragged odd tail
+    let mut rng = Rng::new(0x41);
+    let codes: Vec<u8> = (0..n).map(|_| (rng.uniform() * 16.0) as u8).collect();
+    let mut buf = CodeBuf::from_codes(CodeWidth::U4, &codes);
+    for lo in [2047usize, 2048, 2049, 4095, 4096, 6143, n - 34] {
+        let len = 35.min(n - lo);
+        let mut out = vec![0u8; len];
+        buf.read_range(lo, &mut out);
+        assert_eq!(&out[..], &codes[lo..lo + len], "lo={lo}");
+        // write the same values back: a no-op for the whole buffer
+        buf.write_range(lo, &out);
+        assert_eq!(buf.to_codes(), codes, "lo={lo}");
+    }
+}
+
+// ----------------------------------------- 16-entry dynamic-tree codebook
+
+#[test]
+fn pinned_16_entry_dynamic_tree_codebook() {
+    // Closed-form expected values (3 decades, f = 2-e fraction bits):
+    //   e=0: midpoints of linspace(0.1, 1.0, 5), largest replaced by 1.0
+    //   e=1: midpoints of linspace(0.1, 1.0, 3) × 0.1
+    //   e=2: the single midpoint 0.55 × 0.01
+    // plus 0.0 and the 1e-3 denormal, mirrored for the sign.
+    let expected: [f32; 16] = [
+        -1.0, -0.6625, -0.4375, -0.2125, -0.0775, -0.0325, -0.0055, 0.0, 1e-3, 0.0055,
+        0.0325, 0.0775, 0.2125, 0.4375, 0.6625, 1.0,
+    ];
+    let cb = dynamic_tree::dynamic_signed4();
+    assert_eq!(cb.len(), 16);
+    for (got, want) in cb.values().iter().zip(&expected) {
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn analytic_16_entry_encode_matches_brute_force() {
+    // The analytic candidate + fixup must be a true nearest-value encode:
+    // compare against brute-force argmin over all 16 values (by distance,
+    // so exact midpoint ties accept either neighbour) and bit-exactly
+    // against the reference midpoint search.
+    let mut rng = Rng::new(0x42);
+    for cb in [dynamic_tree::dynamic_signed4(), dynamic_tree::dynamic_unsigned4()] {
+        let mut probes: Vec<f32> = vec![0.0, -0.0, 1.0, -1.0, 5.0, -5.0, 1e-9, -1e-9];
+        for &v in cb.values() {
+            for d in [-2i64, -1, 0, 1, 2] {
+                let b = (v.to_bits() as i64 + d).clamp(0, u32::MAX as i64) as u32;
+                probes.push(f32::from_bits(b));
+            }
+        }
+        for w in cb.values().windows(2) {
+            let m = 0.5 * (w[0] + w[1]);
+            for d in [-1i64, 0, 1] {
+                probes.push(f32::from_bits((m.to_bits() as i64 + d) as u32));
+            }
+        }
+        for _ in 0..50_000 {
+            let exp = rng.uniform_range(-6.0, 1.0);
+            let mag = 10f64.powf(exp) as f32;
+            probes.push(if rng.uniform() < 0.5 { mag } else { -mag });
+        }
+        for x in probes {
+            if !x.is_finite() {
+                continue;
+            }
+            let got = cb.encode(x);
+            assert_eq!(got, cb.encode_reference(x), "{}: x={x}", cb.name());
+            let d_got = (cb.values()[got as usize] - x).abs();
+            let d_brute = cb
+                .values()
+                .iter()
+                .map(|v| (v - x).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(
+                (d_got - d_brute).abs() <= f32::EPSILON * x.abs().max(1.0),
+                "{}: x={x} not nearest (got dist {d_got}, best {d_brute})",
+                cb.name()
+            );
+        }
+    }
+}
+
+// -------------------------------------------------- thread-count parity
+
+/// `steps` Q4 updates of one optimizer on a quadratic; returns final
+/// params and dequantized states.
+fn q4_trajectory(
+    kind: OptimKind,
+    threads: Option<usize>,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let n = 64 * 72; // three 2048-blocks, last one ragged
+    let mut cfg = OptimConfig::adam(0.01, Bits::b4_dynamic());
+    cfg.kind = kind;
+    let mut opt = build(&cfg, n, Some((64, 72)));
+    let mut rng = Rng::new(0x4B17);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let run = |opt: &mut Box<dyn Optimizer>, p: &mut Vec<f32>| {
+        for _ in 0..steps {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(p, &g);
+        }
+    };
+    match threads {
+        Some(t) => parallel::with_threads(t, || run(&mut opt, &mut p)),
+        None => run(&mut opt, &mut p),
+    }
+    let states = opt.states().into_iter().map(|(_, s)| s.to_f32()).collect();
+    (p, states)
+}
+
+#[test]
+fn q4_steps_are_bit_identical_across_thread_counts() {
+    let _g = locked();
+    for kind in [OptimKind::Adam, OptimKind::AdamW, OptimKind::Momentum, OptimKind::Lamb] {
+        let (p_seq, s_seq) = q4_trajectory(kind, Some(1), 5);
+        let (p_par, s_par) = q4_trajectory(kind, Some(4), 5);
+        let (p_def, s_def) = q4_trajectory(kind, None, 5);
+        assert!(p_seq.iter().all(|v| v.is_finite()));
+        assert_eq!(p_seq, p_par, "{kind:?} params diverged between 1 and 4 threads");
+        assert_eq!(p_seq, p_def, "{kind:?} params diverged between 1 and default threads");
+        assert_eq!(s_seq, s_par, "{kind:?} states diverged");
+        assert_eq!(s_seq, s_def, "{kind:?} states diverged");
+    }
+}
+
+// ----------------------------------- group-resolved Q4 end-to-end parity
+
+fn lm_tensors() -> Vec<TensorInfo> {
+    [
+        ("embed.tok", 512 * 64),
+        ("embed.pos", 64 * 64),
+        ("block0.attn.wq", 64 * 64),
+        ("block0.attn.wv", 64 * 64),
+        ("block0.mlp.w1", 64 * 256),
+        ("lm_head", 64 * 512),
+    ]
+    .into_iter()
+    .map(|(name, size)| TensorInfo {
+        name: name.to_string(),
+        size,
+        shape: None,
+        padded: size.next_multiple_of(2048),
+    })
+    .collect()
+}
+
+/// TOML + CLI resolution: the attention tensors land in the 4-bit group
+/// (from the file), lm_head in a CLI-added 4-bit linear group, embeddings
+/// at 32-bit — then the fused step over that mixed layout is bit-identical
+/// across thread counts and to serial per-tensor stepping.
+#[test]
+fn toml_and_cli_resolved_q4_groups_step_identically_at_every_thread_count() {
+    let _g = locked();
+    let mut cfg = RunConfig::from_toml(
+        r#"
+[optimizer]
+kind = "adam"
+bits = 8
+lr = 0.01
+
+[[optimizer.group]]
+pattern = "embed.tok|embed.pos"
+bits = 32
+
+[[optimizer.group]]
+pattern = "block?.attn.*"
+bits = 4
+"#,
+    )
+    .unwrap();
+    let args = Args::parse(
+        ["train", "--override", "lm_head:bits=4,format=linear"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    cfg.apply_args(&args).unwrap();
+
+    let spec = cfg.optim_spec();
+    assert_eq!(spec.resolve("block0.attn.wq").0.bits, Bits::b4_dynamic());
+    assert_eq!(
+        spec.resolve("lm_head").0.bits,
+        Bits::B4 { format: bitopt8::quant::Format::Linear, blockwise: true }
+    );
+    assert_eq!(spec.resolve("embed.tok").0.bits, Bits::B32);
+    assert_eq!(spec.resolve("block0.mlp.w1").0.bits, Bits::b8_dynamic());
+
+    let tensors = lm_tensors();
+    let mk_data = || {
+        let mut rng = Rng::new(0x9E);
+        let params: Vec<Vec<f32>> = tensors
+            .iter()
+            .map(|t| (0..t.size).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let grads: Vec<Vec<f32>> = tensors
+            .iter()
+            .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+            .collect();
+        (params, grads)
+    };
+
+    let run_fused = |threads: Option<usize>| -> Vec<Vec<f32>> {
+        let step = || {
+            let mut popt =
+                ParamOptimizer::build(cfg.optim_spec(), &tensors, None).unwrap();
+            let (mut params, grads) = mk_data();
+            for _ in 0..3 {
+                popt.step_native(&mut params, &grads);
+            }
+            params
+        };
+        match threads {
+            Some(t) => parallel::with_threads(t, step),
+            None => step(),
+        }
+    };
+    let p1 = run_fused(Some(1));
+    assert_eq!(p1, run_fused(Some(4)), "Q4 groups diverged at 4 threads");
+    assert_eq!(p1, run_fused(None), "Q4 groups diverged at default threads");
+
+    // serial per-tensor reference over the same resolved spec
+    let spec = cfg.optim_spec();
+    let (mut p_serial, grads) = mk_data();
+    let mut opts: Vec<Box<dyn Optimizer>> = tensors
+        .iter()
+        .map(|t| build(&spec.resolve(&t.name).0, t.size, t.shape))
+        .collect();
+    for _ in 0..3 {
+        for (i, opt) in opts.iter_mut().enumerate() {
+            opt.step(&mut p_serial[i], &grads[i]);
+        }
+    }
+    assert_eq!(p1, p_serial, "fused Q4 diverged from serial stepping");
+
+    // and the 4-bit groups actually pay ~1 byte/param (Adam, two states)
+    let popt = ParamOptimizer::build(cfg.optim_spec(), &tensors, None).unwrap();
+    let reports = popt.group_reports();
+    let q4_report = reports
+        .iter()
+        .find(|r| r.label.contains("attn"))
+        .expect("attn group report");
+    assert_eq!(q4_report.bits, 4);
+    assert!(
+        q4_report.bytes_per_param() > 0.9 && q4_report.bytes_per_param() < 1.1,
+        "{}",
+        q4_report.bytes_per_param()
+    );
+}
