@@ -5,7 +5,7 @@
 //! inter-tensor parallelism covers tensors smaller than one quantization
 //! block.
 //!
-//! Three workloads:
+//! Workloads:
 //! * `adam_many_small` — many equal small Adam tensors (block-local,
 //!   single-phase plans);
 //! * `reduction_mix` — a realistic embedding/projection/bias tensor-count
@@ -18,7 +18,13 @@
 //!   one fused step (the pool idles during production), `streaming`
 //!   pushes each tensor into a `StreamingStep` the moment its gradient
 //!   exists, so the pool updates tensor i while the main thread produces
-//!   gradient i+1 — the overlap win this PR's tentpole is about.
+//!   gradient i+1;
+//! * `q4_width_sweep` — the same fused Adam workload at 32/8/4-bit state,
+//!   bytes/element vs step time;
+//! * `simd_sweep` — the fused Adam step per code width and format with
+//!   lane-chunked kernels vs the bit-identical forced-scalar oracle
+//!   (`--require-simd-speedup <x>` turns the recorded lane speedup into a
+//!   CI gate).
 //!
 //! The first two workloads also run a `streaming` variant: admission per
 //! tensor costs more dispatch than the fused one-batch-per-phase, which is
@@ -37,9 +43,11 @@ use bitopt8::optim::{
     engine::{fused_update, streaming_update, StreamingStep},
     Bits, OptimConfig, OptimKind, Optimizer,
 };
+use bitopt8::quant::Format;
 use bitopt8::util::args::Args;
 use bitopt8::util::bench::bench;
 use bitopt8::util::json::{num, obj, s, Json};
+use bitopt8::util::lanes;
 use bitopt8::util::parallel;
 use bitopt8::util::rng::Rng;
 
@@ -179,6 +187,48 @@ fn run_width_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
     }
 }
 
+/// The SIMD sweep: the fused Adam step per code width and format, with the
+/// forced-scalar kernels as the baseline variant — elements/sec of the
+/// lane-chunked dequantize→update→requantize path vs the identical scalar
+/// path (`speedup_vs_base` is the lane speedup; the two are bit-identical,
+/// so the delta is pure vectorization).
+fn run_simd_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
+    let sweep = [
+        Bits::B32,
+        Bits::B8 { format: Format::Dynamic, blockwise: true },
+        Bits::B8 { format: Format::Linear, blockwise: true },
+        Bits::B4 { format: Format::Dynamic, blockwise: true },
+        Bits::B4 { format: Format::Linear, blockwise: true },
+    ];
+    for bits in sweep {
+        let mut base_us = 0.0f64;
+        for variant in ["scalar", "lanes"] {
+            let (mut opts, mut params, grads) = fleet(spec, bits);
+            let run = || {
+                bench(variant, budget, 2000, || {
+                    fused_update(&mut opts, &mut params, &grads)
+                })
+            };
+            let r = if variant == "scalar" { lanes::with_forced_scalar(run) } else { run() };
+            let us = r.median_ns / 1e3;
+            if variant == "scalar" {
+                base_us = us;
+            }
+            let e = Entry {
+                workload: "simd_sweep",
+                optimizer: "adam",
+                bits: bits.describe(),
+                variant,
+                us_per_step: us,
+                iters: r.iters,
+                speedup_vs_base: base_us / us,
+                bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            };
+            record(e, out);
+        }
+    }
+}
+
 /// Serial "gradient production" stand-in: one pass over the buffer on the
 /// main thread (deterministic xorshift-ish fill), proportional to tensor
 /// size like a real runtime transfer.
@@ -302,6 +352,9 @@ fn main() {
     // The width sweep: fused Adam at 32 vs 8 vs 4 bits — bytes/element and
     // step throughput on one axis each (the `bits=4` tentpole numbers).
     run_width_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
+    // The SIMD sweep: lane-chunked vs forced-scalar kernels, per width and
+    // format (the scalar-vs-lane tentpole numbers; CI guards the speedup).
+    run_simd_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
 
     let results: Vec<Json> = entries
         .iter()
@@ -331,4 +384,25 @@ fn main() {
     println!("(fused: one pool batch per phase per step instead of one dispatch per tensor;");
     println!(" streaming_overlap: the pool updates tensor i while the main thread produces");
     println!(" gradient i+1 — the win grows with serial production cost and core count)");
+
+    // CI guard: every simd_sweep lane entry must beat the scalar baseline
+    // by at least the given factor (lane and scalar paths are bit-identical,
+    // so a regression here is a pure perf loss, never a tradeoff).
+    if let Some(min) = args.get("require-simd-speedup") {
+        let min: f64 = min.parse().expect("require-simd-speedup wants a number");
+        let mut failed = false;
+        for e in entries.iter().filter(|e| e.workload == "simd_sweep" && e.variant == "lanes") {
+            if e.speedup_vs_base < min {
+                eprintln!(
+                    "simd_sweep {}: lane speedup {:.2}x below required {min:.2}x",
+                    e.bits, e.speedup_vs_base
+                );
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!("simd_sweep: all lane variants >= {min:.2}x over scalar baseline");
+    }
 }

@@ -1,19 +1,27 @@
 //! Block-wise quantizer throughput (§2.1's efficiency claim): block-wise
 //! vs tensor-wide normalization, quantize and dequantize, single vs multi
-//! core. The paper's argument: per-block normalization removes cross-core
-//! synchronization, so block-wise should scale ~linearly with cores while
-//! tensor-wide pays a global reduction.
+//! core — plus the packed fast paths (`quantize_block_codes` /
+//! `dequantize_block_codes`) at both code widths, lane-chunked vs
+//! forced-scalar. The paper's argument: per-block normalization removes
+//! cross-core synchronization, so block-wise should scale ~linearly with
+//! cores while tensor-wide pays a global reduction; the lane columns show
+//! what the fixed-width SIMD chunking buys on top.
 //!
 //! Run: `cargo bench --bench quant_throughput`
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use bitopt8::quant::{dynamic_tree, BlockQuantizer, BLOCK};
+use bitopt8::quant::{dynamic_tree, BlockQuantizer, CodeWidth, BLOCK};
 use bitopt8::util::args::Args;
 use bitopt8::util::bench::{bench, black_box};
+use bitopt8::util::lanes;
 use bitopt8::util::parallel;
 use bitopt8::util::rng::Rng;
+
+fn gbps(n: usize, median_ns: f64) -> f64 {
+    (n as f64 * 4.0) / median_ns
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -21,17 +29,20 @@ fn main() {
     let budget = Duration::from_millis(args.get_u64("budget-ms", 1500));
     let mut rng = Rng::new(3);
     let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
-    let cb = Arc::new(dynamic_tree::dynamic_signed());
+    let cb8 = Arc::new(dynamic_tree::dynamic_signed());
+    let cb4 = Arc::new(dynamic_tree::dynamic_signed4());
 
     println!("quant_throughput: n = {n} ({} MB)", n * 4 >> 20);
     println!("{:<34} {:>14} {:>12}", "config", "GB/s (f32 in)", "ns/elem");
+
+    // §2.1 scaling: blockwise vs tensor-wide normalization (packed U8).
     for (label, block, threads) in [
         ("blockwise B=2048, 1 core", BLOCK, Some(1)),
         ("blockwise B=2048, all cores", BLOCK, None),
         ("tensor-wide, 1 core", usize::MAX, Some(1)),
         ("tensor-wide, all cores", usize::MAX, None),
     ] {
-        let bq = BlockQuantizer { codebook: cb.clone(), block };
+        let bq = BlockQuantizer::new(cb8.clone(), block);
         let mut q = bq.quantize(&x);
         let run = || {
             bench(label, budget, 100, || {
@@ -42,24 +53,69 @@ fn main() {
             Some(t) => parallel::with_threads(t, run),
             None => run(),
         };
-        println!(
-            "{label:<34} {:>14.2} {:>12.2}",
-            (n as f64 * 4.0) / r.median_ns,
-            r.median_ns / n as f64
-        );
+        println!("{label:<34} {:>14.2} {:>12.2}", gbps(n, r.median_ns), r.median_ns / n as f64);
     }
 
-    // dequantize
-    let bq = BlockQuantizer::new(cb, BLOCK);
+    // Packed fast paths at both code widths, lane-chunked vs forced-scalar
+    // (single core so the comparison isolates the kernels, not the pool).
+    println!();
+    println!(
+        "{:<26} {:>12} {:>12} {:>9}",
+        "packed path (1 core)", "lane GB/s", "scalar GB/s", "speedup"
+    );
+    for (name, cb, width) in [
+        ("U8", cb8.clone(), CodeWidth::U8),
+        ("U4", cb4.clone(), CodeWidth::U4),
+    ] {
+        let bq = BlockQuantizer::with_width(cb, BLOCK, width);
+        let mut q = bq.quantize(&x);
+        let mut out = vec![0.0f32; n];
+        parallel::with_threads(1, || {
+            let quant_lane = bench("quantize lane", budget, 100, || {
+                bq.quantize_into(black_box(&x), &mut q);
+            });
+            let quant_scalar = lanes::with_forced_scalar(|| {
+                bench("quantize scalar", budget, 100, || {
+                    bq.quantize_into(black_box(&x), &mut q);
+                })
+            });
+            let label = format!("quantize_block_codes {name}");
+            println!(
+                "{label:<26} {:>12.2} {:>12.2} {:>8.2}x",
+                gbps(n, quant_lane.median_ns),
+                gbps(n, quant_scalar.median_ns),
+                quant_scalar.median_ns / quant_lane.median_ns
+            );
+            let deq_lane = bench("dequantize lane", budget, 100, || {
+                bq.dequantize_into(black_box(&q), &mut out);
+            });
+            let deq_scalar = lanes::with_forced_scalar(|| {
+                bench("dequantize scalar", budget, 100, || {
+                    bq.dequantize_into(black_box(&q), &mut out);
+                })
+            });
+            let label = format!("dequantize_block_codes {name}");
+            println!(
+                "{label:<26} {:>12.2} {:>12.2} {:>8.2}x",
+                gbps(n, deq_lane.median_ns),
+                gbps(n, deq_scalar.median_ns),
+                deq_scalar.median_ns / deq_lane.median_ns
+            );
+        });
+    }
+
+    // dequantize at full parallelism (the trainer's hot read path)
+    let bq = BlockQuantizer::new(cb8, BLOCK);
     let q = bq.quantize(&x);
     let mut out = vec![0.0f32; n];
     let r = bench("dequantize blockwise, all cores", budget, 100, || {
         bq.dequantize_into(black_box(&q), &mut out);
     });
+    println!();
     println!(
         "{:<34} {:>14.2} {:>12.2}",
         "dequantize blockwise, all cores",
-        (n as f64 * 4.0) / r.median_ns,
+        gbps(n, r.median_ns),
         r.median_ns / n as f64
     );
 }

@@ -5,8 +5,14 @@
 //! For each element we quantize both states, find the (code1, code2) cell,
 //! and accumulate |u32−u8| and |u32−u8|/|u32| into that cell, where
 //! u = m/(√r + ε) (Appendix D).
+//!
+//! The maps are built per block through the packed fast paths
+//! ([`quantize_block_codes`]/[`dequantize_block_codes`]) with one block of
+//! reusable scratch per state — no whole-tensor code or dequantized-value
+//! allocations, so the analysis streams over tensors of any size at the
+//! same peak memory.
 
-use crate::quant::BlockQuantizer;
+use crate::quant::{dequantize_block_codes, quantize_block_codes, BlockQuantizer};
 
 /// 256×256 maps, row = first-state code, col = second-state code.
 pub struct AdamErrorMaps {
@@ -98,10 +104,7 @@ pub fn adam_error_maps(
     eps: f32,
 ) -> AdamErrorMaps {
     assert_eq!(m.len(), r.len());
-    let qm = bq_m.quantize(m);
-    let qr = bq_r.quantize(r);
-    let dm = bq_m.dequantize(&qm);
-    let dr = bq_r.dequantize(&qr);
+    let n = m.len();
     let (n1, n2) = (bq_m.codebook.len(), bq_r.codebook.len());
     let mut maps = AdamErrorMaps {
         n1,
@@ -110,10 +113,41 @@ pub fn adam_error_maps(
         abs_err_sum: vec![0.0; n1 * n2],
         rel_err_sum: vec![0.0; n1 * n2],
     };
-    for i in 0..m.len() {
+    if n == 0 {
+        return maps;
+    }
+    // One block of scratch per state, reused across blocks: packed codes
+    // plus the dequantized values. The per-block results are identical to
+    // whole-tensor quantize/dequantize (blocks are independent).
+    let bm = bq_m.block.min(n);
+    let br = bq_r.block.min(n);
+    let (wm, wr) = (bq_m.width, bq_r.width);
+    let mut mc = vec![0u8; wm.bytes_for(bm)];
+    let mut rc = vec![0u8; wr.bytes_for(br)];
+    let mut dm = vec![0.0f32; bm];
+    let mut dr = vec![0.0f32; br];
+    let (mut m_lo, mut m_hi) = (0usize, 0usize);
+    let (mut r_lo, mut r_hi) = (0usize, 0usize);
+    for i in 0..n {
+        if i >= m_hi {
+            m_lo = i;
+            m_hi = (i + bm).min(n);
+            let len = m_hi - m_lo;
+            let bytes = &mut mc[..wm.bytes_for(len)];
+            let am = quantize_block_codes(&bq_m.codebook, wm, &m[m_lo..m_hi], bytes);
+            dequantize_block_codes(&bq_m.codebook, wm, bytes, am, &mut dm[..len]);
+        }
+        if i >= r_hi {
+            r_lo = i;
+            r_hi = (i + br).min(n);
+            let len = r_hi - r_lo;
+            let bytes = &mut rc[..wr.bytes_for(len)];
+            let am = quantize_block_codes(&bq_r.codebook, wr, &r[r_lo..r_hi], bytes);
+            dequantize_block_codes(&bq_r.codebook, wr, bytes, am, &mut dr[..len]);
+        }
         let u32v = m[i] / (r[i].max(0.0).sqrt() + eps);
-        let u8v = dm[i] / (dr[i].max(0.0).sqrt() + eps);
-        let cell = maps.cell(qm.codes.get(i), qr.codes.get(i));
+        let u8v = dm[i - m_lo] / (dr[i - r_lo].max(0.0).sqrt() + eps);
+        let cell = maps.cell(wm.code_at(&mc, i - m_lo), wr.code_at(&rc, i - r_lo));
         maps.usage[cell] += 1;
         let abs = (u32v - u8v).abs() as f64;
         maps.abs_err_sum[cell] += abs;

@@ -40,8 +40,8 @@ pub fn synth_adam_states(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
 pub fn quantizer_pair(format: Format, blockwise: bool) -> (BlockQuantizer, BlockQuantizer) {
     let block = if blockwise { BLOCK } else { usize::MAX };
     (
-        BlockQuantizer { codebook: format.signed_codebook(), block },
-        BlockQuantizer { codebook: format.unsigned_codebook(), block },
+        BlockQuantizer::new(format.signed_codebook(), block),
+        BlockQuantizer::new(format.unsigned_codebook(), block),
     )
 }
 
@@ -53,5 +53,5 @@ pub fn codebook_dump(cb: &Codebook) -> Vec<(usize, f32)> {
 /// Convenience: a quantizer over an explicit codebook.
 pub fn quantizer(cb: Codebook, blockwise: bool) -> BlockQuantizer {
     let block = if blockwise { BLOCK } else { usize::MAX };
-    BlockQuantizer { codebook: Arc::new(cb), block }
+    BlockQuantizer::new(Arc::new(cb), block)
 }

@@ -281,6 +281,9 @@ impl<'rt> Trainer<'rt> {
         let schedule = self.cfg.schedule;
         let step = self.step;
         self.popt.schedule_lr(|base| schedule.lr_at(base, step));
+        // Pre-drain the non-finite-block counter so the post-step reading
+        // is scoped to this step's quantization work.
+        crate::quant::blockwise::take_nonfinite_blocks();
         if self.popt.n_hlo() == 0 {
             // Pure native run: the fused step's one-pool-batch-per-phase
             // dispatch is strictly better when there is nothing to overlap.
@@ -303,10 +306,24 @@ impl<'rt> Trainer<'rt> {
             stream.finish();
         }
 
+        // ---- quantization hygiene ----------------------------------------
+        // The block absmax scan skips non-finite elements (one bad value
+        // must not zero a whole block's codes) and counts affected blocks;
+        // any hit during this step's update is the same crash condition as
+        // a non-finite gradient norm, reported through the same channel.
+        let bad_blocks = crate::quant::blockwise::take_nonfinite_blocks();
+        if bad_blocks > 0 {
+            self.detector.report_grad_crash();
+        }
         self.detector.observe(loss);
         self.step += 1;
         if let Some(sink) = self.metrics.as_mut() {
-            sink.step(self.step, loss, step_lr as f64, vec![("gnorm", num(gnorm))])?;
+            let mut extras = vec![("gnorm", num(gnorm))];
+            if bad_blocks > 0 {
+                extras.push(("grad_crash", Json::Bool(true)));
+                extras.push(("nonfinite_blocks", num(bad_blocks as f64)));
+            }
+            sink.step(self.step, loss, step_lr as f64, extras)?;
         }
         Ok(loss)
     }

@@ -6,8 +6,9 @@
 //! optionally uses stochastic rounding, which Appendix H suggests helps for
 //! AdaGrad-style accumulators.
 
-use super::state::{block_steps, BlockView, StateTensor, StepPlan};
+use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
+use crate::util::lanes::LANES;
 
 pub struct Adagrad {
     cfg: OptimConfig,
@@ -27,12 +28,23 @@ impl Optimizer for Adagrad {
         self.t += 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        StepPlan::single(block_steps(
+        StepPlan::single(block_steps_vec(
             params,
             grads,
             &mut self.acc,
             None,
             block,
+            move |v: LaneView| {
+                let LaneView { params, grads, s1: acc, .. } = v;
+                for l in 0..LANES {
+                    let mut g = grads[l];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * params[l];
+                    }
+                    acc[l] += g * g;
+                    params[l] -= cfg.lr * g / (acc[l].max(0.0).sqrt() + cfg.eps);
+                }
+            },
             move |v: BlockView| {
                 let BlockView { params, grads, s1: acc, .. } = v;
                 for i in 0..params.len() {

@@ -5,8 +5,9 @@
 //! requantize. m uses the signed codebook, r (strictly positive) the
 //! unsigned one (§2.2).
 
-use super::state::{block_steps, BlockView, StateTensor, StepPlan};
+use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, OptimKind, Optimizer};
+use crate::util::lanes::LANES;
 
 pub struct Adam {
     cfg: OptimConfig,
@@ -58,7 +59,9 @@ impl Adam {
 }
 
 impl Optimizer for Adam {
-    // Fully block-local: one phase, no combine.
+    // Fully block-local: one phase, no combine. Lane-chunked: both closures
+    // apply the identical `update_rule`, so the vectorized path is
+    // bit-identical to the scalar tail-and-oracle path.
     fn plan<'a>(&'a mut self, params: &'a mut [f32], grads: &'a [f32]) -> StepPlan<'a> {
         self.t += 1;
         let cfg = self.cfg;
@@ -66,12 +69,32 @@ impl Optimizer for Adam {
         let bias_c2 = 1.0 - cfg.beta2.powi(self.t as i32);
         let decoupled = cfg.kind == OptimKind::AdamW;
         let block = cfg.bits.state_block(params.len());
-        StepPlan::single(block_steps(
+        StepPlan::single(block_steps_vec(
             params,
             grads,
             &mut self.m,
             Some(&mut self.r),
             block,
+            move |v: LaneView| {
+                let LaneView { params, grads, s1: m, s2, .. } = v;
+                let r = s2.expect("adam has two states");
+                for l in 0..LANES {
+                    Self::update_rule(
+                        &mut params[l],
+                        grads[l],
+                        &mut m[l],
+                        &mut r[l],
+                        cfg.lr,
+                        cfg.beta1,
+                        cfg.beta2,
+                        cfg.eps,
+                        cfg.weight_decay,
+                        decoupled,
+                        bias_c1,
+                        bias_c2,
+                    );
+                }
+            },
             move |v: BlockView| {
                 let BlockView { params, grads, s1: m, s2, .. } = v;
                 let r = s2.expect("adam has two states");

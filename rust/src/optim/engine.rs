@@ -10,7 +10,11 @@
 //! 2. **Phased block plan** (`optim::state::StepPlan`) — one tensor's
 //!    update decomposed into phases of independent (block) tasks with
 //!    deterministic combines between them; the engine owns
-//!    dequantize → update → requantize and per-thread scratch.
+//!    dequantize → update → requantize and per-thread scratch. Block
+//!    kernels are lane-chunked (`util::lanes`, `state::block_steps_vec`):
+//!    fixed-width `[f32; LANES]` chunks the autovectorizer lowers to SIMD,
+//!    with the scalar closure kept as the tail-and-oracle path
+//!    (bit-identical; `util::lanes::with_forced_scalar` pins it).
 //! 3. **Fused step** ([`FusedStep`]) — the phase-`k` items of *every*
 //!    tensor merged into a single pool batch, then all phase-`k` combines
 //!    in tensor order, then phase `k+1`. One pool batch per phase per

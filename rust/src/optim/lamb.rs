@@ -15,6 +15,7 @@
 
 use super::state::{block_steps, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
+use crate::util::lanes::{self, LANES};
 use crate::util::parallel::Shared;
 use crate::util::reduce;
 
@@ -88,13 +89,42 @@ impl Optimizer for Lamb {
                 let BlockView { params: u_b, grads, s1: m, s2, start } = v;
                 let r = s2.expect("lamb has two states");
                 let w = unsafe { params_sh.range(start, start + u_b.len()) };
-                for i in 0..u_b.len() {
-                    let g = grads[i];
-                    m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
-                    r[i] = cfg.beta2 * r[i] + (1.0 - cfg.beta2) * g * g;
-                    let m_hat = m[i] / bias_c1;
-                    let r_hat = r[i] / bias_c2;
-                    u_b[i] = m_hat / (r_hat.sqrt() + cfg.eps) + cfg.weight_decay * w[i];
+                // Elementwise moment update + u, lane-chunked by hand: this
+                // kernel reads `w` through `params_sh` and runs a partials
+                // pass below, so it can't ride `block_steps_vec`. Same
+                // per-element arithmetic in both paths => bit-identical.
+                #[inline(always)]
+                fn rule(
+                    u: &mut f32,
+                    g: f32,
+                    m: &mut f32,
+                    r: &mut f32,
+                    w: f32,
+                    cfg: &OptimConfig,
+                    bias_c1: f32,
+                    bias_c2: f32,
+                ) {
+                    *m = cfg.beta1 * *m + (1.0 - cfg.beta1) * g;
+                    *r = cfg.beta2 * *r + (1.0 - cfg.beta2) * g * g;
+                    let m_hat = *m / bias_c1;
+                    let r_hat = *r / bias_c2;
+                    *u = m_hat / (r_hat.sqrt() + cfg.eps) + cfg.weight_decay * w;
+                }
+                let len = u_b.len();
+                let main = if lanes::scalar_forced() { 0 } else { len - len % LANES };
+                for c in 0..main / LANES {
+                    let off = c * LANES;
+                    let u_l = <&mut [f32; LANES]>::try_from(&mut u_b[off..off + LANES]).unwrap();
+                    let g_l = <&[f32; LANES]>::try_from(&grads[off..off + LANES]).unwrap();
+                    let m_l = <&mut [f32; LANES]>::try_from(&mut m[off..off + LANES]).unwrap();
+                    let r_l = <&mut [f32; LANES]>::try_from(&mut r[off..off + LANES]).unwrap();
+                    let w_l = <&[f32; LANES]>::try_from(&w[off..off + LANES]).unwrap();
+                    for l in 0..LANES {
+                        rule(&mut u_l[l], g_l[l], &mut m_l[l], &mut r_l[l], w_l[l], &cfg, bias_c1, bias_c2);
+                    }
+                }
+                for i in main..len {
+                    rule(&mut u_b[i], grads[i], &mut m[i], &mut r[i], w[i], &cfg, bias_c1, bias_c2);
                 }
                 // Per-chunk norm partials for the chunks this item covers.
                 let mut lo = 0usize;

@@ -12,8 +12,9 @@
 //! momentum update — so the whole step, norms included, runs inside the
 //! fused engine's pool batches.
 
-use super::state::{block_steps, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
+use super::state::{block_steps_vec, BlockSteps, BlockView, LaneView, Phase, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
+use crate::util::lanes::LANES;
 use crate::util::parallel::Shared;
 use crate::util::reduce;
 
@@ -80,18 +81,35 @@ impl Optimizer for Lars {
             unsafe { scaled_lr.write(0, cfg.lr * trust) };
         };
 
-        // Phase B: block-local momentum update.
+        // Phase B: block-local momentum update, lane-chunked with the
+        // scalar closure as the tail-and-oracle path.
         let block = cfg.bits.state_block(n);
         let params_b: &'a mut [f32] = unsafe { params_sh.range_mut(0, n) };
-        let phase_b = block_steps(params_b, grads, &mut self.m, None, block, move |v: BlockView| {
-            let BlockView { params, grads, s1: m, .. } = v;
-            let scaled_lr = unsafe { scaled_lr.read(0) };
-            for i in 0..params.len() {
-                let g = grads[i] + cfg.weight_decay * params[i];
-                m[i] = cfg.beta1 * m[i] + scaled_lr * g;
-                params[i] -= m[i];
-            }
-        });
+        let phase_b = block_steps_vec(
+            params_b,
+            grads,
+            &mut self.m,
+            None,
+            block,
+            move |v: LaneView| {
+                let LaneView { params, grads, s1: m, .. } = v;
+                let scaled_lr = unsafe { scaled_lr.read(0) };
+                for l in 0..LANES {
+                    let g = grads[l] + cfg.weight_decay * params[l];
+                    m[l] = cfg.beta1 * m[l] + scaled_lr * g;
+                    params[l] -= m[l];
+                }
+            },
+            move |v: BlockView| {
+                let BlockView { params, grads, s1: m, .. } = v;
+                let scaled_lr = unsafe { scaled_lr.read(0) };
+                for i in 0..params.len() {
+                    let g = grads[i] + cfg.weight_decay * params[i];
+                    m[i] = cfg.beta1 * m[i] + scaled_lr * g;
+                    params[i] -= m[i];
+                }
+            },
+        );
 
         let mut plan = StepPlan::new();
         plan.push(Phase::with_combine(phase_a, combine));

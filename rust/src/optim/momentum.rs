@@ -4,8 +4,9 @@
 //! `m_t = β1 m_{t-1} + g_t`, `w_t = w_{t-1} − α m_t`, with `m_0 = g_0`
 //! (the first step uses the raw gradient).
 
-use super::state::{block_steps, BlockView, StateTensor, StepPlan};
+use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
+use crate::util::lanes::LANES;
 
 pub struct Momentum {
     cfg: OptimConfig,
@@ -26,17 +27,35 @@ impl Optimizer for Momentum {
         let first = self.t == 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
-        StepPlan::single(block_steps(params, grads, &mut self.m, None, block, move |v: BlockView| {
-            let BlockView { params, grads, s1: m, .. } = v;
-            for i in 0..params.len() {
-                let mut g = grads[i];
-                if cfg.weight_decay != 0.0 {
-                    g += cfg.weight_decay * params[i];
+        StepPlan::single(block_steps_vec(
+            params,
+            grads,
+            &mut self.m,
+            None,
+            block,
+            move |v: LaneView| {
+                let LaneView { params, grads, s1: m, .. } = v;
+                for l in 0..LANES {
+                    let mut g = grads[l];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * params[l];
+                    }
+                    m[l] = if first { g } else { cfg.beta1 * m[l] + g };
+                    params[l] -= cfg.lr * m[l];
                 }
-                m[i] = if first { g } else { cfg.beta1 * m[i] + g };
-                params[i] -= cfg.lr * m[i];
-            }
-        }))
+            },
+            move |v: BlockView| {
+                let BlockView { params, grads, s1: m, .. } = v;
+                for i in 0..params.len() {
+                    let mut g = grads[i];
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * params[i];
+                    }
+                    m[i] = if first { g } else { cfg.beta1 * m[i] + g };
+                    params[i] -= cfg.lr * m[i];
+                }
+            },
+        ))
     }
 
     fn state_bytes(&self) -> usize {

@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::quant::blockwise::{dequantize_block_codes, quantize_block_codes};
 use crate::quant::{CodeWidth, Codebook, Quantized};
+use crate::util::lanes::{self, LANES};
 use crate::util::parallel::{self, SendPtr};
 
 /// How a state tensor is stored.
@@ -140,6 +141,68 @@ pub struct BlockView<'a> {
     pub s1: &'a mut [f32],
     /// Second state (None for single-state optimizers like Momentum).
     pub s2: Option<&'a mut [f32]>,
+}
+
+/// One [`LANES`]-wide chunk of a block — the lane-chunked kernel entry
+/// point (see `crate::util::lanes`). Fixed-size array references give the
+/// optimizer's elementwise rule a fixed trip count the autovectorizer
+/// lowers to SIMD; the rule's arithmetic must be the identical per-element
+/// IEEE expression as its scalar [`BlockView`] kernel so both paths stay
+/// bit-identical (the engine never reassociates and Rust never contracts
+/// to FMA).
+pub struct LaneView<'a> {
+    /// Global element offset of this lane chunk.
+    pub start: usize,
+    pub params: &'a mut [f32; LANES],
+    pub grads: &'a [f32; LANES],
+    pub s1: &'a mut [f32; LANES],
+    /// Second state (None for single-state optimizers like Momentum).
+    pub s2: Option<&'a mut [f32; LANES]>,
+}
+
+/// Split one block into [`LANES`]-wide chunks for `lane` plus a scalar tail
+/// for `scalar` (the whole block when `lanes::scalar_forced()` — the
+/// oracle path). The scalar kernel receives a [`BlockView`] whose `start`
+/// is offset past the lane main, so rules that use global indices keep
+/// working.
+pub fn run_lanes<L, S>(v: BlockView<'_>, lane: &L, scalar: &S)
+where
+    L: Fn(LaneView),
+    S: Fn(BlockView),
+{
+    let BlockView { start, params, grads, s1, s2 } = v;
+    let n = params.len();
+    let main = if lanes::scalar_forced() { 0 } else { n - n % LANES };
+    let (p_main, p_tail) = params.split_at_mut(main);
+    let (g_main, g_tail) = grads.split_at(main);
+    let (s1_main, s1_tail) = s1.split_at_mut(main);
+    let (mut s2_main, mut s2_tail): (Option<&mut [f32]>, Option<&mut [f32]>) = (None, None);
+    if let Some(s2) = s2 {
+        let (a, b) = s2.split_at_mut(main);
+        s2_main = Some(a);
+        s2_tail = Some(b);
+    }
+    for c in 0..main / LANES {
+        let off = c * LANES;
+        lane(LaneView {
+            start: start + off,
+            params: <&mut [f32; LANES]>::try_from(&mut p_main[off..off + LANES]).unwrap(),
+            grads: <&[f32; LANES]>::try_from(&g_main[off..off + LANES]).unwrap(),
+            s1: <&mut [f32; LANES]>::try_from(&mut s1_main[off..off + LANES]).unwrap(),
+            s2: s2_main
+                .as_deref_mut()
+                .map(|s| <&mut [f32; LANES]>::try_from(&mut s[off..off + LANES]).unwrap()),
+        });
+    }
+    if !p_tail.is_empty() {
+        scalar(BlockView {
+            start: start + main,
+            params: p_tail,
+            grads: g_tail,
+            s1: s1_tail,
+            s2: s2_tail,
+        });
+    }
 }
 
 thread_local! {
@@ -499,6 +562,34 @@ where
     BlockSteps { n_blocks, run: Box::new(run) }
 }
 
+/// Lane-chunked variant of [`block_steps`]: the optimizer supplies its
+/// elementwise rule twice — a [`LaneView`] kernel (fixed-width chunks the
+/// autovectorizer lowers) and the scalar [`BlockView`] kernel that remains
+/// the tail-and-oracle path. Both must compute the identical per-element
+/// update; `rust/tests/simd_parity.rs` and the `pool_parity`
+/// scalar-vs-lane fleets enforce the resulting bit-identity.
+///
+/// To vectorize a new optimizer: keep its scalar closure as-is, add a lane
+/// closure that applies the same rule with `for l in 0..LANES` over the
+/// array views, and switch its `plan()` from `block_steps` to this.
+pub fn block_steps_vec<'a, L, S>(
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    s1: &'a mut StateTensor,
+    s2: Option<&'a mut StateTensor>,
+    fallback_block: usize,
+    lane: L,
+    scalar: S,
+) -> BlockSteps<'a>
+where
+    L: Fn(LaneView) + Sync + Send + 'a,
+    S: Fn(BlockView) + Sync + Send + 'a,
+{
+    block_steps(params, grads, s1, s2, fallback_block, move |v: BlockView| {
+        run_lanes(v, &lane, &scalar)
+    })
+}
+
 /// Run a block kernel over (params, grads, state1[, state2]) immediately,
 /// in parallel on the pool — the single-tensor convenience over
 /// [`block_steps`].
@@ -517,6 +608,8 @@ pub fn step_blocks<'a, F>(
 
 #[cfg(test)]
 mod tests {
+    use std::cell::RefCell;
+
     use super::*;
     use crate::quant::dynamic_tree::dynamic_signed;
     use crate::util::rng::Rng;
@@ -623,6 +716,124 @@ mod tests {
             assert!((a[i] - g).abs() <= 0.6 * g.abs() + 2e-3, "s1[{i}] {} vs {g}", a[i]);
             assert!((b[i] + g).abs() <= 0.35 * g.abs() + 1e-3, "s2[{i}] {} vs {}", b[i], -g);
         }
+    }
+
+    #[test]
+    fn run_lanes_partitions_block_into_chunks_and_tail() {
+        // every element visited exactly once, lane chunks LANES-aligned,
+        // the scalar tail shorter than LANES with the right start offset
+        for n in [1usize, 7, 8, 9, 16, 23, 300] {
+            let mut params = vec![0.0f32; n];
+            let grads = vec![0.0f32; n];
+            let mut s1 = vec![0.0f32; n];
+            let mut s2 = vec![0.0f32; n];
+            let seen = RefCell::new(vec![0u32; n]);
+            run_lanes(
+                BlockView {
+                    start: 0,
+                    params: &mut params,
+                    grads: &grads,
+                    s1: &mut s1,
+                    s2: Some(&mut s2),
+                },
+                &|v: LaneView| {
+                    assert_eq!(v.start % LANES, 0);
+                    assert!(v.s2.is_some());
+                    let mut guard = seen.borrow_mut();
+                    for l in 0..LANES {
+                        guard[v.start + l] += 1;
+                    }
+                },
+                &|v: BlockView| {
+                    assert!(v.params.len() < LANES, "tail must be shorter than LANES");
+                    assert_eq!(v.start, n - n % LANES);
+                    let mut guard = seen.borrow_mut();
+                    for i in 0..v.params.len() {
+                        guard[v.start + i] += 1;
+                    }
+                },
+            );
+            assert!(seen.into_inner().iter().all(|&c| c == 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn run_lanes_forced_scalar_routes_whole_block_to_scalar() {
+        let n = 64;
+        let mut params = vec![0.0f32; n];
+        let grads = vec![0.0f32; n];
+        let mut s1 = vec![0.0f32; n];
+        let hits = RefCell::new((0usize, 0usize));
+        crate::util::lanes::with_forced_scalar(|| {
+            run_lanes(
+                BlockView { start: 0, params: &mut params, grads: &grads, s1: &mut s1, s2: None },
+                &|_: LaneView| hits.borrow_mut().0 += 1,
+                &|v: BlockView| {
+                    assert_eq!(v.params.len(), n);
+                    hits.borrow_mut().1 += 1;
+                },
+            );
+        });
+        assert_eq!(hits.into_inner(), (0, 1));
+    }
+
+    #[test]
+    fn block_steps_vec_matches_block_steps_bitwise() {
+        // a lane rule that repeats the scalar arithmetic must give a
+        // bit-identical trajectory through the quantized engine
+        let n = 5 * 256 + 37;
+        let cb = Arc::new(dynamic_signed());
+        let grads: Vec<f32> = {
+            let mut rng = Rng::new(21);
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+        };
+        let rule = |p: &mut f32, g: f32, m: &mut f32| {
+            *m = 0.9 * *m + g;
+            *p -= 0.1 * *m;
+        };
+        let run_vec = || -> (Vec<f32>, Vec<f32>) {
+            let mut s = StateTensor::new_q8(n, cb.clone(), 256);
+            let mut params = vec![1.0f32; n];
+            for _ in 0..3 {
+                block_steps_vec(
+                    &mut params,
+                    &grads,
+                    &mut s,
+                    None,
+                    256,
+                    move |v: LaneView| {
+                        for l in 0..LANES {
+                            rule(&mut v.params[l], v.grads[l], &mut v.s1[l]);
+                        }
+                    },
+                    move |v: BlockView| {
+                        for i in 0..v.params.len() {
+                            rule(&mut v.params[i], v.grads[i], &mut v.s1[i]);
+                        }
+                    },
+                )
+                .execute();
+            }
+            (params, s.to_f32())
+        };
+        let run_scalar = || -> (Vec<f32>, Vec<f32>) {
+            let mut s = StateTensor::new_q8(n, cb.clone(), 256);
+            let mut params = vec![1.0f32; n];
+            for _ in 0..3 {
+                block_steps(&mut params, &grads, &mut s, None, 256, move |v: BlockView| {
+                    for i in 0..v.params.len() {
+                        rule(&mut v.params[i], v.grads[i], &mut v.s1[i]);
+                    }
+                })
+                .execute();
+            }
+            (params, s.to_f32())
+        };
+        let (p_vec, s_vec) = run_vec();
+        let (p_scalar, s_scalar) =
+            crate::util::lanes::with_forced_scalar(run_scalar);
+        assert_eq!(p_vec, p_scalar);
+        assert_eq!(s_vec, s_scalar);
     }
 
     #[test]

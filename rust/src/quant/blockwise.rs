@@ -15,12 +15,51 @@
 //! width-agnostic; the packed fast paths ([`quantize_block_codes`],
 //! [`dequantize_block_codes`]) encode/decode straight between f32 scratch
 //! and packed storage without an intermediate unpacked buffer.
+//!
+//! # Lane layout and the scalar-tail contract
+//!
+//! The packed fast paths are *lane-chunked* (see [`crate::util::lanes`]):
+//! each block is processed as consecutive
+//! [`LANES`](crate::util::lanes::LANES)-wide `[f32; 8]` chunks — the
+//! absmax scan as lane-wise maxima with one horizontal reduce per block,
+//! decode as a gather from the codebook's contiguous value table
+//! ([`Codebook::values`]) fused with U4 nibble unpacking, encode through
+//! [`Codebook::encode_lanes`] (batched analytic candidate + exact midpoint
+//! fixup) fused with U4 nibble packing — followed by a *scalar tail* of
+//! `len % LANES` elements (U4 tails also absorb the odd element whose dead
+//! high nibble stays zero). Lane chunks perform the identical per-element
+//! IEEE arithmetic as the tail loops, in the same element order, so the
+//! output is bit-identical however a block is split; forcing
+//! [`lanes::scalar_forced`](crate::util::lanes::scalar_forced) routes
+//! whole blocks through the tail code, which is what the parity tests
+//! (`rust/tests/simd_parity.rs`, the `pool_parity` scalar-vs-lane fleets)
+//! diff against and what the `simd_sweep` benchmark uses as its baseline.
+//!
+//! The absmax scan skips non-finite elements — one NaN/±inf gradient must
+//! not poison `N_b` and silently zero (or NaN) every code in its block —
+//! and counts affected blocks in a process-global telemetry counter
+//! ([`take_nonfinite_blocks`]) that the trainer drains into its existing
+//! `grad_crash` signal.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::codebook::Codebook;
 use super::codebuf::{CodeBuf, CodeWidth};
+use crate::util::lanes::{self, LANES};
 use crate::util::parallel;
+
+/// Blocks whose absmax scan saw at least one non-finite element since the
+/// last [`take_nonfinite_blocks`] call. Process-global for the same reason
+/// the scan itself runs on pool workers; drained once per optimizer step.
+static NONFINITE_BLOCKS: AtomicU64 = AtomicU64::new(0);
+
+/// Drain the non-finite-block telemetry counter (returns the count since
+/// the previous drain). The trainer reports a positive count through the
+/// same `grad_crash` channel as a non-finite gradient norm.
+pub fn take_nonfinite_blocks() -> u64 {
+    NONFINITE_BLOCKS.swap(0, Ordering::Relaxed)
+}
 
 /// The paper's block size.
 pub const BLOCK: usize = 2048;
@@ -186,14 +225,49 @@ impl BlockQuantizer {
 }
 
 /// Absolute maximum of one block (the normalization constant `N_b`).
+///
+/// Non-finite elements are skipped — `|NaN|` and `|±inf|` both fail
+/// `a <= f32::MAX` — so a single bad gradient cannot poison the block's
+/// normalization constant; blocks containing any are counted for the
+/// `grad_crash` telemetry ([`take_nonfinite_blocks`]). Lane-chunked:
+/// [`LANES`] running maxima with one horizontal reduce per block. f32 max
+/// is exact, so lane-striping the scan is bit-identical to the in-order
+/// scalar tail loop at every split.
 #[inline]
 fn block_absmax(xs: &[f32]) -> f32 {
     let mut absmax = 0.0f32;
-    for &v in xs {
-        let a = v.abs();
-        if a > absmax {
-            absmax = a;
+    let mut nonfinite = 0u32;
+    let main = if lanes::scalar_forced() { 0 } else { xs.len() - xs.len() % LANES };
+    let mut acc = [0.0f32; LANES];
+    for chunk in xs[..main].chunks_exact(LANES) {
+        for l in 0..LANES {
+            let a = chunk[l].abs();
+            if a <= f32::MAX {
+                if a > acc[l] {
+                    acc[l] = a;
+                }
+            } else {
+                nonfinite += 1;
+            }
         }
+    }
+    for l in 0..LANES {
+        if acc[l] > absmax {
+            absmax = acc[l];
+        }
+    }
+    for &v in &xs[main..] {
+        let a = v.abs();
+        if a <= f32::MAX {
+            if a > absmax {
+                absmax = a;
+            }
+        } else {
+            nonfinite += 1;
+        }
+    }
+    if nonfinite > 0 {
+        NONFINITE_BLOCKS.fetch_add(1, Ordering::Relaxed);
     }
     absmax
 }
@@ -227,6 +301,10 @@ pub fn dequantize_block(cb: &Codebook, codes: &[u8], absmax: f32, out: &mut [f32
 /// (`bytes.len() == width.bytes_for(xs.len())`). At `U4` two encodes are
 /// fused per output byte; an odd tail leaves its dead high nibble zero so
 /// storage stays canonical for bitwise comparison.
+///
+/// Lane-chunked (module docs): `LANES` normalizations + batched encode per
+/// chunk (4 packed bytes per chunk at `U4`), scalar tail for the
+/// remainder; bit-identical to [`quantize_block`] on the whole block.
 #[inline]
 pub fn quantize_block_codes(
     cb: &Codebook,
@@ -235,18 +313,58 @@ pub fn quantize_block_codes(
     bytes: &mut [u8],
 ) -> f32 {
     match width {
-        CodeWidth::U8 => quantize_block(cb, xs, bytes),
+        CodeWidth::U8 => {
+            if lanes::scalar_forced() {
+                return quantize_block(cb, xs, bytes);
+            }
+            debug_assert_eq!(xs.len(), bytes.len());
+            let absmax = block_absmax(xs);
+            let inv = if absmax > 0.0 { 1.0 / absmax } else { 1.0 };
+            let main = xs.len() - xs.len() % LANES;
+            let (x_main, x_tail) = xs.split_at(main);
+            let (b_main, b_tail) = bytes.split_at_mut(main);
+            for (xc, bc) in x_main.chunks_exact(LANES).zip(b_main.chunks_exact_mut(LANES)) {
+                let mut scaled = [0.0f32; LANES];
+                for l in 0..LANES {
+                    scaled[l] = xc[l] * inv;
+                }
+                let mut codes = [0u8; LANES];
+                cb.encode_lanes(&scaled, &mut codes);
+                bc.copy_from_slice(&codes);
+            }
+            for (c, &v) in b_tail.iter_mut().zip(x_tail) {
+                *c = cb.encode(v * inv);
+            }
+            absmax
+        }
         CodeWidth::U4 => {
             debug_assert_eq!(bytes.len(), xs.len().div_ceil(2));
             debug_assert!(cb.len() <= 16, "codebook too large for 4-bit codes");
             let absmax = block_absmax(xs);
             let inv = if absmax > 0.0 { 1.0 / absmax } else { 1.0 };
-            let mut pairs = xs.chunks_exact(2);
-            for (b, pair) in bytes.iter_mut().zip(&mut pairs) {
+            // LANES is even, so the lane main is pair-aligned: each chunk
+            // packs into exactly LANES/2 bytes and the tail starts on a
+            // byte boundary.
+            let main = if lanes::scalar_forced() { 0 } else { xs.len() - xs.len() % LANES };
+            let (x_main, x_tail) = xs.split_at(main);
+            let (b_main, b_tail) = bytes.split_at_mut(main / 2);
+            for (xc, bc) in x_main.chunks_exact(LANES).zip(b_main.chunks_exact_mut(LANES / 2)) {
+                let mut scaled = [0.0f32; LANES];
+                for l in 0..LANES {
+                    scaled[l] = xc[l] * inv;
+                }
+                let mut codes = [0u8; LANES];
+                cb.encode_lanes(&scaled, &mut codes);
+                for l in 0..LANES / 2 {
+                    bc[l] = codes[2 * l] | (codes[2 * l + 1] << 4);
+                }
+            }
+            let mut pairs = x_tail.chunks_exact(2);
+            for (b, pair) in b_tail.iter_mut().zip(&mut pairs) {
                 *b = cb.encode(pair[0] * inv) | (cb.encode(pair[1] * inv) << 4);
             }
             if let [last] = pairs.remainder() {
-                bytes[xs.len() / 2] = cb.encode(last * inv);
+                b_tail[x_tail.len() / 2] = cb.encode(last * inv);
             }
             absmax
         }
@@ -254,6 +372,11 @@ pub fn quantize_block_codes(
 }
 
 /// Width-generic block dequantize straight from packed storage bytes.
+///
+/// Lane-chunked (module docs): decode is a gather from the codebook's
+/// contiguous value table fused with the denormalize multiply (and, at
+/// `U4`, with nibble unpacking); scalar tail for the remainder.
+/// Bit-identical to [`dequantize_block`] on the whole block.
 #[inline]
 pub fn dequantize_block_codes(
     cb: &Codebook,
@@ -263,17 +386,46 @@ pub fn dequantize_block_codes(
     out: &mut [f32],
 ) {
     match width {
-        CodeWidth::U8 => dequantize_block(cb, bytes, absmax, out),
+        CodeWidth::U8 => {
+            if lanes::scalar_forced() {
+                return dequantize_block(cb, bytes, absmax, out);
+            }
+            debug_assert_eq!(bytes.len(), out.len());
+            let table = cb.values();
+            let main = out.len() - out.len() % LANES;
+            let (o_main, o_tail) = out.split_at_mut(main);
+            let (b_main, b_tail) = bytes.split_at(main);
+            for (oc, bc) in o_main.chunks_exact_mut(LANES).zip(b_main.chunks_exact(LANES)) {
+                for l in 0..LANES {
+                    oc[l] = table[bc[l] as usize] * absmax;
+                }
+            }
+            for (o, &c) in o_tail.iter_mut().zip(b_tail) {
+                *o = cb.decode(c) * absmax;
+            }
+        }
         CodeWidth::U4 => {
             debug_assert_eq!(bytes.len(), out.len().div_ceil(2));
+            let table = cb.values();
             let n = out.len();
-            let mut pairs = out.chunks_exact_mut(2);
-            for (pair, &b) in (&mut pairs).zip(bytes) {
+            let main = if lanes::scalar_forced() { 0 } else { n - n % LANES };
+            let (o_main, o_tail) = out.split_at_mut(main);
+            let (b_main, b_tail) = bytes.split_at(main / 2);
+            for (oc, bc) in o_main.chunks_exact_mut(LANES).zip(b_main.chunks_exact(LANES / 2)) {
+                for l in 0..LANES / 2 {
+                    let b = bc[l];
+                    oc[2 * l] = table[(b & 0x0F) as usize] * absmax;
+                    oc[2 * l + 1] = table[(b >> 4) as usize] * absmax;
+                }
+            }
+            let tn = o_tail.len();
+            let mut pairs = o_tail.chunks_exact_mut(2);
+            for (pair, &b) in (&mut pairs).zip(b_tail) {
                 pair[0] = cb.decode(b & 0x0F) * absmax;
                 pair[1] = cb.decode(b >> 4) * absmax;
             }
-            if n % 2 == 1 {
-                out[n - 1] = cb.decode(bytes[n / 2] & 0x0F) * absmax;
+            if tn % 2 == 1 {
+                o_tail[tn - 1] = cb.decode(b_tail[tn / 2] & 0x0F) * absmax;
             }
         }
     }
@@ -458,6 +610,66 @@ mod tests {
         let q4 = bq4.quantize(&x);
         let bpe4 = q4.bytes() as f64 / x.len() as f64;
         assert!(bpe4 < 0.51, "{bpe4}");
+    }
+
+    #[test]
+    fn nonfinite_elements_do_not_poison_block_absmax() {
+        // A NaN or ±inf element must not enter the normalization constant
+        // (inf used to set absmax = inf, squashing every code in the block
+        // to zero); the block's finite elements quantize exactly as if the
+        // bad elements were absent, and the telemetry counter records the
+        // affected blocks.
+        let cb = Arc::new(dynamic_signed());
+        let bq = BlockQuantizer::new(cb.clone(), 256);
+        let clean = data(512, 20);
+        let mut dirty = clean.clone();
+        dirty[3] = f32::NAN;
+        dirty[200] = f32::INFINITY;
+        dirty[300] = f32::NEG_INFINITY; // block 1
+        take_nonfinite_blocks();
+        let q_clean = bq.quantize(&clean);
+        assert_eq!(take_nonfinite_blocks(), 0);
+        let q_dirty = bq.quantize(&dirty);
+        assert!(take_nonfinite_blocks() >= 2, "both dirty blocks counted");
+        assert_eq!(q_clean.absmax, q_dirty.absmax, "absmax ignores non-finite");
+        let y_clean = bq.dequantize(&q_clean);
+        let y_dirty = bq.dequantize(&q_dirty);
+        for i in 0..512 {
+            if dirty[i].is_finite() {
+                assert_eq!(y_clean[i], y_dirty[i], "finite element {i} disturbed");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_path_matches_forced_scalar_path() {
+        // Smoke check here (the exhaustive sweep lives in
+        // rust/tests/simd_parity.rs): packed quantize + dequantize must be
+        // bitwise invariant to the forced-scalar toggle.
+        for (cb, width) in [
+            (dynamic_signed(), CodeWidth::U8),
+            (dynamic_signed4(), CodeWidth::U4),
+        ] {
+            for n in [5usize, 64, 101, 2048] {
+                let xs = data(n, 30 + n as u64);
+                let mut packed = vec![0u8; width.bytes_for(n)];
+                let am = quantize_block_codes(&cb, width, &xs, &mut packed);
+                let mut packed_s = vec![0u8; width.bytes_for(n)];
+                let am_s = crate::util::lanes::with_forced_scalar(|| {
+                    quantize_block_codes(&cb, width, &xs, &mut packed_s)
+                });
+                assert_eq!(am.to_bits(), am_s.to_bits(), "{width:?} n={n}");
+                assert_eq!(packed, packed_s, "{width:?} n={n}");
+                let mut out = vec![0.0f32; n];
+                dequantize_block_codes(&cb, width, &packed, am, &mut out);
+                let mut out_s = vec![0.0f32; n];
+                crate::util::lanes::with_forced_scalar(|| {
+                    dequantize_block_codes(&cb, width, &packed_s, am_s, &mut out_s)
+                });
+                let same = out.iter().zip(&out_s).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{width:?} n={n}");
+            }
+        }
     }
 
     #[test]

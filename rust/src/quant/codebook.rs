@@ -8,12 +8,20 @@
 //! the midpoints between adjacent codebook entries, which is exactly
 //! arg-min over an ordered codebook.
 
+use crate::util::lanes::LANES;
 use crate::util::rng::Rng;
 
 /// LUT resolution: top bits of the monotone integer view of an f32
 /// (sign + 8 exponent + 5 mantissa bits => 16384 buckets, 32 KiB table).
 const LUT_BITS: u32 = 14;
 const LUT_SIZE: usize = 1 << LUT_BITS;
+
+/// Lane-batched analytic candidate: computes [`LANES`] code-index
+/// candidates at once from the bit structure of the inputs. Accuracy
+/// contract is the same as the scalar `analytic` candidate — each lane is
+/// resolved exactly against the midpoints by [`Codebook::resolve_candidate`],
+/// so candidate quality affects fixup iterations, never the result.
+pub type BatchCandidate = fn(&[f32; LANES]) -> [usize; LANES];
 
 #[derive(Clone, Debug)]
 pub struct Codebook {
@@ -29,6 +37,9 @@ pub struct Codebook {
     /// exact after a ≤±1 fixup against `midpoints` — replaces the LUT for
     /// codebooks with closed-form structure (the dynamic-tree formats).
     analytic: Option<fn(f32) -> usize>,
+    /// Lane-batched variant of `analytic` used by [`Codebook::encode_lanes`]
+    /// — the candidate step of the block encode running across lanes.
+    batch: Option<BatchCandidate>,
     name: &'static str,
 }
 
@@ -52,7 +63,7 @@ fn from_monotone(m: u32) -> f32 {
 
 impl Codebook {
     pub fn new(name: &'static str, values: Vec<f32>) -> Codebook {
-        Self::build(name, values, None)
+        Self::build(name, values, None, None)
     }
 
     /// Codebook with an analytic encode: `candidate(x)` computes a code
@@ -65,13 +76,27 @@ impl Codebook {
         values: Vec<f32>,
         candidate: fn(f32) -> usize,
     ) -> Codebook {
-        Self::build(name, values, Some(candidate))
+        Self::build(name, values, Some(candidate), None)
+    }
+
+    /// Analytic codebook that additionally carries a lane-batched candidate
+    /// for the vectorized block encode. `batch` must agree with `candidate`
+    /// on NaN/zero handling (both feed the same exact fixup, so disagreement
+    /// costs iterations, not correctness).
+    pub fn new_analytic_batched(
+        name: &'static str,
+        values: Vec<f32>,
+        candidate: fn(f32) -> usize,
+        batch: BatchCandidate,
+    ) -> Codebook {
+        Self::build(name, values, Some(candidate), Some(batch))
     }
 
     fn build(
         name: &'static str,
         mut values: Vec<f32>,
         analytic: Option<fn(f32) -> usize>,
+        batch: Option<BatchCandidate>,
     ) -> Codebook {
         assert!(!values.is_empty() && values.len() <= 256, "codebook size");
         values.sort_by(|a, b| a.partial_cmp(b).expect("finite codebook"));
@@ -104,7 +129,7 @@ impl Codebook {
                 })
                 .collect()
         };
-        Codebook { values, midpoints, lut, analytic, name }
+        Codebook { values, midpoints, lut, analytic, batch, name }
     }
 
     pub fn name(&self) -> &'static str {
@@ -139,19 +164,9 @@ impl Codebook {
     #[inline(always)]
     pub fn encode(&self, x: f32) -> u8 {
         if let Some(candidate) = self.analytic {
-            // Analytic fast path: O(1) bit-math candidate, then an exact
-            // ≤±1 fixup against the true decision boundaries so the result
-            // is bit-identical to `encode_reference` (including its
-            // ties-round-up rule). The loops also keep NaN/±inf on the
-            // reference behavior: every comparison is false for NaN.
-            let mut c = candidate(x).min(self.values.len() - 1);
-            while c > 0 && self.midpoints[c - 1] > x {
-                c -= 1;
-            }
-            while c < self.midpoints.len() && self.midpoints[c] <= x {
-                c += 1;
-            }
-            return c as u8;
+            // Analytic fast path: O(1) bit-math candidate, then the exact
+            // fixup in `resolve_candidate`.
+            return self.resolve_candidate(candidate(x), x);
         }
         // Fast path: bucket LUT on the monotone integer view. Exact — the
         // bucket's (lo, hi) code range brackets the answer; equal bounds
@@ -163,6 +178,48 @@ impl Codebook {
         }
         // Narrow binary search within [lo, hi].
         lo + self.midpoints[lo as usize..hi as usize].partition_point(|&m| m <= x) as u8
+    }
+
+    /// Resolve an approximate code-index candidate for `x` exactly against
+    /// the decision boundaries: walk the midpoints until the arg-min
+    /// invariant holds, so the result is bit-identical to
+    /// `encode_reference` (including its ties-round-up rule) for *any*
+    /// candidate — quality only affects iteration count (≤±1 for the
+    /// analytic candidates). The loops also keep NaN/±inf on the reference
+    /// behavior: every comparison is false for NaN, so a NaN input returns
+    /// its candidate unchanged (the analytic candidates map NaN to 0, the
+    /// reference result).
+    #[inline(always)]
+    pub fn resolve_candidate(&self, candidate: usize, x: f32) -> u8 {
+        let mut c = candidate.min(self.values.len() - 1);
+        while c > 0 && self.midpoints[c - 1] > x {
+            c -= 1;
+        }
+        while c < self.midpoints.len() && self.midpoints[c] <= x {
+            c += 1;
+        }
+        c as u8
+    }
+
+    /// Encode [`LANES`] already-normalized inputs at once — the lane step
+    /// of the vectorized block encode. The candidate stage runs across
+    /// lanes (batched bit math when the codebook registered one); each lane
+    /// then goes through the same exact midpoint fixup as [`Codebook::encode`],
+    /// so the codes are bit-identical to encoding each lane individually.
+    /// Codebooks without an analytic form fall back to the per-lane LUT
+    /// encode (still exact, just not batched).
+    #[inline]
+    pub fn encode_lanes(&self, xs: &[f32; LANES], out: &mut [u8; LANES]) {
+        if let Some(batch) = self.batch {
+            let cands = batch(xs);
+            for l in 0..LANES {
+                out[l] = self.resolve_candidate(cands[l], xs[l]);
+            }
+        } else {
+            for l in 0..LANES {
+                out[l] = self.encode(xs[l]);
+            }
+        }
     }
 
     /// Reference encode (no LUT) — used by tests to pin LUT exactness.
@@ -306,6 +363,49 @@ mod tests {
         let mut rng = Rng::new(7);
         for _ in 0..100 {
             assert_eq!(cb.decode(cb.encode_stochastic(0.25, &mut rng)), 0.25);
+        }
+    }
+
+    #[test]
+    fn encode_lanes_matches_scalar_encode() {
+        // The batched candidate + shared fixup must agree with the scalar
+        // encode lane-for-lane, on dense probes and on the special values
+        // (NaN stays at code 0, ±inf clamp to the ends, ±0 agree).
+        for cb in [
+            crate::quant::dynamic_tree::dynamic_signed(),
+            crate::quant::dynamic_tree::dynamic_unsigned(),
+            crate::quant::dynamic_tree::dynamic_signed4(),
+            crate::quant::dynamic_tree::dynamic_unsigned4(),
+            crate::quant::linear::linear_signed(),
+            crate::quant::linear::linear_unsigned(),
+            simple(),
+        ] {
+            let mut rng = Rng::new(42);
+            let mut out = [0u8; LANES];
+            for _ in 0..4000 {
+                let mut xs = [0.0f32; LANES];
+                for x in xs.iter_mut() {
+                    *x = (rng.normal() * rng.uniform_range(1e-9, 2.0)) as f32;
+                }
+                cb.encode_lanes(&xs, &mut out);
+                for l in 0..LANES {
+                    assert_eq!(out[l], cb.encode(xs[l]), "{}: x={}", cb.name(), xs[l]);
+                }
+            }
+            let specials = [
+                f32::NAN,
+                0.0,
+                -0.0,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                1.0,
+                -1.0,
+                1e-30,
+            ];
+            cb.encode_lanes(&specials, &mut out);
+            for l in 0..LANES {
+                assert_eq!(out[l], cb.encode(specials[l]), "{}: special lane {l}", cb.name());
+            }
         }
     }
 

@@ -56,6 +56,24 @@ impl CodeWidth {
             CodeWidth::U4 => n.div_ceil(2),
         }
     }
+
+    /// Code of element `i` in a raw packed byte slice at this width — the
+    /// free-function twin of [`CodeBuf::get`] for block-local scratch
+    /// buffers that never wrap their bytes in a `CodeBuf`.
+    #[inline(always)]
+    pub fn code_at(self, bytes: &[u8], i: usize) -> u8 {
+        match self {
+            CodeWidth::U8 => bytes[i],
+            CodeWidth::U4 => {
+                let b = bytes[i / 2];
+                if i % 2 == 0 {
+                    b & 0x0F
+                } else {
+                    b >> 4
+                }
+            }
+        }
+    }
 }
 
 /// A sequence of `len` codes packed at a given [`CodeWidth`].
@@ -123,17 +141,7 @@ impl CodeBuf {
     #[inline(always)]
     pub fn get(&self, i: usize) -> u8 {
         debug_assert!(i < self.len);
-        match self.width {
-            CodeWidth::U8 => self.bytes[i],
-            CodeWidth::U4 => {
-                let b = self.bytes[i / 2];
-                if i % 2 == 0 {
-                    b & 0x0F
-                } else {
-                    b >> 4
-                }
-            }
-        }
+        self.width.code_at(&self.bytes, i)
     }
 
     /// Store code `c` at element `i`.
@@ -276,5 +284,7 @@ mod tests {
         assert_eq!(buf.as_bytes()[0], 0xBA, "low nibble = even element");
         assert_eq!(buf.get(0), 0xA);
         assert_eq!(buf.get(1), 0xB);
+        assert_eq!(CodeWidth::U4.code_at(buf.as_bytes(), 0), 0xA);
+        assert_eq!(CodeWidth::U4.code_at(buf.as_bytes(), 1), 0xB);
     }
 }

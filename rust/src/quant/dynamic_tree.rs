@@ -32,6 +32,7 @@
 //! [`CodeWidth::U4`](super::codebuf::CodeWidth::U4) packed state.
 
 use super::codebook::Codebook;
+use crate::util::lanes::LANES;
 
 /// Midpoints of `linspace(0.1, 1.0, n+1)`, computed in f64.
 fn decade_midpoints(n: usize) -> Vec<f64> {
@@ -172,6 +173,31 @@ fn candidate_unsigned4(x: f32) -> usize {
     candidate_unsigned_at(x, 3)
 }
 
+/// Lane-batched signed candidate: the exponent/bit-math candidate step of
+/// [`candidate_signed_at`] run across [`LANES`] inputs in one fixed-width
+/// loop (the shape the autovectorizer lowers; the decade count is a const
+/// generic because `Codebook` stores the batch encoder as a plain `fn`
+/// pointer, which cannot capture a runtime decade count). Each lane calls
+/// the *same* scalar candidate chain, so lane codes are identical to
+/// scalar codes by construction — and either way the exact midpoint fixup
+/// in `Codebook::resolve_candidate` pins the final code bit-for-bit.
+fn batch_signed<const DECADES: usize>(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = candidate_signed_at(xs[l], DECADES);
+    }
+    out
+}
+
+/// Lane-batched unsigned candidate (see [`batch_signed`]).
+fn batch_unsigned<const DECADES: usize>(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = candidate_unsigned_at(xs[l], DECADES);
+    }
+    out
+}
+
 /// Assemble a signed codebook from tree magnitudes: ± every magnitude,
 /// 0.0, and the denormal-like filler.
 fn signed_values(mags: &[f64], denormal: f32) -> Vec<f32> {
@@ -198,7 +224,12 @@ fn unsigned_values(mags: &[f64], denormal: f32) -> Vec<f32> {
 pub fn dynamic_signed() -> Codebook {
     let mags = tree_magnitudes(7, false, false);
     debug_assert_eq!(mags.len(), 127);
-    Codebook::new_analytic("dynamic_signed", signed_values(&mags, 1e-7), candidate_signed)
+    Codebook::new_analytic_batched(
+        "dynamic_signed",
+        signed_values(&mags, 1e-7),
+        candidate_signed,
+        batch_signed::<7>,
+    )
 }
 
 /// Unsigned dynamic quantization (§2.2): sign bit re-purposed as a fixed
@@ -206,7 +237,12 @@ pub fn dynamic_signed() -> Codebook {
 pub fn dynamic_unsigned() -> Codebook {
     let mags = tree_magnitudes(7, true, false);
     debug_assert_eq!(mags.len(), 254);
-    Codebook::new_analytic("dynamic_unsigned", unsigned_values(&mags, 1e-7), candidate_unsigned)
+    Codebook::new_analytic_batched(
+        "dynamic_unsigned",
+        unsigned_values(&mags, 1e-7),
+        candidate_unsigned,
+        batch_unsigned::<7>,
+    )
 }
 
 /// Signed 16-level dynamic tree (Li et al. 2023): 3 decades, 7 magnitudes
@@ -214,7 +250,12 @@ pub fn dynamic_unsigned() -> Codebook {
 pub fn dynamic_signed4() -> Codebook {
     let mags = tree_magnitudes(3, false, false);
     debug_assert_eq!(mags.len(), 7);
-    Codebook::new_analytic("dynamic_signed4", signed_values(&mags, 1e-3), candidate_signed4)
+    Codebook::new_analytic_batched(
+        "dynamic_signed4",
+        signed_values(&mags, 1e-3),
+        candidate_signed4,
+        batch_signed::<3>,
+    )
 }
 
 /// Unsigned 16-level dynamic tree: the sign bit re-purposed as an extra
@@ -222,7 +263,12 @@ pub fn dynamic_signed4() -> Codebook {
 pub fn dynamic_unsigned4() -> Codebook {
     let mags = tree_magnitudes(3, true, false);
     debug_assert_eq!(mags.len(), 14);
-    Codebook::new_analytic("dynamic_unsigned4", unsigned_values(&mags, 1e-3), candidate_unsigned4)
+    Codebook::new_analytic_batched(
+        "dynamic_unsigned4",
+        unsigned_values(&mags, 1e-3),
+        candidate_unsigned4,
+        batch_unsigned::<3>,
+    )
 }
 
 /// Inverse dynamic quantization (Appendix F.1): exponent direction swapped —

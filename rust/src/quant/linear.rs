@@ -1,32 +1,117 @@
 //! Linear quantization codebooks — the ablation baseline (Table 3) and the
 //! "Linear" row of Table 6. Equally spaced representable values.
+//!
+//! Equal spacing gives these codebooks a one-multiply closed-form encode
+//! candidate (`round(x·scale) + offset`), so they carry analytic + batched
+//! encoders like the dynamic trees do: the candidate step vectorizes
+//! across lanes and `Codebook::resolve_candidate` pins every code
+//! bit-identical to the reference midpoint search.
 
 use super::codebook::Codebook;
+use crate::util::lanes::LANES;
+
+/// Closed-form code-index candidate for an equally spaced codebook with
+/// values { (i - offset)/scale }. `as usize` is a saturating cast, so NaN
+/// and -inf land on 0 and +inf on the top code — the reference results —
+/// and the exact fixup in `Codebook::resolve_candidate` absorbs the
+/// (≤1 ulp) rounding slack everywhere else.
+#[inline(always)]
+fn linear_candidate(x: f32, scale: f32, offset: f32) -> usize {
+    ((x * scale).round() + offset) as usize
+}
+
+fn candidate_linear_signed(x: f32) -> usize {
+    linear_candidate(x, 127.0, 127.0)
+}
+
+fn candidate_linear_unsigned(x: f32) -> usize {
+    linear_candidate(x, 255.0, 0.0)
+}
+
+fn candidate_linear_signed4(x: f32) -> usize {
+    linear_candidate(x, 7.0, 7.0)
+}
+
+fn candidate_linear_unsigned4(x: f32) -> usize {
+    linear_candidate(x, 15.0, 0.0)
+}
+
+fn batch_linear_signed(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = linear_candidate(xs[l], 127.0, 127.0);
+    }
+    out
+}
+
+fn batch_linear_unsigned(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = linear_candidate(xs[l], 255.0, 0.0);
+    }
+    out
+}
+
+fn batch_linear_signed4(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = linear_candidate(xs[l], 7.0, 7.0);
+    }
+    out
+}
+
+fn batch_linear_unsigned4(xs: &[f32; LANES]) -> [usize; LANES] {
+    let mut out = [0usize; LANES];
+    for l in 0..LANES {
+        out[l] = linear_candidate(xs[l], 15.0, 0.0);
+    }
+    out
+}
 
 /// Signed linear: 255 values { i/127 : i = -127..=127 }. Includes exact
 /// -1, 0, +1 (symmetric; one 8-bit code is unused, as in symmetric int8).
 pub fn linear_signed() -> Codebook {
     let vals: Vec<f32> = (-127..=127).map(|i| i as f32 / 127.0).collect();
-    Codebook::new("linear_signed", vals)
+    Codebook::new_analytic_batched(
+        "linear_signed",
+        vals,
+        candidate_linear_signed,
+        batch_linear_signed,
+    )
 }
 
 /// Unsigned linear: 256 values { i/255 : i = 0..=255 }.
 pub fn linear_unsigned() -> Codebook {
     let vals: Vec<f32> = (0..=255).map(|i| i as f32 / 255.0).collect();
-    Codebook::new("linear_unsigned", vals)
+    Codebook::new_analytic_batched(
+        "linear_unsigned",
+        vals,
+        candidate_linear_unsigned,
+        batch_linear_unsigned,
+    )
 }
 
 /// Signed linear at 16-level resolution: 15 values { i/7 : i = -7..=7 }
 /// (symmetric int4 analogue — one 4-bit code unused).
 pub fn linear_signed4() -> Codebook {
     let vals: Vec<f32> = (-7..=7).map(|i| i as f32 / 7.0).collect();
-    Codebook::new("linear_signed4", vals)
+    Codebook::new_analytic_batched(
+        "linear_signed4",
+        vals,
+        candidate_linear_signed4,
+        batch_linear_signed4,
+    )
 }
 
 /// Unsigned linear at 16-level resolution: { i/15 : i = 0..=15 }.
 pub fn linear_unsigned4() -> Codebook {
     let vals: Vec<f32> = (0..=15).map(|i| i as f32 / 15.0).collect();
-    Codebook::new("linear_unsigned4", vals)
+    Codebook::new_analytic_batched(
+        "linear_unsigned4",
+        vals,
+        candidate_linear_unsigned4,
+        batch_linear_unsigned4,
+    )
 }
 
 #[cfg(test)]

@@ -23,7 +23,10 @@ pub mod linear;
 pub mod quantile;
 pub mod sram_quantiles;
 
-pub use blockwise::{BlockQuantizer, Quantized, BLOCK};
+pub use blockwise::{
+    dequantize_block_codes, quantize_block_codes, take_nonfinite_blocks, BlockQuantizer,
+    Quantized, BLOCK,
+};
 pub use codebook::Codebook;
 pub use codebuf::{CodeBuf, CodeWidth};
 

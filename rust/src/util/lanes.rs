@@ -1,0 +1,82 @@
+//! Portable fixed-width lanes for the block-kernel hot path.
+//!
+//! The paper's CUDA kernels process each quantization block at full vector
+//! width; our portable equivalent is *lane chunking*: the inner loops over
+//! a block (codebook decode, absmax scan, encode, elementwise optimizer
+//! rules) are restructured around fixed-size `[f32; LANES]` chunks — plain
+//! arrays with fixed trip-count inner loops, which the autovectorizer
+//! lowers to SIMD reliably on stable Rust (no `std::simd`, no new deps).
+//!
+//! Contract: lane kernels perform the *identical* per-element IEEE
+//! arithmetic as their scalar counterparts, in the same element order
+//! within each lane chunk — rustc never reassociates float ops or
+//! contracts mul+add into FMA, so autovectorization changes instruction
+//! *shape*, not results. Every lane path is therefore bit-identical to the
+//! scalar path; `rust/tests/simd_parity.rs` and the `pool_parity`
+//! scalar-vs-lane fleets pin this.
+//!
+//! [`set_force_scalar`] routes every lane-aware path through its scalar
+//! tail loop instead, turning the scalar implementation into a
+//! whole-pipeline oracle (parity tests) and a benchmark baseline
+//! (`benches/fused_step.rs` `simd_sweep`). The flag is a process-global
+//! atomic — worker-pool threads must observe it, so a thread-local would
+//! not do — read once per block, not per element.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Lane width of every vectorized block kernel: 8 × f32 = one 256-bit
+/// vector register (two 128-bit ops on narrower targets — still the shape
+/// autovectorizers handle best).
+pub const LANES: usize = 8;
+
+/// Process-global "pretend we have no lanes" switch (see module docs).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// True when lane paths are disabled and every kernel must take its scalar
+/// loop. Checked once per block by the lane-aware entry points.
+#[inline(always)]
+pub fn scalar_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Globally enable / disable the scalar fallback. Prefer
+/// [`with_forced_scalar`] which restores the previous value.
+pub fn set_force_scalar(force: bool) {
+    FORCE_SCALAR.store(force, Ordering::Relaxed);
+}
+
+/// Run `f` with every lane path forced onto its scalar loop, restoring the
+/// previous setting afterwards (even on panic) — the parity-test and
+/// baseline-benchmark entry point. Tests that toggle this process-global
+/// flag should serialize the same way thread-count tests do.
+pub fn with_forced_scalar<R>(f: impl FnOnce() -> R) -> R {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCE_SCALAR.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(FORCE_SCALAR.swap(true, Ordering::Relaxed));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forced_scalar_restores_on_exit() {
+        let before = scalar_forced();
+        let inside = with_forced_scalar(scalar_forced);
+        assert!(inside);
+        assert_eq!(scalar_forced(), before);
+    }
+
+    #[test]
+    fn forced_scalar_restores_on_panic() {
+        let before = scalar_forced();
+        let r = std::panic::catch_unwind(|| with_forced_scalar(|| panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(scalar_forced(), before);
+    }
+}

@@ -9,6 +9,7 @@ pub mod args;
 pub mod bench;
 pub mod io;
 pub mod json;
+pub mod lanes;
 pub mod parallel;
 pub mod reduce;
 pub mod rng;

@@ -6,8 +6,10 @@
 //! to the sequential path — at every thread count, for every optimizer, at
 //! every precision. These tests pin that down:
 //!
-//! * every optimizer × {B32, B8 dynamic, B8 linear, B4 dynamic} × threads
-//!   {1, 4, default} produces bit-identical params and states,
+//! * every optimizer × {B32, B8 dynamic, B8 linear, B4 dynamic, B4 linear}
+//!   × threads {1, 4, default} produces bit-identical params and states,
+//! * the same matrix is bit-identical between the lane-chunked kernels and
+//!   the forced-scalar oracle (`util::lanes::with_forced_scalar`),
 //! * the fused multi-tensor step equals per-tensor stepping exactly,
 //!   including the reduction-bearing optimizers whose phased plans put
 //!   tensor-wide norms/statistics inside the batch (LAMB, Adafactor,
@@ -20,12 +22,15 @@ use std::sync::Mutex;
 
 use bitopt8::optim::{build, engine::fused_update, Bits, OptimConfig, OptimKind, Optimizer};
 use bitopt8::quant::{BlockQuantizer, Format, BLOCK};
+use bitopt8::util::lanes;
 use bitopt8::util::parallel;
 use bitopt8::util::rng::Rng;
 
-/// Serializes tests that toggle the process-global thread count. (Results
-/// are thread-count-invariant, so racing would still pass — this just makes
-/// each test measure what it claims to.)
+/// Serializes tests that toggle process-global knobs (thread count, the
+/// forced-scalar lane switch). For the thread count, results are
+/// invariant, so racing would still pass — this just makes each test
+/// measure what it claims to. For the forced-scalar flag, serialization is
+/// required: a racing lane-path run would silently execute scalar code.
 static THREADS_LOCK: Mutex<()> = Mutex::new(());
 
 fn locked() -> std::sync::MutexGuard<'static, ()> {
@@ -43,12 +48,13 @@ const ALL_KINDS: [OptimKind; 8] = [
     OptimKind::Sm3,
 ];
 
-fn bit_configs() -> [Bits; 4] {
+fn bit_configs() -> [Bits; 5] {
     [
         Bits::B32,
         Bits::B8 { format: Format::Dynamic, blockwise: true },
         Bits::B8 { format: Format::Linear, blockwise: true },
         Bits::B4 { format: Format::Dynamic, blockwise: true },
+        Bits::B4 { format: Format::Linear, blockwise: true },
     ]
 }
 
@@ -109,6 +115,40 @@ fn every_optimizer_is_bit_identical_across_thread_counts() {
             );
             assert_eq!(s_seq, s_par, "{} {} states diverged", kind.name(), bits.describe());
             assert_eq!(s_seq, s_def, "{} {} states diverged", kind.name(), bits.describe());
+        }
+    }
+}
+
+#[test]
+fn every_optimizer_is_bit_identical_between_lane_and_scalar_kernels() {
+    // The SIMD-tentpole contract: the lane-chunked block kernels (absmax,
+    // packed encode/decode, elementwise rules) are pure instruction-shape
+    // changes — same trajectory bits as the scalar oracle, for every
+    // optimizer × precision × thread count.
+    let _g = locked();
+    for kind in ALL_KINDS {
+        for bits in bit_configs() {
+            for threads in [Some(1usize), Some(4), None] {
+                let (p_lane, s_lane) = trajectory(kind, bits, threads, 4);
+                let (p_scalar, s_scalar) =
+                    lanes::with_forced_scalar(|| trajectory(kind, bits, threads, 4));
+                assert!(p_lane.iter().all(|v| v.is_finite()));
+                assert_eq!(
+                    p_lane,
+                    p_scalar,
+                    "{} {} params diverged between lane and scalar kernels \
+                     ({threads:?} threads)",
+                    kind.name(),
+                    bits.describe()
+                );
+                assert_eq!(
+                    s_lane,
+                    s_scalar,
+                    "{} {} states diverged between lane and scalar kernels",
+                    kind.name(),
+                    bits.describe()
+                );
+            }
         }
     }
 }

@@ -1,0 +1,169 @@
+//! Exhaustive scalar-vs-lane bitwise parity for the vectorized block
+//! kernels.
+//!
+//! The lane-chunking contract (`util::lanes` module docs): every
+//! lane-chunked kernel — absmax scan, packed encode, packed decode, and
+//! the optimizers' elementwise rules — performs the identical per-element
+//! IEEE arithmetic as its scalar tail loop, so forcing the scalar path
+//! (`lanes::with_forced_scalar`) must reproduce the exact same bits. These
+//! tests sweep every tail size (block lengths 1..=2·LANES² exhaustively,
+//! then strided up to BLOCK with lengths covering every residue mod LANES,
+//! including U4 odd-tail blocks), all four quantization formats, both code
+//! widths, and the optimizer kernels at 32/8/4-bit state.
+
+use std::sync::{Arc, Mutex};
+
+use bitopt8::optim::{build, Bits, OptimConfig, OptimKind, Optimizer};
+use bitopt8::quant::{
+    dequantize_block_codes, quantize_block_codes, Codebook, CodeWidth, Format, BLOCK,
+};
+use bitopt8::util::lanes::{self, LANES};
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle the process-global forced-scalar flag (a
+/// racing test would silently compare scalar against scalar).
+static SCALAR_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    SCALAR_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const FORMATS: [Format; 4] =
+    [Format::Dynamic, Format::Linear, Format::Quantile, Format::InverseDynamic];
+
+/// Hostile block data: exact zeros (and negative zero), tiny and huge
+/// magnitudes mixed in one block, plus plain normals — stresses the
+/// normalization, the analytic encode candidates, and midpoint ties.
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => (rng.normal() * 1e-6) as f32,
+            3 => (rng.normal() * 100.0) as f32,
+            _ => rng.normal() as f32,
+        })
+        .collect()
+}
+
+fn codebooks(format: Format, width: CodeWidth) -> [Arc<Codebook>; 2] {
+    match width {
+        CodeWidth::U8 => [format.signed_codebook(), format.unsigned_codebook()],
+        CodeWidth::U4 => [format.signed_codebook4(), format.unsigned_codebook4()],
+    }
+}
+
+/// Every block length 1..=2·LANES² (each tail size many times over, all U4
+/// odd tails), then strided to BLOCK with a stride coprime to LANES so
+/// every residue keeps appearing, plus the exact block boundary.
+fn block_lengths() -> Vec<usize> {
+    let mut lens: Vec<usize> = (1..=2 * LANES * LANES).collect();
+    lens.extend((2 * LANES * LANES + 63..BLOCK).step_by(191));
+    lens.extend([BLOCK - 1, BLOCK]);
+    lens
+}
+
+#[test]
+fn packed_block_kernels_bitwise_invariant_to_forced_scalar() {
+    let _g = locked();
+    for width in [CodeWidth::U8, CodeWidth::U4] {
+        for format in FORMATS {
+            for cb in codebooks(format, width) {
+                for &n in &block_lengths() {
+                    let xs = data(n, 0x51D0 + n as u64);
+                    let mut bytes = vec![0u8; width.bytes_for(n)];
+                    let am = quantize_block_codes(&cb, width, &xs, &mut bytes);
+                    let mut bytes_s = vec![0u8; width.bytes_for(n)];
+                    let am_s = lanes::with_forced_scalar(|| {
+                        quantize_block_codes(&cb, width, &xs, &mut bytes_s)
+                    });
+                    assert_eq!(
+                        am.to_bits(),
+                        am_s.to_bits(),
+                        "{} {width:?} n={n}: absmax diverged",
+                        cb.name()
+                    );
+                    assert_eq!(bytes, bytes_s, "{} {width:?} n={n}: codes diverged", cb.name());
+                    let mut out = vec![0.0f32; n];
+                    dequantize_block_codes(&cb, width, &bytes, am, &mut out);
+                    let mut out_s = vec![0.0f32; n];
+                    lanes::with_forced_scalar(|| {
+                        dequantize_block_codes(&cb, width, &bytes_s, am_s, &mut out_s)
+                    });
+                    for i in 0..n {
+                        assert_eq!(
+                            out[i].to_bits(),
+                            out_s[i].to_bits(),
+                            "{} {width:?} n={n}: decode diverged at {i}",
+                            cb.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `steps` optimizer updates on a quadratic; returns final params and
+/// dequantized states.
+fn trajectory(kind: OptimKind, bits: Bits, n: usize, steps: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut cfg = OptimConfig::adam(0.01, bits);
+    cfg.kind = kind;
+    cfg.weight_decay = 0.01;
+    let mut opt = build(&cfg, n, None);
+    let mut rng = Rng::new(0xAB5 + n as u64);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    for _ in 0..steps {
+        let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+        opt.step(&mut p, &g);
+    }
+    let states = opt.states().into_iter().map(|(_, s)| s.to_f32()).collect();
+    (p, states)
+}
+
+#[test]
+fn optimizer_lane_kernels_match_scalar_oracle() {
+    // The lane-chunked elementwise rules (Adam/AdamW/Momentum/Adagrad via
+    // `block_steps_vec`, LARS phase B, LAMB's hand-chunked phase A) against
+    // the whole-pipeline scalar oracle, at every tail size and across
+    // block boundaries, for 32/8/4-bit state in both formats that support
+    // every width.
+    let _g = locked();
+    let lens: Vec<usize> =
+        (1..=2 * LANES).chain([101, 1000, BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK + 49]).collect();
+    let bit_sweep = [
+        Bits::B32,
+        Bits::B8 { format: Format::Dynamic, blockwise: true },
+        Bits::B8 { format: Format::Linear, blockwise: true },
+        Bits::B4 { format: Format::Dynamic, blockwise: true },
+        Bits::B4 { format: Format::Linear, blockwise: true },
+    ];
+    let kinds = [
+        OptimKind::Adam,
+        OptimKind::AdamW,
+        OptimKind::Momentum,
+        OptimKind::Adagrad,
+        OptimKind::Lars,
+        OptimKind::Lamb,
+    ];
+    for kind in kinds {
+        for bits in bit_sweep {
+            for &n in &lens {
+                let (p_lane, s_lane) = trajectory(kind, bits, n, 3);
+                let (p_scalar, s_scalar) =
+                    lanes::with_forced_scalar(|| trajectory(kind, bits, n, 3));
+                assert!(p_lane.iter().all(|v| v.is_finite()), "{kind:?} n={n}");
+                let same = p_lane.iter().zip(&p_scalar).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{kind:?} {} n={n}: params diverged", bits.describe());
+                assert_eq!(
+                    s_lane,
+                    s_scalar,
+                    "{kind:?} {} n={n}: states diverged",
+                    bits.describe()
+                );
+            }
+        }
+    }
+}
