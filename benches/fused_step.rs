@@ -24,7 +24,11 @@
 //! * `simd_sweep` — the fused Adam step per code width and format with
 //!   lane-chunked kernels vs the bit-identical forced-scalar oracle
 //!   (`--require-simd-speedup <x>` turns the recorded lane speedup into a
-//!   CI gate).
+//!   CI gate);
+//! * `stability_stress` — the fused Adam fleet with the stability phases
+//!   on (percentile clip, max_unorm, skip_zeros) vs the plain baseline,
+//!   under periodic gradient spikes; records drained clip-event counts so
+//!   CI can verify the phases engaged, not just that they were cheap.
 //!
 //! The first two workloads also run a `streaming` variant: admission per
 //! tensor costs more dispatch than the fused one-batch-per-phase, which is
@@ -41,7 +45,7 @@ use std::time::Duration;
 use bitopt8::optim::{
     build,
     engine::{fused_update, streaming_update, StreamingStep},
-    Bits, OptimConfig, OptimKind, Optimizer,
+    take_clip_events, take_unorm_clips, Bits, OptimConfig, OptimKind, Optimizer,
 };
 use bitopt8::quant::Format;
 use bitopt8::util::args::Args;
@@ -103,6 +107,9 @@ struct Entry {
     /// Optimizer-state bytes per parameter for this fleet (the footprint
     /// axis of the 4 vs 8 vs 32-bit sweep).
     bytes_per_element: f64,
+    /// Percentile-clip + unorm-clip events drained across the variant's
+    /// bench loop (0 for workloads without stability phases).
+    clip_events: u64,
 }
 
 fn record(e: Entry, out: &mut Vec<Entry>) {
@@ -154,6 +161,7 @@ fn run_workload(
             iters: r.iters,
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            clip_events: 0,
         };
         record(e, out);
     }
@@ -182,6 +190,7 @@ fn run_width_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             iters: r.iters,
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            clip_events: 0,
         };
         record(e, out);
     }
@@ -223,6 +232,7 @@ fn run_simd_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
                 iters: r.iters,
                 speedup_vs_base: base_us / us,
                 bytes_per_element: fleet_bytes_per_element(&opts, &params),
+                clip_events: 0,
             };
             record(e, out);
         }
@@ -285,6 +295,76 @@ fn run_overlap(
             iters: r.iters,
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            clip_events: 0,
+        };
+        record(e, out);
+    }
+}
+
+/// The stability-stress workload: the same fused Adam fleet with and
+/// without the stability phases (percentile clip + max_unorm + skip_zeros),
+/// a 32x gradient spike every 16th iteration in both. `us_per_step`
+/// measures the overhead of the extra phases; `clip_events` (drained from
+/// the global counters around the bench loop) proves the stabilized
+/// variant actually clipped — a silent no-op would bench identically.
+fn run_stability_stress(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
+    let bits = Bits::b8_dynamic();
+    let mut base_us = 0.0f64;
+    for variant in ["baseline", "stabilized"] {
+        let mut rng = Rng::new(42);
+        let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
+        let mut params: Vec<Vec<f32>> = Vec::new();
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        for &(kind, n, shape) in spec {
+            let mut cfg = OptimConfig::adam(1e-3, bits);
+            cfg.kind = kind;
+            if variant == "stabilized" {
+                cfg.clip_percentile = 95.0;
+                cfg.max_unorm = 0.1;
+                cfg.skip_zeros = true;
+            }
+            opts.push(build(&cfg, n, shape));
+            params.push((0..n).map(|_| rng.normal() as f32).collect());
+            grads.push((0..n).map(|_| rng.normal() as f32 * 0.01).collect());
+        }
+        take_clip_events();
+        take_unorm_clips();
+        let mut round = 0usize;
+        let r = bench(variant, budget, 2000, || {
+            round += 1;
+            let spike = round % 16 == 0;
+            if spike {
+                // 32x is a power of two: the post-step unscale is exact
+                for g in grads.iter_mut() {
+                    for v in g.iter_mut() {
+                        *v *= 32.0;
+                    }
+                }
+            }
+            fused_update(&mut opts, &mut params, &grads);
+            if spike {
+                for g in grads.iter_mut() {
+                    for v in g.iter_mut() {
+                        *v /= 32.0;
+                    }
+                }
+            }
+        });
+        let clip_events = take_clip_events() + take_unorm_clips();
+        let us = r.median_ns / 1e3;
+        if variant == "baseline" {
+            base_us = us;
+        }
+        let e = Entry {
+            workload: "stability_stress",
+            optimizer: "adam",
+            bits: bits.describe(),
+            variant,
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_base: base_us / us,
+            bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            clip_events,
         };
         record(e, out);
     }
@@ -355,6 +435,10 @@ fn main() {
     // The SIMD sweep: lane-chunked vs forced-scalar kernels, per width and
     // format (the scalar-vs-lane tentpole numbers; CI guards the speedup).
     run_simd_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
+    // The stability-stress workload: stabilized (clip + unorm + skip_zeros)
+    // vs plain fused Adam under periodic gradient spikes, with clip-event
+    // counts proving the phases engaged (CI greps for them).
+    run_stability_stress(&adam_many_small(n_tensors, n), budget, &mut entries);
 
     let results: Vec<Json> = entries
         .iter()
@@ -368,6 +452,7 @@ fn main() {
                 ("iters", num(e.iters as f64)),
                 ("speedup_vs_base", num(e.speedup_vs_base)),
                 ("bytes_per_element", num(e.bytes_per_element)),
+                ("clip_events", num(e.clip_events as f64)),
             ])
         })
         .collect();

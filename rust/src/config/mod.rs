@@ -25,10 +25,18 @@
 //! beta2 = 0.995
 //! eps = 1e-7
 //! weight_decay = 0.0
+//! clip_percentile = 0.0     # percentile gradient clipping over a rolling
+//!                           # 100-step gnorm window (bnb-style); 0 = off,
+//!                           # active in (0, 100] — e.g. 95
+//! max_unorm = 0.0           # clip the applied update when its norm
+//!                           # exceeds max_unorm * param norm; 0 = off
+//! skip_zeros = false        # leave moments/params untouched where the
+//!                           # gradient is exactly zero (sparse updates)
 //!
 //! # Parameter groups: ordered overrides on the base config, first match
 //! # wins (glob patterns: `*`, `?`, `|` alternation). Any subset of
-//! # bits/format/blockwise/lr/weight_decay/beta1/beta2/eps may be set.
+//! # bits/format/blockwise/lr/weight_decay/beta1/beta2/eps/
+//! # clip_percentile/max_unorm/skip_zeros may be set.
 //! [[optimizer.group]]
 //! pattern = "embed.tok|embed.pos"
 //! bits = 32                 # stable-embedding policy, spelled explicitly
@@ -53,6 +61,14 @@
 //!
 //! [data]
 //! noise = 0.25
+//!
+//! [fault]                   # deterministic gradient-fault injection, used
+//!                           # by the stability-stress configs; all off by
+//!                           # default (0 = disabled)
+//! spike_every = 0           # every Nth step, scale all gradients ...
+//! spike_scale = 100.0       # ... by this factor
+//! zero_stride = 0           # zero every Nth gradient element (skip_zeros)
+//! nan_at = 0                # poison one gradient element at step N
 //! ```
 //!
 //! CLI: `--override "pattern:key=val[,key=val]"` adds groups ahead of the
@@ -118,6 +134,51 @@ impl Schedule {
     }
 }
 
+/// Deterministic gradient-fault injection (`[fault]` in TOML). Drives the
+/// stability-stress configs: spikes exercise percentile clipping, strided
+/// zeros exercise `skip_zeros`, and a one-shot NaN exercises the non-finite
+/// crash path. All fields default to 0 (disabled); step numbering is
+/// 1-based (the first training step is step 1).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Every `spike_every`-th step, multiply all gradients by `spike_scale`.
+    pub spike_every: usize,
+    pub spike_scale: f32,
+    /// Zero every `zero_stride`-th gradient element of every tensor.
+    pub zero_stride: usize,
+    /// At step `nan_at`, set the first gradient element to NaN.
+    pub nan_at: usize,
+}
+
+impl FaultConfig {
+    pub fn any(&self) -> bool {
+        self.spike_every > 0 || self.zero_stride > 0 || self.nan_at > 0
+    }
+
+    /// Corrupt `grads` in place for 1-based training step `step`.
+    pub fn apply(&self, step: usize, grads: &mut [Vec<f32>]) {
+        if self.spike_every > 0 && step % self.spike_every == 0 {
+            for g in grads.iter_mut() {
+                for v in g.iter_mut() {
+                    *v *= self.spike_scale;
+                }
+            }
+        }
+        if self.zero_stride > 0 {
+            for g in grads.iter_mut() {
+                for v in g.iter_mut().step_by(self.zero_stride) {
+                    *v = 0.0;
+                }
+            }
+        }
+        if self.nan_at == step {
+            if let Some(v) = grads.iter_mut().flat_map(|g| g.iter_mut()).next() {
+                *v = f32::NAN;
+            }
+        }
+    }
+}
+
 /// A full training-run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -144,6 +205,8 @@ pub struct RunConfig {
     /// Corpus noise level (LM difficulty).
     pub data_noise: f64,
     pub log_jsonl: Option<String>,
+    /// Deterministic gradient-fault injection (stress configs).
+    pub fault: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -163,6 +226,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             data_noise: 0.25,
             log_jsonl: None,
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -202,6 +266,16 @@ impl RunConfig {
         cfg.optim.eps = d.f64_or("optimizer", "eps", cfg.optim.eps as f64) as f32;
         cfg.optim.weight_decay =
             d.f64_or("optimizer", "weight_decay", cfg.optim.weight_decay as f64) as f32;
+        cfg.optim.clip_percentile =
+            d.f64_or("optimizer", "clip_percentile", cfg.optim.clip_percentile as f64) as f32;
+        cfg.optim.max_unorm =
+            d.f64_or("optimizer", "max_unorm", cfg.optim.max_unorm as f64) as f32;
+        cfg.optim.skip_zeros = d.bool_or("optimizer", "skip_zeros", cfg.optim.skip_zeros);
+
+        cfg.fault.spike_every = d.usize_or("fault", "spike_every", 0);
+        cfg.fault.spike_scale = d.f64_or("fault", "spike_scale", 100.0) as f32;
+        cfg.fault.zero_stride = d.usize_or("fault", "zero_stride", 0);
+        cfg.fault.nan_at = d.usize_or("fault", "nan_at", 0);
 
         // Parameter groups, in declaration order; the `emb32` sugar (lowest
         // priority — explicit groups win on first-match) goes last. A
@@ -472,6 +546,69 @@ lr = 0.006
         assert!((tok.lr - 0.5).abs() < 1e-9);
         assert_eq!(spec.resolve("embed.pos").1, 3, "file group still matches");
         assert_eq!(spec.resolve("lm_head").0.bits, Bits::B32);
+    }
+
+    #[test]
+    fn stability_and_fault_keys_from_toml() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[optimizer]
+kind = "momentum"
+bits = 8
+clip_percentile = 95.0
+max_unorm = 0.02
+skip_zeros = true
+
+[[optimizer.group]]
+pattern = "lm_head"
+clip_percentile = 0.0
+
+[fault]
+spike_every = 16
+spike_scale = 50.0
+zero_stride = 3
+nan_at = 7
+"#,
+        )
+        .unwrap();
+        assert!((cfg.optim.clip_percentile - 95.0).abs() < 1e-6);
+        assert!((cfg.optim.max_unorm - 0.02).abs() < 1e-9);
+        assert!(cfg.optim.skip_zeros);
+        let spec = cfg.optim_spec();
+        assert_eq!(spec.resolve("lm_head").0.clip_percentile, 0.0);
+        assert!(spec.resolve("block0.attn.wq").0.stability_on());
+        assert_eq!(cfg.fault.spike_every, 16);
+        assert!((cfg.fault.spike_scale - 50.0).abs() < 1e-6);
+        assert_eq!(cfg.fault.zero_stride, 3);
+        assert_eq!(cfg.fault.nan_at, 7);
+        // out-of-range knobs and unsupported kinds fail at parse time
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nclip_percentile = 101.0\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"lamb\"\nclip_percentile = 95.0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fault_injection_is_deterministic_per_step() {
+        let fault = FaultConfig { spike_every: 4, spike_scale: 10.0, zero_stride: 2, nan_at: 3 };
+        assert!(fault.any());
+        // step 1: zero_stride only
+        let mut g = vec![vec![1.0f32, 2.0, 3.0, 4.0]];
+        fault.apply(1, &mut g);
+        assert_eq!(g[0], vec![0.0, 2.0, 0.0, 4.0]);
+        // step 3: NaN lands on the first element (after zeroing)
+        let mut g = vec![vec![1.0f32, 2.0]];
+        fault.apply(3, &mut g);
+        assert!(g[0][0].is_nan());
+        // step 4: spike multiplies before the zero stride wipes evens
+        let mut g = vec![vec![1.0f32, 2.0]];
+        fault.apply(4, &mut g);
+        assert_eq!(g[0], vec![0.0, 20.0]);
+        assert!(!FaultConfig::default().any());
     }
 
     #[test]

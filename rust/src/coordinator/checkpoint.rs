@@ -4,6 +4,10 @@
 //! Format v3 additionally records each tensor's resolved state precision
 //! (32/8/4 bits) so tooling can audit mixed-width layouts without the
 //! config; v2 files (no precision field) still load, reporting 0 for it.
+//! Format v4 additionally persists each tensor's rolling gradient-norm
+//! history (the percentile-clipping window) so a resumed run makes the
+//! same clip decisions the uninterrupted run would have; v2/v3 files load
+//! with an empty history.
 //!
 //! Quantized states are stored *dequantized* (f32). This is lossless:
 //! quantization is idempotent (`q(dq(q(x))) == q(x)`, pinned by the quant
@@ -27,7 +31,7 @@ use crate::util::io::*;
 use crate::util::rng::Rng;
 
 const MAGIC: u32 = 0xB1707_8_0;
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 /// Oldest version [`Checkpoint::load`] still reads.
 const MIN_VERSION: u32 = 2;
 
@@ -43,6 +47,11 @@ pub struct TensorCheckpoint {
     pub params: Vec<f32>,
     /// Named dequantized optimizer states.
     pub states: Vec<(String, Vec<f32>)>,
+    /// Rolling gradient-norm history (oldest first) when the tensor's
+    /// config has percentile clipping on; empty otherwise (and for files
+    /// predating v4). Clip decisions depend on this window, so dropping it
+    /// across a restore would change the resumed trajectory.
+    pub gnorm: Vec<f32>,
 }
 
 pub struct Checkpoint {
@@ -71,6 +80,7 @@ impl Checkpoint {
                     .into_iter()
                     .map(|(n, s)| (n.to_string(), s.to_f32()))
                     .collect(),
+                gnorm: popt.opt(i).gnorm_history().unwrap_or_default(),
             })
             .collect();
         Checkpoint { step, rng_state: rng.state(), tensors }
@@ -97,6 +107,7 @@ impl Checkpoint {
                 write_str(&mut w, name)?;
                 write_f32_slice(&mut w, vals)?;
             }
+            write_f32_slice(&mut w, &t.gnorm)?;
         }
         Ok(())
     }
@@ -131,7 +142,9 @@ impl Checkpoint {
                 let sname = read_str(&mut r)?;
                 states.push((sname, read_f32_slice(&mut r)?));
             }
-            tensors.push(TensorCheckpoint { name, group, state_bits, params, states });
+            // v2/v3 predate the gnorm-history field
+            let gnorm = if version >= 4 { read_f32_slice(&mut r)? } else { Vec::new() };
+            tensors.push(TensorCheckpoint { name, group, state_bits, params, states, gnorm });
         }
         Ok(Checkpoint { step, rng_state, tensors })
     }
@@ -187,6 +200,9 @@ impl Checkpoint {
                         bq.quantize_into(vals, q);
                     }
                 }
+            }
+            if !t.gnorm.is_empty() {
+                popt.opt_mut(i).restore_gnorm_history(&t.gnorm);
             }
         }
         Ok(())
@@ -288,6 +304,64 @@ mod tests {
     }
 
     #[test]
+    fn gnorm_history_roundtrips_and_preserves_clip_decisions() {
+        // With percentile clipping on, the clip threshold is a quantile of
+        // the rolling gnorm window — losing the window across a restore
+        // would change every post-resume clip decision. Train A with
+        // clipping, checkpoint mid-history, continue through a gradient
+        // spike; B restored from the checkpoint must reproduce A exactly.
+        let spec = OptimSpec::new({
+            let mut cfg = OptimConfig::adam(0.01, Bits::b8_dynamic());
+            cfg.clip_percentile = 95.0;
+            cfg.max_unorm = 0.5;
+            cfg
+        });
+        let build = || ParamOptimizer::build(spec.clone(), &tensors(), None).unwrap();
+        let shapes: Vec<usize> = tensors().iter().map(|t| t.size).collect();
+        let mut rng = Rng::new(3);
+        let targets: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let grads = |params: &[Vec<f32>], scale: f32| -> Vec<Vec<f32>> {
+            params
+                .iter()
+                .zip(&targets)
+                .map(|(p, t)| p.iter().zip(t).map(|(a, b)| scale * (a - b)).collect())
+                .collect()
+        };
+
+        let mut popt_a = build();
+        let mut p_a: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
+        for _ in 0..8 {
+            let g = grads(&p_a, 1.0);
+            popt_a.step_native(&mut p_a, &g);
+        }
+        let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bin");
+        Checkpoint::capture(8, &Rng::new(9), &p_a, &popt_a).save(&path).unwrap();
+        // post-checkpoint steps, including a spike the percentile phase
+        // must clip against the *restored* window
+        for s in 0..4 {
+            let g = grads(&p_a, if s == 1 { 50.0 } else { 1.0 });
+            popt_a.step_native(&mut p_a, &g);
+        }
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.tensors[0].gnorm.len(), 8, "8 steps of history travel");
+        let mut popt_b = build();
+        let mut p_b: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
+        loaded.restore(&mut p_b, &mut popt_b).unwrap();
+        for s in 0..4 {
+            let g = grads(&p_b, if s == 1 { 50.0 } else { 1.0 });
+            popt_b.step_native(&mut p_b, &g);
+        }
+        assert_eq!(p_a, p_b, "clip decisions diverged after restore");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn restore_rejects_mismatched_layout() {
         let popt = mixed_popt();
         let params: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
@@ -340,6 +414,39 @@ mod tests {
             w.flush().unwrap();
         }
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_v3_files_without_gnorm_history() {
+        // v3 layout: has the per-tensor precision field but predates the
+        // gnorm-history slice — loads with an empty history
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v3.bin");
+        {
+            let f = File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            write_u32(&mut w, MAGIC).unwrap();
+            write_u32(&mut w, 3).unwrap();
+            write_u64(&mut w, 4).unwrap(); // step
+            for st in [1u64, 2, 3, 4] {
+                write_u64(&mut w, st).unwrap();
+            }
+            write_u64(&mut w, 1).unwrap(); // one tensor
+            write_str(&mut w, "embed.tok").unwrap();
+            write_u64(&mut w, 0).unwrap(); // group
+            write_u32(&mut w, 8).unwrap(); // state_bits (v3 field)
+            write_f32_slice(&mut w, &[1.0, 2.0]).unwrap();
+            write_u64(&mut w, 1).unwrap(); // one state
+            write_str(&mut w, "m").unwrap();
+            write_f32_slice(&mut w, &[0.5, -0.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.tensors[0].state_bits, 8);
+        assert!(ck.tensors[0].gnorm.is_empty(), "v3 has no gnorm history");
         std::fs::remove_dir_all(&dir).ok();
     }
 

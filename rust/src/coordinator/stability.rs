@@ -144,4 +144,63 @@ mod tests {
         d.report_grad_crash();
         assert!(d.is_unstable());
     }
+
+    #[test]
+    fn divergence_counting_starts_strictly_after_grace() {
+        // Elevated losses during the grace window must not feed the bad
+        // streak: with grace = patience = 5, diverged observations at steps
+        // 2..=5 fall inside the window (steps_seen <= grace) and count for
+        // nothing; counting starts at step 6, so the streak reaches
+        // patience only at step 10. An off-by-one (`>=` instead of `>`)
+        // would let step 5 count and trip a step early.
+        let mut d = StabilityDetector::new();
+        assert_eq!((d.grace, d.patience), (5, 5), "test assumes the defaults");
+        assert!(d.observe(6.0)); // step 1 pins `initial`
+        for step in 2..=9 {
+            assert!(d.observe(9.5), "tripped at step {step} (grace not honored)");
+        }
+        assert!(!d.observe(9.5), "fifth post-grace divergence must trip");
+        assert_eq!(d.reason(), Some("sustained divergence above initial loss"));
+    }
+
+    #[test]
+    fn verdict_latches_through_recovery() {
+        // Once tripped, later healthy losses must not un-trip the verdict
+        // (the run already diverged; Table 3 counts it as unsuccessful) and
+        // observe() keeps returning false without re-evaluating.
+        let mut d = StabilityDetector::new();
+        for _ in 0..10 {
+            d.observe(6.0);
+        }
+        for _ in 0..d.patience {
+            d.observe(9.5);
+        }
+        assert!(d.is_unstable());
+        let reason = d.reason();
+        for _ in 0..50 {
+            assert!(!d.observe(5.0), "latched verdict must keep reporting unhealthy");
+        }
+        assert!(d.is_unstable());
+        assert_eq!(d.reason(), reason, "recovery must not rewrite the verdict");
+    }
+
+    #[test]
+    fn hard_ceiling_takes_precedence_over_divergence() {
+        // A loss above the ceiling trips immediately — on the very first
+        // observation (before `initial` even exists, so the divergence rule
+        // could never apply) and ahead of an in-flight divergence streak.
+        let mut d = StabilityDetector::new();
+        assert!(!d.observe(31.0));
+        assert_eq!(d.reason(), Some("loss above hard ceiling"));
+
+        let mut d = StabilityDetector::new();
+        for _ in 0..10 {
+            d.observe(6.0);
+        }
+        for _ in 0..d.patience - 1 {
+            d.observe(9.5); // streak one short of tripping divergence
+        }
+        assert!(!d.observe(100.0));
+        assert_eq!(d.reason(), Some("loss above hard ceiling"));
+    }
 }

@@ -146,6 +146,9 @@ impl<'rt> Trainer<'rt> {
                         ("params", num(g.params as f64)),
                         ("state_bytes", num(g.state_bytes as f64)),
                         ("bytes_per_param", num(g.bytes_per_param())),
+                        ("clip_percentile", num(g.clip_percentile as f64)),
+                        ("max_unorm", num(g.max_unorm as f64)),
+                        ("skip_zeros", Json::Bool(g.skip_zeros)),
                     ])
                 })
                 .collect();
@@ -251,16 +254,25 @@ impl<'rt> Trainer<'rt> {
             grads.push(runtime::f32_of(out)?);
         }
 
+        // ---- fault injection (stress configs; off by default) ------------
+        if self.cfg.fault.any() {
+            self.cfg.fault.apply(self.step + 1, &mut grads);
+        }
+
         // ---- gradient hygiene --------------------------------------------
-        let (finite, sq) = grad_stats(&grads);
-        if !finite {
+        let (nonfinite, sq) = grad_stats(&grads);
+        if nonfinite > 0 {
             // A crashed step must still leave a trace in the loss curve:
             // record it with a `grad_crash` marker instead of vanishing
-            // from the JSONL stream.
+            // from the JSONL stream. The count distinguishes a single
+            // flipped element from a fully-poisoned backward pass.
             self.detector.report_grad_crash();
             self.step += 1;
             if let Some(sink) = self.metrics.as_mut() {
-                let marker = vec![("grad_crash", Json::Bool(true))];
+                let marker = vec![
+                    ("grad_crash", Json::Bool(true)),
+                    ("nonfinite_grads", num(nonfinite as f64)),
+                ];
                 sink.step(self.step, loss, step_lr as f64, marker)?;
             }
             return Ok(loss);
@@ -281,9 +293,11 @@ impl<'rt> Trainer<'rt> {
         let schedule = self.cfg.schedule;
         let step = self.step;
         self.popt.schedule_lr(|base| schedule.lr_at(base, step));
-        // Pre-drain the non-finite-block counter so the post-step reading
-        // is scoped to this step's quantization work.
+        // Pre-drain the non-finite-block and stability counters so the
+        // post-step readings are scoped to this step's update work.
         crate::quant::blockwise::take_nonfinite_blocks();
+        crate::optim::take_clip_events();
+        crate::optim::take_unorm_clips();
         if self.popt.n_hlo() == 0 {
             // Pure native run: the fused step's one-pool-batch-per-phase
             // dispatch is strictly better when there is nothing to overlap.
@@ -312,6 +326,11 @@ impl<'rt> Trainer<'rt> {
         // any hit during this step's update is the same crash condition as
         // a non-finite gradient norm, reported through the same channel.
         let bad_blocks = crate::quant::blockwise::take_nonfinite_blocks();
+        // Stability telemetry: how many tensors had their gradient clipped
+        // by the percentile phase / their update clipped by max_unorm
+        // during this step's fused batch.
+        let clip_events = crate::optim::take_clip_events();
+        let unorm_clips = crate::optim::take_unorm_clips();
         if bad_blocks > 0 {
             self.detector.report_grad_crash();
         }
@@ -319,6 +338,12 @@ impl<'rt> Trainer<'rt> {
         self.step += 1;
         if let Some(sink) = self.metrics.as_mut() {
             let mut extras = vec![("gnorm", num(gnorm))];
+            if clip_events > 0 {
+                extras.push(("clip_events", num(clip_events as f64)));
+            }
+            if unorm_clips > 0 {
+                extras.push(("unorm_clips", num(unorm_clips as f64)));
+            }
             if bad_blocks > 0 {
                 extras.push(("grad_crash", Json::Bool(true)));
                 extras.push(("nonfinite_blocks", num(bad_blocks as f64)));
@@ -504,22 +529,26 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-/// Gradient-hygiene scan: whether every value is finite, plus the global
-/// squared l2 norm. Stops at the first non-finite value — the remaining
-/// tensors cannot change the verdict, and the partial norm is unusable
-/// anyway (it previously kept accumulating Inf/NaN across the leftover
-/// tensors because the early exit only broke the inner loop).
-pub(crate) fn grad_stats(grads: &[Vec<f32>]) -> (bool, f64) {
+/// Gradient-hygiene scan: the number of non-finite values, plus the global
+/// squared l2 norm over the *finite* values. The count (not just a verdict
+/// bit) goes into the `grad_crash` JSONL record — one flipped bit and a
+/// fully-NaN backward pass are very different failures, and the old
+/// early-exit scan could not tell them apart. The finite-only norm stays
+/// usable for diagnostics even on a crashed step (the previous version
+/// returned a truncated partial norm).
+pub(crate) fn grad_stats(grads: &[Vec<f32>]) -> (u64, f64) {
+    let mut nonfinite = 0u64;
     let mut sq = 0.0f64;
     for g in grads {
         for &v in g {
-            if !v.is_finite() {
-                return (false, sq);
+            if v.is_finite() {
+                sq += v as f64 * v as f64;
+            } else {
+                nonfinite += 1;
             }
-            sq += v as f64 * v as f64;
         }
     }
-    (true, sq)
+    (nonfinite, sq)
 }
 
 /// Convenience used by the repro harness: run one config end to end.
@@ -548,21 +577,22 @@ mod tests {
     #[test]
     fn grad_stats_computes_global_sq_norm() {
         let g = vec![vec![3.0f32], vec![4.0f32]];
-        let (finite, sq) = grad_stats(&g);
-        assert!(finite);
+        let (nonfinite, sq) = grad_stats(&g);
+        assert_eq!(nonfinite, 0);
         assert!((sq - 25.0).abs() < 1e-12);
-        let (finite, sq) = grad_stats(&[]);
-        assert!(finite);
+        let (nonfinite, sq) = grad_stats(&[]);
+        assert_eq!(nonfinite, 0);
         assert_eq!(sq, 0.0);
     }
 
     #[test]
-    fn grad_stats_stops_at_first_non_finite() {
-        // regression: the old scan broke only the inner loop, so the
-        // remaining tensors kept polluting `sq` with Inf/NaN
+    fn grad_stats_counts_every_non_finite_value() {
+        // The count must cover the whole gradient set (a flipped bit vs a
+        // fully-NaN backward pass are different failures), and the norm
+        // must stay clean — finite values only, never polluted by Inf/NaN.
         let g = vec![vec![1.0f32, f32::NAN, 2.0], vec![f32::INFINITY; 1000]];
-        let (finite, sq) = grad_stats(&g);
-        assert!(!finite);
-        assert_eq!(sq, 1.0, "scan must stop at the first non-finite value");
+        let (nonfinite, sq) = grad_stats(&g);
+        assert_eq!(nonfinite, 1001);
+        assert!((sq - 5.0).abs() < 1e-12, "norm over finite values only, got {sq}");
     }
 }

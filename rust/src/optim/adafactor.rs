@@ -238,15 +238,11 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(lr: f32) -> OptimConfig {
-        OptimConfig {
-            kind: OptimKind::Adafactor,
-            lr,
-            beta1: 0.9,
-            beta2: 0.999,
-            eps: 1e-8,
-            weight_decay: 0.0,
-            bits: Bits::B32,
-        }
+        let mut cfg = OptimConfig::adam(lr, Bits::B32);
+        cfg.kind = OptimKind::Adafactor;
+        cfg.beta2 = 0.999;
+        cfg.eps = 1e-8;
+        cfg
     }
 
     #[test]

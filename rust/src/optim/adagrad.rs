@@ -6,6 +6,7 @@
 //! optionally uses stochastic rounding, which Appendix H suggests helps for
 //! AdaGrad-style accumulators.
 
+use super::stability;
 use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
 use crate::util::lanes::LANES;
@@ -13,12 +14,13 @@ use crate::util::lanes::LANES;
 pub struct Adagrad {
     cfg: OptimConfig,
     acc: StateTensor,
+    stab: stability::Stab,
     t: u64,
 }
 
 impl Adagrad {
     pub fn new(cfg: OptimConfig, n: usize) -> Adagrad {
-        Adagrad { cfg, acc: make_state(&cfg.bits, n, false), t: 0 }
+        Adagrad { cfg, acc: make_state(&cfg.bits, n, false), stab: stability::Stab::default(), t: 0 }
     }
 }
 
@@ -28,6 +30,48 @@ impl Optimizer for Adagrad {
         self.t += 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
+        if cfg.stability_on() {
+            let direct_rule =
+                move |p: &mut f32, g_raw: f32, acc: &mut f32, _s2: Option<&mut f32>, gs: f32| {
+                    if cfg.skip_zeros && g_raw == 0.0 {
+                        return;
+                    }
+                    let mut g = g_raw * gs;
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * *p;
+                    }
+                    *acc += g * g;
+                    *p -= cfg.lr * g / (acc.max(0.0).sqrt() + cfg.eps);
+                };
+            let u_rule = move |u: &mut f32,
+                               g_raw: f32,
+                               acc: &mut f32,
+                               _s2: Option<&mut f32>,
+                               w: f32,
+                               gs: f32| {
+                if cfg.skip_zeros && g_raw == 0.0 {
+                    *u = 0.0;
+                    return;
+                }
+                let mut g = g_raw * gs;
+                if cfg.weight_decay != 0.0 {
+                    g += cfg.weight_decay * w;
+                }
+                *acc += g * g;
+                *u = g / (acc.max(0.0).sqrt() + cfg.eps);
+            };
+            return stability::stabilized_plan(
+                &mut self.stab,
+                &cfg,
+                params,
+                grads,
+                &mut self.acc,
+                None,
+                block,
+                direct_rule,
+                u_rule,
+            );
+        }
         StepPlan::single(block_steps_vec(
             params,
             grads,
@@ -90,6 +134,14 @@ impl Optimizer for Adagrad {
     fn lr(&self) -> f32 {
         self.cfg.lr
     }
+
+    fn gnorm_history(&self) -> Option<Vec<f32>> {
+        (self.cfg.clip_percentile > 0.0).then(|| self.stab.history.snapshot())
+    }
+
+    fn restore_gnorm_history(&mut self, hist: &[f32]) {
+        self.stab.history.restore(hist);
+    }
 }
 
 #[cfg(test)]
@@ -99,15 +151,12 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(lr: f32, bits: Bits) -> OptimConfig {
-        OptimConfig {
-            kind: OptimKind::Adagrad,
-            lr,
-            beta1: 0.0,
-            beta2: 0.0,
-            eps: 1e-10,
-            weight_decay: 0.0,
-            bits,
-        }
+        let mut cfg = OptimConfig::adam(lr, bits);
+        cfg.kind = OptimKind::Adagrad;
+        cfg.beta1 = 0.0;
+        cfg.beta2 = 0.0;
+        cfg.eps = 1e-10;
+        cfg
     }
 
     #[test]
@@ -160,6 +209,27 @@ mod tests {
         let mse: f32 =
             p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
         assert!(mse < 1e-2, "mse {mse}");
+    }
+
+    #[test]
+    fn skip_zeros_freezes_accumulator_for_zero_grads() {
+        let n = 32;
+        let mut c = cfg(0.1, Bits::B32);
+        c.skip_zeros = true;
+        let mut opt = Adagrad::new(c, n);
+        let mut p = vec![1.0f32; n];
+        let g: Vec<f32> = (0..n).map(|i| if i < 16 { 0.0 } else { 1.0 }).collect();
+        for _ in 0..10 {
+            opt.step(&mut p, &g);
+        }
+        let acc = opt.acc.to_f32();
+        for i in 0..16 {
+            assert_eq!(acc[i], 0.0);
+            assert_eq!(p[i], 1.0);
+        }
+        for i in 16..n {
+            assert!(acc[i] > 9.9, "{}", acc[i]);
+        }
     }
 
     #[test]

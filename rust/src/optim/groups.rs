@@ -10,9 +10,10 @@
 //! * [`Pattern`] — glob-style tensor-name pattern (`*`, `?`, and `|`
 //!   alternation).
 //! * [`GroupOverride`] — a pattern plus optional `bits` / `format` /
-//!   `blockwise` / `lr` / `weight_decay` / `beta1` / `beta2` / `eps`
-//!   overrides, parseable from `"pattern:key=val,key=val"` (the CLI
-//!   `--override` syntax) or a `[[optimizer.group]]` TOML table.
+//!   `blockwise` / `lr` / `weight_decay` / `beta1` / `beta2` / `eps` /
+//!   `clip_percentile` / `max_unorm` / `skip_zeros` overrides, parseable
+//!   from `"pattern:key=val,key=val"` (the CLI `--override` syntax) or a
+//!   `[[optimizer.group]]` TOML table.
 //! * [`ParamOptimizer`] — built from an [`OptimSpec`](super::OptimSpec)
 //!   (base config + ordered overrides, first match wins) and the model's
 //!   tensor list; owns the per-tensor `Box<dyn Optimizer>`s and their HLO
@@ -108,6 +109,12 @@ pub struct GroupOverride {
     pub beta1: Option<f32>,
     pub beta2: Option<f32>,
     pub eps: Option<f32>,
+    /// Percentile gradient clipping (0 = off; active in (0, 100]).
+    pub clip_percentile: Option<f32>,
+    /// Update-norm clipping threshold (0 = off).
+    pub max_unorm: Option<f32>,
+    /// Leave moments and params untouched where the gradient is exactly 0.
+    pub skip_zeros: Option<bool>,
 }
 
 impl GroupOverride {
@@ -195,10 +202,29 @@ impl GroupOverride {
             "beta1" | "beta" => self.beta1 = Some(f32_of("beta1", val)?),
             "beta2" => self.beta2 = Some(f32_of("beta2", val)?),
             "eps" => self.eps = Some(f32_of("eps", val)?),
+            "clip_percentile" => {
+                let p = f32_of("clip_percentile", val)?;
+                ensure!(
+                    p == 0.0 || (p > 0.0 && p <= 100.0),
+                    "clip_percentile must be 0 (off) or in (0, 100], got {p}"
+                );
+                self.clip_percentile = Some(p);
+            }
+            "max_unorm" => {
+                let m = f32_of("max_unorm", val)?;
+                ensure!(m.is_finite() && m >= 0.0, "max_unorm must be finite and >= 0, got {m}");
+                self.max_unorm = Some(m);
+            }
+            "skip_zeros" => {
+                self.skip_zeros = Some(
+                    val.parse::<bool>()
+                        .map_err(|_| anyhow!("skip_zeros must be true or false, got {val:?}"))?,
+                );
+            }
             other => {
                 return Err(anyhow!(
                     "unknown override key {other:?} (known: bits, format, blockwise, lr, \
-                     weight_decay, beta1, beta2, eps)"
+                     weight_decay, beta1, beta2, eps, clip_percentile, max_unorm, skip_zeros)"
                 ))
             }
         }
@@ -214,6 +240,9 @@ impl GroupOverride {
             || self.beta1.is_some()
             || self.beta2.is_some()
             || self.eps.is_some()
+            || self.clip_percentile.is_some()
+            || self.max_unorm.is_some()
+            || self.skip_zeros.is_some()
     }
 
     pub fn pattern(&self) -> &Pattern {
@@ -250,6 +279,15 @@ impl GroupOverride {
         }
         if let Some(v) = self.eps {
             cfg.eps = v;
+        }
+        if let Some(v) = self.clip_percentile {
+            cfg.clip_percentile = v;
+        }
+        if let Some(v) = self.max_unorm {
+            cfg.max_unorm = v;
+        }
+        if let Some(v) = self.skip_zeros {
+            cfg.skip_zeros = v;
         }
         cfg
     }
@@ -294,6 +332,15 @@ impl GroupOverride {
         }
         if let Some(v) = self.eps {
             parts.push(format!("eps={v}"));
+        }
+        if let Some(v) = self.clip_percentile {
+            parts.push(format!("clip_percentile={v}"));
+        }
+        if let Some(v) = self.max_unorm {
+            parts.push(format!("max_unorm={v}"));
+        }
+        if let Some(v) = self.skip_zeros {
+            parts.push(format!("skip_zeros={v}"));
         }
         format!("{}:{}", self.pattern().as_str(), parts.join(","))
     }
@@ -342,6 +389,11 @@ pub struct GroupReport {
     /// Resolved state precision of this group (32, 8, or 4) — makes mixed
     /// 4/8/32 runs distinguishable in the JSONL `groups` record.
     pub bits: u32,
+    /// Resolved stability knobs (0/0/false = all off) — recorded in the
+    /// JSONL `groups` record so a run's clip policy is auditable.
+    pub clip_percentile: f32,
+    pub max_unorm: f32,
+    pub skip_zeros: bool,
     pub tensors: usize,
     pub params: usize,
     pub state_bytes: usize,
@@ -671,6 +723,9 @@ impl ParamOptimizer {
                     label: self.spec.group_label(g),
                     config: cfg.describe(),
                     bits: cfg.bits.bit_count(),
+                    clip_percentile: cfg.clip_percentile,
+                    max_unorm: cfg.max_unorm,
+                    skip_zeros: cfg.skip_zeros,
                     tensors: 0,
                     params: 0,
                     state_bytes: 0,
@@ -770,6 +825,32 @@ mod tests {
         assert!(GroupOverride::parse("p:bogus=1").is_err());
         assert!(GroupOverride::parse("p:").is_err(), "no-op override");
         assert!(GroupOverride::parse("p:lr=abc").is_err());
+    }
+
+    #[test]
+    fn stability_override_keys() {
+        let ov =
+            GroupOverride::parse("block*:clip_percentile=95,max_unorm=0.02,skip_zeros=true")
+                .unwrap();
+        assert_eq!(ov.clip_percentile, Some(95.0));
+        assert_eq!(ov.max_unorm, Some(0.02));
+        assert_eq!(ov.skip_zeros, Some(true));
+        let re = GroupOverride::parse(&ov.describe()).unwrap();
+        assert_eq!(re.clip_percentile, ov.clip_percentile);
+        assert_eq!(re.max_unorm, ov.max_unorm);
+        assert_eq!(re.skip_zeros, ov.skip_zeros);
+        // applied on top of a base with everything off
+        let base = OptimConfig::adam(1e-3, Bits::b8_dynamic());
+        let cfg = ov.apply(&base);
+        assert_eq!(cfg.clip_percentile, 95.0);
+        assert_eq!(cfg.max_unorm, 0.02);
+        assert!(cfg.skip_zeros);
+        assert!(cfg.stability_on());
+        // range validation happens at parse time
+        assert!(GroupOverride::parse("p:clip_percentile=101").is_err());
+        assert!(GroupOverride::parse("p:clip_percentile=-5").is_err());
+        assert!(GroupOverride::parse("p:max_unorm=-1").is_err());
+        assert!(GroupOverride::parse("p:skip_zeros=maybe").is_err());
     }
 
     fn lm_tensors() -> Vec<TensorInfo> {

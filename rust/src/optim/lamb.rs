@@ -207,15 +207,11 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(lr: f32, bits: Bits) -> OptimConfig {
-        OptimConfig {
-            kind: OptimKind::Lamb,
-            lr,
-            beta1: 0.9,
-            beta2: 0.999,
-            eps: 1e-6,
-            weight_decay: 0.0,
-            bits,
-        }
+        let mut cfg = OptimConfig::adam(lr, bits);
+        cfg.kind = OptimKind::Lamb;
+        cfg.beta2 = 0.999;
+        cfg.eps = 1e-6;
+        cfg
     }
 
     #[test]

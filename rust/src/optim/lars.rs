@@ -157,15 +157,11 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(lr: f32, bits: Bits) -> OptimConfig {
-        OptimConfig {
-            kind: OptimKind::Lars,
-            lr,
-            beta1: 0.9,
-            beta2: 0.0,
-            eps: 0.0,
-            weight_decay: 0.0,
-            bits,
-        }
+        let mut cfg = OptimConfig::adam(lr, bits);
+        cfg.kind = OptimKind::Lars;
+        cfg.beta2 = 0.0;
+        cfg.eps = 0.0;
+        cfg
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod lars;
 pub mod momentum;
 pub mod sm3;
 pub mod spec;
+pub mod stability;
 pub mod state;
 
 pub use engine::{fused_update, streaming_update, FusedStep, StreamingStep};
@@ -50,6 +51,7 @@ pub use groups::{
     Pattern, StreamSlot, TensorInfo,
 };
 pub use spec::{validate_config, OptimSpec};
+pub use stability::{take_clip_events, take_unorm_clips, GnormHistory};
 pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
 
 use crate::quant::{CodeWidth, Format, BLOCK};
@@ -193,6 +195,19 @@ impl OptimKind {
         }
     }
 
+    /// Whether this optimizer implements the bnb stability toolkit
+    /// (percentile clipping, `max_unorm`, `skip_zeros`) as fused phases.
+    /// The elementwise-state optimizers do; the reduction-bearing ones
+    /// (LAMB/LARS/Adafactor/SM3) already own multi-phase plans with their
+    /// own norm semantics, so asking for stability overrides there is a
+    /// config error, not a silent no-op (`spec::validate_config`).
+    pub fn supports_stability(&self) -> bool {
+        matches!(
+            self,
+            OptimKind::Adam | OptimKind::AdamW | OptimKind::Momentum | OptimKind::Adagrad
+        )
+    }
+
     /// AOT update-artifact key for the HLO engine, plus whether the
     /// artifact carries a single state tensor. Only quantized Adam/AdamW
     /// and Momentum have compiled Pallas kernels.
@@ -216,6 +231,17 @@ pub struct OptimConfig {
     pub eps: f32,
     pub weight_decay: f32,
     pub bits: Bits,
+    /// Percentile clipping (bnb `percentile_clipping`): clip the gradient
+    /// to the `clip_percentile`-th percentile of a rolling per-tensor
+    /// gradient-norm history. `0.0` disables (the default); active values
+    /// lie in `(0, 100]`.
+    pub clip_percentile: f32,
+    /// Update-norm clip (bnb `max_unorm`): scale the applied update down
+    /// when `‖u‖ > max_unorm · ‖w‖`. `0.0` disables.
+    pub max_unorm: f32,
+    /// bnb `skip_zeros`: elements with an exactly-zero gradient leave
+    /// their moments and parameter untouched (sparse-gradient semantics).
+    pub skip_zeros: bool,
 }
 
 impl OptimConfig {
@@ -228,6 +254,9 @@ impl OptimConfig {
             eps: 1e-7,
             weight_decay: 0.0,
             bits,
+            clip_percentile: 0.0,
+            max_unorm: 0.0,
+            skip_zeros: false,
         }
     }
 
@@ -240,7 +269,16 @@ impl OptimConfig {
             eps: 0.0,
             weight_decay: 0.0,
             bits,
+            clip_percentile: 0.0,
+            max_unorm: 0.0,
+            skip_zeros: false,
         }
+    }
+
+    /// Whether any of the bnb stability mechanisms is active — the switch
+    /// between an optimizer's legacy plan and its stabilized phased plan.
+    pub fn stability_on(&self) -> bool {
+        self.clip_percentile > 0.0 || self.max_unorm > 0.0 || self.skip_zeros
     }
 
     pub fn describe(&self) -> String {
@@ -281,6 +319,15 @@ pub trait Optimizer: Send {
     fn set_lr(&mut self, lr: f32);
     /// Current learning rate.
     fn lr(&self) -> f32;
+    /// Rolling gradient-norm history backing percentile clipping
+    /// (chronological, oldest first), for checkpointing; `None` when this
+    /// optimizer carries none (clipping off or unsupported).
+    fn gnorm_history(&self) -> Option<Vec<f32>> {
+        None
+    }
+    /// Restore a history captured by [`Optimizer::gnorm_history`]
+    /// (checkpoint load); a no-op for optimizers without one.
+    fn restore_gnorm_history(&mut self, _hist: &[f32]) {}
 }
 
 /// Build an optimizer for a tensor of `n` elements; `shape` (rows, cols)

@@ -4,6 +4,7 @@
 //! `m_t = β1 m_{t-1} + g_t`, `w_t = w_{t-1} − α m_t`, with `m_0 = g_0`
 //! (the first step uses the raw gradient).
 
+use super::stability;
 use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
 use super::{make_state, OptimConfig, Optimizer};
 use crate::util::lanes::LANES;
@@ -11,12 +12,13 @@ use crate::util::lanes::LANES;
 pub struct Momentum {
     cfg: OptimConfig,
     m: StateTensor,
+    stab: stability::Stab,
     t: u64,
 }
 
 impl Momentum {
     pub fn new(cfg: OptimConfig, n: usize) -> Momentum {
-        Momentum { cfg, m: make_state(&cfg.bits, n, true), t: 0 }
+        Momentum { cfg, m: make_state(&cfg.bits, n, true), stab: stability::Stab::default(), t: 0 }
     }
 }
 
@@ -27,6 +29,48 @@ impl Optimizer for Momentum {
         let first = self.t == 1;
         let cfg = self.cfg;
         let block = cfg.bits.state_block(params.len());
+        if cfg.stability_on() {
+            let direct_rule =
+                move |p: &mut f32, g_raw: f32, m: &mut f32, _s2: Option<&mut f32>, gs: f32| {
+                    if cfg.skip_zeros && g_raw == 0.0 {
+                        return;
+                    }
+                    let mut g = g_raw * gs;
+                    if cfg.weight_decay != 0.0 {
+                        g += cfg.weight_decay * *p;
+                    }
+                    *m = if first { g } else { cfg.beta1 * *m + g };
+                    *p -= cfg.lr * *m;
+                };
+            let u_rule = move |u: &mut f32,
+                               g_raw: f32,
+                               m: &mut f32,
+                               _s2: Option<&mut f32>,
+                               w: f32,
+                               gs: f32| {
+                if cfg.skip_zeros && g_raw == 0.0 {
+                    *u = 0.0;
+                    return;
+                }
+                let mut g = g_raw * gs;
+                if cfg.weight_decay != 0.0 {
+                    g += cfg.weight_decay * w;
+                }
+                *m = if first { g } else { cfg.beta1 * *m + g };
+                *u = *m;
+            };
+            return stability::stabilized_plan(
+                &mut self.stab,
+                &cfg,
+                params,
+                grads,
+                &mut self.m,
+                None,
+                block,
+                direct_rule,
+                u_rule,
+            );
+        }
         StepPlan::single(block_steps_vec(
             params,
             grads,
@@ -88,6 +132,14 @@ impl Optimizer for Momentum {
 
     fn lr(&self) -> f32 {
         self.cfg.lr
+    }
+
+    fn gnorm_history(&self) -> Option<Vec<f32>> {
+        (self.cfg.clip_percentile > 0.0).then(|| self.stab.history.snapshot())
+    }
+
+    fn restore_gnorm_history(&mut self, hist: &[f32]) {
+        self.stab.history.restore(hist);
     }
 }
 
@@ -152,6 +204,52 @@ mod tests {
         let mse8: f32 =
             p8.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n as f32;
         assert!(mse8 < 5e-3, "8-bit mse {mse8}");
+    }
+
+    #[test]
+    fn percentile_clip_caps_spike_step() {
+        // Momentum has no adaptive normalizer, so a spike hits the params
+        // directly — exactly the case percentile clipping is for.
+        let n = 128;
+        let mut cfg = OptimConfig::momentum(0.1, 0.9, Bits::B32);
+        cfg.clip_percentile = 95.0;
+        let mut oc = Momentum::new(cfg, n);
+        let mut ou = Momentum::new(OptimConfig::momentum(0.1, 0.9, Bits::B32), n);
+        let mut pc = vec![0.0f32; n];
+        let mut pu = vec![0.0f32; n];
+        let g = vec![0.1f32; n];
+        for _ in 0..10 {
+            oc.step(&mut pc, &g);
+            ou.step(&mut pu, &g);
+        }
+        let bc = pc[0];
+        let bu = pu[0];
+        let spike = vec![100.0f32; n];
+        oc.step(&mut pc, &spike);
+        ou.step(&mut pu, &spike);
+        let dc = (pc[0] - bc).abs();
+        let du = (pu[0] - bu).abs();
+        assert!(dc < du / 100.0, "clipped step {dc} vs unclipped {du}");
+    }
+
+    #[test]
+    fn max_unorm_matches_plain_momentum_when_inactive() {
+        let n = 512;
+        let mut cfg = OptimConfig::momentum(0.02, 0.9, Bits::B32);
+        cfg.max_unorm = 1e30;
+        let mut os = Momentum::new(cfg, n);
+        let mut op = Momentum::new(OptimConfig::momentum(0.02, 0.9, Bits::B32), n);
+        let mut ps = vec![1.0f32; n];
+        let mut pp = vec![1.0f32; n];
+        let mut rng = Rng::new(21);
+        for _ in 0..30 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            os.step(&mut ps, &g);
+            op.step(&mut pp, &g);
+        }
+        for (a, b) in ps.iter().zip(&pp) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

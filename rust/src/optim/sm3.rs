@@ -171,15 +171,12 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(lr: f32) -> OptimConfig {
-        OptimConfig {
-            kind: OptimKind::Sm3,
-            lr,
-            beta1: 0.0,
-            beta2: 0.0,
-            eps: 1e-8,
-            weight_decay: 0.0,
-            bits: Bits::B32,
-        }
+        let mut cfg = OptimConfig::adam(lr, Bits::B32);
+        cfg.kind = OptimKind::Sm3;
+        cfg.beta1 = 0.0;
+        cfg.beta2 = 0.0;
+        cfg.eps = 1e-8;
+        cfg
     }
 
     #[test]

@@ -119,6 +119,25 @@ pub fn validate_config(cfg: &OptimConfig) -> Result<()> {
     if cfg.weight_decay.is_nan() || cfg.weight_decay < 0.0 {
         return Err(anyhow!("weight_decay must be >= 0, got {}", cfg.weight_decay));
     }
+    if !cfg.clip_percentile.is_finite()
+        || cfg.clip_percentile < 0.0
+        || cfg.clip_percentile > 100.0
+    {
+        return Err(anyhow!(
+            "clip_percentile must be 0 (off) or in (0, 100], got {}",
+            cfg.clip_percentile
+        ));
+    }
+    if !cfg.max_unorm.is_finite() || cfg.max_unorm < 0.0 {
+        return Err(anyhow!("max_unorm must be finite and >= 0, got {}", cfg.max_unorm));
+    }
+    if cfg.stability_on() && !cfg.kind.supports_stability() {
+        return Err(anyhow!(
+            "{} has no stabilized step path; clip_percentile/max_unorm/skip_zeros \
+             require adam, adamw, momentum, or adagrad",
+            cfg.kind.name()
+        ));
+    }
     Ok(())
 }
 
@@ -224,5 +243,41 @@ mod tests {
         let spec = OptimSpec::with_groups(base8(), vec![GroupOverride::emb32()]);
         spec.validate().unwrap();
         assert!(spec.describe().contains("embed.tok|embed.pos:bits=32"));
+    }
+
+    #[test]
+    fn validation_gates_stability_knobs_on_capability() {
+        // stability on a supported kind: fine
+        let mut cfg = base8();
+        cfg.clip_percentile = 95.0;
+        cfg.max_unorm = 0.02;
+        cfg.skip_zeros = true;
+        validate_config(&cfg).unwrap();
+        // LAMB/LARS own their norm phases; SM3/Adafactor have no stabilized
+        // path — all four reject the knobs instead of silently ignoring them
+        for kind in [OptimKind::Lamb, OptimKind::Lars, OptimKind::Sm3, OptimKind::Adafactor] {
+            let mut cfg = base8();
+            cfg.kind = kind;
+            cfg.bits = Bits::B32;
+            cfg.clip_percentile = 95.0;
+            let err = validate_config(&cfg).unwrap_err();
+            assert!(format!("{err:#}").contains("stabilized"), "{kind:?}: {err:#}");
+        }
+        // range checks
+        let mut cfg = base8();
+        cfg.clip_percentile = 101.0;
+        assert!(validate_config(&cfg).is_err());
+        let mut cfg = base8();
+        cfg.clip_percentile = f32::NAN;
+        assert!(validate_config(&cfg).is_err());
+        let mut cfg = base8();
+        cfg.max_unorm = f32::INFINITY;
+        assert!(validate_config(&cfg).is_err());
+        // a group turning clipping on for a subset of tensors validates
+        let spec = OptimSpec::with_groups(
+            base8(),
+            vec![GroupOverride::parse("block*:clip_percentile=95").unwrap()],
+        );
+        spec.validate().unwrap();
     }
 }

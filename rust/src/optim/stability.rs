@@ -1,0 +1,491 @@
+//! The bnb stability toolkit as fused per-group phases: percentile
+//! clipping (`clip_percentile`), update-norm clipping (`max_unorm`), and
+//! sparse-gradient semantics (`skip_zeros`) — the paper's §3 stability
+//! tools as they actually ship in bitsandbytes, executed *inside* the
+//! fused/streaming batch instead of as serial pre-passes.
+//!
+//! Mechanisms (per tensor, resolved per parameter group):
+//!
+//! * **Percentile clipping** keeps a rolling window of the tensor's last
+//!   [`GNORM_WINDOW`] gradient norms ([`GnormHistory`]). Each step the
+//!   gradient norm is computed as the canonical two-phase reduction
+//!   (per-chunk squared-norm partials, deterministic ordered fold —
+//!   `util::reduce`); when it exceeds the `clip_percentile`-th percentile
+//!   of the history, the gradient is scaled down to that percentile before
+//!   it enters the moments. The raw (unclipped) norm is recorded, so a
+//!   sustained shift in gradient scale re-adapts within one window.
+//! * **`max_unorm`** materializes the raw update direction `u`, reduces
+//!   `‖w‖` and `‖u‖` the same two-phase way, and scales the applied step
+//!   down when `‖u‖ > max_unorm · ‖w‖`.
+//! * **`skip_zeros`** leaves elements with an exactly-zero gradient
+//!   untouched: moments and parameter keep their working values (for
+//!   quantized state the block still requantizes, so a neighbour's update
+//!   may move the block absmax — storage round-trip, not an update).
+//!
+//! Everything runs through [`stabilized_plan`], the shared phased-plan
+//! builder used by Adam/AdamW, Momentum, and AdaGrad: an optional
+//! gnorm-partials phase + clip combine, then either the direct elementwise
+//! phase (lane-chunked via `block_steps_vec`, scalar tail-and-oracle) or —
+//! when `max_unorm` is active — the LAMB-shaped trio of moment/u phase
+//! with norm partials, unorm combine, and block-local apply. All phases
+//! compose with `StepPlan`/`FusedStep`/`StreamingStep` and stay
+//! bit-identical at every thread count and admission order.
+//!
+//! Clip activity is exported through process-global counters drained by
+//! the trainer into the JSONL step records ([`take_clip_events`],
+//! [`take_unorm_clips`] — the `NONFINITE_BLOCKS` telemetry pattern).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::state::{
+    block_steps, block_steps_vec, BlockSteps, BlockView, LaneView, Phase, StateTensor, StepPlan,
+};
+use super::OptimConfig;
+use crate::util::lanes::{self, LANES};
+use crate::util::parallel::Shared;
+use crate::util::{reduce, stats};
+
+/// Rolling gradient-norm window length (bnb's `gnorm_vec` is 100 steps).
+pub const GNORM_WINDOW: usize = 100;
+
+/// Minimum recorded norms before the percentile clip engages — clipping
+/// against one or two observations would be noise, not statistics.
+pub const GNORM_MIN_HISTORY: usize = 5;
+
+/// Rolling per-tensor gradient-norm history feeding the percentile clip.
+/// Non-finite norms are never recorded (a broken gradient must not poison
+/// the statistics the *next* steps clip against).
+#[derive(Clone, Debug, Default)]
+pub struct GnormHistory {
+    vals: Vec<f64>,
+    /// Next write position once the window is full.
+    pos: usize,
+}
+
+impl GnormHistory {
+    pub fn new() -> GnormHistory {
+        GnormHistory::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Record one observed gradient norm (ignored when non-finite).
+    pub fn push(&mut self, gnorm: f64) {
+        if !gnorm.is_finite() {
+            return;
+        }
+        if self.vals.len() < GNORM_WINDOW {
+            self.vals.push(gnorm);
+        } else {
+            self.vals[self.pos] = gnorm;
+        }
+        self.pos = (self.pos + 1) % GNORM_WINDOW;
+    }
+
+    /// Clip threshold: the `percentile`-th percentile of the recorded
+    /// norms, once at least [`GNORM_MIN_HISTORY`] exist. `None` while the
+    /// history is too short (no clipping) or the quantile is degenerate.
+    pub fn clip_value(&self, percentile: f32) -> Option<f64> {
+        if self.vals.len() < GNORM_MIN_HISTORY {
+            return None;
+        }
+        let v = stats::percentile(&self.vals, percentile as f64);
+        (v.is_finite() && v > 0.0).then_some(v)
+    }
+
+    /// Chronological snapshot (oldest first) for checkpointing.
+    pub fn snapshot(&self) -> Vec<f32> {
+        if self.vals.len() < GNORM_WINDOW {
+            self.vals.iter().map(|&v| v as f32).collect()
+        } else {
+            (0..GNORM_WINDOW)
+                .map(|i| self.vals[(self.pos + i) % GNORM_WINDOW] as f32)
+                .collect()
+        }
+    }
+
+    /// Rebuild from a [`GnormHistory::snapshot`] (checkpoint restore).
+    pub fn restore(&mut self, snap: &[f32]) {
+        self.vals.clear();
+        self.pos = 0;
+        let skip = snap.len().saturating_sub(GNORM_WINDOW);
+        for &v in &snap[skip..] {
+            self.push(v as f64);
+        }
+    }
+}
+
+// ---- clip telemetry (the NONFINITE_BLOCKS pattern: process-global
+// counters, drained by the trainer into the JSONL step records) ----------
+
+static CLIP_EVENTS: AtomicU64 = AtomicU64::new(0);
+static UNORM_CLIPS: AtomicU64 = AtomicU64::new(0);
+
+/// Drain the percentile-clip event counter (tensors clipped since the
+/// last call).
+pub fn take_clip_events() -> u64 {
+    CLIP_EVENTS.swap(0, Ordering::Relaxed)
+}
+
+/// Drain the update-norm clip counter.
+pub fn take_unorm_clips() -> u64 {
+    UNORM_CLIPS.swap(0, Ordering::Relaxed)
+}
+
+/// Per-optimizer stability scratch: the gnorm history plus the reduction
+/// partials / update buffer / cross-phase scales the stabilized plan
+/// routes through `Shared`. Empty (a few dozen bytes) until the first
+/// stabilized step.
+#[derive(Default)]
+pub(crate) struct Stab {
+    pub(crate) history: GnormHistory,
+    /// Raw update direction (allocated only when `max_unorm` is active).
+    u: Vec<f32>,
+    /// Reduction partials: `[gnorm chunks | ‖w‖ chunks | ‖u‖ chunks]`.
+    partials: Vec<f64>,
+    /// `[0]` = gradient scale (clip combine), `[1]` = lr · unorm factor
+    /// (unorm combine) — written between barriers, read by later phases.
+    scales: [f32; 2],
+}
+
+impl Stab {
+    fn ensure(&mut self, n: usize, need_u: bool) {
+        self.partials.resize(3 * reduce::n_chunks(n), 0.0);
+        if need_u {
+            self.u.resize(n, 0.0);
+        }
+    }
+}
+
+/// Gradient-norm phase: per-chunk squared-norm partials over the raw
+/// gradient, then a combine that folds them in chunk order, consults the
+/// history's percentile, and writes the gradient scale for the next phase.
+/// A non-finite norm leaves the scale at 1.0 and is not recorded — broken
+/// gradients are the trainer's `grad_stats`/detector problem, not the
+/// clip's.
+fn gnorm_clip_phase<'a>(
+    grads: &'a [f32],
+    partials: Shared<f64>,
+    history: Shared<GnormHistory>,
+    scales: Shared<f32>,
+    clip_percentile: f32,
+) -> Phase<'a> {
+    let n = grads.len();
+    let nc = reduce::n_chunks(n);
+    let items = BlockSteps::from_fn(nc, move |c| {
+        let (lo, hi) = reduce::chunk_bounds(n, c);
+        // SAFETY: partial slot c is written only by item c of this phase.
+        unsafe { partials.write(c, reduce::sum_sq(&grads[lo..hi])) };
+    });
+    let combine = move || {
+        // SAFETY: combines run alone between the phase barriers.
+        let p = unsafe { partials.range(0, nc) };
+        let gnorm = reduce::fold(p).sqrt();
+        let h = unsafe { &mut history.range_mut(0, 1)[0] };
+        let mut scale = 1.0f32;
+        if gnorm.is_finite() {
+            if let Some(clip) = h.clip_value(clip_percentile) {
+                if gnorm > clip {
+                    scale = (clip / gnorm) as f32;
+                    CLIP_EVENTS.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            h.push(gnorm);
+        }
+        unsafe { scales.write(0, scale) };
+    };
+    Phase::with_combine(items, combine)
+}
+
+/// Update-norm combine: fold the `‖w‖²`/`‖u‖²` partials the moment/u phase
+/// wrote, and derive the applied step scale `lr · min(1, max_unorm·‖w‖ /
+/// ‖u‖)`. Zero-norm params never clip (a fresh tensor must be able to
+/// leave the origin).
+fn unorm_combine(
+    partials: Shared<f64>,
+    nc: usize,
+    scales: Shared<f32>,
+    lr: f32,
+    max_unorm: f32,
+) -> impl FnOnce() + Send + Sync {
+    move || {
+        // SAFETY: combines run alone between the phase barriers.
+        let p = unsafe { partials.range(nc, 3 * nc) };
+        let w_norm = reduce::fold(&p[..nc]).sqrt();
+        let u_norm = reduce::fold(&p[nc..]).sqrt();
+        let limit = max_unorm as f64 * w_norm;
+        let mut factor = 1.0f64;
+        if w_norm > 0.0 && u_norm > limit {
+            factor = limit / u_norm;
+            UNORM_CLIPS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { scales.write(1, lr * factor as f32) };
+    }
+}
+
+/// Final phase of the `max_unorm` path: `w -= (lr·factor) · u`,
+/// block-local over reduction chunks.
+fn apply_phase<'a>(
+    n: usize,
+    params_sh: Shared<f32>,
+    u_sh: Shared<f32>,
+    scales: Shared<f32>,
+) -> Phase<'a> {
+    Phase::new(BlockSteps::from_fn(reduce::n_chunks(n), move |c| {
+        let (lo, hi) = reduce::chunk_bounds(n, c);
+        // SAFETY: item c owns param chunk c; u and the scale were written
+        // in earlier phases (barrier-sequenced reads).
+        let p = unsafe { params_sh.range_mut(lo, hi) };
+        let u = unsafe { u_sh.range(lo, hi) };
+        let step = unsafe { scales.read(1) };
+        for i in 0..p.len() {
+            p[i] -= step * u[i];
+        }
+    }))
+}
+
+/// The shared stabilized phased plan for the elementwise-state optimizers.
+///
+/// `direct_rule(p, g_raw, s1, s2, gscale)` applies one full element update
+/// (moments **and** parameter) from the raw gradient and the clip scale —
+/// used when `max_unorm` is off, so the plan stays a single elementwise
+/// phase (plus the optional gnorm phase). `u_rule(u, g_raw, s1, s2, w,
+/// gscale)` updates the moments and writes the raw update direction
+/// *without* touching the parameter — used on the `max_unorm` path, where
+/// the step is applied as `w -= lr·factor·u` after the norm combine. Both
+/// rules own the `skip_zeros` check (skip ⇒ leave everything / write `u =
+/// 0`), and both must be the identical per-element IEEE expression in the
+/// lane and scalar paths (the builder dispatches each rule from both).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stabilized_plan<'a, D, U>(
+    stab: &'a mut Stab,
+    cfg: &OptimConfig,
+    params: &'a mut [f32],
+    grads: &'a [f32],
+    s1: &'a mut StateTensor,
+    s2: Option<&'a mut StateTensor>,
+    fallback_block: usize,
+    direct_rule: D,
+    u_rule: U,
+) -> StepPlan<'a>
+where
+    D: Fn(&mut f32, f32, &mut f32, Option<&mut f32>, f32) + Copy + Send + Sync + 'a,
+    U: Fn(&mut f32, f32, &mut f32, Option<&mut f32>, f32, f32) + Copy + Send + Sync + 'a,
+{
+    let n = params.len();
+    let nc = reduce::n_chunks(n);
+    let need_u = cfg.max_unorm > 0.0;
+    stab.ensure(n, need_u);
+    // Preset the neutral scales; combines of active features overwrite.
+    stab.scales = [1.0, cfg.lr];
+    // SAFETY (all `Shared` uses below): within each phase distinct items
+    // touch disjoint chunks; values written by a combine are read only in
+    // later phases (the engine's barrier provides the happens-before
+    // edge); `stab`'s `&'a mut` borrow keeps every target alive for the
+    // plan's lifetime.
+    let partials = Shared::new(&mut stab.partials);
+    let scales = Shared::new(&mut stab.scales);
+    let history = Shared::new(std::slice::from_mut(&mut stab.history));
+
+    let mut plan = StepPlan::new();
+    if cfg.clip_percentile > 0.0 {
+        plan.push(gnorm_clip_phase(grads, partials, history, scales, cfg.clip_percentile));
+    }
+
+    if !need_u {
+        // Direct path: one lane-chunked elementwise phase; the clip scale
+        // is read per block (written by the phase-0 combine, or preset).
+        plan.push(Phase::new(block_steps_vec(
+            params,
+            grads,
+            s1,
+            s2,
+            fallback_block,
+            move |v: LaneView| {
+                let gs = unsafe { scales.read(0) };
+                let LaneView { params, grads, s1, s2, .. } = v;
+                match s2 {
+                    Some(s2) => {
+                        for l in 0..LANES {
+                            direct_rule(&mut params[l], grads[l], &mut s1[l], Some(&mut s2[l]), gs);
+                        }
+                    }
+                    None => {
+                        for l in 0..LANES {
+                            direct_rule(&mut params[l], grads[l], &mut s1[l], None, gs);
+                        }
+                    }
+                }
+            },
+            move |v: BlockView| {
+                let gs = unsafe { scales.read(0) };
+                let BlockView { params, grads, s1, s2, .. } = v;
+                match s2 {
+                    Some(s2) => {
+                        for i in 0..params.len() {
+                            direct_rule(&mut params[i], grads[i], &mut s1[i], Some(&mut s2[i]), gs);
+                        }
+                    }
+                    None => {
+                        for i in 0..params.len() {
+                            direct_rule(&mut params[i], grads[i], &mut s1[i], None, gs);
+                        }
+                    }
+                }
+            },
+        )));
+        return plan;
+    }
+
+    // max_unorm path (the LAMB shape): moment update + u materialized via
+    // the block engine with u in the "params" slot (real params are only
+    // read — for weight decay and the ‖w‖ partial), norm partials per
+    // covered chunk, then the unorm combine, then the block-local apply.
+    let params_sh = Shared::new(params);
+    let u_sh = Shared::new(&mut stab.u);
+    // Single-writer contract for the partial slots: every moment-phase
+    // item must cover whole reduce-chunks (state blocks are CHUNK-aligned
+    // or the tensor is one item).
+    debug_assert!(
+        fallback_block % reduce::CHUNK == 0 || fallback_block >= n,
+        "unorm partials need chunk-aligned state blocks (block {fallback_block}, n {n})"
+    );
+    let u_slot: &'a mut [f32] = unsafe { u_sh.range_mut(0, n) };
+    let phase_m = block_steps(u_slot, grads, s1, s2, fallback_block, move |v: BlockView| {
+        let BlockView { params: u_b, grads, s1: s1_b, s2: mut s2_b, start } = v;
+        let w = unsafe { params_sh.range(start, start + u_b.len()) };
+        let gs = unsafe { scales.read(0) };
+        // Hand lane-chunked (this kernel reads `w` through `params_sh` and
+        // runs a partials pass below, so it can't ride `block_steps_vec`);
+        // same per-element arithmetic in both paths => bit-identical.
+        let len = u_b.len();
+        let main = if lanes::scalar_forced() { 0 } else { len - len % LANES };
+        for c in 0..main / LANES {
+            let off = c * LANES;
+            let u_l = <&mut [f32; LANES]>::try_from(&mut u_b[off..off + LANES]).unwrap();
+            let g_l = <&[f32; LANES]>::try_from(&grads[off..off + LANES]).unwrap();
+            let s1_l = <&mut [f32; LANES]>::try_from(&mut s1_b[off..off + LANES]).unwrap();
+            let w_l = <&[f32; LANES]>::try_from(&w[off..off + LANES]).unwrap();
+            match s2_b.as_deref_mut() {
+                Some(s2) => {
+                    let s2_l = <&mut [f32; LANES]>::try_from(&mut s2[off..off + LANES]).unwrap();
+                    for l in 0..LANES {
+                        u_rule(&mut u_l[l], g_l[l], &mut s1_l[l], Some(&mut s2_l[l]), w_l[l], gs);
+                    }
+                }
+                None => {
+                    for l in 0..LANES {
+                        u_rule(&mut u_l[l], g_l[l], &mut s1_l[l], None, w_l[l], gs);
+                    }
+                }
+            }
+        }
+        for i in main..len {
+            match s2_b.as_deref_mut() {
+                Some(s2) => u_rule(&mut u_b[i], grads[i], &mut s1_b[i], Some(&mut s2[i]), w[i], gs),
+                None => u_rule(&mut u_b[i], grads[i], &mut s1_b[i], None, w[i], gs),
+            }
+        }
+        // Per-chunk ‖w‖²/‖u‖² partials for the chunks this item covers.
+        let mut lo = 0usize;
+        while lo < len {
+            let c = (start + lo) / reduce::CHUNK;
+            let hi = (lo + reduce::CHUNK).min(len);
+            unsafe {
+                partials.write(nc + c, reduce::sum_sq(&w[lo..hi]));
+                partials.write(2 * nc + c, reduce::sum_sq(&u_b[lo..hi]));
+            }
+            lo = hi;
+        }
+    });
+    plan.push(Phase::with_combine(
+        phase_m,
+        unorm_combine(partials, nc, scales, cfg.lr, cfg.max_unorm),
+    ));
+    plan.push(apply_phase(n, params_sh, u_sh, scales));
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_is_a_rolling_window() {
+        let mut h = GnormHistory::new();
+        for i in 0..(GNORM_WINDOW + 10) {
+            h.push(i as f64);
+        }
+        assert_eq!(h.len(), GNORM_WINDOW);
+        let snap = h.snapshot();
+        // chronological: oldest surviving value first
+        assert_eq!(snap[0], 10.0);
+        assert_eq!(snap[GNORM_WINDOW - 1], (GNORM_WINDOW + 9) as f32);
+    }
+
+    #[test]
+    fn non_finite_norms_are_never_recorded() {
+        let mut h = GnormHistory::new();
+        h.push(1.0);
+        h.push(f64::NAN);
+        h.push(f64::INFINITY);
+        h.push(2.0);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.snapshot(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn clip_engages_only_after_min_history() {
+        let mut h = GnormHistory::new();
+        for i in 0..GNORM_MIN_HISTORY - 1 {
+            h.push(1.0 + i as f64 * 0.01);
+            assert_eq!(h.clip_value(95.0), None, "after {} entries", i + 1);
+        }
+        h.push(1.0);
+        let clip = h.clip_value(95.0).expect("enough history now");
+        assert!(clip > 0.9 && clip < 1.1, "{clip}");
+    }
+
+    #[test]
+    fn clip_value_tracks_percentile() {
+        let mut h = GnormHistory::new();
+        for i in 1..=100 {
+            h.push(i as f64);
+        }
+        // 95th percentile of 1..=100 (linear interpolation over sorted)
+        let clip = h.clip_value(95.0).unwrap();
+        assert!((clip - 95.05).abs() < 1e-9, "{clip}");
+        // the median is robust to a spike
+        h.push(1e6);
+        let med = h.clip_value(50.0).unwrap();
+        assert!(med < 100.0, "{med}");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut h = GnormHistory::new();
+        for i in 0..137 {
+            h.push(0.5 + (i % 17) as f64);
+        }
+        let snap = h.snapshot();
+        let mut back = GnormHistory::new();
+        back.restore(&snap);
+        assert_eq!(back.snapshot(), snap);
+        assert_eq!(back.clip_value(95.0).map(|v| v as f32), h.clip_value(95.0).map(|v| v as f32));
+    }
+
+    #[test]
+    fn restore_keeps_only_the_last_window() {
+        let long: Vec<f32> = (0..250).map(|i| i as f32).collect();
+        let mut h = GnormHistory::new();
+        h.restore(&long);
+        assert_eq!(h.len(), GNORM_WINDOW);
+        assert_eq!(h.snapshot()[0], 150.0);
+    }
+}

@@ -43,13 +43,16 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. Non-finite inputs are
+/// filtered out (the gnorm clip feeds this from live training telemetry,
+/// where a single NaN must not panic the whole run); NaN when no finite
+/// values remain.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return f64::NAN;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("no NaNs in percentile input"));
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -157,6 +160,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_ignores_non_finite() {
+        // A stray NaN/inf from live telemetry must not panic or poison the
+        // quantile — it's simply not part of the distribution.
+        let xs = [f64::NAN, 1.0, 2.0, f64::INFINITY, 3.0, 4.0, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_of_nothing_finite_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[f64::NAN, f64::INFINITY], 50.0).is_nan());
     }
 
     #[test]

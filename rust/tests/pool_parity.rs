@@ -153,6 +153,91 @@ fn every_optimizer_is_bit_identical_between_lane_and_scalar_kernels() {
     }
 }
 
+/// Trajectory with the stability phases engaged: percentile clipping (a
+/// gradient spike lands after the gnorm-history warm-up), a tight
+/// `max_unorm` (so the u-materialization + norm-combine + apply path runs
+/// and actually clips), and `skip_zeros` against stride-zeroed gradients.
+fn stabilized_trajectory(
+    kind: OptimKind,
+    bits: Bits,
+    threads: Option<usize>,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let n = 2048 * 2 + 300; // ragged third block
+    let mut cfg = OptimConfig::adam(0.01, bits);
+    cfg.kind = kind;
+    cfg.clip_percentile = 95.0;
+    cfg.max_unorm = 0.05;
+    cfg.skip_zeros = true;
+    let mut opt = build(&cfg, n, None);
+    let mut rng = Rng::new(0x57AB);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let run = |opt: &mut Box<dyn Optimizer>, p: &mut Vec<f32>| {
+        for step in 0..10 {
+            // spike once the rolling window is past GNORM_MIN_HISTORY, so
+            // the percentile phase has a live threshold to clip against
+            let scale = if step == 7 { 80.0 } else { 1.0 };
+            let mut g: Vec<f32> =
+                p.iter().zip(&target).map(|(a, b)| scale * (a - b)).collect();
+            for v in g.iter_mut().step_by(5) {
+                *v = 0.0;
+            }
+            opt.step(p, &g);
+        }
+    };
+    match threads {
+        Some(t) => parallel::with_threads(t, || run(&mut opt, &mut p)),
+        None => run(&mut opt, &mut p),
+    }
+    let states = opt.states().into_iter().map(|(_, s)| s.to_f32()).collect();
+    (p, states)
+}
+
+#[test]
+fn stabilized_paths_are_bit_identical_across_threads_and_lanes() {
+    // The stability tentpole's engine contract: the gnorm phase, the
+    // u-materialization + unorm combine, and the apply phase all reduce in
+    // fixed chunk order, so clipped trajectories stay bit-identical at
+    // every thread count and between lane/scalar kernels.
+    let _g = locked();
+    for kind in
+        [OptimKind::Adam, OptimKind::AdamW, OptimKind::Momentum, OptimKind::Adagrad]
+    {
+        for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
+            let (p1, s1) = stabilized_trajectory(kind, bits, Some(1));
+            let (p4, s4) = stabilized_trajectory(kind, bits, Some(4));
+            let (pd, sd) = stabilized_trajectory(kind, bits, None);
+            let (psc, ssc) =
+                lanes::with_forced_scalar(|| stabilized_trajectory(kind, bits, Some(4)));
+            assert!(p1.iter().all(|v| v.is_finite()));
+            assert_eq!(
+                p1,
+                p4,
+                "{} {} stabilized params diverged between 1 and 4 threads",
+                kind.name(),
+                bits.describe()
+            );
+            assert_eq!(
+                p1,
+                pd,
+                "{} {} stabilized params diverged between 1 and default threads",
+                kind.name(),
+                bits.describe()
+            );
+            assert_eq!(
+                p1,
+                psc,
+                "{} {} stabilized params diverged between lane and scalar kernels",
+                kind.name(),
+                bits.describe()
+            );
+            assert_eq!(s1, s4, "{} {} states diverged", kind.name(), bits.describe());
+            assert_eq!(s1, sd, "{} {} states diverged", kind.name(), bits.describe());
+            assert_eq!(s1, ssc, "{} {} states diverged", kind.name(), bits.describe());
+        }
+    }
+}
+
 type Fleet = (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
 
 /// Build a many-tensor fleet: mixed sizes (sub-block, exactly one block,

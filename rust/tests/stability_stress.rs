@@ -1,0 +1,192 @@
+//! Stability-hardening stress tests — the PR-7 tentpole contract.
+//!
+//! The headline scenario mirrors the `configs/stability_stress.toml`
+//! setup at the optimizer level: a momentum run hit by periodic gradient
+//! spikes. Without percentile clipping the spikes fold straight into the
+//! velocity and the loss blows through the detector's hard ceiling; with
+//! `clip_percentile = 95` the rolling gnorm window flags each spike as an
+//! outlier, scales it down to the distribution's own 95th percentile, and
+//! the run survives.
+//!
+//! These tests also pin the per-group override path end to end (spec →
+//! `ParamOptimizer` → fused batch → global clip counters) and that the
+//! shipped stress config parses.
+//!
+//! The clip/unorm counters are process-global (`optim::take_clip_events`,
+//! `take_unorm_clips`), so every test that drains them holds COUNTER_LOCK
+//! — unit tests elsewhere deliberately never assert exact counts.
+
+use std::sync::Mutex;
+
+use bitopt8::config::RunConfig;
+use bitopt8::coordinator::StabilityDetector;
+use bitopt8::optim::{
+    build, take_clip_events, take_unorm_clips, Bits, GroupOverride, OptimConfig, OptimKind,
+    OptimSpec, ParamOptimizer, TensorInfo,
+};
+use bitopt8::util::rng::Rng;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Momentum on a quadratic, with an additive gradient spike every 16th
+/// step (the stress config's `[fault]` shape). Returns the detector
+/// verdict, the drained clip-event count, and the final loss.
+fn spiked_momentum_run(clip_percentile: f32) -> (Option<&'static str>, u64, f64) {
+    let n = 512;
+    let mut cfg = OptimConfig::adam(0.05, Bits::b8_dynamic());
+    cfg.kind = OptimKind::Momentum;
+    cfg.beta1 = 0.9;
+    cfg.beta2 = 0.0;
+    cfg.clip_percentile = clip_percentile;
+    let mut opt = build(&cfg, n, None);
+    let mut rng = Rng::new(0x57E55);
+    let target: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut p = vec![0.0f32; n];
+    let mut detector = StabilityDetector::new();
+    take_clip_events(); // scope the counter to this run
+    let mut clips = 0u64;
+    let mut loss = f64::NAN;
+    for step in 1..=60usize {
+        let mut g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+        if step % 16 == 0 {
+            // additive spike: a constant blast, not proportional to the
+            // (shrinking) error — the unclipped velocity integrates it
+            for v in g.iter_mut() {
+                *v += 50.0;
+            }
+        }
+        opt.step(&mut p, &g);
+        clips += take_clip_events();
+        loss = 0.5
+            * p.iter()
+                .zip(&target)
+                .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum::<f64>()
+            / n as f64;
+        if !detector.observe(loss) {
+            break;
+        }
+    }
+    (detector.reason(), clips, loss)
+}
+
+#[test]
+fn percentile_clip_survives_spikes_that_kill_the_unclipped_run() {
+    let _g = locked();
+    // Unclipped baseline: the first spike displaces every element by
+    // ~lr * 50 / (1 - beta) = 25, so the loss (~312) blasts through the
+    // hard ceiling and the detector trips.
+    let (reason, clips, _) = spiked_momentum_run(0.0);
+    assert!(reason.is_some(), "unclipped baseline must trip the detector");
+    assert_eq!(clips, 0, "clip_percentile = 0 must never clip");
+
+    // Clipped run: by the first spike the window holds 15 steady gnorms,
+    // so the 95th percentile is an ordinary norm and the spike is scaled
+    // to it — the run converges through all three spikes.
+    let (reason, clips, loss) = spiked_momentum_run(95.0);
+    assert_eq!(reason, None, "clipped run must survive the spikes");
+    assert!(clips >= 3, "each of the 3 spikes must register a clip event, got {clips}");
+    assert!(loss < 1.0, "clipped run should still be converging, loss {loss}");
+}
+
+#[test]
+fn per_group_stability_overrides_resolve_and_fire() {
+    let _g = locked();
+    let tensors: Vec<TensorInfo> = [("embed.tok", 4096usize), ("lm_head", 3000)]
+        .into_iter()
+        .map(|(name, size)| TensorInfo {
+            name: name.to_string(),
+            size,
+            shape: None,
+            padded: size.next_multiple_of(2048),
+        })
+        .collect();
+    // Base config: plain coupled-wd Adam. One group turns all three
+    // stability mechanisms on for the embeddings only.
+    let mut base = OptimConfig::adam(0.01, Bits::b8_dynamic());
+    base.weight_decay = 0.01;
+    let spec = OptimSpec::with_groups(
+        base,
+        vec![GroupOverride::parse("embed.*:clip_percentile=95,max_unorm=0.05,skip_zeros=true")
+            .unwrap()],
+    );
+    let mut popt = ParamOptimizer::build(spec, &tensors, None).unwrap();
+
+    // The group surface reports the resolved knobs per group.
+    let reports = popt.group_reports();
+    assert_eq!(reports[0].clip_percentile, 0.0);
+    assert!(!reports[0].skip_zeros);
+    assert!((reports[1].clip_percentile - 95.0).abs() < 1e-6);
+    assert!((reports[1].max_unorm - 0.05).abs() < 1e-9);
+    assert!(reports[1].skip_zeros);
+
+    let mut rng = Rng::new(0x6A0B);
+    let mut params: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let p0 = params.clone();
+    // Even-indexed gradient elements are exactly zero in both tensors.
+    let grads: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|t| {
+            (0..t.size)
+                .map(|i| if i % 2 == 0 { 0.0 } else { rng.normal() as f32 * 0.1 })
+                .collect()
+        })
+        .collect();
+
+    take_clip_events();
+    take_unorm_clips();
+    for step in 1..=10usize {
+        let scale = if step == 8 { 100.0f32 } else { 1.0 };
+        let g: Vec<Vec<f32>> = grads
+            .iter()
+            .map(|g| g.iter().map(|v| v * scale).collect())
+            .collect();
+        popt.step_native(&mut params, &g);
+    }
+    let clips = take_clip_events();
+    let unorms = take_unorm_clips();
+    assert!(clips >= 1, "the step-8 spike must clip the embed group, got {clips}");
+    assert!(unorms >= 1, "max_unorm = 0.05 is tight enough to fire, got {unorms}");
+
+    // skip_zeros (embed group): zero-grad elements are bitwise untouched,
+    // even with coupled weight decay on the base config.
+    for i in (0..tensors[0].size).step_by(2) {
+        assert_eq!(params[0][i], p0[0][i], "embed.tok[{i}] must be untouched");
+    }
+    // lm_head has no skip_zeros: coupled wd moves zero-grad elements too.
+    let moved = (0..tensors[1].size)
+        .step_by(2)
+        .filter(|&i| params[1][i] != p0[1][i])
+        .count();
+    assert!(moved > tensors[1].size / 4, "lm_head zero-grad elements must decay, {moved} moved");
+}
+
+#[test]
+fn shipped_stress_config_parses_and_resolves() {
+    // cargo runs integration tests from the package root, where configs/
+    // lives; the CI config-matrix lane additionally runs this file with
+    // --dry-run.
+    let cfg = RunConfig::from_file("configs/stability_stress.toml").unwrap();
+    assert!(cfg.optim.stability_on());
+    assert_eq!(cfg.optim.kind, OptimKind::Momentum);
+    assert!((cfg.optim.clip_percentile - 95.0).abs() < 1e-6);
+    assert!(cfg.optim.skip_zeros);
+    assert_eq!(cfg.grad_clip, 0.0, "percentile clipping must be the only defense");
+    assert_eq!(cfg.fault.spike_every, 16);
+    assert!((cfg.fault.spike_scale - 50.0).abs() < 1e-6);
+    assert_eq!(cfg.fault.zero_stride, 7);
+    let spec = cfg.optim_spec();
+    spec.validate().unwrap();
+    // the per-group opt-out resolves: lm_head keeps clipping but not unorm
+    let (head, g) = spec.resolve("lm_head");
+    assert_eq!(g, 1);
+    assert_eq!(head.max_unorm, 0.0);
+    assert!((head.clip_percentile - 95.0).abs() < 1e-6);
+}

@@ -110,6 +110,88 @@ fn streaming_matches_fused_and_serial_across_thread_counts() {
     }
 }
 
+/// Fleet with the stability phases on: every tensor clips via the
+/// percentile window, a tight `max_unorm` drives the u-materialization
+/// path, and `skip_zeros` sees stride-zeroed gradients.
+fn stabilized_fleet(bits: Bits) -> Fleet {
+    let spec: Vec<(OptimKind, usize)> = vec![
+        (OptimKind::Adam, 2049),
+        (OptimKind::AdamW, 300),
+        (OptimKind::Momentum, 4096),
+        (OptimKind::Adagrad, 5000),
+        (OptimKind::Adam, 1),
+    ];
+    let mut rng = Rng::new(0x57AB1);
+    let mut opts = Vec::new();
+    let mut params = Vec::new();
+    let mut grads = Vec::new();
+    for (kind, n) in spec {
+        let mut cfg = OptimConfig::adam(0.005, bits);
+        cfg.kind = kind;
+        cfg.clip_percentile = 95.0;
+        cfg.max_unorm = 0.05;
+        cfg.skip_zeros = true;
+        opts.push(build(&cfg, n, None));
+        params.push((0..n).map(|_| rng.normal() as f32).collect());
+        let mut g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        for v in g.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        grads.push(g);
+    }
+    (opts, params, grads)
+}
+
+#[test]
+fn stabilized_streaming_matches_fused_and_serial() {
+    // The clipped paths run norm phases with combines inside the batch;
+    // streaming admission must not change a single clip decision. Ten
+    // steps push every tensor past GNORM_MIN_HISTORY, with a spike step so
+    // the percentile clip actually engages.
+    let _g = locked();
+    for bits in [Bits::B32, Bits::b8_dynamic()] {
+        for threads in [Some(1usize), Some(4), None] {
+            at_threads(threads, || {
+                let mut serial = stabilized_fleet(bits);
+                let mut fused = stabilized_fleet(bits);
+                let mut stream = stabilized_fleet(bits);
+                for step in 0..10 {
+                    let scale = if step == 7 { 80.0f32 } else { 1.0 };
+                    for fl in [&mut serial, &mut fused, &mut stream] {
+                        for g in fl.2.iter_mut() {
+                            for v in g.iter_mut() {
+                                *v *= scale;
+                            }
+                        }
+                    }
+                    for i in 0..serial.0.len() {
+                        serial.0[i].step(&mut serial.1[i], &serial.2[i]);
+                    }
+                    {
+                        let (o, p, g) = &mut fused;
+                        fused_update(o, p, g);
+                    }
+                    {
+                        let (o, p, g) = &mut stream;
+                        streaming_update(o, p, g);
+                    }
+                    // undo the spike for the following steps
+                    for fl in [&mut serial, &mut fused, &mut stream] {
+                        for g in fl.2.iter_mut() {
+                            for v in g.iter_mut() {
+                                *v /= scale;
+                            }
+                        }
+                    }
+                }
+                let what = format!("stabilized {} / {threads:?} threads", bits.describe());
+                assert_fleet_eq(&serial, &fused, &format!("fused vs serial ({what})"));
+                assert_fleet_eq(&serial, &stream, &format!("streaming vs serial ({what})"));
+            });
+        }
+    }
+}
+
 type Entry<'a> = (&'a mut dyn Optimizer, &'a mut [f32], &'a [f32]);
 
 /// Stream one step, admitting tensors in the given order, with optional
