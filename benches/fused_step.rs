@@ -28,7 +28,12 @@
 //! * `stability_stress` — the fused Adam fleet with the stability phases
 //!   on (percentile clip, max_unorm, skip_zeros) vs the plain baseline,
 //!   under periodic gradient spikes; records drained clip-event counts so
-//!   CI can verify the phases engaged, not just that they were cheap.
+//!   CI can verify the phases engaged, not just that they were cheap;
+//! * `shard_sweep` — the same 8-bit Adam fleet partitioned across 1/2/4/8
+//!   ZeRO-style shards (greedy bytes-balanced placement, one streaming
+//!   batch per shard); records the max per-shard state bytes alongside
+//!   step time — placement is bit-identical, so the footprint/step-time
+//!   pair is the whole story.
 //!
 //! The first two workloads also run a `streaming` variant: admission per
 //! tensor costs more dispatch than the fused one-batch-per-phase, which is
@@ -43,9 +48,9 @@
 use std::time::Duration;
 
 use bitopt8::optim::{
-    build,
+    assign_greedy, build,
     engine::{fused_update, streaming_update, StreamingStep},
-    take_clip_events, take_unorm_clips, Bits, OptimConfig, OptimKind, Optimizer,
+    sharded_update, take_clip_events, take_unorm_clips, Bits, OptimConfig, OptimKind, Optimizer,
 };
 use bitopt8::quant::Format;
 use bitopt8::util::args::Args;
@@ -110,6 +115,10 @@ struct Entry {
     /// Percentile-clip + unorm-clip events drained across the variant's
     /// bench loop (0 for workloads without stability phases).
     clip_events: u64,
+    /// Largest per-shard optimizer-state footprint for the variant's
+    /// placement (0 for unsharded workloads) — the memory a single shard
+    /// must actually hold.
+    max_shard_bytes: u64,
 }
 
 fn record(e: Entry, out: &mut Vec<Entry>) {
@@ -162,6 +171,7 @@ fn run_workload(
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
+            max_shard_bytes: 0,
         };
         record(e, out);
     }
@@ -191,6 +201,7 @@ fn run_width_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
+            max_shard_bytes: 0,
         };
         record(e, out);
     }
@@ -233,6 +244,7 @@ fn run_simd_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
                 speedup_vs_base: base_us / us,
                 bytes_per_element: fleet_bytes_per_element(&opts, &params),
                 clip_events: 0,
+                max_shard_bytes: 0,
             };
             record(e, out);
         }
@@ -296,6 +308,7 @@ fn run_overlap(
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
+            max_shard_bytes: 0,
         };
         record(e, out);
     }
@@ -365,6 +378,53 @@ fn run_stability_stress(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             speedup_vs_base: base_us / us,
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events,
+            max_shard_bytes: 0,
+        };
+        record(e, out);
+    }
+}
+
+/// The shard sweep: the same 8-bit Adam fleet partitioned across 1/2/4/8
+/// ZeRO-style shards via the greedy bytes-balanced placement, each shard
+/// stepping its tensors as an independent streaming batch. Placement is
+/// bit-identical to the unsharded step, so the interesting outputs are
+/// `max_shard_bytes` (the footprint one shard must hold — it should fall
+/// roughly as 1/N) against `us_per_step` (the dispatch cost of N batches).
+fn run_shard_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
+    let bits = Bits::b8_dynamic();
+    let mut base_us = 0.0f64;
+    for n_shards in [1usize, 2, 4, 8] {
+        let (mut opts, mut params, grads) = fleet(spec, bits);
+        let state_bytes: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let assignment = assign_greedy(&state_bytes, n_shards);
+        let mut shard_bytes = vec![0u64; n_shards];
+        for (i, &sh) in assignment.iter().enumerate() {
+            shard_bytes[sh] += state_bytes[i] as u64;
+        }
+        let variant = match n_shards {
+            1 => "shards1",
+            2 => "shards2",
+            4 => "shards4",
+            _ => "shards8",
+        };
+        let r = bench(variant, budget, 2000, || {
+            sharded_update(&mut opts, &mut params, &grads, &assignment, n_shards)
+        });
+        let us = r.median_ns / 1e3;
+        if n_shards == 1 {
+            base_us = us;
+        }
+        let e = Entry {
+            workload: "shard_sweep",
+            optimizer: "adam",
+            bits: bits.describe(),
+            variant,
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_base: base_us / us,
+            bytes_per_element: fleet_bytes_per_element(&opts, &params),
+            clip_events: 0,
+            max_shard_bytes: shard_bytes.iter().copied().max().unwrap_or(0),
         };
         record(e, out);
     }
@@ -439,6 +499,10 @@ fn main() {
     // vs plain fused Adam under periodic gradient spikes, with clip-event
     // counts proving the phases engaged (CI greps for them).
     run_stability_stress(&adam_many_small(n_tensors, n), budget, &mut entries);
+    // The shard sweep: ZeRO-style placement of the 8-bit Adam fleet at
+    // 1/2/4/8 shards — max per-shard footprint vs step time (CI greps for
+    // the workload so the placement layer stays on the perf record).
+    run_shard_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
 
     let results: Vec<Json> = entries
         .iter()
@@ -453,6 +517,7 @@ fn main() {
                 ("speedup_vs_base", num(e.speedup_vs_base)),
                 ("bytes_per_element", num(e.bytes_per_element)),
                 ("clip_events", num(e.clip_events as f64)),
+                ("max_shard_bytes", num(e.max_shard_bytes as f64)),
             ])
         })
         .collect();

@@ -36,7 +36,9 @@
 //! # Parameter groups: ordered overrides on the base config, first match
 //! # wins (glob patterns: `*`, `?`, `|` alternation). Any subset of
 //! # bits/format/blockwise/lr/weight_decay/beta1/beta2/eps/
-//! # clip_percentile/max_unorm/skip_zeros may be set.
+//! # clip_percentile/max_unorm/skip_zeros/shards may be set; `shards` is
+//! # the placement axis (engine layer 5) — it partitions the group's
+//! # quantized state across N ZeRO-style shards without changing the math.
 //! [[optimizer.group]]
 //! pattern = "embed.tok|embed.pos"
 //! bits = 32                 # stable-embedding policy, spelled explicitly
@@ -48,6 +50,19 @@
 //! [[optimizer.group]]
 //! pattern = "block?.attn.*"  # 4-bit states for the attention projections
 //! bits = 4                   # format/blockwise inherit from the base
+//! shards = 4                 # partition this group's state across 4 shards
+//!
+//! [placement]               # ZeRO-style state placement (engine layer 5)
+//! shards = 1                # default shard count for every group that does
+//!                           # not set its own `shards =`; 1..=64. N-shard
+//!                           # runs are bit-identical to N = 1 — placement
+//!                           # only moves state, it never changes the math.
+//!                           # With shards > 1, checkpoints are written as a
+//!                           # v5 manifest (`ck.bin`) plus one file per shard
+//!                           # (`ck.bin.shard00`, `ck.bin.shard01`, ...);
+//!                           # any layout restores into any other (states
+//!                           # are keyed by tensor name, not shard), so an
+//!                           # N-shard checkpoint reshards freely into M.
 //!
 //! [train]
 //! steps = 300
@@ -73,8 +88,10 @@
 //!
 //! CLI: `--override "pattern:key=val[,key=val]"` adds groups ahead of the
 //! file's (`;` separates several), `--emb32` appends the stable-embedding
-//! sugar. Unsupported combinations (e.g. `adafactor` with `bits = 8`, or
-//! `quantile` without block-wise normalization) are rejected at parse time.
+//! sugar, `--shards N` overrides `[placement] shards`. Unsupported
+//! combinations (e.g. `adafactor` with `bits = 8`, `quantile` without
+//! block-wise normalization, or `shards > 1` on a factored optimizer) are
+//! rejected at parse time.
 
 pub mod toml;
 
@@ -204,6 +221,9 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Corpus noise level (LM difficulty).
     pub data_noise: f64,
+    /// Default placement shard count (`[placement] shards`); groups may
+    /// override per-group. 1 = placement off.
+    pub shards: u32,
     pub log_jsonl: Option<String>,
     /// Deterministic gradient-fault injection (stress configs).
     pub fault: FaultConfig,
@@ -225,6 +245,7 @@ impl Default for RunConfig {
             engine: Engine::Native,
             artifacts_dir: "artifacts".into(),
             data_noise: 0.25,
+            shards: 1,
             log_jsonl: None,
             fault: FaultConfig::default(),
         }
@@ -272,6 +293,8 @@ impl RunConfig {
             d.f64_or("optimizer", "max_unorm", cfg.optim.max_unorm as f64) as f32;
         cfg.optim.skip_zeros = d.bool_or("optimizer", "skip_zeros", cfg.optim.skip_zeros);
 
+        cfg.shards = d.usize_or("placement", "shards", cfg.shards as usize) as u32;
+
         cfg.fault.spike_every = d.usize_or("fault", "spike_every", 0);
         cfg.fault.spike_scale = d.f64_or("fault", "spike_scale", 100.0) as f32;
         cfg.fault.zero_stride = d.usize_or("fault", "zero_stride", 0);
@@ -302,9 +325,12 @@ impl RunConfig {
         Self::from_toml(&text)
     }
 
-    /// The run's optimizer spec: base config + parameter groups.
+    /// The run's optimizer spec: base config + parameter groups + default
+    /// placement shard count.
     pub fn optim_spec(&self) -> OptimSpec {
-        OptimSpec::with_groups(self.optim, self.groups.clone())
+        let mut spec = OptimSpec::with_groups(self.optim, self.groups.clone());
+        spec.default_shards = self.shards;
+        spec
     }
 
     /// Append the §2.3 stable-embedding policy (the historical `emb32`
@@ -374,6 +400,9 @@ impl RunConfig {
         if a.flag("emb32") {
             self.push_emb32();
         }
+        if let Some(v) = a.get("shards") {
+            self.shards = v.parse()?;
+        }
         if let Some(v) = a.get("log") {
             self.log_jsonl = Some(v.to_string());
         }
@@ -387,13 +416,19 @@ impl RunConfig {
         } else {
             self.groups.iter().map(|g| g.describe()).collect::<Vec<_>>().join(" ")
         };
+        let placement = if self.shards > 1 {
+            format!(" shards={}", self.shards)
+        } else {
+            String::new()
+        };
         format!(
-            "{} | {} | steps={} seed={} engine={} groups={}",
+            "{} | {} | steps={} seed={} engine={}{} groups={}",
             self.model,
             self.optim.describe(),
             self.steps,
             self.seed,
             self.engine.name(),
+            placement,
             groups
         )
     }
@@ -665,5 +700,47 @@ nan_at = 7
             "[optimizer]\nkind = \"adafactor\"\n\n[[optimizer.group]]\npattern = \"embed.*\"\nbits = 4\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn placement_shards_from_toml_and_cli() {
+        // [placement] sets the spec-wide default; groups can override.
+        let cfg = RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 8\n\n\
+             [placement]\nshards = 2\n\n\
+             [[optimizer.group]]\npattern = \"block?.*\"\nshards = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 2);
+        let spec = cfg.optim_spec();
+        assert_eq!(spec.default_shards, 2);
+        assert_eq!(spec.shards_of(0), 2, "default group inherits [placement]");
+        assert_eq!(spec.shards_of(1), 4, "group override wins");
+        assert!(cfg.describe().contains("shards=2"));
+
+        // --shards overrides the file and is re-validated.
+        let mut cfg = RunConfig::default();
+        let args =
+            Args::parse(["train", "--shards", "4"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.optim_spec().default_shards, 4);
+
+        // out-of-range and unshardable-optimizer placements fail at parse time
+        assert!(RunConfig::from_toml("[placement]\nshards = 0\n").is_err());
+        assert!(RunConfig::from_toml("[placement]\nshards = 65\n").is_err());
+        let err = RunConfig::from_toml(
+            "[optimizer]\nkind = \"adafactor\"\n\n[placement]\nshards = 2\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("shardable"), "{err:#}");
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"sm3\"\n\n[[optimizer.group]]\npattern = \"x\"\nshards = 2\n"
+        )
+        .is_err());
+        let mut cfg = RunConfig::default();
+        let args =
+            Args::parse(["train", "--shards", "99"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
     }
 }

@@ -3,6 +3,11 @@
 //! re-used `--log-jsonl` path used to silently interleave two runs'
 //! records, including two `"groups"` headers, in one file). The experiment
 //! harness and examples tail these files to build loss curves.
+//!
+//! The `"groups"` header record carries the placement axis alongside each
+//! group's quantization config: `shards`, the per-shard `shard_state_bytes`
+//! array, and `max_shard_bytes` (the footprint a single shard must hold —
+//! what ZeRO-style sharding actually bounds).
 
 use std::fs::File;
 use std::io::{BufWriter, Write};

@@ -58,6 +58,15 @@ pub struct RunResult {
     pub state_bytes: usize,
     /// Per parameter group: (label, optimizer-state bytes).
     pub group_state_bytes: Vec<(String, usize)>,
+    /// Largest per-shard state footprint — with ZeRO-style placement this,
+    /// not `state_bytes`, bounds one worker's memory (equal to
+    /// `state_bytes` when placement is off).
+    pub max_shard_state_bytes: usize,
+    /// Per parameter group: (label, max per-shard state bytes) — the
+    /// sharded counterpart of `group_state_bytes`.
+    pub group_max_shard_bytes: Vec<(String, usize)>,
+    /// Global placement shard count (1 = placement off).
+    pub shards: usize,
     pub wall_secs: f64,
     pub steps_done: usize,
     pub hlo_updated_tensors: usize,
@@ -149,6 +158,17 @@ impl<'rt> Trainer<'rt> {
                         ("clip_percentile", num(g.clip_percentile as f64)),
                         ("max_unorm", num(g.max_unorm as f64)),
                         ("skip_zeros", Json::Bool(g.skip_zeros)),
+                        ("shards", num(g.shards as f64)),
+                        (
+                            "shard_state_bytes",
+                            Json::Arr(
+                                g.shard_state_bytes
+                                    .iter()
+                                    .map(|&b| num(b as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        ("max_shard_bytes", num(g.max_shard_bytes() as f64)),
                     ])
                 })
                 .collect();
@@ -442,14 +462,19 @@ impl<'rt> Trainer<'rt> {
     /// Run the configured number of steps (stopping early on instability).
     pub fn train(&mut self) -> Result<RunResult> {
         let t0 = Instant::now();
+        let reports = self.popt.group_reports();
         let mut res = RunResult {
             state_bytes: self.state_bytes(),
-            group_state_bytes: self
-                .popt
-                .group_reports()
-                .into_iter()
-                .map(|g| (g.label, g.state_bytes))
+            group_state_bytes: reports
+                .iter()
+                .map(|g| (g.label.clone(), g.state_bytes))
                 .collect(),
+            max_shard_state_bytes: self.popt.max_shard_state_bytes(),
+            group_max_shard_bytes: reports
+                .iter()
+                .map(|g| (g.label.clone(), g.max_shard_bytes()))
+                .collect(),
+            shards: self.popt.shard_layout().n_shards,
             hlo_updated_tensors: self.popt.n_hlo(),
             ..Default::default()
         };
@@ -503,6 +528,21 @@ impl<'rt> Trainer<'rt> {
             self.popt.n_hlo()
         );
         Ok(Checkpoint::capture(self.step as u64, &self.data_rng, &self.params, &self.popt))
+    }
+
+    /// Capture a checkpoint and write it to disk in the layout matching the
+    /// run's placement: with `shards > 1` this emits the v5 manifest plus one
+    /// file per shard (written shard-parallel off the worker pool, mirroring
+    /// the tensor→shard assignment), otherwise the monolithic v4 file.
+    /// Either layout restores into any placement via [`Checkpoint::load`].
+    pub fn save_checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        let ck = self.checkpoint()?;
+        let layout = self.popt.shard_layout();
+        if layout.n_shards > 1 {
+            ck.save_sharded(path, &layout.assignment, layout.n_shards)
+        } else {
+            ck.save(path)
+        }
     }
 
     /// Restore a checkpoint captured from an equivalently-configured run

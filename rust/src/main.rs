@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! bitopt8 train   [--config cfg.toml] [--model tiny_stable] [--optimizer adam8]
-//!                 [--override "pattern:key=val,..."] [--emb32] [--dry-run] ...
+//!                 [--override "pattern:key=val,..."] [--emb32] [--shards N]
+//!                 [--dry-run] ...
 //! bitopt8 repro   table1|table2|...|table8|fig3 [--steps N] [--seeds K]
 //! bitopt8 analyze fig2|fig4|fig5|fig6 [--n N]
 //! bitopt8 info    [--artifacts DIR]
@@ -11,8 +12,10 @@
 //!
 //! `train --dry-run` parses + validates the config (base optimizer,
 //! parameter groups, unsupported combos) and prints the resolved group
-//! layout over a representative LM tensor set — no artifacts needed, so CI
-//! smoke-checks every example TOML with it.
+//! layout over a representative LM tensor set — plus, when placement is on
+//! (`[placement] shards` or `--shards N`), the tensor→shard assignment
+//! table. No artifacts needed, so CI smoke-checks every example TOML with
+//! it.
 
 use anyhow::Result;
 
@@ -98,6 +101,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         // representative tensor set and print the group layout.
         let popt = ParamOptimizer::build(cfg.optim_spec(), &dry_run_tensors(), None)?;
         println!("{}", popt.describe());
+        if let Some(placement) = popt.describe_placement() {
+            println!("{placement}");
+        }
         println!("dry run OK (config parses, spec validates, optimizers build)");
         return Ok(());
     }
@@ -110,6 +116,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         tr.state_bytes() as f64 / 1e6,
     );
     println!("{}", tr.param_optimizer().describe());
+    if let Some(placement) = tr.param_optimizer().describe_placement() {
+        println!("{placement}");
+    }
     let res = tr.train()?;
     println!("{} tensors updated via the HLO (Pallas) engine", res.hlo_updated_tensors);
     let first = res.losses.first().copied().unwrap_or(f64::NAN);

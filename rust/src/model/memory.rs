@@ -124,6 +124,31 @@ impl MemoryModel {
             .max_by(|a, b| a.params.partial_cmp(&b.params).unwrap())
             .copied()
     }
+
+    /// Total footprint per device under ZeRO-1-style state placement:
+    /// only the optimizer-state term divides by `shards` — weights,
+    /// gradients, master copies, and activations stay replicated on every
+    /// shard (that is what distinguishes stage 1 from ZeRO-2/3).
+    pub fn total_bytes_sharded(&self, m: &NamedModel, kind: OptStateKind, shards: u32) -> f64 {
+        let full = self.total_bytes(m, kind);
+        let state = self.state_bytes(m.params, kind);
+        full - state + state / shards.max(1) as f64
+    }
+
+    /// Largest model trainable within `budget_gb` when the optimizer state
+    /// is spread across `shards` devices.
+    pub fn largest_finetunable_sharded(
+        &self,
+        budget_gb: f64,
+        kind: OptStateKind,
+        shards: u32,
+    ) -> Option<NamedModel> {
+        KNOWN_MODELS
+            .iter()
+            .filter(|m| self.total_bytes_sharded(m, kind, shards) <= budget_gb * 1e9)
+            .max_by(|a, b| a.params.partial_cmp(&b.params).unwrap())
+            .copied()
+    }
 }
 
 #[cfg(test)]
@@ -190,5 +215,32 @@ mod tests {
         let taf = mm.total_bytes(&m, OptStateKind::Adafactor);
         let t8 = mm.total_bytes(&m, OptStateKind::Adam8);
         assert!(t32 > taf && taf > t8);
+    }
+
+    #[test]
+    fn sharding_divides_only_the_state_term() {
+        let mm = MemoryModel::default();
+        let m = KNOWN_MODELS[6]; // GPT-2-large
+        let full = mm.total_bytes(&m, OptStateKind::Adam32);
+        let state = mm.state_bytes(m.params, OptStateKind::Adam32);
+        let s4 = mm.total_bytes_sharded(&m, OptStateKind::Adam32, 4);
+        // saved exactly 3/4 of the state, nothing else
+        assert!((full - s4 - state * 0.75).abs() < 1.0, "{}", full - s4);
+        // shards = 1 is a no-op
+        assert_eq!(mm.total_bytes_sharded(&m, OptStateKind::Adam32, 1), full);
+        // monotone in shard count
+        assert!(mm.total_bytes_sharded(&m, OptStateKind::Adam32, 8) < s4);
+        // a sharded run admits at least the unsharded models at any budget
+        for budget in [6.0, 11.0, 24.0] {
+            let p1 = mm
+                .largest_finetunable(budget, OptStateKind::Adam8)
+                .map(|m| m.params)
+                .unwrap_or(0.0);
+            let p4 = mm
+                .largest_finetunable_sharded(budget, OptStateKind::Adam8, 4)
+                .map(|m| m.params)
+                .unwrap_or(0.0);
+            assert!(p4 >= p1, "budget {budget}: sharded {p4} vs {p1}");
+        }
     }
 }

@@ -26,6 +26,11 @@
 //!    is still producing later tensors' gradients or driving the serial
 //!    PJRT dispatches of the HLO engine. Trades the fused step's
 //!    one-batch-per-phase dispatch for overlap with the producer.
+//! 5. **Sharded placement** (`optim::shard`) — parameter groups
+//!    partitioned across ZeRO-style shards, each shard stepping its
+//!    tensors as an independent [`StreamingStep`] and the step ending in a
+//!    deterministic shard-order drain (the all-gather). Placement moves
+//!    state, never math: bit-identical to the unsharded step.
 //!
 //! Determinism: items never share mutable state, in-block order is fixed,
 //! combines fold partials in fixed order between barriers — so the fused

@@ -11,9 +11,11 @@
 //!   alternation).
 //! * [`GroupOverride`] — a pattern plus optional `bits` / `format` /
 //!   `blockwise` / `lr` / `weight_decay` / `beta1` / `beta2` / `eps` /
-//!   `clip_percentile` / `max_unorm` / `skip_zeros` overrides, parseable
-//!   from `"pattern:key=val,key=val"` (the CLI `--override` syntax) or a
-//!   `[[optimizer.group]]` TOML table.
+//!   `clip_percentile` / `max_unorm` / `skip_zeros` / `shards` overrides,
+//!   parseable from `"pattern:key=val,key=val"` (the CLI `--override`
+//!   syntax) or a `[[optimizer.group]]` TOML table. `shards` is the
+//!   *placement* axis (engine layer 5, `optim::shard`): how many simulated
+//!   shards this group's optimizer state is partitioned across.
 //! * [`ParamOptimizer`] — built from an [`OptimSpec`](super::OptimSpec)
 //!   (base config + ordered overrides, first match wins) and the model's
 //!   tensor list; owns the per-tensor `Box<dyn Optimizer>`s and their HLO
@@ -35,6 +37,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::shard::ShardLayout;
 use super::spec::OptimSpec;
 use super::{Bits, FusedStep, OptimConfig, Optimizer, StreamingStep};
 use crate::config::toml::TomlValue;
@@ -115,6 +118,13 @@ pub struct GroupOverride {
     pub max_unorm: Option<f32>,
     /// Leave moments and params untouched where the gradient is exactly 0.
     pub skip_zeros: Option<bool>,
+    /// Placement: partition this group's optimizer state across N simulated
+    /// shards (1 = unsharded, the default; validated in `1..=MAX_SHARDS`).
+    /// Unlike the other keys this never changes the resolved
+    /// [`OptimConfig`] — placement is *where* state lives, not *what* the
+    /// update computes, and the N-shard path is pinned bit-identical to
+    /// the single-shard path.
+    pub shards: Option<u32>,
 }
 
 impl GroupOverride {
@@ -221,10 +231,22 @@ impl GroupOverride {
                         .map_err(|_| anyhow!("skip_zeros must be true or false, got {val:?}"))?,
                 );
             }
+            "shards" => {
+                let s: u32 = val
+                    .parse()
+                    .map_err(|_| anyhow!("override key shards: bad value {val:?}"))?;
+                ensure!(
+                    (1..=super::shard::MAX_SHARDS).contains(&s),
+                    "shards must be in 1..={}, got {s}",
+                    super::shard::MAX_SHARDS
+                );
+                self.shards = Some(s);
+            }
             other => {
                 return Err(anyhow!(
                     "unknown override key {other:?} (known: bits, format, blockwise, lr, \
-                     weight_decay, beta1, beta2, eps, clip_percentile, max_unorm, skip_zeros)"
+                     weight_decay, beta1, beta2, eps, clip_percentile, max_unorm, skip_zeros, \
+                     shards)"
                 ))
             }
         }
@@ -243,6 +265,7 @@ impl GroupOverride {
             || self.clip_percentile.is_some()
             || self.max_unorm.is_some()
             || self.skip_zeros.is_some()
+            || self.shards.is_some()
     }
 
     pub fn pattern(&self) -> &Pattern {
@@ -303,6 +326,25 @@ impl GroupOverride {
                 self.pattern().as_str()
             ));
         }
+        if let Some(s) = self.shards {
+            ensure!(
+                (1..=super::shard::MAX_SHARDS).contains(&s),
+                "group {:?}: shards must be in 1..={}, got {s}",
+                self.pattern().as_str(),
+                super::shard::MAX_SHARDS
+            );
+            // groups cannot override the optimizer kind, so the resolved
+            // kind is the base kind
+            if s > 1 && !base.kind.supports_sharding() {
+                return Err(anyhow!(
+                    "group {:?} requests shards = {s}, but {} has no shardable fused \
+                     plan (its factored statistics are not element-proportional); \
+                     use shards = 1",
+                    self.pattern().as_str(),
+                    base.kind.name()
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -341,6 +383,9 @@ impl GroupOverride {
         }
         if let Some(v) = self.skip_zeros {
             parts.push(format!("skip_zeros={v}"));
+        }
+        if let Some(v) = self.shards {
+            parts.push(format!("shards={v}"));
         }
         format!("{}:{}", self.pattern().as_str(), parts.join(","))
     }
@@ -397,6 +442,12 @@ pub struct GroupReport {
     pub tensors: usize,
     pub params: usize,
     pub state_bytes: usize,
+    /// Placement: how many shards this group's state is partitioned across
+    /// (1 = unsharded).
+    pub shards: u32,
+    /// State bytes per shard of this group (`shards` entries; all zeros
+    /// for an unmatched group). Sums to `state_bytes`.
+    pub shard_state_bytes: Vec<usize>,
 }
 
 impl GroupReport {
@@ -408,6 +459,12 @@ impl GroupReport {
         } else {
             self.state_bytes as f64 / self.params as f64
         }
+    }
+
+    /// The group's largest per-shard footprint — what one worker actually
+    /// holds for this group (equals `state_bytes` when unsharded).
+    pub fn max_shard_bytes(&self) -> usize {
+        self.shard_state_bytes.iter().copied().max().unwrap_or(self.state_bytes)
     }
 }
 
@@ -533,6 +590,9 @@ struct TensorSlot {
 pub struct ParamOptimizer {
     spec: OptimSpec,
     slots: Vec<TensorSlot>,
+    /// Resolved tensor → shard placement (engine layer 5; trivial
+    /// single-shard layout when placement is off).
+    layout: ShardLayout,
 }
 
 impl ParamOptimizer {
@@ -547,6 +607,13 @@ impl ParamOptimizer {
         hlo: Option<HloEnv<'_>>,
     ) -> Result<ParamOptimizer> {
         spec.validate()?;
+        let sharded = (0..=spec.groups.len()).any(|g| spec.shards_of(g) > 1);
+        ensure!(
+            !(sharded && hlo.is_some()),
+            "sharded placement (shards > 1) is not supported with the HLO engine: \
+             shard ownership of the dequantize→update→requantize pipeline requires \
+             the native fused plans"
+        );
         let mut slots = Vec::with_capacity(tensors.len());
         for t in tensors {
             let (cfg, group) = spec.resolve(&t.name);
@@ -561,7 +628,14 @@ impl ParamOptimizer {
                 hlo: mirror,
             });
         }
-        Ok(ParamOptimizer { spec, slots })
+        let layout = ShardLayout::build(
+            &spec,
+            &slots
+                .iter()
+                .map(|s| (s.group, s.opt.state_bytes(), s.size))
+                .collect::<Vec<_>>(),
+        );
+        Ok(ParamOptimizer { spec, slots, layout })
     }
 
     /// HLO mirror for one tensor, from its *resolved* config. Artifacts
@@ -631,6 +705,23 @@ impl ParamOptimizer {
         self.slots.iter().filter(|s| s.hlo.is_some()).count()
     }
 
+    /// The resolved tensor → shard placement (trivial when placement is
+    /// off; see `optim::shard`).
+    pub fn shard_layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Largest per-shard optimizer-state footprint — with ZeRO-style
+    /// placement this, not [`ParamOptimizer::state_bytes`], bounds one
+    /// worker's memory. Equals the total when unsharded.
+    pub fn max_shard_state_bytes(&self) -> usize {
+        if self.layout.n_shards <= 1 {
+            self.state_bytes()
+        } else {
+            self.layout.max_shard_bytes()
+        }
+    }
+
     /// Split the model into its two execution engines for one training
     /// step: a [`NativeStream`] over every native tensor (queued in the
     /// group-aware admission order) and the list of [`HloDispatch`] units
@@ -690,13 +781,31 @@ impl ParamOptimizer {
         }
     }
 
-    /// One fused native training step over every tensor that is not on the
-    /// HLO engine: all tensors' phased plans merged phase-aligned into one
-    /// pool batch per phase (see `optim::engine`). Bit-identical to
-    /// stepping the tensors serially.
+    /// One native training step over every tensor that is not on the HLO
+    /// engine. Unsharded (`n_shards == 1`): all tensors' phased plans
+    /// merged phase-aligned into one pool batch per phase (see
+    /// `optim::engine`). Sharded: each shard runs its tensors as an
+    /// independent phased batch, drained in shard order at step end (see
+    /// `optim::shard`). Both are bit-identical to stepping the tensors
+    /// serially — placement is a scheduling choice, never a semantic one.
     pub fn step_native(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
         assert_eq!(self.slots.len(), params.len());
         assert_eq!(self.slots.len(), grads.len());
+        if self.layout.n_shards > 1 {
+            let assignment = &self.layout.assignment;
+            let tensors: Vec<(usize, &mut dyn Optimizer, &mut [f32], &[f32])> = self
+                .slots
+                .iter_mut()
+                .zip(params.iter_mut())
+                .zip(grads.iter())
+                .enumerate()
+                .map(|(i, ((slot, p), g))| {
+                    (assignment[i], slot.opt.as_mut(), p.as_mut_slice(), g.as_slice())
+                })
+                .collect();
+            super::shard::run_sharded(tensors, self.layout.n_shards);
+            return;
+        }
         let mut fused = FusedStep::new();
         for ((slot, p), g) in self.slots.iter_mut().zip(params.iter_mut()).zip(grads.iter()) {
             if slot.hlo.is_none() {
@@ -719,6 +828,7 @@ impl ParamOptimizer {
                 } else {
                     self.spec.groups[g - 1].apply(&self.spec.base)
                 };
+                let shards = self.spec.shards_of(g);
                 GroupReport {
                     label: self.spec.group_label(g),
                     config: cfg.describe(),
@@ -729,14 +839,18 @@ impl ParamOptimizer {
                     tensors: 0,
                     params: 0,
                     state_bytes: 0,
+                    shards,
+                    shard_state_bytes: vec![0; shards as usize],
                 }
             })
             .collect();
-        for slot in &self.slots {
+        for (i, slot) in self.slots.iter().enumerate() {
             let r = &mut reports[slot.group];
+            let bytes = slot.opt.state_bytes();
             r.tensors += 1;
             r.params += slot.size;
-            r.state_bytes += slot.opt.state_bytes();
+            r.state_bytes += bytes;
+            r.shard_state_bytes[self.layout.assignment[i]] += bytes;
         }
         reports
     }
@@ -746,7 +860,7 @@ impl ParamOptimizer {
         self.group_reports()
             .iter()
             .map(|r| {
-                format!(
+                let mut line = format!(
                     "group {:<24} {:<28} {:>3} tensors {:>10} params {:>10.2} KB state \
                      ({:.3} B/param)",
                     r.label,
@@ -755,10 +869,54 @@ impl ParamOptimizer {
                     r.params,
                     r.state_bytes as f64 / 1e3,
                     r.bytes_per_param()
-                )
+                );
+                if r.shards > 1 {
+                    line.push_str(&format!(
+                        " | {} shards, max {:.2} KB/shard",
+                        r.shards,
+                        r.max_shard_bytes() as f64 / 1e3
+                    ));
+                }
+                line
             })
             .collect::<Vec<_>>()
             .join("\n")
+    }
+
+    /// The tensor → shard assignment table (placement inspection without
+    /// running a step — the `--dry-run` output). `None` when placement is
+    /// off (single shard).
+    pub fn describe_placement(&self) -> Option<String> {
+        let layout = &self.layout;
+        if layout.n_shards <= 1 {
+            return None;
+        }
+        let mut lines = vec![format!(
+            "placement: {} shards | total state {:.2} KB | max shard {:.2} KB | \
+             all-gather {:.2} KB/step",
+            layout.n_shards,
+            self.state_bytes() as f64 / 1e3,
+            layout.max_shard_bytes() as f64 / 1e3,
+            layout.exchange_bytes() as f64 / 1e3
+        )];
+        for s in 0..layout.n_shards {
+            let tensors = layout.assignment.iter().filter(|&&a| a == s).count();
+            lines.push(format!(
+                "  shard {s}: {:>3} tensors {:>10} params {:>10.2} KB state",
+                tensors,
+                layout.shard_params[s],
+                layout.shard_bytes[s] as f64 / 1e3
+            ));
+        }
+        for (i, slot) in self.slots.iter().enumerate() {
+            lines.push(format!(
+                "  {:<24} (group {:<24}) -> shard {}",
+                slot.name,
+                self.spec.group_label(slot.group),
+                layout.assignment[i]
+            ));
+        }
+        Some(lines.join("\n"))
     }
 
     /// Dequantized snapshots of every optimizer state, keyed

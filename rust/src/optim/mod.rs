@@ -40,6 +40,7 @@ pub mod groups;
 pub mod lamb;
 pub mod lars;
 pub mod momentum;
+pub mod shard;
 pub mod sm3;
 pub mod spec;
 pub mod stability;
@@ -50,6 +51,7 @@ pub use groups::{
     GroupOverride, GroupReport, HloDispatch, HloEnv, HloMirror, NativeStream, ParamOptimizer,
     Pattern, StreamSlot, TensorInfo,
 };
+pub use shard::{assign_greedy, sharded_update, ShardLayout, MAX_SHARDS};
 pub use spec::{validate_config, OptimSpec};
 pub use stability::{take_clip_events, take_unorm_clips, GnormHistory};
 pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
@@ -206,6 +208,20 @@ impl OptimKind {
             self,
             OptimKind::Adam | OptimKind::AdamW | OptimKind::Momentum | OptimKind::Adagrad
         )
+    }
+
+    /// Whether a parameter group running this optimizer may be partitioned
+    /// across shards (`shards = N` placement). Sharding assigns whole
+    /// tensors to shards by state-byte load, so it needs state whose bytes
+    /// are proportional to the tensor's elements and an update that runs as
+    /// a self-contained phased plan per tensor — true for every elementwise
+    /// and norm-based optimizer. The factored optimizers (Adafactor, SM3)
+    /// keep row/column statistics whose footprint is *not*
+    /// element-proportional, which would make bytes-balanced placement
+    /// accounting meaningless; asking for `shards > 1` there is a config
+    /// error, not a silent fallback (`spec::validate_config`).
+    pub fn supports_sharding(&self) -> bool {
+        !matches!(self, OptimKind::Adafactor | OptimKind::Sm3)
     }
 
     /// AOT update-artifact key for the HLO engine, plus whether the

@@ -1,0 +1,326 @@
+//! Placement — engine layer 5: ZeRO-style partitioning of optimizer state
+//! across N simulated shards, with parameter groups as the unit of policy.
+//!
+//! The paper's premise is that optimizer state is the memory bottleneck;
+//! block-wise quantization shrinks it ~4x, and *partitioning* that state
+//! across workers (ZeRO-1) is the orthogonal axis. Here a shard is
+//! simulated on the single host: every tensor of a group is assigned to
+//! one of the group's `shards = N` shards by greedy bytes-balanced
+//! placement ([`assign_greedy`]), and a training step runs each shard's
+//! tensors as an independent phased batch on the existing worker pool —
+//! shard s owns the full dequantize → update → requantize of its tensors,
+//! and the step ends with a deterministic all-gather-style exchange
+//! (shards drained in shard order; since all shards share this process's
+//! memory the parameter copy is elided, but the published volume is
+//! accounted by [`ShardLayout::exchange_bytes`]).
+//!
+//! Determinism: sharding inherits bit-identity for free from the layers
+//! below. Tensors never share optimizer state, shard boundaries fall on
+//! whole tensors (and quantization blocks are tensor-local, so block
+//! boundaries are respected by construction), and each tensor walks its
+//! phases in the canonical [`StepPlan`](super::state::StepPlan)
+//! item/combine order with all reductions folded in fixed order — so *any*
+//! partition of the tensor set across concurrent
+//! [`StreamingStep`](super::StreamingStep)s produces the same bits as the
+//! single-shard fused path, at every thread count and lane width
+//! (`rust/tests/shard_parity.rs` pins shards {1,2,4,8} × threads × lanes ×
+//! bits × optimizers).
+//!
+//! Checkpointing: shard-parallel I/O lives in `coordinator::checkpoint`
+//! (format v5, one file per shard written off the worker pool via detached
+//! batches). State is keyed by tensor+group — never by shard — so an
+//! N-shard checkpoint restores into any M-shard layout (resharding).
+
+use super::{Optimizer, StreamingStep};
+use crate::optim::spec::OptimSpec;
+
+/// Upper bound on `shards = N` (per group and spec-wide). Far above any
+/// realistic simulated-host count; mostly a guard against typos.
+pub const MAX_SHARDS: u32 = 64;
+
+/// Greedy bytes-balanced assignment: items (tensors) are placed heaviest
+/// first onto the currently-lightest shard. Returns one shard index per
+/// item. Deterministic: ties in weight break toward the lower item index,
+/// ties in load toward the lower shard index.
+pub fn assign_greedy(bytes: &[usize], n_shards: usize) -> Vec<usize> {
+    let n_shards = n_shards.max(1);
+    let mut order: Vec<usize> = (0..bytes.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(bytes[i]), i));
+    let mut load = vec![0usize; n_shards];
+    let mut out = vec![0usize; bytes.len()];
+    for i in order {
+        let s = (0..n_shards).min_by_key(|&s| (load[s], s)).expect("n_shards >= 1");
+        out[i] = s;
+        load[s] += bytes[i];
+    }
+    out
+}
+
+/// The resolved tensor → shard map for one model, built once by
+/// [`ParamOptimizer::build`](super::ParamOptimizer::build) from the spec's
+/// placement policy. Each group is partitioned independently across its
+/// own `shards = N` (group-local shard s is global shard s, so a group
+/// with fewer shards simply concentrates on the low-numbered ones); the
+/// global shard count is the maximum over groups.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// Global shard count (1 = placement off, everything on shard 0).
+    pub n_shards: usize,
+    /// Shard index per model tensor.
+    pub assignment: Vec<usize>,
+    /// Optimizer-state bytes per shard — `max` is the number that actually
+    /// bounds per-worker memory.
+    pub shard_bytes: Vec<usize>,
+    /// Parameter elements per shard (the all-gather publication volume).
+    pub shard_params: Vec<usize>,
+}
+
+impl ShardLayout {
+    /// Build the layout from the spec's per-group shard policy and each
+    /// tensor's `(group, state_bytes, elements)`.
+    pub fn build(spec: &OptimSpec, tensors: &[(usize, usize, usize)]) -> ShardLayout {
+        let n_groups = spec.groups.len() + 1;
+        let n_shards =
+            (0..n_groups).map(|g| spec.shards_of(g) as usize).max().unwrap_or(1).max(1);
+        let mut assignment = vec![0usize; tensors.len()];
+        for g in 0..n_groups {
+            let members: Vec<usize> =
+                (0..tensors.len()).filter(|&i| tensors[i].0 == g).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let bytes: Vec<usize> = members.iter().map(|&i| tensors[i].1).collect();
+            let local = assign_greedy(&bytes, spec.shards_of(g) as usize);
+            for (m, &i) in members.iter().enumerate() {
+                assignment[i] = local[m];
+            }
+        }
+        let mut shard_bytes = vec![0usize; n_shards];
+        let mut shard_params = vec![0usize; n_shards];
+        for (i, &(_, bytes, size)) in tensors.iter().enumerate() {
+            shard_bytes[assignment[i]] += bytes;
+            shard_params[assignment[i]] += size;
+        }
+        ShardLayout { n_shards, assignment, shard_bytes, shard_params }
+    }
+
+    /// A trivial single-shard layout over `n` tensors (placement off).
+    pub fn single(n: usize) -> ShardLayout {
+        ShardLayout {
+            n_shards: 1,
+            assignment: vec![0; n],
+            shard_bytes: vec![0],
+            shard_params: vec![0],
+        }
+    }
+
+    /// The largest per-shard state footprint — with ZeRO-style placement
+    /// this, not the total, is what bounds a worker's memory.
+    pub fn max_shard_bytes(&self) -> usize {
+        self.shard_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Bytes a real N-shard all-gather would move per step: each shard
+    /// broadcasts its owned updated parameters (f32) to the other N-1
+    /// shards. Zero when unsharded.
+    pub fn exchange_bytes(&self) -> usize {
+        if self.n_shards <= 1 {
+            return 0;
+        }
+        self.shard_params.iter().map(|&p| p * 4).sum::<usize>() * (self.n_shards - 1)
+    }
+
+    /// State bytes of one group, split per shard (indexed by global shard,
+    /// truncated to the group's own shard count `n`).
+    pub fn group_shard_bytes(
+        &self,
+        n: usize,
+        tensors: impl Iterator<Item = (usize, usize)>,
+    ) -> Vec<usize> {
+        let mut out = vec![0usize; n.max(1)];
+        for (i, bytes) in tensors {
+            out[self.assignment[i]] += bytes;
+        }
+        out
+    }
+}
+
+/// Run one sharded training step: each tensor is admitted to its shard's
+/// own [`StreamingStep`] (shard-major admission order, tensor order within
+/// a shard), all shards' phased batches overlap on the worker pool, and
+/// the step ends with the deterministic all-gather-style exchange — shards
+/// drained in shard order, so the step completes in the same canonical
+/// sequence every run. Bit-identical to the single-shard fused path for
+/// any assignment.
+pub fn run_sharded<'a>(
+    tensors: Vec<(usize, &'a mut dyn Optimizer, &'a mut [f32], &'a [f32])>,
+    n_shards: usize,
+) {
+    let n_shards = n_shards.max(1);
+    let mut slots: Vec<Option<_>> = tensors.into_iter().map(Some).collect();
+    let mut shards: Vec<StreamingStep<'a>> =
+        (0..n_shards).map(|_| StreamingStep::new()).collect();
+    for s in 0..n_shards {
+        for slot in slots.iter_mut() {
+            if slot.as_ref().is_some_and(|t| t.0 == s) {
+                let (_, opt, p, g) = slot.take().expect("checked is_some");
+                shards[s].push(opt, p, g);
+            }
+        }
+    }
+    for slot in &slots {
+        assert!(slot.is_none(), "tensor assigned to shard >= n_shards");
+    }
+    // the "all-gather": every shard's updates must be fully applied (and
+    // thereby published to the shared parameter memory) before the step
+    // ends; draining in shard order makes the exchange deterministic
+    for st in shards {
+        st.finish();
+    }
+}
+
+/// Step every tensor through the sharded engine under an explicit
+/// tensor → shard assignment. Bit-identical to
+/// [`fused_update`](super::fused_update) /
+/// [`streaming_update`](super::streaming_update) and to the serial
+/// per-tensor loop; used by benches and the shard parity tests.
+pub fn sharded_update(
+    opts: &mut [Box<dyn Optimizer>],
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    assignment: &[usize],
+    n_shards: usize,
+) {
+    assert_eq!(opts.len(), params.len());
+    assert_eq!(opts.len(), grads.len());
+    assert_eq!(opts.len(), assignment.len());
+    let tensors: Vec<(usize, &mut dyn Optimizer, &mut [f32], &[f32])> = opts
+        .iter_mut()
+        .zip(params.iter_mut())
+        .zip(grads.iter())
+        .enumerate()
+        .map(|(i, ((opt, p), g))| (assignment[i], opt.as_mut(), p.as_mut_slice(), g.as_slice()))
+        .collect();
+    run_sharded(tensors, n_shards);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build, Bits, GroupOverride, OptimConfig, OptimKind};
+    use super::*;
+
+    #[test]
+    fn greedy_assignment_balances_bytes() {
+        // heaviest-first onto lightest shard: 10,8,6,4 over 2 shards
+        // -> 10|8, then 6 joins 8, 4 joins 10 => loads 14/14
+        let a = assign_greedy(&[4, 10, 8, 6], 2);
+        let mut load = [0usize; 2];
+        for (i, &s) in a.iter().enumerate() {
+            load[s] += [4, 10, 8, 6][i];
+        }
+        assert_eq!(load[0], load[1], "{a:?}");
+        // deterministic: equal inputs always produce the same map
+        assert_eq!(a, assign_greedy(&[4, 10, 8, 6], 2));
+        // more shards than items: one item per shard, heaviest on shard 0
+        let a = assign_greedy(&[1, 5], 4);
+        assert_eq!(a[1], 0);
+        assert_ne!(a[0], a[1]);
+        // degenerate inputs
+        assert_eq!(assign_greedy(&[], 4), Vec::<usize>::new());
+        assert_eq!(assign_greedy(&[7, 7], 1), vec![0, 0]);
+    }
+
+    #[test]
+    fn layout_partitions_groups_independently() {
+        let base = OptimConfig::adam(1e-3, Bits::b8_dynamic());
+        let mut spec = OptimSpec::with_groups(
+            base,
+            vec![GroupOverride::parse("big.*:shards=4").unwrap()],
+        );
+        spec.default_shards = 1;
+        // (group, state_bytes, elements): default group stays on shard 0,
+        // the 4-way group spreads
+        let tensors = [
+            (0usize, 100usize, 25usize),
+            (1, 4000, 1000),
+            (1, 3000, 750),
+            (1, 2000, 500),
+            (1, 1000, 250),
+            (0, 50, 12),
+        ];
+        let layout = ShardLayout::build(&spec, &tensors);
+        assert_eq!(layout.n_shards, 4);
+        assert_eq!(layout.assignment[0], 0);
+        assert_eq!(layout.assignment[5], 0);
+        // the four group-1 tensors land on four distinct shards
+        let mut seen: Vec<usize> = layout.assignment[1..5].to_vec();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(layout.shard_bytes.iter().sum::<usize>(), 10150);
+        assert_eq!(layout.max_shard_bytes(), 4000 + 100 + 50);
+        // exchange volume: every shard broadcasts its params to 3 peers
+        assert_eq!(layout.exchange_bytes(), 2537 * 4 * 3);
+        let gsb = layout.group_shard_bytes(
+            4,
+            tensors
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.0 == 1)
+                .map(|(i, t)| (i, t.1)),
+        );
+        assert_eq!(gsb.iter().sum::<usize>(), 10000);
+        assert_eq!(gsb.iter().copied().max(), Some(4000));
+    }
+
+    #[test]
+    fn sharded_update_matches_serial_stepping_bitwise() {
+        let kinds = [
+            (OptimKind::Adam, 3usize),
+            (OptimKind::Adam, 2048),
+            (OptimKind::Momentum, 5000),
+            (OptimKind::Lamb, 1024),
+            (OptimKind::Lamb, 20000),
+            (OptimKind::Adam, 2049),
+        ];
+        let fleet = |bits: Bits| {
+            let mut rng = crate::util::rng::Rng::new(77);
+            let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
+            let mut params = Vec::new();
+            let mut grads = Vec::new();
+            for &(kind, n) in &kinds {
+                let mut cfg = OptimConfig::adam(0.01, bits);
+                cfg.kind = kind;
+                opts.push(build(&cfg, n, None));
+                params.push((0..n).map(|_| rng.normal() as f32).collect::<Vec<f32>>());
+                grads.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect::<Vec<f32>>());
+            }
+            (opts, params, grads)
+        };
+        for bits in [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()] {
+            let (mut o_serial, mut p_serial, g) = fleet(bits);
+            let (mut o_shard, mut p_shard, _) = fleet(bits);
+            let bytes: Vec<usize> = o_shard.iter().map(|o| o.state_bytes()).collect();
+            let assignment = assign_greedy(&bytes, 3);
+            for _ in 0..3 {
+                for i in 0..o_serial.len() {
+                    o_serial[i].step(&mut p_serial[i], &g[i]);
+                }
+                sharded_update(&mut o_shard, &mut p_shard, &g, &assignment, 3);
+            }
+            assert_eq!(p_serial, p_shard, "params diverged ({})", bits.describe());
+            for (a, b) in o_serial.iter().zip(&o_shard) {
+                for ((na, sa), (nb, sb)) in a.states().iter().zip(b.states().iter()) {
+                    assert_eq!(na, nb);
+                    assert_eq!(sa.to_f32(), sb.to_f32(), "state {na} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_sharded_step_is_a_no_op() {
+        run_sharded(Vec::new(), 4);
+        let mut none: Vec<Box<dyn Optimizer>> = Vec::new();
+        sharded_update(&mut none, &mut [], &[], &[], 2);
+    }
+}

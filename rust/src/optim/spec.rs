@@ -20,15 +20,20 @@ use crate::quant::Format;
 pub struct OptimSpec {
     pub base: OptimConfig,
     pub groups: Vec<GroupOverride>,
+    /// Placement default: shard count for the default group and for any
+    /// group that does not set its own `shards` key (1 = unsharded). Set
+    /// from `[placement] shards = N` / `--shards N`; validated in
+    /// `1..=MAX_SHARDS` like the per-group key.
+    pub default_shards: u32,
 }
 
 impl OptimSpec {
     pub fn new(base: OptimConfig) -> OptimSpec {
-        OptimSpec { base, groups: Vec::new() }
+        OptimSpec { base, groups: Vec::new(), default_shards: 1 }
     }
 
     pub fn with_groups(base: OptimConfig, groups: Vec<GroupOverride>) -> OptimSpec {
-        OptimSpec { base, groups }
+        OptimSpec { base, groups, default_shards: 1 }
     }
 
     /// Effective config for a tensor name, plus its group index
@@ -51,10 +56,36 @@ impl OptimSpec {
         }
     }
 
+    /// Shard count of a group index (0 = default group): the group's own
+    /// `shards` key, else the spec-level placement default.
+    pub fn shards_of(&self, group: usize) -> u32 {
+        if group == 0 {
+            self.default_shards
+        } else {
+            self.groups[group - 1].shards.unwrap_or(self.default_shards)
+        }
+    }
+
     /// Validate the base config and every group's resolved config — real
     /// errors at parse/build time instead of silent fallbacks.
     pub fn validate(&self) -> Result<()> {
         validate_config(&self.base).context("base optimizer config")?;
+        if !(1..=super::shard::MAX_SHARDS).contains(&self.default_shards) {
+            return Err(anyhow!(
+                "placement shards must be in 1..={}, got {}",
+                super::shard::MAX_SHARDS,
+                self.default_shards
+            ));
+        }
+        if self.default_shards > 1 && !self.base.kind.supports_sharding() {
+            return Err(anyhow!(
+                "placement shards = {} requires a shardable optimizer, but {} has no \
+                 shardable fused plan (its factored statistics are not \
+                 element-proportional); use shards = 1",
+                self.default_shards,
+                self.base.kind.name()
+            ));
+        }
         for (g, ov) in self.groups.iter().enumerate() {
             let label = ov.pattern().as_str().to_string();
             ov.check_against(&self.base)
@@ -65,14 +96,19 @@ impl OptimSpec {
         Ok(())
     }
 
-    /// Compact one-line form: base config plus each override.
+    /// Compact one-line form: base config plus each override (and the
+    /// placement default when sharding is on).
     pub fn describe(&self) -> String {
-        if self.groups.is_empty() {
+        let mut out = if self.groups.is_empty() {
             self.base.describe()
         } else {
             let ovs: Vec<String> = self.groups.iter().map(|g| g.describe()).collect();
             format!("{} [{}]", self.base.describe(), ovs.join(" "))
+        };
+        if self.default_shards > 1 {
+            out.push_str(&format!(" shards={}", self.default_shards));
         }
+        out
     }
 }
 

@@ -14,15 +14,18 @@ use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
 /// Table 2: largest finetunable model per GPU-memory budget, batch size 1,
-/// extended with the 4-bit Adam column (Li et al. 2023 footprint).
+/// extended with the 4-bit Adam column (Li et al. 2023 footprint) and a
+/// ZeRO-1-style 4-shard 8-bit Adam column (only the state term divides by
+/// the shard count — weights/grads/master/activations stay replicated).
 pub fn table2() -> Result<()> {
     let mm = MemoryModel::default();
+    let shards = 4u32;
     println!("Table 2 — largest finetunable model (batch size 1)");
     println!(
-        "{:<16} {:<28} {:<28} {:<28}",
-        "GPU size in GB", "32-bit Adam", "8-bit Adam", "4-bit Adam"
+        "{:<16} {:<28} {:<28} {:<28} {:<28}",
+        "GPU size in GB", "32-bit Adam", "8-bit Adam", "4-bit Adam", "8-bit Adam (4 shards)"
     );
-    let mut csv = String::from("gpu_gb,adam32,adam8,adam4\n");
+    let mut csv = String::from("gpu_gb,adam32,adam8,adam4,adam8_shard4\n");
     let largest = |budget: f64, kind: OptStateKind| {
         mm.largest_finetunable(budget, kind)
             .map(|m| m.name.to_string())
@@ -32,8 +35,12 @@ pub fn table2() -> Result<()> {
         let m32 = largest(budget, OptStateKind::Adam32);
         let m8 = largest(budget, OptStateKind::Adam8);
         let m4 = largest(budget, OptStateKind::Adam4);
-        println!("{budget:<16} {m32:<28} {m8:<28} {m4:<28}");
-        csv.push_str(&format!("{budget},{m32},{m8},{m4}\n"));
+        let m8s = mm
+            .largest_finetunable_sharded(budget, OptStateKind::Adam8, shards)
+            .map(|m| m.name.to_string())
+            .unwrap_or_else(|| "—".into());
+        println!("{budget:<16} {m32:<28} {m8:<28} {m4:<28} {m8s:<28}");
+        csv.push_str(&format!("{budget},{m32},{m8},{m4},{m8s}\n"));
     }
     let path = super::write_csv("table2.csv", &csv)?;
     println!("-> {}", path.display());

@@ -1,0 +1,309 @@
+//! Parity tests for ZeRO-style sharded placement (engine layer 5).
+//!
+//! The placement contract: `shards = N` moves optimizer state around — it
+//! never changes the math. Each shard owns the full dequantize → update →
+//! requantize of its tensors as an independent streaming batch, tensors
+//! never share state, and every tensor's phases run in the same canonical
+//! order regardless of which shard admits them — so any tensor → shard
+//! partition is **bit-identical** to the unsharded step. These tests pin
+//! that down:
+//!
+//! * shard counts {1, 2, 4, 8} × threads {1, 4, default} × lane-chunked vs
+//!   forced-scalar kernels × state widths {32, 8, 4} × {Adam, Momentum,
+//!   LAMB} produce bit-identical params and states,
+//! * the same holds end to end through `ParamOptimizer` specs that differ
+//!   only in their `shards =` placement,
+//! * a checkpoint saved from a 4-shard run (v5 manifest + shard files)
+//!   restores into a 2-shard layout with a bit-identical continued
+//!   trajectory (state is keyed by tensor, not shard, so resharding is
+//!   free),
+//! * a v4 monolithic checkpoint restores into a sharded run (forward
+//!   compat), and
+//! * `configs/zero_shard.toml` parses, validates, and builds the 4-shard
+//!   placement it documents.
+
+use std::sync::Mutex;
+
+use bitopt8::config::RunConfig;
+use bitopt8::coordinator::Checkpoint;
+use bitopt8::optim::{
+    assign_greedy, build, sharded_update, Bits, OptimConfig, OptimKind, OptimSpec, Optimizer,
+    ParamOptimizer, TensorInfo,
+};
+use bitopt8::util::lanes;
+use bitopt8::util::parallel;
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle process-global knobs (thread count, the
+/// forced-scalar lane switch); see `pool_parity.rs` for the rationale.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Mixed tensor sizes: multi-block, exactly one block, sub-block (ragged),
+/// and tiny — the shapes a real model hands the placement layer.
+const FLEET_SIZES: [usize; 6] = [4096, 2048, 511, 8192, 64, 3000];
+
+fn fleet(kind: OptimKind, bits: Bits) -> (Vec<Box<dyn Optimizer>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(0x5AAD);
+    let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
+    let mut params: Vec<Vec<f32>> = Vec::new();
+    let mut targets: Vec<Vec<f32>> = Vec::new();
+    for &n in &FLEET_SIZES {
+        let mut cfg = OptimConfig::adam(0.01, bits);
+        cfg.kind = kind;
+        opts.push(build(&cfg, n, None));
+        params.push((0..n).map(|_| rng.normal() as f32 * 0.1).collect());
+        targets.push((0..n).map(|_| rng.normal() as f32).collect());
+    }
+    (opts, params, targets)
+}
+
+/// `steps` sharded updates of the fleet on per-tensor quadratics; returns
+/// final params and dequantized states.
+fn fleet_trajectory(
+    kind: OptimKind,
+    bits: Bits,
+    n_shards: usize,
+    threads: Option<usize>,
+    steps: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>) {
+    let (mut opts, mut params, targets) = fleet(kind, bits);
+    let state_bytes: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+    let assignment = assign_greedy(&state_bytes, n_shards);
+    let run = |opts: &mut Vec<Box<dyn Optimizer>>, params: &mut Vec<Vec<f32>>| {
+        for _ in 0..steps {
+            let grads: Vec<Vec<f32>> = params
+                .iter()
+                .zip(&targets)
+                .map(|(p, t)| p.iter().zip(t).map(|(a, b)| a - b).collect())
+                .collect();
+            sharded_update(opts, params, &grads, &assignment, n_shards);
+        }
+    };
+    match threads {
+        Some(t) => parallel::with_threads(t, || run(&mut opts, &mut params)),
+        None => run(&mut opts, &mut params),
+    }
+    let states = opts
+        .iter()
+        .map(|o| o.states().into_iter().map(|(_, s)| s.to_f32()).collect())
+        .collect();
+    (params, states)
+}
+
+#[test]
+fn sharded_fleet_is_bit_identical_across_shards_threads_and_lanes() {
+    let _g = locked();
+    let kinds = [OptimKind::Adam, OptimKind::Momentum, OptimKind::Lamb];
+    let widths = [Bits::B32, Bits::b8_dynamic(), Bits::b4_dynamic()];
+    for kind in kinds {
+        for bits in widths {
+            // single shard, single thread, lane kernels = the reference
+            let (p_ref, s_ref) = fleet_trajectory(kind, bits, 1, Some(1), 3);
+            for n_shards in [2usize, 4, 8] {
+                for threads in [Some(1), Some(4), None] {
+                    let (p, st) = fleet_trajectory(kind, bits, n_shards, threads, 3);
+                    assert_eq!(
+                        p, p_ref,
+                        "{kind:?}/{bits:?}: params diverged at {n_shards} shards, {threads:?} threads"
+                    );
+                    assert_eq!(
+                        st, s_ref,
+                        "{kind:?}/{bits:?}: states diverged at {n_shards} shards, {threads:?} threads"
+                    );
+                }
+                // forced-scalar kernels through the sharded path
+                let (p, st) =
+                    lanes::with_forced_scalar(|| fleet_trajectory(kind, bits, n_shards, Some(4), 3));
+                assert_eq!(p, p_ref, "{kind:?}/{bits:?}: scalar sharded params diverged");
+                assert_eq!(st, s_ref, "{kind:?}/{bits:?}: scalar sharded states diverged");
+            }
+        }
+    }
+}
+
+/// A small stable-embedding tensor listing for the ParamOptimizer-level
+/// tests (subset of the dry-run set; sizes span multiple blocks).
+fn model_tensors() -> Vec<TensorInfo> {
+    let specs: [(&str, usize, Option<(usize, usize)>); 7] = [
+        ("embed.tok", 512 * 64, Some((512, 64))),
+        ("embed.pos", 64 * 64, Some((64, 64))),
+        ("block0.attn.wq", 64 * 64, Some((64, 64))),
+        ("block0.mlp.w1", 64 * 256, Some((64, 256))),
+        ("block0.mlp.b1", 256, None),
+        ("final_ln.scale", 64, None),
+        ("lm_head", 64 * 512, Some((64, 512))),
+    ];
+    specs
+        .into_iter()
+        .map(|(name, size, shape)| TensorInfo {
+            name: name.to_string(),
+            size,
+            shape,
+            padded: size.next_multiple_of(2048),
+        })
+        .collect()
+}
+
+fn spec_with_shards(shards: u32) -> OptimSpec {
+    let base = OptimConfig::adam(0.01, Bits::b8_dynamic());
+    let mut spec = OptimSpec::with_groups(
+        base,
+        vec![bitopt8::optim::GroupOverride::parse("embed.tok|embed.pos:bits=32").unwrap()],
+    );
+    spec.default_shards = shards;
+    spec
+}
+
+fn synth_run(
+    popt: &mut ParamOptimizer,
+    params: &mut [Vec<f32>],
+    steps: usize,
+    seed: u64,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    let grad_rounds: Vec<Vec<Vec<f32>>> = (0..steps)
+        .map(|_| {
+            params
+                .iter()
+                .map(|p| p.iter().map(|_| rng.normal() as f32 * 0.02).collect())
+                .collect()
+        })
+        .collect();
+    for grads in &grad_rounds {
+        popt.step_native(params, grads);
+    }
+    grad_rounds
+}
+
+#[test]
+fn param_optimizer_placement_is_bit_identical_end_to_end() {
+    let _g = locked();
+    let tensors = model_tensors();
+    let mut rng = Rng::new(0xD1CE);
+    let init: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect();
+
+    let mut popt_ref = ParamOptimizer::build(spec_with_shards(1), &tensors, None).unwrap();
+    let mut p_ref = init.clone();
+    synth_run(&mut popt_ref, &mut p_ref, 4, 0xFEED);
+
+    for shards in [2u32, 4] {
+        let mut popt = ParamOptimizer::build(spec_with_shards(shards), &tensors, None).unwrap();
+        assert_eq!(popt.shard_layout().n_shards, shards as usize);
+        assert!(popt.max_shard_state_bytes() < popt.state_bytes());
+        assert!(popt.describe_placement().is_some());
+        let mut p = init.clone();
+        synth_run(&mut popt, &mut p, 4, 0xFEED);
+        assert_eq!(p, p_ref, "params diverged at shards={shards}");
+        assert_eq!(
+            popt.state_snapshot(),
+            popt_ref.state_snapshot(),
+            "states diverged at shards={shards}"
+        );
+        // the per-group shard accounting must cover the whole footprint
+        for r in popt.group_reports() {
+            assert_eq!(r.shards, shards);
+            assert_eq!(r.shard_state_bytes.iter().sum::<usize>(), r.state_bytes);
+            assert!(r.max_shard_bytes() <= r.state_bytes);
+        }
+    }
+}
+
+#[test]
+fn sharded_checkpoint_reshards_with_identical_trajectory() {
+    let _g = locked();
+    let tensors = model_tensors();
+    let mut rng = Rng::new(0xC4A9);
+    let init: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect();
+
+    // train 3 steps at 4 shards, save the v5 sharded checkpoint
+    let mut popt_a = ParamOptimizer::build(spec_with_shards(4), &tensors, None).unwrap();
+    let mut p_a = init.clone();
+    synth_run(&mut popt_a, &mut p_a, 3, 0xAB);
+    let dir = std::env::temp_dir().join(format!("bitopt8_reshard_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    let ck = Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a);
+    let layout = popt_a.shard_layout();
+    ck.save_sharded(&path, &layout.assignment, layout.n_shards).unwrap();
+    for s in 0..4 {
+        assert!(
+            dir.join(format!("ck.bin.shard{s:02}")).exists(),
+            "missing shard file {s}"
+        );
+    }
+
+    // continue the source run
+    synth_run(&mut popt_a, &mut p_a, 3, 0xCD);
+
+    // restore into a 2-shard layout and continue with the same gradients
+    let mut popt_b = ParamOptimizer::build(spec_with_shards(2), &tensors, None).unwrap();
+    let mut p_b: Vec<Vec<f32>> = tensors.iter().map(|t| vec![0.0; t.size]).collect();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.step, 3);
+    loaded.restore(&mut p_b, &mut popt_b).unwrap();
+    synth_run(&mut popt_b, &mut p_b, 3, 0xCD);
+
+    assert_eq!(p_b, p_a, "4-shard checkpoint resharded to 2 diverged");
+    assert_eq!(popt_b.state_snapshot(), popt_a.state_snapshot());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v4_monolithic_checkpoint_restores_into_sharded_run() {
+    let _g = locked();
+    let tensors = model_tensors();
+    let mut rng = Rng::new(0xB0B);
+    let init: Vec<Vec<f32>> = tensors
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect();
+
+    // unsharded run, plain v4 save
+    let mut popt_a = ParamOptimizer::build(spec_with_shards(1), &tensors, None).unwrap();
+    let mut p_a = init.clone();
+    synth_run(&mut popt_a, &mut p_a, 3, 0x11);
+    let dir = std::env::temp_dir().join(format!("bitopt8_v4fwd_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a).save(&path).unwrap();
+    synth_run(&mut popt_a, &mut p_a, 2, 0x22);
+
+    // forward compat: the v4 file drops straight into a 4-shard run
+    let mut popt_b = ParamOptimizer::build(spec_with_shards(4), &tensors, None).unwrap();
+    let mut p_b: Vec<Vec<f32>> = tensors.iter().map(|t| vec![0.0; t.size]).collect();
+    Checkpoint::load(&path).unwrap().restore(&mut p_b, &mut popt_b).unwrap();
+    synth_run(&mut popt_b, &mut p_b, 2, 0x22);
+
+    assert_eq!(p_b, p_a, "v4 checkpoint restored into sharded run diverged");
+    assert_eq!(popt_b.state_snapshot(), popt_a.state_snapshot());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_shard_config_builds_the_documented_placement() {
+    // integration tests run from the package root, so configs/ resolves
+    let cfg = RunConfig::from_file("configs/zero_shard.toml").unwrap();
+    assert_eq!(cfg.shards, 4);
+    let spec = cfg.optim_spec();
+    assert_eq!(spec.default_shards, 4);
+    assert_eq!(spec.shards_of(1), 1, "embedding group opts out");
+    let popt = ParamOptimizer::build(spec, &model_tensors(), None).unwrap();
+    assert_eq!(popt.shard_layout().n_shards, 4);
+    let placement = popt.describe_placement().expect("placement table");
+    assert!(placement.contains("4 shards"), "{placement}");
+    // the embeddings stay together on shard 0 of their group
+    let emb = popt.find("embed.tok").unwrap();
+    let pos = popt.find("embed.pos").unwrap();
+    assert_eq!(popt.shard_layout().assignment[emb], 0);
+    assert_eq!(popt.shard_layout().assignment[pos], 0);
+}
