@@ -1,9 +1,13 @@
-//! Quantization-error analysis — regenerates the data behind Figures 2,
-//! 4, 5, 6 and Table 6 (Appendix D/F).
+//! Static analysis and quantization-error analysis: [`plan_lint`]
+//! statically verifies the phased plan IR's access declarations (the
+//! CLI `--lint` mode), and [`adam_error`] regenerates the data behind
+//! Figures 2, 4, 5, 6 and Table 6 (Appendix D/F).
 
 pub mod adam_error;
+pub mod plan_lint;
 
 pub use adam_error::{adam_error_maps, per_code_error, AdamErrorMaps};
+pub use plan_lint::{lint_matrix, lint_plan, lint_spec, KindCaps, LintError, LintReport};
 
 use crate::quant::{BlockQuantizer, Codebook, Format, BLOCK};
 use crate::util::rng::Rng;

@@ -1,0 +1,575 @@
+//! Static determinism linter for the phased plan IR.
+//!
+//! Every [`Phase`](crate::optim::Phase) of a [`StepPlan`] carries a
+//! declared [`AccessSet`] — which param/grad/moment slices, named
+//! [`Region::Slot`]s, and process-global [`Counter`]s its items and
+//! combine touch. This module checks the declarations *statically*
+//! (no plan execution, no threads) against the engine's execution
+//! contract:
+//!
+//! * **(a) item disjointness** — no two items of one phase write
+//!   overlapping elements of the same region;
+//! * **(b) barrier ordering** — a region written in phase `k` is read
+//!   only by phase `k`'s combine or by phases after `k`; a same-phase
+//!   cross-item read of a written region, or a read of a region nothing
+//!   has initialized, is a race;
+//! * **(c) counter drains** — every counter a plan increments has a
+//!   registered drain point (the trainer's JSONL step records), so
+//!   counts can't leak silently into a later step's record;
+//! * **(d) deterministic combines** — every combine declares a
+//!   fixed-index fold (`util::reduce` order), never completion order;
+//! * **(e) capability honesty** — the [`OptimKind`] capability registry
+//!   (`supports_stability` / `supports_sharding` / `supports_bits`) is
+//!   derived-checked against the plan shapes each kind actually builds.
+//!
+//! Entry points: [`lint_plan`] for one plan, [`lint_spec`] for every
+//! distinct plan a config's [`OptimSpec`] builds over a tensor set, and
+//! [`lint_matrix`] for the full kind × bits × stability matrix. The CLI
+//! `--lint` mode runs the latter two over every shipped config; a CI
+//! lane greps for its `PLAN_LINT ok` summary line.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::optim::{
+    self, validate_config, Bits, Counter, OptimConfig, OptimKind, OptimSpec, Region, StepPlan,
+    TensorInfo,
+};
+use crate::quant::{CodeWidth, Format};
+
+/// One violation of the plan IR's execution contract, with enough
+/// context to name the offending phase/region in a test assertion.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LintError {
+    /// A phase shipped without any access declaration (rule a–d inputs
+    /// all missing — the strict mode every shipped plan must pass).
+    UndeclaredPhase { phase: usize },
+    /// Rule (a): two distinct items of the phase write overlapping
+    /// elements of `region`.
+    OverlappingItemWrites { phase: usize, region: Region },
+    /// Rule (b), same-phase half: an item reads elements another item
+    /// of the same (unordered) phase writes.
+    SamePhaseReadWrite { phase: usize, region: Region },
+    /// Rule (b), cross-phase half: `region` is read before any phase
+    /// wrote it and it was not declared preset.
+    ReadBeforeWrite { phase: usize, region: Region },
+    /// The read-only gradient contract: a declared write to `Grads`.
+    WriteToReadOnly { phase: usize },
+    /// The combine closure and the combine declaration disagree (one
+    /// exists without the other).
+    UndeclaredCombine { phase: usize },
+    /// Rule (d): the combine does not declare a fixed-index fold.
+    NonDeterministicCombine { phase: usize },
+    /// Rule (c): `counter` is incremented but has no registered drain.
+    UndrainedCounter { counter: Counter },
+    /// Rule (e): the capability registry and the built plans disagree.
+    CapabilityMismatch { kind: OptimKind, detail: String },
+}
+
+impl fmt::Display for LintError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LintError::UndeclaredPhase { phase } => {
+                write!(f, "phase {phase}: no access declaration")
+            }
+            LintError::OverlappingItemWrites { phase, region } => {
+                write!(f, "phase {phase}: overlapping item writes to {region:?}")
+            }
+            LintError::SamePhaseReadWrite { phase, region } => {
+                write!(f, "phase {phase}: same-phase cross-item read/write race on {region:?}")
+            }
+            LintError::ReadBeforeWrite { phase, region } => {
+                write!(f, "phase {phase}: reads {region:?} before any phase writes it")
+            }
+            LintError::WriteToReadOnly { phase } => {
+                write!(f, "phase {phase}: declares a write to the read-only Grads")
+            }
+            LintError::UndeclaredCombine { phase } => {
+                write!(f, "phase {phase}: combine closure and combine declaration disagree")
+            }
+            LintError::NonDeterministicCombine { phase } => {
+                write!(f, "phase {phase}: combine does not declare a fixed-index fold")
+            }
+            LintError::UndrainedCounter { counter } => {
+                write!(f, "counter {counter:?} is incremented but has no registered drain")
+            }
+            LintError::CapabilityMismatch { kind, detail } => {
+                write!(f, "capability registry vs built plans for {kind:?}: {detail}")
+            }
+        }
+    }
+}
+
+/// The counters with a registered drain point: the trainer drains all
+/// three (`take_nonfinite_blocks`, `take_clip_events`,
+/// `take_unorm_clips`) into every JSONL step record, on the
+/// gradient-crash early exit, and between runs.
+pub const ALL_DRAINS: [Counter; 3] =
+    [Counter::NonfiniteBlocks, Counter::ClipEvents, Counter::UnormClips];
+
+/// Lint one plan against the process's registered drains
+/// ([`ALL_DRAINS`]).
+pub fn lint_plan(plan: &StepPlan) -> Vec<LintError> {
+    lint_plan_with_drains(plan, &ALL_DRAINS)
+}
+
+/// Lint one plan, with an explicit drain registry (tests pass an empty
+/// one to exercise rule c).
+pub fn lint_plan_with_drains(plan: &StepPlan, drains: &[Counter]) -> Vec<LintError> {
+    let mut errors = Vec::new();
+    // Regions holding defined data before phase 0 runs: the tensors the
+    // engine hands in, plus every region any phase declares preset
+    // (persistent optimizer state carried across steps).
+    let mut initialized: BTreeSet<Region> =
+        [Region::Params, Region::Grads, Region::State1, Region::State2].into_iter().collect();
+    for k in 0..plan.n_phases() {
+        if let Some(access) = plan.phase_access(k) {
+            initialized.extend(access.presets.iter().copied());
+        }
+    }
+
+    let mut counters: Vec<Counter> = Vec::new();
+    for k in 0..plan.n_phases() {
+        let Some(access) = plan.phase_access(k) else {
+            errors.push(LintError::UndeclaredPhase { phase: k });
+            continue;
+        };
+        let n_items = plan.phase_items(k);
+        // (a) item-write disjointness.
+        if let Some(region) = access.item_write_conflict(n_items) {
+            errors.push(LintError::OverlappingItemWrites { phase: k, region });
+        }
+        // (b) same-phase half: cross-item read of a written region.
+        if let Some(region) = access.item_read_write_race(n_items) {
+            errors.push(LintError::SamePhaseReadWrite { phase: k, region });
+        }
+        // Read-only gradient contract.
+        if access.writes_grads() {
+            errors.push(LintError::WriteToReadOnly { phase: k });
+        }
+        // (b) cross-phase half: item reads of never-written regions.
+        let read_regions: BTreeSet<Region> = access.reads.iter().map(|(r, _)| *r).collect();
+        for region in read_regions {
+            if !initialized.contains(&region) {
+                errors.push(LintError::ReadBeforeWrite { phase: k, region });
+            }
+        }
+        // Combine declaration consistency + (d) determinism + its reads
+        // (a combine may read what this phase's items just wrote — the
+        // barrier sequences it after them).
+        match (&access.combine, plan.phase_has_combine(k)) {
+            (None, false) => {}
+            (None, true) | (Some(_), false) => {
+                errors.push(LintError::UndeclaredCombine { phase: k });
+            }
+            (Some(c), true) => {
+                if !c.deterministic {
+                    errors.push(LintError::NonDeterministicCombine { phase: k });
+                }
+                let combine_reads: BTreeSet<Region> = c.reads.iter().map(|(r, _)| *r).collect();
+                for region in combine_reads {
+                    if !initialized.contains(&region)
+                        && !access.writes.iter().any(|(w, _)| *w == region)
+                    {
+                        errors.push(LintError::ReadBeforeWrite { phase: k, region });
+                    }
+                }
+            }
+        }
+        // Past this phase's barrier, its item and combine writes are
+        // visible to every later phase.
+        initialized.extend(access.writes.iter().map(|(r, _)| *r));
+        if let Some(c) = &access.combine {
+            initialized.extend(c.writes.iter().map(|(r, _)| *r));
+        }
+        counters.extend(access.all_counters());
+    }
+
+    // (c) every incremented counter needs a registered drain.
+    counters.sort();
+    counters.dedup();
+    for counter in counters {
+        if !drains.contains(&counter) {
+            errors.push(LintError::UndrainedCounter { counter });
+        }
+    }
+    errors
+}
+
+/// Claimed capabilities of one [`OptimKind`] — normally derived from
+/// the registry ([`KindCaps::of`]); tests pass deliberately wrong
+/// claims to prove [`lint_kind`] catches them.
+#[derive(Clone, Copy, Debug)]
+pub struct KindCaps {
+    pub stability: bool,
+    pub sharding: bool,
+    pub bits8: bool,
+    pub bits4: bool,
+}
+
+impl KindCaps {
+    pub fn of(kind: OptimKind) -> KindCaps {
+        KindCaps {
+            stability: kind.supports_stability(),
+            sharding: kind.supports_sharding(),
+            bits8: kind.supports_8bit(),
+            bits4: kind.supports_4bit(),
+        }
+    }
+}
+
+/// Every optimizer kind, in registry order.
+pub const ALL_KINDS: [OptimKind; 8] = [
+    OptimKind::Adam,
+    OptimKind::AdamW,
+    OptimKind::Momentum,
+    OptimKind::Lamb,
+    OptimKind::Lars,
+    OptimKind::Adafactor,
+    OptimKind::Adagrad,
+    OptimKind::Sm3,
+];
+
+/// Tensor length used by the capability matrix (a few state blocks plus
+/// an exact 64×64 factored shape).
+const MATRIX_N: usize = 4096;
+
+/// Rule (e) for one kind: cross-check the claimed `caps` against (1)
+/// parse-time acceptance ([`validate_config`]) and (2) the shapes of
+/// the plans the kind actually builds, over the bits × stability
+/// matrix. Plan-IR violations (rules a–d) in any built plan are
+/// reported too.
+pub fn lint_kind(kind: OptimKind, caps: &KindCaps) -> Vec<LintError> {
+    let mut errors = Vec::new();
+    let bits_matrix = [
+        Bits::B32,
+        Bits::b8_dynamic(),
+        Bits::b4_dynamic(),
+        Bits::B8 { format: Format::Linear, blockwise: false },
+    ];
+    // (clip_percentile, max_unorm, skip_zeros) stability presets.
+    let stability_matrix =
+        [(0.0f32, 0.0f32, false), (95.0, 0.0, false), (0.0, 0.02, false), (95.0, 0.02, true)];
+    for bits in bits_matrix {
+        for (clip, unorm, skip) in stability_matrix {
+            let mut cfg = OptimConfig::adam(0.001, bits);
+            cfg.kind = kind;
+            cfg.clip_percentile = clip;
+            cfg.max_unorm = unorm;
+            cfg.skip_zeros = skip;
+            let bits_ok = match bits.quantized() {
+                None => true,
+                Some((_, _, CodeWidth::U8)) => caps.bits8,
+                Some((_, _, CodeWidth::U4)) => caps.bits4,
+            };
+            let expected = bits_ok && (!cfg.stability_on() || caps.stability);
+            let accepted = validate_config(&cfg).is_ok();
+            if accepted != expected {
+                errors.push(LintError::CapabilityMismatch {
+                    kind,
+                    detail: format!(
+                        "validate_config {} {} with stability {:?}, but the capability \
+                         claims imply {}",
+                        if accepted { "accepts" } else { "rejects" },
+                        bits.describe(),
+                        (clip, unorm, skip),
+                        if expected { "accept" } else { "reject" },
+                    ),
+                });
+                continue;
+            }
+            if !accepted {
+                continue;
+            }
+            for shape in [None, Some((64usize, 64usize))] {
+                lint_built(kind, &cfg, shape, caps, &mut errors);
+            }
+        }
+    }
+    errors
+}
+
+/// Build one optimizer, take one plan, lint it (rules a–d), and
+/// derive-check the plan's shape signature against the claimed caps:
+/// grid-partitioned (factored-statistic) phases appear exactly for the
+/// unshardable kinds on 2-D tensors, and each counter is declared
+/// exactly when its feature is on.
+fn lint_built(
+    kind: OptimKind,
+    cfg: &OptimConfig,
+    shape: Option<(usize, usize)>,
+    caps: &KindCaps,
+    errors: &mut Vec<LintError>,
+) {
+    let n = MATRIX_N;
+    let mut opt = optim::build(cfg, n, shape);
+    let mut params = vec![0.0f32; n];
+    let grads = vec![0.0f32; n];
+    let plan = opt.plan(&mut params, &grads);
+    errors.extend(lint_plan(&plan));
+
+    let mut has_grid = false;
+    let mut declared: BTreeSet<Counter> = BTreeSet::new();
+    for k in 0..plan.n_phases() {
+        if let Some(access) = plan.phase_access(k) {
+            let mut spans = access.reads.iter().chain(access.writes.iter());
+            has_grid |= spans.any(|(_, s)| s.is_grid());
+            if let Some(c) = &access.combine {
+                let mut spans = c.reads.iter().chain(c.writes.iter());
+                has_grid |= spans.any(|(_, s)| s.is_grid());
+            }
+            declared.extend(access.all_counters());
+        }
+    }
+    let mut mismatch = |detail: String| {
+        errors.push(LintError::CapabilityMismatch { kind, detail });
+    };
+    let expect_grid = shape.is_some() && !caps.sharding;
+    if has_grid != expect_grid {
+        mismatch(format!(
+            "plan for shape {shape:?} {} grid-partitioned phases, but supports_sharding = {}",
+            if has_grid { "has" } else { "lacks" },
+            caps.sharding,
+        ));
+    }
+    let counter_rules = [
+        (Counter::NonfiniteBlocks, cfg.bits.quantized().is_some(), "quantized state"),
+        (Counter::ClipEvents, cfg.clip_percentile > 0.0, "clip_percentile > 0"),
+        (Counter::UnormClips, cfg.max_unorm > 0.0, "max_unorm > 0"),
+    ];
+    for (counter, expected, why) in counter_rules {
+        if declared.contains(&counter) != expected {
+            mismatch(format!(
+                "{} plan {} {counter:?}, but it should be declared iff {why}",
+                cfg.describe(),
+                if expected { "lacks" } else { "declares" },
+            ));
+        }
+    }
+}
+
+/// Rule (e) over every kind with its registry-derived caps, plus rules
+/// a–d over every plan the matrix builds.
+pub fn lint_matrix() -> Vec<LintError> {
+    let mut errors = Vec::new();
+    for kind in ALL_KINDS {
+        errors.extend(lint_kind(kind, &KindCaps::of(kind)));
+    }
+    errors
+}
+
+/// Result of linting every distinct plan an [`OptimSpec`] builds.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Distinct (group, size, shape) plans actually built and linted.
+    pub plans: usize,
+    pub errors: Vec<LintError>,
+}
+
+/// Lint every distinct plan `spec` builds over `tensors`: tensors are
+/// resolved to their group config and deduplicated by
+/// (group, size, shape) — same key, same plan shape.
+pub fn lint_spec(spec: &OptimSpec, tensors: &[TensorInfo]) -> LintReport {
+    let mut report = LintReport::default();
+    let mut seen: BTreeSet<(usize, usize, Option<(usize, usize)>)> = BTreeSet::new();
+    for t in tensors {
+        let (cfg, group) = spec.resolve(&t.name);
+        if !seen.insert((group, t.size, t.shape)) {
+            continue;
+        }
+        let mut opt = optim::build(&cfg, t.size, t.shape);
+        let mut params = vec![0.0f32; t.size];
+        let grads = vec![0.0f32; t.size];
+        let plan = opt.plan(&mut params, &grads);
+        report.plans += 1;
+        report.errors.extend(lint_plan(&plan));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{AccessSet, BlockSteps, CombineAccess, Phase, Span};
+
+    fn items<'a>() -> BlockSteps<'a> {
+        BlockSteps::from_fn(2, |_| {})
+    }
+
+    fn plan_with<'a>(phase: Phase<'a>) -> StepPlan<'a> {
+        let mut plan = StepPlan::new();
+        plan.push_unchecked(phase);
+        plan
+    }
+
+    #[test]
+    fn rejects_overlapping_item_writes() {
+        let access = AccessSet::new().write(Region::Slot("x"), Span::All { lo: 0, hi: 4 });
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(
+                e,
+                LintError::OverlappingItemWrites { phase: 0, region: Region::Slot("x") }
+            )),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_same_phase_cross_item_read_of_written_region() {
+        let access = AccessSet::new()
+            .write(Region::Slot("x"), Span::Blocked { base: 0, block: 1, n: 2 })
+            .read(Region::Slot("x"), Span::All { lo: 0, hi: 2 })
+            .preset(Region::Slot("x"));
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(
+                e,
+                LintError::SamePhaseReadWrite { phase: 0, region: Region::Slot("x") }
+            )),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_read_before_any_write() {
+        let access = AccessSet::new().read(Region::Slot("y"), Span::All { lo: 0, hi: 1 });
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(
+                e,
+                LintError::ReadBeforeWrite { phase: 0, region: Region::Slot("y") }
+            )),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_writes_to_gradients() {
+        let access =
+            AccessSet::new().write(Region::Grads, Span::Blocked { base: 0, block: 1, n: 2 });
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::WriteToReadOnly { phase: 0 })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_undrained_counter() {
+        let access = AccessSet::new()
+            .write(Region::Params, Span::Blocked { base: 0, block: 1, n: 2 })
+            .counter(Counter::NonfiniteBlocks);
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        assert!(lint_plan(&plan).is_empty(), "drained counter must pass");
+        let errors = lint_plan_with_drains(&plan, &[]);
+        assert!(
+            errors.iter().any(|e| matches!(
+                e,
+                LintError::UndrainedCounter { counter: Counter::NonfiniteBlocks }
+            )),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_nondeterministic_combine() {
+        let access = AccessSet::new()
+            .write(Region::Slot("p"), Span::Blocked { base: 0, block: 1, n: 2 })
+            .combine(
+                CombineAccess::default()
+                    .read(Region::Slot("p"), Span::All { lo: 0, hi: 2 })
+                    .write(Region::Slot("s"), Span::All { lo: 0, hi: 1 }),
+            );
+        let plan = plan_with(Phase::with_combine(items(), || {}).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::NonDeterministicCombine { phase: 0 })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_combine_declaration_mismatch() {
+        // A combine closure without a combine declaration...
+        let access =
+            AccessSet::new().write(Region::Slot("p"), Span::Blocked { base: 0, block: 1, n: 2 });
+        let plan = plan_with(Phase::with_combine(items(), || {}).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::UndeclaredCombine { phase: 0 })),
+            "{errors:?}"
+        );
+        // ...and a combine declaration without a combine closure.
+        let access = AccessSet::new()
+            .write(Region::Slot("p"), Span::Blocked { base: 0, block: 1, n: 2 })
+            .combine(CombineAccess::deterministic());
+        let plan = plan_with(Phase::new(items()).with_access(access));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::UndeclaredCombine { phase: 0 })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_phase_without_declaration() {
+        let plan = plan_with(Phase::new(items()));
+        let errors = lint_plan(&plan);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::UndeclaredPhase { phase: 0 })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn barrier_ordering_accepts_later_phase_reads() {
+        // Written in phase 0, read in phase 1: legal. Read in phase 0 of
+        // a phase-1 write: rejected.
+        let span = Span::Blocked { base: 0, block: 1, n: 2 };
+        let w = AccessSet::new().write(Region::Slot("s"), span);
+        let r = AccessSet::new().read(Region::Slot("s"), Span::All { lo: 0, hi: 2 });
+        let mut ok = StepPlan::new();
+        ok.push_unchecked(Phase::new(items()).with_access(w.clone()));
+        ok.push_unchecked(Phase::new(items()).with_access(r.clone()));
+        assert!(lint_plan(&ok).is_empty());
+        let mut bad = StepPlan::new();
+        bad.push_unchecked(Phase::new(items()).with_access(r));
+        bad.push_unchecked(Phase::new(items()).with_access(w));
+        let errors = lint_plan(&bad);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::ReadBeforeWrite { phase: 0, .. })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn capability_lies_are_detected() {
+        // SM3 claims shardable: its factored 2-D plan's grid phases give
+        // it away.
+        let lying = KindCaps { sharding: true, ..KindCaps::of(OptimKind::Sm3) };
+        let errors = lint_kind(OptimKind::Sm3, &lying);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::CapabilityMismatch { .. })),
+            "{errors:?}"
+        );
+        // Adafactor claims 8-bit support: validate_config's rejection
+        // contradicts the claim.
+        let lying = KindCaps { bits8: true, ..KindCaps::of(OptimKind::Adafactor) };
+        let errors = lint_kind(OptimKind::Adafactor, &lying);
+        assert!(
+            errors.iter().any(|e| matches!(e, LintError::CapabilityMismatch { .. })),
+            "{errors:?}"
+        );
+    }
+
+    #[test]
+    fn full_matrix_is_clean() {
+        let errors = lint_matrix();
+        assert!(errors.is_empty(), "{errors:#?}");
+    }
+}

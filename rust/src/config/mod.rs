@@ -92,6 +92,13 @@
 //! combinations (e.g. `adafactor` with `bits = 8`, `quantile` without
 //! block-wise normalization, or `shards > 1` on a factored optimizer) are
 //! rejected at parse time.
+//!
+//! Beyond parse-time validation, `bitopt8 --lint [--configs DIR]` runs the
+//! static plan linter ([`crate::analysis::plan_lint`]) over every
+//! `configs/*.toml`: each distinct optimizer plan the spec resolves to is
+//! checked for disjoint item writes, barrier-ordered reads, drained
+//! telemetry counters, and deterministic combines, plus the full
+//! kind × bits × stability capability matrix. CI runs it on every push.
 
 pub mod toml;
 

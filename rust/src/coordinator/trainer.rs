@@ -288,6 +288,11 @@ impl<'rt> Trainer<'rt> {
             // flipped element from a fully-poisoned backward pass.
             self.detector.report_grad_crash();
             self.step += 1;
+            // Even though the update never ran, drain the update-phase
+            // counters on this early exit: anything left from earlier
+            // activity must not surface in the next successful step's
+            // record as if that step produced it.
+            Self::drain_counters();
             if let Some(sink) = self.metrics.as_mut() {
                 let marker = vec![
                     ("grad_crash", Json::Bool(true)),
@@ -315,9 +320,7 @@ impl<'rt> Trainer<'rt> {
         self.popt.schedule_lr(|base| schedule.lr_at(base, step));
         // Pre-drain the non-finite-block and stability counters so the
         // post-step readings are scoped to this step's update work.
-        crate::quant::blockwise::take_nonfinite_blocks();
-        crate::optim::take_clip_events();
-        crate::optim::take_unorm_clips();
+        Self::drain_counters();
         if self.popt.n_hlo() == 0 {
             // Pure native run: the fused step's one-pool-batch-per-phase
             // dispatch is strictly better when there is nothing to overlap.
@@ -345,12 +348,10 @@ impl<'rt> Trainer<'rt> {
         // must not zero a whole block's codes) and counts affected blocks;
         // any hit during this step's update is the same crash condition as
         // a non-finite gradient norm, reported through the same channel.
-        let bad_blocks = crate::quant::blockwise::take_nonfinite_blocks();
-        // Stability telemetry: how many tensors had their gradient clipped
-        // by the percentile phase / their update clipped by max_unorm
-        // during this step's fused batch.
-        let clip_events = crate::optim::take_clip_events();
-        let unorm_clips = crate::optim::take_unorm_clips();
+        // Stability telemetry rides along: how many tensors had their
+        // gradient clipped by the percentile phase / their update clipped
+        // by max_unorm during this step's fused batch.
+        let (bad_blocks, clip_events, unorm_clips) = Self::drain_counters();
         if bad_blocks > 0 {
             self.detector.report_grad_crash();
         }
@@ -413,6 +414,21 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
+    /// Drain all three process-global update counters in one place:
+    /// non-finite quantization blocks, percentile-clip events, and
+    /// max_unorm clips. Returns the drained `(bad_blocks, clip_events,
+    /// unorm_clips)`. This is the registered drain point that rule (c) of
+    /// [`crate::analysis::plan_lint`] refers to — every counter a plan may
+    /// increment must be covered here, so adding a counter without
+    /// extending this drain fails the linter.
+    fn drain_counters() -> (u64, u64, u64) {
+        (
+            crate::quant::blockwise::take_nonfinite_blocks(),
+            crate::optim::take_clip_events(),
+            crate::optim::take_unorm_clips(),
+        )
+    }
+
     /// Evaluation loss (and accuracy for cls) on held-out batches.
     pub fn evaluate(&mut self) -> Result<(f64, Option<f64>)> {
         let mut rng = Rng::new(self.eval_seed);
@@ -462,6 +478,11 @@ impl<'rt> Trainer<'rt> {
     /// Run the configured number of steps (stopping early on instability).
     pub fn train(&mut self) -> Result<RunResult> {
         let t0 = Instant::now();
+        // Between-runs hygiene: a prior trainer in this process (sweeps,
+        // seed medians, tests) may have left counter residue — e.g. a run
+        // that ended on the grad-crash early exit. Start from zero so this
+        // run's first step only reports its own events.
+        Self::drain_counters();
         let reports = self.popt.group_reports();
         let mut res = RunResult {
             state_bytes: self.state_bytes(),
@@ -634,5 +655,25 @@ mod tests {
         let (nonfinite, sq) = grad_stats(&g);
         assert_eq!(nonfinite, 1001);
         assert!((sq - 5.0).abs() < 1e-12, "norm over finite values only, got {sq}");
+    }
+
+    #[test]
+    fn drain_counters_covers_all_three_and_resets() {
+        // Regression for the grad-crash leak: counts accumulated before an
+        // early exit must be consumed by the drain, never surfacing in the
+        // next step's record. Inject known amounts into all three counters
+        // and check one drain returns at least them (other tests in this
+        // process may add their own concurrently — the injected amounts
+        // are lower bounds, not exact values).
+        crate::optim::stability::bump_counters_for_test(3, 2);
+        crate::quant::blockwise::bump_nonfinite_for_test(5);
+        let (bad, clips, unorms) = Trainer::drain_counters();
+        assert!(bad >= 5, "nonfinite blocks not drained: {bad}");
+        assert!(clips >= 3, "clip events not drained: {clips}");
+        assert!(unorms >= 2, "unorm clips not drained: {unorms}");
+        // The drain is a swap-to-zero: our injection must not be
+        // observable a second time.
+        let (bad2, clips2, unorms2) = Trainer::drain_counters();
+        assert!(bad2 < 5 && clips2 < 3 && unorms2 < 2, "{bad2} {clips2} {unorms2}");
     }
 }

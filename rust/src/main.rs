@@ -8,7 +8,14 @@
 //! bitopt8 repro   table1|table2|...|table8|fig3 [--steps N] [--seeds K]
 //! bitopt8 analyze fig2|fig4|fig5|fig6 [--n N]
 //! bitopt8 info    [--artifacts DIR]
+//! bitopt8 --lint  [--configs DIR]
 //! ```
+//!
+//! `--lint` runs the plan-IR determinism linter (`analysis::plan_lint`)
+//! over every `configs/*.toml` (each distinct plan its spec builds over
+//! the dry-run tensor set) plus the full optimizer kind × bits ×
+//! stability capability matrix, printing a greppable `PLAN_LINT ok`
+//! summary and exiting nonzero on any violation.
 //!
 //! `train --dry-run` parses + validates the config (base optimizer,
 //! parameter groups, unsupported combos) and prints the resolved group
@@ -30,6 +37,9 @@ use bitopt8::util::args::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if args.flag("lint") {
+        return cmd_lint(&args);
+    }
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("repro") => {
@@ -44,12 +54,69 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: bitopt8 <train|repro|analyze|info> [options]\n\
+                "usage: bitopt8 <train|repro|analyze|info> [options] | bitopt8 --lint\n\
                  (see module docs in rust/src/main.rs; tables/figures: DESIGN.md §4)"
             );
             Ok(())
         }
     }
+}
+
+/// `--lint`: static plan-IR verification. Lints every shipped config's
+/// spec over the dry-run tensor set, then the full kind × bits ×
+/// stability capability matrix. Nonzero exit on any violation.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use bitopt8::analysis::plan_lint;
+
+    let dir = args.get_or("configs", "configs");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading config dir {dir}: {e}"))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|ext| ext == "toml"))
+        .collect();
+    paths.sort();
+
+    let tensors = dry_run_tensors();
+    let mut configs = 0usize;
+    let mut plans = 0usize;
+    let mut violations = 0usize;
+    for path in &paths {
+        let cfg = RunConfig::from_file(&path.to_string_lossy())?;
+        let report = plan_lint::lint_spec(&cfg.optim_spec(), &tensors);
+        configs += 1;
+        plans += report.plans;
+        violations += report.errors.len();
+        println!(
+            "lint {:<40} plans={:<3} violations={}",
+            path.file_name().unwrap_or_default().to_string_lossy(),
+            report.plans,
+            report.errors.len()
+        );
+        for err in &report.errors {
+            eprintln!("  {err}");
+        }
+    }
+
+    let matrix_errors = plan_lint::lint_matrix();
+    println!(
+        "lint {:<40} kinds={:<3} violations={}",
+        "capability matrix",
+        plan_lint::ALL_KINDS.len(),
+        matrix_errors.len()
+    );
+    for err in &matrix_errors {
+        eprintln!("  {err}");
+    }
+    violations += matrix_errors.len();
+
+    if violations > 0 {
+        anyhow::bail!("PLAN_LINT failed: {violations} violation(s)");
+    }
+    println!(
+        "PLAN_LINT ok: configs={configs} plans={plans} matrix_kinds={} violations=0",
+        plan_lint::ALL_KINDS.len()
+    );
+    Ok(())
 }
 
 /// A representative transformer-LM tensor listing for `--dry-run` group

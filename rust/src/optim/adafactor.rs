@@ -13,7 +13,10 @@
 //! first moment dominates: ≈4 bytes/param ≈ half of 32-bit Adam — exactly
 //! the "competitive but still 2× 8-bit Adam" memory row in Table 1.
 
-use super::state::{block_steps, BlockSteps, BlockView, Grid, Phase, StateTensor, StepPlan};
+use super::state::{
+    block_steps, AccessSet, BlockSteps, BlockView, CombineAccess, Grid, Phase, Region, Span,
+    StateTensor, StepPlan,
+};
 use super::{OptimConfig, Optimizer};
 use crate::util::parallel::Shared;
 use crate::util::reduce;
@@ -93,6 +96,7 @@ impl Optimizer for Adafactor {
         let u_sh = Shared::new(&mut self.u);
 
         let mut plan = StepPlan::new();
+        let chunk = Span::Blocked { base: 0, block: reduce::CHUNK, n };
 
         // RMS-clip combine, shared by both layouts (captures are Copy, so
         // the closure is too; only the taken branch consumes one).
@@ -136,7 +140,21 @@ impl Optimizer for Adafactor {
                 let r = unsafe { row_sh.range(0, rows) };
                 unsafe { row_sum.write(0, r.iter().sum::<f32>().max(EPS1)) };
             };
-            plan.push(Phase::with_combine(stats_items, stats_combine));
+            plan.push(
+                Phase::with_combine(stats_items, stats_combine).with_access(
+                    AccessSet::new()
+                        .read(Region::Grads, Span::All { lo: 0, hi: n })
+                        .rmw(Region::Slot("af.row"), Span::GridRows { grid, stride: 1, base: 0 })
+                        .rmw(Region::Slot("af.col"), Span::GridCols { grid, stride: 1, base: 0 })
+                        .preset(Region::Slot("af.row"))
+                        .preset(Region::Slot("af.col"))
+                        .combine(
+                            CombineAccess::deterministic()
+                                .read(Region::Slot("af.row"), Span::All { lo: 0, hi: rows })
+                                .write(Region::Slot("af.row_sum"), Span::All { lo: 0, hi: 1 }),
+                        ),
+                ),
+            );
 
             // ---- phase B: u = g/√v̂ + per-chunk RMS partials (reads the
             // phase-A statistics after the barrier).
@@ -153,7 +171,25 @@ impl Optimizer for Adafactor {
                 }
                 unsafe { partials.write(c, reduce::sum_sq(u)) };
             });
-            plan.push(Phase::with_combine(u_items, u_combine));
+            plan.push(
+                Phase::with_combine(u_items, u_combine).with_access(
+                    AccessSet::new()
+                        .read(Region::Grads, chunk)
+                        .read(Region::Slot("af.row"), Span::All { lo: 0, hi: rows })
+                        .read(Region::Slot("af.col"), Span::All { lo: 0, hi: cols })
+                        .read(Region::Slot("af.row_sum"), Span::All { lo: 0, hi: 1 })
+                        .write(Region::Slot("af.u"), chunk)
+                        .write(
+                            Region::Slot("af.partials"),
+                            Span::Blocked { base: 0, block: 1, n: nc },
+                        )
+                        .combine(
+                            CombineAccess::deterministic()
+                                .read(Region::Slot("af.partials"), Span::All { lo: 0, hi: nc })
+                                .write(Region::Slot("af.clip"), Span::All { lo: 0, hi: 1 }),
+                        ),
+                ),
+            );
         } else {
             // ---- 1-D: v is elementwise, so the stats update fuses into
             // the u phase (two phases total).
@@ -170,7 +206,24 @@ impl Optimizer for Adafactor {
                 }
                 unsafe { partials.write(c, reduce::sum_sq(u)) };
             });
-            plan.push(Phase::with_combine(u_items, u_combine));
+            plan.push(
+                Phase::with_combine(u_items, u_combine).with_access(
+                    AccessSet::new()
+                        .read(Region::Grads, chunk)
+                        .rmw(Region::Slot("af.v"), chunk)
+                        .preset(Region::Slot("af.v"))
+                        .write(Region::Slot("af.u"), chunk)
+                        .write(
+                            Region::Slot("af.partials"),
+                            Span::Blocked { base: 0, block: 1, n: nc },
+                        )
+                        .combine(
+                            CombineAccess::deterministic()
+                                .read(Region::Slot("af.partials"), Span::All { lo: 0, hi: nc })
+                                .write(Region::Slot("af.clip"), Span::All { lo: 0, hi: 1 }),
+                        ),
+                ),
+            );
         }
 
         // ---- final phase: first moment + apply (block engine, u in the
@@ -189,7 +242,10 @@ impl Optimizer for Adafactor {
                 params[i] -= step;
             }
         });
-        plan.push(Phase::new(apply));
+        plan.push(Phase::new(apply).map_access(|a| {
+            a.relabel(Region::Grads, Region::Slot("af.u"))
+                .read(Region::Slot("af.clip"), Span::All { lo: 0, hi: 1 })
+        }));
         plan
     }
 

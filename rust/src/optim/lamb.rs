@@ -13,7 +13,10 @@
 //! No whole-tensor pass remains — every item runs inside the fused
 //! engine's pool batches.
 
-use super::state::{block_steps, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
+use super::state::{
+    block_steps, AccessSet, BlockSteps, BlockView, CombineAccess, Phase, Region, Span, StateTensor,
+    StepPlan,
+};
 use super::{make_state, OptimConfig, Optimizer};
 use crate::util::lanes::{self, LANES};
 use crate::util::parallel::Shared;
@@ -159,9 +162,39 @@ impl Optimizer for Lamb {
             }
         });
 
+        // Chunks covered by one phase-A item (state blocks are CHUNK-
+        // aligned, or the tensor is a single item).
+        let cpb = if block >= n { nc } else { block / reduce::CHUNK };
+        let chunk = Span::Blocked { base: 0, block: reduce::CHUNK, n };
         let mut plan = StepPlan::new();
-        plan.push(Phase::with_combine(phase_a, combine));
-        plan.push(Phase::new(phase_b));
+        plan.push(
+            Phase::with_combine(phase_a, combine).map_access(move |a| {
+                // The "params" slot of phase A carries u; real parameters
+                // are only read (weight decay + the ‖w‖ partial).
+                a.relabel(Region::Params, Region::Slot("lamb.u"))
+                    .preset(Region::Slot("lamb.u"))
+                    .read(Region::Params, Span::Blocked { base: 0, block, n })
+                    .write(
+                        Region::Slot("lamb.partials"),
+                        Span::Blocked { base: 0, block: cpb, n: nc },
+                    )
+                    .write(
+                        Region::Slot("lamb.partials"),
+                        Span::Blocked { base: nc, block: cpb, n: nc },
+                    )
+                    .combine(
+                        CombineAccess::deterministic()
+                            .read(Region::Slot("lamb.partials"), Span::All { lo: 0, hi: 2 * nc })
+                            .write(Region::Slot("lamb.scale"), Span::All { lo: 0, hi: 1 }),
+                    )
+            }),
+        );
+        plan.push(Phase::new(phase_b).with_access(
+            AccessSet::new()
+                .rmw(Region::Params, chunk)
+                .read(Region::Slot("lamb.u"), chunk)
+                .read(Region::Slot("lamb.scale"), Span::All { lo: 0, hi: 1 }),
+        ));
         plan
     }
 

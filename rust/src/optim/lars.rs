@@ -12,7 +12,10 @@
 //! momentum update — so the whole step, norms included, runs inside the
 //! fused engine's pool batches.
 
-use super::state::{block_steps_vec, BlockSteps, BlockView, LaneView, Phase, StateTensor, StepPlan};
+use super::state::{
+    block_steps_vec, AccessSet, BlockSteps, BlockView, CombineAccess, LaneView, Phase, Region,
+    Span, StateTensor, StepPlan,
+};
 use super::{make_state, OptimConfig, Optimizer};
 use crate::util::lanes::LANES;
 use crate::util::parallel::Shared;
@@ -111,9 +114,31 @@ impl Optimizer for Lars {
             },
         );
 
+        let chunk = Span::Blocked { base: 0, block: reduce::CHUNK, n };
         let mut plan = StepPlan::new();
-        plan.push(Phase::with_combine(phase_a, combine));
-        plan.push(Phase::new(phase_b));
+        plan.push(
+            Phase::with_combine(phase_a, combine).with_access(
+                AccessSet::new()
+                    .read(Region::Params, chunk)
+                    .read(Region::Grads, chunk)
+                    .write(
+                        Region::Slot("lars.partials"),
+                        Span::Blocked { base: 0, block: 1, n: nc },
+                    )
+                    .write(
+                        Region::Slot("lars.partials"),
+                        Span::Blocked { base: nc, block: 1, n: nc },
+                    )
+                    .combine(
+                        CombineAccess::deterministic()
+                            .read(Region::Slot("lars.partials"), Span::All { lo: 0, hi: 2 * nc })
+                            .write(Region::Slot("lars.scaled_lr"), Span::All { lo: 0, hi: 1 }),
+                    ),
+            ),
+        );
+        plan.push(Phase::new(phase_b).map_access(|a| {
+            a.read(Region::Slot("lars.scaled_lr"), Span::All { lo: 0, hi: 1 })
+        }));
         plan
     }
 

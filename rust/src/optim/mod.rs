@@ -54,7 +54,10 @@ pub use groups::{
 pub use shard::{assign_greedy, sharded_update, ShardLayout, MAX_SHARDS};
 pub use spec::{validate_config, OptimSpec};
 pub use stability::{take_clip_events, take_unorm_clips, GnormHistory};
-pub use state::{block_steps, step_blocks, BlockSteps, BlockView, Phase, StateTensor, StepPlan};
+pub use state::{
+    block_steps, step_blocks, AccessSet, BlockSteps, BlockView, CombineAccess, Counter, Grid,
+    Phase, Region, Span, StateTensor, StepPlan,
+};
 
 use crate::quant::{CodeWidth, Format, BLOCK};
 

@@ -7,7 +7,10 @@
 //!   w −= lr · g / √ν;  R_i = max_j ν_ij;  C_j = max_i ν_ij
 //! 1-D tensors use a single full accumulator (equivalent to AdaGrad).
 
-use super::state::{block_steps, BlockSteps, BlockView, Grid, Phase, StateTensor, StepPlan};
+use super::state::{
+    block_steps, AccessSet, BlockSteps, BlockView, CombineAccess, Grid, Phase, Region, Span,
+    StateTensor, StepPlan,
+};
 use super::{OptimConfig, Optimizer};
 use crate::util::parallel::Shared;
 
@@ -127,7 +130,32 @@ impl Optimizer for Sm3 {
             col_sh.range_mut(0, cols).copy_from_slice(new_col_sh.range(0, cols));
         };
         let mut plan = StepPlan::new();
-        plan.push(Phase::with_combine(items, combine));
+        plan.push(
+            Phase::with_combine(items, combine).with_access(
+                AccessSet::new()
+                    .read(Region::Grads, Span::All { lo: 0, hi: rows * cols })
+                    .read(Region::Slot("sm3.row"), Span::All { lo: 0, hi: rows })
+                    .read(Region::Slot("sm3.col"), Span::All { lo: 0, hi: cols })
+                    .preset(Region::Slot("sm3.row"))
+                    .preset(Region::Slot("sm3.col"))
+                    .rmw(Region::Params, Span::GridRows { grid, stride: cols, base: 0 })
+                    .write(
+                        Region::Slot("sm3.new_row"),
+                        Span::GridRows { grid, stride: 1, base: 0 },
+                    )
+                    .write(
+                        Region::Slot("sm3.new_col"),
+                        Span::GridCols { grid, stride: 1, base: 0 },
+                    )
+                    .combine(
+                        CombineAccess::deterministic()
+                            .read(Region::Slot("sm3.new_row"), Span::All { lo: 0, hi: rows })
+                            .read(Region::Slot("sm3.new_col"), Span::All { lo: 0, hi: cols })
+                            .write(Region::Slot("sm3.row"), Span::All { lo: 0, hi: rows })
+                            .write(Region::Slot("sm3.col"), Span::All { lo: 0, hi: cols }),
+                    ),
+            ),
+        );
         plan
     }
 

@@ -38,7 +38,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::state::{
-    block_steps, block_steps_vec, BlockSteps, BlockView, LaneView, Phase, StateTensor, StepPlan,
+    block_steps, block_steps_vec, AccessSet, BlockSteps, BlockView, CombineAccess, Counter,
+    LaneView, Phase, Region, Span, StateTensor, StepPlan,
 };
 use super::OptimConfig;
 use crate::util::lanes::{self, LANES};
@@ -138,6 +139,14 @@ pub fn take_unorm_clips() -> u64 {
     UNORM_CLIPS.swap(0, Ordering::Relaxed)
 }
 
+/// Test-only: bump both clip counters, so drain-path regression tests can
+/// verify a crashed step's counts never leak into the next step's record.
+#[cfg(test)]
+pub(crate) fn bump_counters_for_test(clips: u64, unorms: u64) {
+    CLIP_EVENTS.fetch_add(clips, Ordering::Relaxed);
+    UNORM_CLIPS.fetch_add(unorms, Ordering::Relaxed);
+}
+
 /// Per-optimizer stability scratch: the gnorm history plus the reduction
 /// partials / update buffer / cross-phase scales the stabilized plan
 /// routes through `Shared`. Empty (a few dozen bytes) until the first
@@ -200,7 +209,21 @@ fn gnorm_clip_phase<'a>(
         }
         unsafe { scales.write(0, scale) };
     };
-    Phase::with_combine(items, combine)
+    Phase::with_combine(items, combine).with_access(
+        AccessSet::new()
+            .read(Region::Grads, Span::Blocked { base: 0, block: reduce::CHUNK, n })
+            .write(Region::Slot("stab.partials"), Span::Blocked { base: 0, block: 1, n: nc })
+            .preset(Region::Slot("stab.history"))
+            .preset(Region::Slot("stab.scales"))
+            .combine(
+                CombineAccess::deterministic()
+                    .read(Region::Slot("stab.partials"), Span::All { lo: 0, hi: nc })
+                    .read(Region::Slot("stab.history"), Span::All { lo: 0, hi: 1 })
+                    .write(Region::Slot("stab.history"), Span::All { lo: 0, hi: 1 })
+                    .write(Region::Slot("stab.scales"), Span::All { lo: 0, hi: 1 })
+                    .counter(Counter::ClipEvents),
+            ),
+    )
 }
 
 /// Update-norm combine: fold the `‖w‖²`/`‖u‖²` partials the moment/u phase
@@ -237,6 +260,7 @@ fn apply_phase<'a>(
     u_sh: Shared<f32>,
     scales: Shared<f32>,
 ) -> Phase<'a> {
+    let chunk = Span::Blocked { base: 0, block: reduce::CHUNK, n };
     Phase::new(BlockSteps::from_fn(reduce::n_chunks(n), move |c| {
         let (lo, hi) = reduce::chunk_bounds(n, c);
         // SAFETY: item c owns param chunk c; u and the scale were written
@@ -248,6 +272,13 @@ fn apply_phase<'a>(
             p[i] -= step * u[i];
         }
     }))
+    .with_access(
+        AccessSet::new()
+            .rmw(Region::Params, chunk)
+            .read(Region::Slot("stab.u"), chunk)
+            .read(Region::Slot("stab.scales"), Span::All { lo: 1, hi: 2 })
+            .preset(Region::Slot("stab.scales")),
+    )
 }
 
 /// The shared stabilized phased plan for the elementwise-state optimizers.
@@ -301,7 +332,7 @@ where
     if !need_u {
         // Direct path: one lane-chunked elementwise phase; the clip scale
         // is read per block (written by the phase-0 combine, or preset).
-        plan.push(Phase::new(block_steps_vec(
+        let direct = Phase::new(block_steps_vec(
             params,
             grads,
             s1,
@@ -339,7 +370,11 @@ where
                     }
                 }
             },
-        )));
+        ));
+        plan.push(direct.map_access(|a| {
+            a.read(Region::Slot("stab.scales"), Span::All { lo: 0, hi: 1 })
+                .preset(Region::Slot("stab.scales"))
+        }));
         return plan;
     }
 
@@ -356,6 +391,15 @@ where
         fallback_block % reduce::CHUNK == 0 || fallback_block >= n,
         "unorm partials need chunk-aligned state blocks (block {fallback_block}, n {n})"
     );
+    // Effective block size `block_steps` will pick (quantized state block,
+    // else the fallback) — needed to declare which partial chunks each
+    // moment-phase item covers.
+    let eff_block = match (&*s1, s2.as_deref()) {
+        (StateTensor::Quant { q, .. }, _) => q.block,
+        (_, Some(StateTensor::Quant { q, .. })) => q.block,
+        _ => fallback_block.min(n.max(1)),
+    };
+    let cpb = if eff_block >= n { nc } else { eff_block / reduce::CHUNK };
     let u_slot: &'a mut [f32] = unsafe { u_sh.range_mut(0, n) };
     let phase_m = block_steps(u_slot, grads, s1, s2, fallback_block, move |v: BlockView| {
         let BlockView { params: u_b, grads, s1: s1_b, s2: mut s2_b, start } = v;
@@ -404,10 +448,32 @@ where
             lo = hi;
         }
     });
-    plan.push(Phase::with_combine(
-        phase_m,
-        unorm_combine(partials, nc, scales, cfg.lr, cfg.max_unorm),
-    ));
+    plan.push(
+        Phase::with_combine(phase_m, unorm_combine(partials, nc, scales, cfg.lr, cfg.max_unorm))
+            .map_access(move |a| {
+                // The "params" slot of this phase actually carries `u`; the
+                // real parameters are only read (weight decay + ‖w‖).
+                a.relabel(Region::Params, Region::Slot("stab.u"))
+                    .preset(Region::Slot("stab.u"))
+                    .preset(Region::Slot("stab.scales"))
+                    .read(Region::Params, Span::Blocked { base: 0, block: eff_block, n })
+                    .read(Region::Slot("stab.scales"), Span::All { lo: 0, hi: 1 })
+                    .write(
+                        Region::Slot("stab.partials"),
+                        Span::Blocked { base: nc, block: cpb, n: nc },
+                    )
+                    .write(
+                        Region::Slot("stab.partials"),
+                        Span::Blocked { base: 2 * nc, block: cpb, n: nc },
+                    )
+                    .combine(
+                        CombineAccess::deterministic()
+                            .read(Region::Slot("stab.partials"), Span::All { lo: nc, hi: 3 * nc })
+                            .write(Region::Slot("stab.scales"), Span::All { lo: 1, hi: 2 })
+                            .counter(Counter::UnormClips),
+                    )
+            }),
+    );
     plan.push(apply_phase(n, params_sh, u_sh, scales));
     plan
 }

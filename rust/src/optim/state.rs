@@ -256,6 +256,344 @@ fn state_parts(s: &mut StateTensor, block: usize, n: usize) -> StateParts<'_> {
     }
 }
 
+/// A named storage region a phase item or combine may touch — the
+/// vocabulary of [`AccessSet`] declarations. `Params`/`Grads`/`State1`/
+/// `State2` are the tensors handed to `Optimizer::plan`; `Slot` names a
+/// persistent scratch buffer by a stable id (e.g. `"stab.partials"`), so
+/// the linter can track cross-phase data flow through reduction scratch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Region {
+    Params,
+    /// Gradients are read-only by contract; any declared write is rejected.
+    Grads,
+    State1,
+    State2,
+    /// A named shared scratch slot (stable id, unique per optimizer).
+    Slot(&'static str),
+}
+
+/// A process-global telemetry counter a phase may increment. Rule (c) of
+/// the plan linter demands every incremented counter have a registered
+/// drain point (the trainer's JSONL step records), so a plan can't leak
+/// counts silently into a later step's record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Counter {
+    /// `quant::blockwise` non-finite-block sanitizer hits — bumped by any
+    /// quantized-state store.
+    NonfiniteBlocks,
+    /// `optim::stability::CLIP_EVENTS` — percentile-clip activations.
+    ClipEvents,
+    /// `optim::stability::UNORM_CLIPS` — max_unorm activations.
+    UnormClips,
+}
+
+/// Which element range of a [`Region`] each item of a phase touches — the
+/// per-item footprint the linter intersects to prove disjointness.
+#[derive(Clone, Copy, Debug)]
+pub enum Span {
+    /// Item `i` owns `[base + i*block, base + min((i+1)*block, n))`; items
+    /// past `n` touch nothing. The shape of every block-partitioned
+    /// footprint (quantization blocks, reduction chunks, partial slots).
+    Blocked { base: usize, block: usize, n: usize },
+    /// Every item touches the whole `[lo, hi)` — broadcast reads (a scale
+    /// produced by an earlier combine) or a combine's whole fold input.
+    All { lo: usize, hi: usize },
+    /// Row items of `grid` own `[base + r0*stride, base + r1*stride)`
+    /// (their row range scaled by `stride`); column items touch nothing.
+    GridRows { grid: Grid, stride: usize, base: usize },
+    /// Column items of `grid` own `[base + c0*stride, base + c1*stride)`;
+    /// row items touch nothing.
+    GridCols { grid: Grid, stride: usize, base: usize },
+}
+
+impl Span {
+    /// Element interval item `i` touches, `None` if it touches nothing.
+    pub fn item_range(&self, i: usize) -> Option<(usize, usize)> {
+        match *self {
+            Span::Blocked { base, block, n } => {
+                if block == 0 {
+                    return None;
+                }
+                let lo = i.checked_mul(block)?;
+                if lo >= n {
+                    return None;
+                }
+                Some((base + lo, base + (lo + block).min(n)))
+            }
+            Span::All { lo, hi } => (lo < hi).then_some((lo, hi)),
+            Span::GridRows { grid, stride, base } => {
+                let (r0, r1) = grid.row_range(i)?;
+                Some((base + r0 * stride, base + r1 * stride))
+            }
+            Span::GridCols { grid, stride, base } => {
+                if grid.row_range(i).is_some() {
+                    return None;
+                }
+                let (c0, c1) = grid.col_range(i);
+                (c0 < c1).then_some((base + c0 * stride, base + c1 * stride))
+            }
+        }
+    }
+
+    /// Whether this span partitions work over a factored [`Grid`] — the
+    /// shape signature the capability linter cross-checks against
+    /// `supports_sharding` (factored statistics are not
+    /// element-proportional, hence unshardable).
+    pub fn is_grid(&self) -> bool {
+        matches!(self, Span::GridRows { .. } | Span::GridCols { .. })
+    }
+}
+
+/// What a phase's combine (the post-barrier fold) touches. Combines run
+/// exactly once, single-threaded, between phase barriers, so their
+/// reads/writes need no disjointness — the linter instead checks that they
+/// declare order-determinism (rule d): the fold must visit its per-item
+/// partials in fixed index order (`util::reduce` primitives), never in
+/// completion order.
+#[derive(Clone, Debug, Default)]
+pub struct CombineAccess {
+    pub reads: Vec<(Region, Span)>,
+    pub writes: Vec<(Region, Span)>,
+    pub counters: Vec<Counter>,
+    pub deterministic: bool,
+}
+
+impl CombineAccess {
+    /// A combine that folds in fixed index order (the only kind the linter
+    /// accepts).
+    pub fn deterministic() -> CombineAccess {
+        CombineAccess { deterministic: true, ..CombineAccess::default() }
+    }
+
+    pub fn read(mut self, region: Region, span: Span) -> Self {
+        self.reads.push((region, span));
+        self
+    }
+
+    pub fn write(mut self, region: Region, span: Span) -> Self {
+        self.writes.push((region, span));
+        self
+    }
+
+    pub fn counter(mut self, c: Counter) -> Self {
+        self.counters.push(c);
+        self
+    }
+}
+
+/// Declared footprint of one phase: what its parallel items read and
+/// write, which global counters they bump, what its combine touches, and
+/// which regions hold state that is already initialized when the plan
+/// starts (`presets` — persistent moments, rolling histories, scratch
+/// carried across steps). [`block_steps`] derives the declaration
+/// automatically for plain block-partitioned phases; hand-built phases
+/// declare theirs via [`Phase::with_access`] / [`Phase::map_access`].
+/// `analysis::plan_lint` statically verifies the declared sets.
+#[derive(Clone, Debug, Default)]
+pub struct AccessSet {
+    pub reads: Vec<(Region, Span)>,
+    pub writes: Vec<(Region, Span)>,
+    pub counters: Vec<Counter>,
+    pub combine: Option<CombineAccess>,
+    pub presets: Vec<Region>,
+}
+
+impl AccessSet {
+    pub fn new() -> AccessSet {
+        AccessSet::default()
+    }
+
+    pub fn read(mut self, region: Region, span: Span) -> Self {
+        self.reads.push((region, span));
+        self
+    }
+
+    pub fn write(mut self, region: Region, span: Span) -> Self {
+        self.writes.push((region, span));
+        self
+    }
+
+    /// Read-modify-write: the item reads and writes the same range.
+    pub fn rmw(self, region: Region, span: Span) -> Self {
+        self.read(region, span).write(region, span)
+    }
+
+    pub fn counter(mut self, c: Counter) -> Self {
+        self.counters.push(c);
+        self
+    }
+
+    /// Declare `region` initialized before the plan runs (persistent
+    /// optimizer state carried across steps).
+    pub fn preset(mut self, region: Region) -> Self {
+        self.presets.push(region);
+        self
+    }
+
+    pub fn combine(mut self, c: CombineAccess) -> Self {
+        self.combine = Some(c);
+        self
+    }
+
+    /// Re-label a region: [`block_steps`] describes its slots positionally
+    /// (params/grads/state), but optimizers sometimes lend those slots to
+    /// other buffers (LAMB runs its update vector through the params
+    /// slot); the declaration then renames the slot to the buffer it
+    /// really is.
+    pub fn relabel(mut self, from: Region, to: Region) -> Self {
+        for (r, _) in self.reads.iter_mut().chain(self.writes.iter_mut()) {
+            if *r == from {
+                *r = to;
+            }
+        }
+        self
+    }
+
+    /// Rule (a): some two distinct items of this phase write overlapping
+    /// elements of the same region. Returns the first offending region.
+    pub fn item_write_conflict(&self, n_items: usize) -> Option<Region> {
+        for region in regions_of(&self.writes) {
+            let writes = spans_for(&self.writes, region);
+            if sweep_overlap(&writes, &[], n_items) {
+                return Some(region);
+            }
+        }
+        None
+    }
+
+    /// Rule (b), same-phase half: an item reads elements another item of
+    /// the same phase writes — a race, because items of one phase are
+    /// unordered. Same-item read+write (RMW) is legal.
+    pub fn item_read_write_race(&self, n_items: usize) -> Option<Region> {
+        for region in regions_of(&self.writes) {
+            let reads = spans_for(&self.reads, region);
+            if reads.is_empty() {
+                continue;
+            }
+            let writes = spans_for(&self.writes, region);
+            if sweep_overlap(&writes, &reads, n_items) {
+                return Some(region);
+            }
+        }
+        None
+    }
+
+    /// Any declared write (items or combine) to the read-only gradients.
+    pub fn writes_grads(&self) -> bool {
+        self.writes.iter().any(|(r, _)| *r == Region::Grads)
+            || self
+                .combine
+                .as_ref()
+                .is_some_and(|c| c.writes.iter().any(|(r, _)| *r == Region::Grads))
+    }
+
+    /// Every counter this phase increments (items plus combine).
+    pub fn all_counters(&self) -> Vec<Counter> {
+        let mut out = self.counters.clone();
+        if let Some(c) = &self.combine {
+            out.extend(c.counters.iter().copied());
+        }
+        out
+    }
+}
+
+/// Distinct regions named by an access list, in first-seen order.
+fn regions_of(list: &[(Region, Span)]) -> Vec<Region> {
+    let mut out: Vec<Region> = Vec::new();
+    for (r, _) in list {
+        if !out.contains(r) {
+            out.push(*r);
+        }
+    }
+    out
+}
+
+fn spans_for(list: &[(Region, Span)], region: Region) -> Vec<Span> {
+    list.iter().filter(|(r, _)| *r == region).map(|(_, s)| *s).collect()
+}
+
+/// Furthest-open-interval tracker for the overlap sweeps: remembers the
+/// two largest interval ends seen so far that belong to *distinct* items —
+/// enough to answer "is any interval of an item other than `it` still open
+/// at position `s`" during a start-sorted scan.
+#[derive(Default)]
+struct TopTwo {
+    /// `(end, item)` with the furthest end overall.
+    top: Option<(usize, usize)>,
+    /// Furthest end among items different from `top`'s item.
+    second: Option<(usize, usize)>,
+}
+
+impl TopTwo {
+    fn other_end(&self, it: usize) -> Option<usize> {
+        match self.top {
+            Some((end, item)) if item != it => Some(end),
+            _ => self.second.map(|(end, _)| end),
+        }
+    }
+
+    fn add(&mut self, e: usize, it: usize) {
+        match self.top {
+            None => self.top = Some((e, it)),
+            Some((end, item)) if item == it => {
+                if e > end {
+                    self.top = Some((e, it));
+                }
+            }
+            Some((end, _)) if e > end => {
+                self.second = self.top.take();
+                self.top = Some((e, it));
+            }
+            _ => match self.second {
+                Some((e2, _)) if e <= e2 => {}
+                _ => self.second = Some((e, it)),
+            },
+        }
+    }
+}
+
+/// Whether any write interval of one item overlaps a write (or, when
+/// `reads` is non-empty, a read) interval of a *different* item. A
+/// start-sorted sweep over the materialized per-item intervals; same-item
+/// overlap (RMW, repeated declarations) never counts.
+fn sweep_overlap(writes: &[Span], reads: &[Span], n_items: usize) -> bool {
+    // (start, end, item, is_write)
+    let mut events: Vec<(usize, usize, usize, bool)> = Vec::new();
+    for i in 0..n_items {
+        for s in writes {
+            if let Some((lo, hi)) = s.item_range(i) {
+                events.push((lo, hi, i, true));
+            }
+        }
+        for s in reads {
+            if let Some((lo, hi)) = s.item_range(i) {
+                events.push((lo, hi, i, false));
+            }
+        }
+    }
+    events.sort_unstable();
+    let check_writes_vs_writes = reads.is_empty();
+    let mut open_w = TopTwo::default();
+    let mut open_r = TopTwo::default();
+    for (s, e, it, is_write) in events {
+        if is_write {
+            if check_writes_vs_writes && open_w.other_end(it).is_some_and(|end| s < end) {
+                return true;
+            }
+            if open_r.other_end(it).is_some_and(|end| s < end) {
+                return true;
+            }
+            open_w.add(e, it);
+        } else {
+            if open_w.other_end(it).is_some_and(|end| s < end) {
+                return true;
+            }
+            open_r.add(e, it);
+        }
+    }
+    false
+}
+
 /// One tensor's decomposed update: `n_blocks` independent block tasks that
 /// the pool — or the fused multi-tensor engine — may run in any order, on
 /// any thread, each exactly once per step. Results are bit-identical at
@@ -264,6 +602,7 @@ fn state_parts(s: &mut StateTensor, block: usize, n: usize) -> StateParts<'_> {
 pub struct BlockSteps<'a> {
     n_blocks: usize,
     run: Box<dyn Fn(usize) + Sync + Send + 'a>,
+    access: Option<AccessSet>,
 }
 
 impl<'a> BlockSteps<'a> {
@@ -274,7 +613,17 @@ impl<'a> BlockSteps<'a> {
     where
         F: Fn(usize) + Sync + Send + 'a,
     {
-        BlockSteps { n_blocks: n, run: Box::new(f) }
+        BlockSteps { n_blocks: n, run: Box::new(f), access: None }
+    }
+
+    /// Attach (or replace) the declared access set.
+    pub fn with_access(mut self, access: AccessSet) -> Self {
+        self.access = Some(access);
+        self
+    }
+
+    pub fn access(&self) -> Option<&AccessSet> {
+        self.access.as_ref()
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -304,18 +653,46 @@ impl<'a> BlockSteps<'a> {
 pub struct Phase<'a> {
     items: BlockSteps<'a>,
     combine: Option<Box<dyn FnOnce() + Send + Sync + 'a>>,
+    access: Option<AccessSet>,
 }
 
 impl<'a> Phase<'a> {
-    pub fn new(items: BlockSteps<'a>) -> Phase<'a> {
-        Phase { items, combine: None }
+    pub fn new(mut items: BlockSteps<'a>) -> Phase<'a> {
+        let access = items.access.take();
+        Phase { items, combine: None, access }
     }
 
-    pub fn with_combine<F>(items: BlockSteps<'a>, combine: F) -> Phase<'a>
+    pub fn with_combine<F>(mut items: BlockSteps<'a>, combine: F) -> Phase<'a>
     where
         F: FnOnce() + Send + Sync + 'a,
     {
-        Phase { items, combine: Some(Box::new(combine)) }
+        let access = items.access.take();
+        Phase { items, combine: Some(Box::new(combine)), access }
+    }
+
+    /// Replace the declared access set wholesale.
+    pub fn with_access(mut self, access: AccessSet) -> Self {
+        self.access = Some(access);
+        self
+    }
+
+    /// Refine the inherited declaration — e.g. add the broadcast read of a
+    /// combine-produced scale to a phase whose base declaration was
+    /// auto-derived by [`block_steps`].
+    pub fn map_access<F>(mut self, f: F) -> Self
+    where
+        F: FnOnce(AccessSet) -> AccessSet,
+    {
+        self.access = Some(f(self.access.take().unwrap_or_default()));
+        self
+    }
+
+    pub fn access(&self) -> Option<&AccessSet> {
+        self.access.as_ref()
+    }
+
+    pub fn has_combine(&self) -> bool {
+        self.combine.is_some()
     }
 
     pub fn n_items(&self) -> usize {
@@ -353,12 +730,51 @@ impl<'a> StepPlan<'a> {
         plan
     }
 
+    /// Append a phase, `debug_assert!`-validating its declared access set
+    /// at construction time: rule (a) item-write disjointness, the
+    /// read-only gradient contract, and combine-declaration consistency.
+    /// Phases without a declaration pass through (the strict check — every
+    /// phase must declare — lives in `analysis::plan_lint`). Use
+    /// [`StepPlan::push_unchecked`] to build deliberately malformed plans
+    /// for linter tests.
     pub fn push(&mut self, phase: Phase<'a>) {
+        if cfg!(debug_assertions) {
+            if let Some(access) = phase.access() {
+                let n = phase.n_items();
+                debug_assert!(
+                    access.item_write_conflict(n).is_none(),
+                    "phase declares overlapping item writes to {:?}",
+                    access.item_write_conflict(n)
+                );
+                debug_assert!(!access.writes_grads(), "phase declares a write to Grads");
+                debug_assert_eq!(
+                    access.combine.is_some(),
+                    phase.has_combine(),
+                    "combine closure and combine access declaration must agree"
+                );
+            }
+        }
+        self.phases.push(phase);
+    }
+
+    /// [`StepPlan::push`] without construction-time validation — for
+    /// negative linter tests that need a malformed plan to exist.
+    pub fn push_unchecked(&mut self, phase: Phase<'a>) {
         self.phases.push(phase);
     }
 
     pub fn n_phases(&self) -> usize {
         self.phases.len()
+    }
+
+    /// Declared access set of phase `k` — the plan linter's input.
+    pub fn phase_access(&self, k: usize) -> Option<&AccessSet> {
+        self.phases.get(k).and_then(|p| p.access())
+    }
+
+    /// Whether phase `k` carries a (not yet taken) combine closure.
+    pub fn phase_has_combine(&self, k: usize) -> bool {
+        self.phases.get(k).is_some_and(|p| p.combine.is_some())
     }
 
     /// Item count of phase `k` (0 past the last phase, so the fused engine
@@ -404,8 +820,8 @@ impl<'a> StepPlan<'a> {
 /// range of whole columns — so every row/col statistic slot has exactly
 /// one writer and no cross-item scratch is needed. Items are sized to
 /// ~one reduction chunk of elements each.
-#[derive(Clone, Copy)]
-pub(crate) struct Grid {
+#[derive(Clone, Copy, Debug)]
+pub struct Grid {
     rows: usize,
     cols: usize,
     rpi: usize,
@@ -414,19 +830,19 @@ pub(crate) struct Grid {
 }
 
 impl Grid {
-    pub(crate) fn new(rows: usize, cols: usize) -> Grid {
+    pub fn new(rows: usize, cols: usize) -> Grid {
         let rpi = (crate::util::reduce::CHUNK / cols).max(1);
         let cpi = (crate::util::reduce::CHUNK / rows).max(1);
         Grid { rows, cols, rpi, cpi, n_row_items: rows.div_ceil(rpi) }
     }
 
-    pub(crate) fn n_items(&self) -> usize {
+    pub fn n_items(&self) -> usize {
         self.n_row_items + self.cols.div_ceil(self.cpi)
     }
 
     /// `Some((r0, r1))` when item `it` is a row item, else `None` (use
     /// [`Grid::col_range`]).
-    pub(crate) fn row_range(&self, it: usize) -> Option<(usize, usize)> {
+    pub fn row_range(&self, it: usize) -> Option<(usize, usize)> {
         if it < self.n_row_items {
             let r0 = it * self.rpi;
             Some((r0, (r0 + self.rpi).min(self.rows)))
@@ -436,7 +852,7 @@ impl Grid {
     }
 
     /// Column range of a non-row item.
-    pub(crate) fn col_range(&self, it: usize) -> (usize, usize) {
+    pub fn col_range(&self, it: usize) -> (usize, usize) {
         let c0 = (it - self.n_row_items) * self.cpi;
         (c0, (c0 + self.cpi).min(self.cols))
     }
@@ -469,6 +885,8 @@ where
         _ => fallback_block.min(n.max(1)),
     };
     let n_blocks = n.div_ceil(block);
+    let quantized = s1.is_quantized() || s2.as_deref().is_some_and(StateTensor::is_quantized);
+    let two_state = s2.is_some();
     let p1 = state_parts(s1, block, n);
     let p2 = s2.map(|s| state_parts(s, block, n));
     let params_ptr = SendPtr(params.as_mut_ptr());
@@ -559,7 +977,22 @@ where
         });
     };
 
-    BlockSteps { n_blocks, run: Box::new(run) }
+    // Auto-derived access declaration: block `b` owns element range
+    // `[b*block, min((b+1)*block, n))` of every slot it touches, and any
+    // quantized store may bump the non-finite-block sanitizer counter.
+    let span = Span::Blocked { base: 0, block, n };
+    let mut access = AccessSet::new()
+        .rmw(Region::Params, span)
+        .read(Region::Grads, span)
+        .rmw(Region::State1, span);
+    if two_state {
+        access = access.rmw(Region::State2, span);
+    }
+    if quantized {
+        access = access.counter(Counter::NonfiniteBlocks);
+    }
+
+    BlockSteps { n_blocks, run: Box::new(run), access: Some(access) }
 }
 
 /// Lane-chunked variant of [`block_steps`]: the optimizer supplies its
@@ -886,6 +1319,65 @@ mod tests {
         let (p_rev, s_rev) = run(true);
         assert_eq!(p_fwd, p_rev);
         assert_eq!(s_fwd, s_rev);
+    }
+
+    #[test]
+    fn block_steps_derives_its_access_set() {
+        let cb = Arc::new(dynamic_signed());
+        let n = 700;
+        let mut s = StateTensor::new_q8(n, cb, 256);
+        let mut params = vec![0.0f32; n];
+        let grads = vec![0.0f32; n];
+        let steps = block_steps(&mut params, &grads, &mut s, None, 256, |_| {});
+        let access = steps.access().expect("block_steps declares its access");
+        assert!(access.counters.contains(&Counter::NonfiniteBlocks));
+        assert!(!access.writes_grads());
+        assert!(access.item_write_conflict(steps.n_blocks()).is_none());
+        assert!(access.item_read_write_race(steps.n_blocks()).is_none());
+        drop(steps);
+        // an F32 state derives the same spans but no quantizer counter
+        let mut s32 = StateTensor::new_f32(n);
+        let steps = block_steps(&mut params, &grads, &mut s32, None, 256, |_| {});
+        assert!(steps.access().expect("declared").all_counters().is_empty());
+    }
+
+    #[test]
+    fn span_item_ranges_partition_blocked_and_grid() {
+        let span = Span::Blocked { base: 10, block: 256, n: 700 };
+        assert_eq!(span.item_range(0), Some((10, 266)));
+        assert_eq!(span.item_range(2), Some((522, 710)));
+        assert_eq!(span.item_range(3), None);
+        let grid = Grid::new(8, 8);
+        let rows = Span::GridRows { grid, stride: 8, base: 0 };
+        let cols = Span::GridCols { grid, stride: 1, base: 0 };
+        // a 8x8 grid fits one row item and one col item at CHUNK = 2048
+        assert_eq!(grid.n_items(), 2);
+        assert_eq!(rows.item_range(0), Some((0, 64)));
+        assert_eq!(rows.item_range(1), None);
+        assert_eq!(cols.item_range(0), None);
+        assert_eq!(cols.item_range(1), Some((0, 8)));
+        assert!(rows.is_grid() && cols.is_grid());
+    }
+
+    #[test]
+    fn access_sweeps_flag_overlap_and_races() {
+        // two items both writing [0, 4): rule (a)
+        let bad = AccessSet::new().write(Region::Slot("x"), Span::All { lo: 0, hi: 4 });
+        assert_eq!(bad.item_write_conflict(2), Some(Region::Slot("x")));
+        assert!(bad.item_write_conflict(1).is_none(), "single item may write anything");
+        // blocked writes are disjoint
+        let ok = AccessSet::new()
+            .write(Region::Slot("x"), Span::Blocked { base: 0, block: 2, n: 4 });
+        assert!(ok.item_write_conflict(2).is_none());
+        // cross-item read/write: every item reads what item 0 writes
+        let race = AccessSet::new()
+            .read(Region::Slot("x"), Span::All { lo: 0, hi: 4 })
+            .write(Region::Slot("x"), Span::Blocked { base: 0, block: 2, n: 4 });
+        assert_eq!(race.item_read_write_race(2), Some(Region::Slot("x")));
+        // item-local RMW is legal
+        let rmw = AccessSet::new()
+            .rmw(Region::Slot("x"), Span::Blocked { base: 0, block: 2, n: 4 });
+        assert!(rmw.item_read_write_race(2).is_none());
     }
 
     #[test]

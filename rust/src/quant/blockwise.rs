@@ -61,6 +61,14 @@ pub fn take_nonfinite_blocks() -> u64 {
     NONFINITE_BLOCKS.swap(0, Ordering::Relaxed)
 }
 
+/// Test-only: bump the non-finite-block counter, so drain-path regression
+/// tests can verify a crashed step's count never leaks into the next
+/// step's record.
+#[cfg(test)]
+pub(crate) fn bump_nonfinite_for_test(n: u64) {
+    NONFINITE_BLOCKS.fetch_add(n, Ordering::Relaxed);
+}
+
 /// The paper's block size.
 pub const BLOCK: usize = 2048;
 

@@ -714,6 +714,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn nested_parallel_calls_run_inline_without_deadlock() {
         let _g = threads_locked();
         let out = with_threads(4, || {
@@ -728,6 +729,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn pool_is_reused_across_many_batches() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -752,6 +754,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn results_identical_across_thread_counts() {
         let _g = threads_locked();
         let run = |threads: usize| {
@@ -769,6 +772,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn submit_runs_every_index_and_wait_joins() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -782,6 +786,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn submit_does_not_block_the_submitter() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -799,6 +804,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn concurrent_detached_batches_all_complete() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -821,6 +827,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn blocking_and_detached_batches_interleave() {
         // A blocking run_indexed issued while a detached batch is still in
         // flight must not lose either batch's work.
@@ -841,6 +848,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn dropping_a_handle_waits_for_the_batch() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -855,6 +863,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn is_done_reflects_batch_state() {
         let _g = threads_locked();
         with_threads(4, || {
@@ -874,6 +883,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn submit_panics_rethrow_at_wait_and_pool_survives() {
         let _g = threads_locked();
         let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -914,6 +924,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns pool workers / spin-waits: not Miri-friendly
     fn panics_propagate_and_pool_survives() {
         let _g = threads_locked();
         let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
