@@ -33,7 +33,13 @@
 //!   ZeRO-style shards (greedy bytes-balanced placement, one streaming
 //!   batch per shard); records the max per-shard state bytes alongside
 //!   step time — placement is bit-identical, so the footprint/step-time
-//!   pair is the whole story.
+//!   pair is the whole story;
+//! * `adaptive_precision` — static 8-bit Adam vs the adaptive controller
+//!   starting at 4-bit with a periodic gradient spike on one tensor: the
+//!   controller promotes only the spiking tensor, so the adaptive peak
+//!   state footprint stays strictly below static-8 while the spiking
+//!   tensor still gets its wider state (transition count and peak bytes
+//!   land in the JSON; CI greps for them).
 //!
 //! The first two workloads also run a `streaming` variant: admission per
 //! tensor costs more dispatch than the fused one-batch-per-phase, which is
@@ -50,7 +56,8 @@ use std::time::Duration;
 use bitopt8::optim::{
     assign_greedy, build,
     engine::{fused_update, streaming_update, StreamingStep},
-    sharded_update, take_clip_events, take_unorm_clips, Bits, OptimConfig, OptimKind, Optimizer,
+    sharded_update, take_clip_events, take_unorm_clips, Bits, OptimConfig, OptimKind, OptimSpec,
+    Optimizer, ParamOptimizer, PrecisionController, PrecisionPolicy, TensorInfo,
 };
 use bitopt8::quant::Format;
 use bitopt8::util::args::Args;
@@ -119,6 +126,13 @@ struct Entry {
     /// placement (0 for unsharded workloads) — the memory a single shard
     /// must actually hold.
     max_shard_bytes: u64,
+    /// Precision-controller width transitions applied across the bench
+    /// loop (0 for workloads without a controller).
+    transitions: u64,
+    /// Peak optimizer-state footprint across the bench loop: the largest
+    /// total seen at any controller review for the adaptive variant, the
+    /// static footprint otherwise (0 for workloads that don't track it).
+    peak_state_bytes: u64,
 }
 
 fn record(e: Entry, out: &mut Vec<Entry>) {
@@ -172,6 +186,8 @@ fn run_workload(
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
             max_shard_bytes: 0,
+            transitions: 0,
+            peak_state_bytes: 0,
         };
         record(e, out);
     }
@@ -202,6 +218,8 @@ fn run_width_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
             max_shard_bytes: 0,
+            transitions: 0,
+            peak_state_bytes: 0,
         };
         record(e, out);
     }
@@ -245,6 +263,8 @@ fn run_simd_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
                 bytes_per_element: fleet_bytes_per_element(&opts, &params),
                 clip_events: 0,
                 max_shard_bytes: 0,
+                transitions: 0,
+                peak_state_bytes: 0,
             };
             record(e, out);
         }
@@ -309,6 +329,8 @@ fn run_overlap(
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
             max_shard_bytes: 0,
+            transitions: 0,
+            peak_state_bytes: 0,
         };
         record(e, out);
     }
@@ -379,6 +401,8 @@ fn run_stability_stress(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events,
             max_shard_bytes: 0,
+            transitions: 0,
+            peak_state_bytes: 0,
         };
         record(e, out);
     }
@@ -425,9 +449,118 @@ fn run_shard_sweep(spec: &[Spec], budget: Duration, out: &mut Vec<Entry>) {
             bytes_per_element: fleet_bytes_per_element(&opts, &params),
             clip_events: 0,
             max_shard_bytes: shard_bytes.iter().copied().max().unwrap_or(0),
+            transitions: 0,
+            peak_state_bytes: 0,
         };
         record(e, out);
     }
+}
+
+/// The adaptive-precision workload: static 8-bit Adam vs the runtime
+/// precision controller starting at 4-bit, over the same fleet with a
+/// 32x gradient spike on tensor 0 every 16th iteration. The controller
+/// (cadence 8, spike trigger only — the quant-error and demotion paths
+/// are disabled so the transition count stays deterministic) promotes
+/// just the spiking tensor, so the adaptive peak footprint must stay
+/// strictly below static-8 while the unstable tensor still widens. The
+/// per-iteration signal collection (per-tensor squared norms) runs
+/// inside the bench loop on purpose: it is part of the controller's
+/// price, and `us_per_step` should say so.
+fn run_adaptive_precision(n_tensors: usize, n: usize, budget: Duration, out: &mut Vec<Entry>) {
+    let infos: Vec<TensorInfo> = (0..n_tensors)
+        .map(|i| TensorInfo {
+            name: format!("t{i:02}"),
+            size: n,
+            shape: None,
+            padded: n.next_multiple_of(2048),
+        })
+        .collect();
+    let mut rng = Rng::new(42);
+    let base_grads: Vec<Vec<f32>> = (0..n_tensors)
+        .map(|_| (0..n).map(|_| rng.normal() as f32 * 0.01).collect())
+        .collect();
+    let mut base_us = 0.0f64;
+    for variant in ["static8", "adaptive4"] {
+        let bits = if variant == "static8" { Bits::b8_dynamic() } else { Bits::b4_dynamic() };
+        let spec = OptimSpec::new(OptimConfig::adam(1e-3, bits));
+        let mut popt = ParamOptimizer::build(spec, &infos, None).expect("bench fleet builds");
+        let mut ctl = (variant == "adaptive4").then(|| {
+            let policy = PrecisionPolicy {
+                cadence: 8,
+                promote_error: 2.0, // disable the quant-error trigger
+                demote_error: 0.0,  // disable demotion
+                ..PrecisionPolicy::default()
+            };
+            PrecisionController::new(policy, &popt)
+        });
+        let mut params: Vec<Vec<f32>> = (0..n_tensors).map(|_| vec![0.0f32; n]).collect();
+        let mut grads = base_grads.clone();
+        let mut round = 0usize;
+        let r = bench(variant, budget, 2000, || {
+            round += 1;
+            let spike = round % 16 == 0;
+            if spike {
+                // 32x is a power of two: the post-step unscale is exact
+                for v in grads[0].iter_mut() {
+                    *v *= 32.0;
+                }
+            }
+            popt.step_native(&mut params, &grads);
+            if let Some(ctl) = ctl.as_mut() {
+                let tensor_sq: Vec<f64> = grads
+                    .iter()
+                    .map(|g| g.iter().map(|&v| v as f64 * v as f64).sum())
+                    .collect();
+                ctl.observe_step(&tensor_sq, 0, 0, false);
+                if ctl.due(round) {
+                    ctl.review(round, &mut popt);
+                }
+            }
+            if spike {
+                for v in grads[0].iter_mut() {
+                    *v /= 32.0;
+                }
+            }
+        });
+        let us = r.median_ns / 1e3;
+        if variant == "static8" {
+            base_us = us;
+        }
+        let (transitions, peak) = match &ctl {
+            Some(c) => (
+                c.transitions().len() as u64,
+                c.peak_state_bytes().max(popt.state_bytes()) as u64,
+            ),
+            None => (0, popt.state_bytes() as u64),
+        };
+        let e = Entry {
+            workload: "adaptive_precision",
+            optimizer: "adam",
+            bits: bits.describe(),
+            variant,
+            us_per_step: us,
+            iters: r.iters,
+            speedup_vs_base: base_us / us,
+            bytes_per_element: popt.state_bytes() as f64
+                / (n_tensors * n).max(1) as f64,
+            clip_events: 0,
+            max_shard_bytes: 0,
+            transitions,
+            peak_state_bytes: peak,
+        };
+        record(e, out);
+    }
+    let get = |variant: &str| {
+        out.iter()
+            .find(|e| e.workload == "adaptive_precision" && e.variant == variant)
+            .map(|e| e.peak_state_bytes)
+            .unwrap_or(0)
+    };
+    let (st, ad) = (get("static8"), get("adaptive4"));
+    println!(
+        "adaptive_precision: peak state {ad} bytes vs static-8 {st} bytes ({:.1}% saved)",
+        (1.0 - ad as f64 / st.max(1) as f64) * 100.0
+    );
 }
 
 fn main() {
@@ -503,6 +636,10 @@ fn main() {
     // 1/2/4/8 shards — max per-shard footprint vs step time (CI greps for
     // the workload so the placement layer stays on the perf record).
     run_shard_sweep(&adam_many_small(n_tensors, n), budget, &mut entries);
+    // The adaptive-precision workload: the runtime bit-width controller
+    // (start at 4, promote the spiking tensor) vs static 8-bit — peak
+    // state bytes and transition counts land in the JSON (CI greps them).
+    run_adaptive_precision(n_tensors.min(16), n, budget, &mut entries);
 
     let results: Vec<Json> = entries
         .iter()
@@ -518,6 +655,8 @@ fn main() {
                 ("bytes_per_element", num(e.bytes_per_element)),
                 ("clip_events", num(e.clip_events as f64)),
                 ("max_shard_bytes", num(e.max_shard_bytes as f64)),
+                ("transitions", num(e.transitions as f64)),
+                ("peak_state_bytes", num(e.peak_state_bytes as f64)),
             ])
         })
         .collect();

@@ -1,13 +1,17 @@
 //! Static analysis and quantization-error analysis: [`plan_lint`]
 //! statically verifies the phased plan IR's access declarations (the
-//! CLI `--lint` mode), and [`adam_error`] regenerates the data behind
-//! Figures 2, 4, 5, 6 and Table 6 (Appendix D/F).
+//! CLI `--lint` mode), [`adam_error`] regenerates the data behind
+//! Figures 2, 4, 5, 6 and Table 6 (Appendix D/F), and [`probe`] is the
+//! kind-agnostic per-state quant-error probe feeding the runtime
+//! precision controller (`optim/precision.rs`).
 
 pub mod adam_error;
 pub mod plan_lint;
+pub mod probe;
 
 pub use adam_error::{adam_error_maps, per_code_error, AdamErrorMaps};
 pub use plan_lint::{lint_matrix, lint_plan, lint_spec, KindCaps, LintError, LintReport};
+pub use probe::{resolution_error, roundtrip_error, QuantErrorStats};
 
 use crate::quant::{BlockQuantizer, Codebook, Format, BLOCK};
 use crate::util::rng::Rng;

@@ -387,6 +387,51 @@ pub fn lint_spec(spec: &OptimSpec, tensors: &[TensorInfo]) -> LintReport {
     report
 }
 
+/// Lint the plans a spec's optimizers rebuild after a *runtime width
+/// transition* — the precision controller's promote/demote path. A
+/// transition swaps the state buffers under the optimizer (`set_bits`),
+/// so the next step's plan is built against a different layout than the
+/// one [`lint_spec`] saw; this walks every distinct (group, size, shape)
+/// plan through each width the kind supports and re-lints the rebuilt
+/// plan. Dedup key matches `lint_spec`'s, with the target width added.
+pub fn lint_transitions(spec: &OptimSpec, tensors: &[TensorInfo]) -> LintReport {
+    let mut report = LintReport::default();
+    let mut seen: BTreeSet<(usize, usize, Option<(usize, usize)>)> = BTreeSet::new();
+    for t in tensors {
+        let (cfg, group) = spec.resolve(&t.name);
+        if !seen.insert((group, t.size, t.shape)) {
+            continue;
+        }
+        if !cfg.kind.supports_8bit() {
+            continue; // factored kinds cannot requantize at runtime
+        }
+        // the quantization template a transition keeps (the controller's
+        // `quant_template`): the config's own, else blockwise dynamic
+        let (format, blockwise) =
+            cfg.bits.quantized().map(|(f, b, _)| (f, b)).unwrap_or((Format::Dynamic, true));
+        for to in [4u32, 8, 32] {
+            if to == cfg.bits.bit_count() || (to == 4 && !cfg.kind.supports_4bit()) {
+                continue;
+            }
+            let to_bits = match to {
+                32 => Bits::B32,
+                8 => Bits::B8 { format, blockwise },
+                _ => Bits::B4 { format, blockwise },
+            };
+            let mut opt = optim::build(&cfg, t.size, t.shape);
+            if !opt.set_bits(&to_bits) {
+                continue;
+            }
+            let mut params = vec![0.0f32; t.size];
+            let grads = vec![0.0f32; t.size];
+            let plan = opt.plan(&mut params, &grads);
+            report.plans += 1;
+            report.errors.extend(lint_plan(&plan));
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

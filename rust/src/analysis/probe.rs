@@ -1,0 +1,249 @@
+//! Kind-agnostic per-state quantization-error probes — the precision
+//! controller's sensors, generalizing the Adam-only Figure-4/5 analysis in
+//! [`super::adam_error`] to any optimizer's stored state tensors.
+//!
+//! Two complementary measurements:
+//!
+//! * [`resolution_error`] — how coarsely the *current* storage width
+//!   resolves the live values. The stored state **is** the quantized value
+//!   (a round-trip against itself is zero by the idempotency contract), so
+//!   what can be measured is local codebook resolution: per element, half
+//!   the gap to the nearest neighbouring level — scaled by the block
+//!   absmax — relative to the element's dequantized magnitude. A gradient
+//!   spike that inflates a block's absmax pushes mass down into coarse
+//!   low-magnitude codes (and onto the zero code), raising this measure:
+//!   the controller's promote signal.
+//! * [`roundtrip_error`] — the error a state *would* suffer if stored at a
+//!   narrower target width: stream each block through quantize/dequantize
+//!   scratch at the target width and compare against the current values.
+//!   The controller's demote guard.
+//!
+//! Both keep the `adam_error` streaming discipline: at most one block of
+//! scratch per call, no whole-tensor code or value allocations.
+
+use crate::optim::StateTensor;
+use crate::quant::{dequantize_block_codes, quantize_block_codes, Codebook, CodeWidth, BLOCK};
+
+/// Aggregate error statistics for one state tensor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantErrorStats {
+    /// Mean per-element relative error (each element capped at 1.0).
+    pub mean_rel: f64,
+    /// Largest single-element relative error (capped at 1.0).
+    pub max_rel: f64,
+    /// Fraction of elements sitting on the zero level of a block whose
+    /// absmax is non-zero — for [`resolution_error`] the "crushed by an
+    /// inflated absmax" share, for [`roundtrip_error`] the share of
+    /// non-zero values the target width would collapse to zero.
+    pub zero_frac: f64,
+    /// Elements measured.
+    pub elements: usize,
+}
+
+impl QuantErrorStats {
+    /// Scalar promote score: resolution error plus crushed-to-zero mass,
+    /// clamped to [0, 1]. Healthy 8-bit states sit near 0.02; healthy
+    /// 4-bit near 0.3; spike-degraded blocks approach 1.
+    pub fn score(&self) -> f64 {
+        (self.mean_rel + self.zero_frac).min(1.0)
+    }
+
+    fn finish(sum: f64, max: f64, zeros: usize, n: usize) -> QuantErrorStats {
+        QuantErrorStats {
+            mean_rel: if n == 0 { 0.0 } else { sum / n as f64 },
+            max_rel: max,
+            zero_frac: if n == 0 { 0.0 } else { zeros as f64 / n as f64 },
+            elements: n,
+        }
+    }
+}
+
+/// Half the gap from each codebook level to its nearest neighbour (the
+/// level's resolution radius). Codebook values are sorted ascending.
+fn half_gaps(cb: &Codebook) -> Vec<f64> {
+    let vals = cb.values();
+    (0..vals.len())
+        .map(|c| {
+            let below =
+                if c > 0 { (vals[c] - vals[c - 1]) as f64 } else { f64::INFINITY };
+            let above = if c + 1 < vals.len() {
+                (vals[c + 1] - vals[c]) as f64
+            } else {
+                f64::INFINITY
+            };
+            0.5 * below.min(above)
+        })
+        .collect()
+}
+
+/// Resolution error of a quantized state at its *current* width; `None`
+/// for 32-bit states (exact storage). Per element on a non-empty block
+/// (absmax > 0): `min(1, half_gap(code) · absmax / |value|)`, with exact
+/// zero-level elements contributing 0 to the mean but counted in
+/// `zero_frac`. Streams over the stored codes directly — no scratch.
+pub fn resolution_error(st: &StateTensor) -> Option<QuantErrorStats> {
+    let (q, cb) = match st {
+        StateTensor::Quant { q, codebook } => (q, codebook),
+        StateTensor::F32(_) => return None,
+    };
+    let gaps = half_gaps(cb);
+    let (mut sum, mut max) = (0.0f64, 0.0f64);
+    let (mut zeros, mut n) = (0usize, 0usize);
+    for b in 0..q.n_blocks() {
+        let absmax = q.absmax[b] as f64;
+        if absmax <= 0.0 {
+            continue; // nothing stored in this block yet
+        }
+        let (lo, hi) = q.block_range(b);
+        for i in lo..hi {
+            let c = q.codes.get(i) as usize;
+            let v = (cb.decode(c as u8) as f64 * absmax).abs();
+            n += 1;
+            if v == 0.0 {
+                zeros += 1;
+                continue; // zero is represented exactly
+            }
+            let rel = (gaps[c] * absmax / v).min(1.0);
+            sum += rel;
+            max = max.max(rel);
+        }
+    }
+    Some(QuantErrorStats::finish(sum, max, zeros, n))
+}
+
+/// Round-trip error the state would suffer stored at `width` with
+/// `target_cb`: per block, dequantize the current values into scratch
+/// (32-bit states read in place), quantize at the target width, dequantize
+/// again, and compare. Per element `min(1, |x − x̂| / |x|)`; exact-zero
+/// inputs contribute 0; non-zero inputs that collapse to 0 count into
+/// `zero_frac`.
+pub fn roundtrip_error(
+    st: &StateTensor,
+    target_cb: &Codebook,
+    width: CodeWidth,
+) -> QuantErrorStats {
+    let (mut sum, mut max) = (0.0f64, 0.0f64);
+    let (mut zeros, mut n) = (0usize, 0usize);
+    let mut measure = |xs: &[f32], codes: &mut [u8], hat: &mut [f32]| {
+        let bytes = &mut codes[..width.bytes_for(xs.len())];
+        let am = quantize_block_codes(target_cb, width, xs, bytes);
+        dequantize_block_codes(target_cb, width, bytes, am, &mut hat[..xs.len()]);
+        for (&x, &xh) in xs.iter().zip(hat.iter()) {
+            n += 1;
+            if x == 0.0 {
+                continue;
+            }
+            if xh == 0.0 {
+                zeros += 1;
+            }
+            let rel = (((x - xh).abs() as f64) / (x.abs() as f64)).min(1.0);
+            sum += rel;
+            max = max.max(rel);
+        }
+    };
+    match st {
+        StateTensor::F32(v) => {
+            let block = BLOCK.min(v.len().max(1));
+            let mut codes = vec![0u8; width.bytes_for(block)];
+            let mut hat = vec![0.0f32; block];
+            for xs in v.chunks(block) {
+                measure(xs, &mut codes, &mut hat);
+            }
+        }
+        StateTensor::Quant { q, codebook } => {
+            let block = q.block.min(q.len.max(1));
+            let src_w = q.width();
+            let mut src = vec![0.0f32; block];
+            let mut src_bytes = vec![0u8; src_w.bytes_for(block)];
+            let mut codes = vec![0u8; width.bytes_for(block)];
+            let mut hat = vec![0.0f32; block];
+            for b in 0..q.n_blocks() {
+                let (lo, hi) = q.block_range(b);
+                let len = hi - lo;
+                let (blo, bhi) = q.code_byte_range(b);
+                src_bytes[..bhi - blo].copy_from_slice(&q.codes.as_bytes()[blo..bhi]);
+                dequantize_block_codes(
+                    codebook,
+                    src_w,
+                    &src_bytes[..bhi - blo],
+                    q.absmax[b],
+                    &mut src[..len],
+                );
+                measure(&src[..len], &mut codes, &mut hat);
+            }
+        }
+    }
+    QuantErrorStats::finish(sum, max, zeros, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{make_state, Bits};
+    use crate::quant::Format;
+    use crate::util::rng::Rng;
+
+    fn synth(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    fn quant_state(bits: Bits, vals: &[f32]) -> crate::optim::StateTensor {
+        let mut st = make_state(&bits, vals.len(), true);
+        st.load_f32(vals);
+        st
+    }
+
+    #[test]
+    fn resolution_is_none_for_f32_and_coarser_at_4bit() {
+        let vals = synth(8192, 1);
+        assert!(resolution_error(&StateTensor::F32(vals.clone())).is_none());
+        let s8 = resolution_error(&quant_state(Bits::b8_dynamic(), &vals)).unwrap();
+        let s4 = resolution_error(&quant_state(Bits::b4_dynamic(), &vals)).unwrap();
+        assert_eq!(s8.elements, 8192);
+        assert!(s8.mean_rel > 0.0 && s8.mean_rel < s4.mean_rel, "{s8:?} vs {s4:?}");
+        assert!(s4.mean_rel <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn inflated_absmax_raises_the_promote_score() {
+        // One spiked element per block inflates absmax 1000x; everything
+        // else is crushed toward the low codes / the zero level.
+        let mut vals = synth(8192, 2);
+        let calm = resolution_error(&quant_state(Bits::b4_dynamic(), &vals)).unwrap();
+        for b in 0..vals.len() / 2048 {
+            vals[b * 2048] = 100.0;
+        }
+        let spiked = resolution_error(&quant_state(Bits::b4_dynamic(), &vals)).unwrap();
+        assert!(
+            spiked.score() > calm.score(),
+            "spiked {} vs calm {}",
+            spiked.score(),
+            calm.score()
+        );
+    }
+
+    #[test]
+    fn roundtrip_at_own_width_is_zero() {
+        // q(dq(q(x))) == q(x): re-quantizing a state's own values at its
+        // own width reproduces it exactly.
+        let vals = synth(8192, 3);
+        let st = quant_state(Bits::b8_dynamic(), &vals);
+        let cb = Format::Dynamic.codebook(CodeWidth::U8, true);
+        let s = roundtrip_error(&st, &cb, CodeWidth::U8);
+        assert_eq!(s.mean_rel, 0.0, "{s:?}");
+        assert_eq!(s.zero_frac, 0.0);
+    }
+
+    #[test]
+    fn roundtrip_to_narrower_width_reports_loss() {
+        let vals = synth(8192, 4);
+        let st = StateTensor::F32(vals);
+        let cb8 = Format::Dynamic.codebook(CodeWidth::U8, true);
+        let cb4 = Format::Dynamic.codebook(CodeWidth::U4, true);
+        let s8 = roundtrip_error(&st, &cb8, CodeWidth::U8);
+        let s4 = roundtrip_error(&st, &cb4, CodeWidth::U4);
+        assert!(s8.mean_rel > 0.0);
+        assert!(s4.mean_rel > s8.mean_rel, "{s4:?} vs {s8:?}");
+    }
+}

@@ -36,9 +36,12 @@
 //! # Parameter groups: ordered overrides on the base config, first match
 //! # wins (glob patterns: `*`, `?`, `|` alternation). Any subset of
 //! # bits/format/blockwise/lr/weight_decay/beta1/beta2/eps/
-//! # clip_percentile/max_unorm/skip_zeros/shards may be set; `shards` is
-//! # the placement axis (engine layer 5) — it partitions the group's
-//! # quantized state across N ZeRO-style shards without changing the math.
+//! # clip_percentile/max_unorm/skip_zeros/shards/bits_min/bits_max may be
+//! # set; `shards` is the placement axis (engine layer 5) — it partitions
+//! # the group's quantized state across N ZeRO-style shards without
+//! # changing the math. `bits_min`/`bits_max` bound the runtime precision
+//! # controller's transitions (layer 6, `[precision]` below) without
+//! # changing the starting width.
 //! [[optimizer.group]]
 //! pattern = "embed.tok|embed.pos"
 //! bits = 32                 # stable-embedding policy, spelled explicitly
@@ -84,11 +87,33 @@
 //! spike_scale = 100.0       # ... by this factor
 //! zero_stride = 0           # zero every Nth gradient element (skip_zeros)
 //! nan_at = 0                # poison one gradient element at step N
+//!
+//! [precision]               # layer-6 adaptive precision controller
+//!                           # (`optim::precision`); omit the table to run
+//!                           # static widths. Native engine only. Tensors
+//!                           # walk the 4 <-> 8 <-> 32 rung ladder between
+//!                           # each group's bits_min/bits_max bounds;
+//!                           # transitions requantize losslessly from the
+//!                           # 32-bit working values and are logged to the
+//!                           # JSONL `groups` stream.
+//! cadence = 25              # review every N steps
+//! promote_error = 0.6       # promote a rung when a state's measured
+//!                           # resolution-error score exceeds this
+//! demote_error = 0.1        # demote only when requantizing at the
+//!                           # narrower width keeps mean relative error
+//!                           # strictly below this (0 disables demotion)
+//! spike_factor = 4.0        # promote when a tensor's window-max gradient
+//!                           # norm exceeds this multiple of its rolling
+//!                           # median norm
+//! hysteresis = 2            # consecutive quiet reviews before a demotion
 //! ```
 //!
 //! CLI: `--override "pattern:key=val[,key=val]"` adds groups ahead of the
 //! file's (`;` separates several), `--emb32` appends the stable-embedding
-//! sugar, `--shards N` overrides `[placement] shards`. Unsupported
+//! sugar, `--shards N` overrides `[placement] shards`,
+//! `--precision-policy "key=val[,key=val]"` enables the adaptive precision
+//! controller over the defaults (`--precision-policy off` disables a
+//! file-enabled one). Unsupported
 //! combinations (e.g. `adafactor` with `bits = 8`, `quantile` without
 //! block-wise normalization, or `shards > 1` on a factored optimizer) are
 //! rejected at parse time.
@@ -102,9 +127,9 @@
 
 pub mod toml;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
-use crate::optim::{Bits, GroupOverride, OptimConfig, OptimKind, OptimSpec};
+use crate::optim::{Bits, GroupOverride, OptimConfig, OptimKind, OptimSpec, PrecisionPolicy};
 use crate::quant::Format;
 use crate::util::args::Args;
 use toml::TomlDoc;
@@ -234,6 +259,9 @@ pub struct RunConfig {
     pub log_jsonl: Option<String>,
     /// Deterministic gradient-fault injection (stress configs).
     pub fault: FaultConfig,
+    /// Adaptive precision controller policy (`[precision]` /
+    /// `--precision-policy`); `None` = static widths.
+    pub precision: Option<PrecisionPolicy>,
 }
 
 impl Default for RunConfig {
@@ -255,6 +283,7 @@ impl Default for RunConfig {
             shards: 1,
             log_jsonl: None,
             fault: FaultConfig::default(),
+            precision: None,
         }
     }
 }
@@ -307,6 +336,19 @@ impl RunConfig {
         cfg.fault.zero_stride = d.usize_or("fault", "zero_stride", 0);
         cfg.fault.nan_at = d.usize_or("fault", "nan_at", 0);
 
+        // [precision]: presence of the table enables the controller; unset
+        // keys fall back to the policy defaults.
+        if d.sections.contains_key("precision") {
+            let mut p = PrecisionPolicy::default();
+            p.cadence = d.usize_or("precision", "cadence", p.cadence);
+            p.promote_error = d.f64_or("precision", "promote_error", p.promote_error);
+            p.demote_error = d.f64_or("precision", "demote_error", p.demote_error);
+            p.spike_factor = d.f64_or("precision", "spike_factor", p.spike_factor);
+            p.hysteresis = d.usize_or("precision", "hysteresis", p.hysteresis as usize) as u32;
+            p.validate()?;
+            cfg.precision = Some(p);
+        }
+
         // Parameter groups, in declaration order; the `emb32` sugar (lowest
         // priority — explicit groups win on first-match) goes last. A
         // single-bracket [optimizer.group] would land in `sections` and be
@@ -322,6 +364,11 @@ impl RunConfig {
         if d.bool_or("model", "emb32", false) {
             cfg.push_emb32();
         }
+        ensure!(
+            cfg.precision.is_none() || cfg.engine == Engine::Native,
+            "[precision] requires the native engine: HLO mirrors bake the state width \
+             into the compiled artifact and cannot requantize at runtime"
+        );
         cfg.optim_spec().validate()?;
         Ok(cfg)
     }
@@ -413,6 +460,15 @@ impl RunConfig {
         if let Some(v) = a.get("log") {
             self.log_jsonl = Some(v.to_string());
         }
+        if let Some(v) = a.get("precision-policy") {
+            self.precision =
+                if v == "off" { None } else { Some(PrecisionPolicy::parse(v)?) };
+        }
+        ensure!(
+            self.precision.is_none() || self.engine == Engine::Native,
+            "--precision-policy requires the native engine: HLO mirrors bake the state \
+             width into the compiled artifact and cannot requantize at runtime"
+        );
         self.optim_spec().validate()?;
         Ok(())
     }
@@ -428,14 +484,19 @@ impl RunConfig {
         } else {
             String::new()
         };
+        let precision = match &self.precision {
+            Some(p) => format!(" precision(cadence={})", p.cadence),
+            None => String::new(),
+        };
         format!(
-            "{} | {} | steps={} seed={} engine={}{} groups={}",
+            "{} | {} | steps={} seed={} engine={}{}{} groups={}",
             self.model,
             self.optim.describe(),
             self.steps,
             self.seed,
             self.engine.name(),
             placement,
+            precision,
             groups
         )
     }
@@ -705,6 +766,70 @@ nan_at = 7
         // a 4-bit group resolving onto a factored optimizer still fails
         assert!(RunConfig::from_toml(
             "[optimizer]\nkind = \"adafactor\"\n\n[[optimizer.group]]\npattern = \"embed.*\"\nbits = 4\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn precision_policy_from_toml_and_cli() {
+        // [precision] presence enables; unset keys keep defaults.
+        let cfg = RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 4\n\n\
+             [precision]\ncadence = 10\nspike_factor = 8.0\n",
+        )
+        .unwrap();
+        let p = cfg.precision.unwrap();
+        assert_eq!(p.cadence, 10);
+        assert_eq!(p.spike_factor, 8.0);
+        assert_eq!(p.demote_error, PrecisionPolicy::default().demote_error);
+        assert!(cfg.describe().contains("precision(cadence=10)"), "{}", cfg.describe());
+
+        // no table -> static widths
+        let cfg = RunConfig::from_toml("[optimizer]\nkind = \"adam\"\nbits = 8\n").unwrap();
+        assert!(cfg.precision.is_none());
+
+        // invalid values fail at parse time; HLO engine is rejected
+        assert!(RunConfig::from_toml("[precision]\ncadence = 0\n").is_err());
+        assert!(RunConfig::from_toml("[train]\nengine = \"hlo\"\n\n[precision]\ncadence = 5\n")
+            .is_err());
+
+        // CLI enables over defaults and can disable a file policy
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            ["train", "--precision-policy", "cadence=5,hysteresis=3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        let p = cfg.precision.unwrap();
+        assert_eq!((p.cadence, p.hysteresis), (5, 3));
+        let mut cfg = RunConfig::default();
+        cfg.precision = Some(PrecisionPolicy::default());
+        let args = Args::parse(
+            ["train", "--precision-policy", "off"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.precision.is_none());
+    }
+
+    #[test]
+    fn precision_bounds_group_keys_from_toml() {
+        let cfg = RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 4\n\n\
+             [[optimizer.group]]\npattern = \"embed.*\"\nbits_max = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.groups[0].bits_max, Some(8));
+        assert!(cfg.groups[0].describe().contains("bits_max=8"));
+        // a floor above the resolved starting width is contradictory
+        assert!(RunConfig::from_toml(
+            "[optimizer]\nkind = \"adam\"\nbits = 4\n\n\
+             [[optimizer.group]]\npattern = \"x\"\nbits_min = 8\n"
+        )
+        .is_err());
+        // bounds must be valid widths
+        assert!(RunConfig::from_toml(
+            "[[optimizer.group]]\npattern = \"x\"\nbits_max = 16\n"
         )
         .is_err());
     }

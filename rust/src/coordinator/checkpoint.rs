@@ -16,6 +16,17 @@
 //! state is keyed by tensor+group (never by shard), an N-shard v5
 //! checkpoint restores into any M-shard layout (*resharding*); monolithic
 //! v2–v4 files keep loading unchanged.
+//! Format v6 is the *adaptive* layout, written only when a
+//! [`PrecisionController`] is attached: an explicit monolithic/sharded
+//! discriminator (v2–v5 encode the layout in the version number; v6
+//! covers both) followed by the controller's review window — per-tensor
+//! f64 gradient-norm histories, quiet-review counters, and the global
+//! clip/crash flags — then the tensor payload in the v4 per-tensor
+//! layout (shard files stay v5-format). On restore with a controller
+//! attached, each tensor is first moved to its captured `state_bits`
+//! width (promotions/demotions travel with the file), then states load
+//! as usual; without a controller the width field stays informational
+//! and restore behaves exactly like v2–v5.
 //!
 //! Quantized states are stored *dequantized* (f32). This is lossless:
 //! quantization is idempotent (`q(dq(q(x))) == q(x)`, pinned by the quant
@@ -35,7 +46,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::optim::ParamOptimizer;
+use crate::optim::{ParamOptimizer, PrecisionController, TensorCtlState};
 use crate::util::io::*;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -44,6 +55,9 @@ const MAGIC: u32 = 0xB1707_8_0;
 const VERSION: u32 = 4;
 /// The sharded manifest-plus-shard-files layout.
 const VERSION_SHARDED: u32 = 5;
+/// The adaptive-precision layout (explicit layout discriminator +
+/// controller window); written only when a controller is attached.
+const VERSION_ADAPTIVE: u32 = 6;
 /// Oldest version [`Checkpoint::load`] still reads.
 const MIN_VERSION: u32 = 2;
 
@@ -53,8 +67,11 @@ pub struct TensorCheckpoint {
     /// Parameter-group index at capture time (informational).
     pub group: u64,
     /// Resolved state precision at capture time (32/8/4; 0 when loaded
-    /// from a v2 file, which predates the field). Informational — restore
-    /// always goes through the dequantized f32 payload.
+    /// from a v2 file, which predates the field). Restore always goes
+    /// through the dequantized f32 payload; adaptive (v6 + controller)
+    /// restores additionally move the live tensor back to this width
+    /// first, so a resumed run requantizes exactly what the saved run
+    /// held.
     pub state_bits: u32,
     pub params: Vec<f32>,
     /// Named dequantized optimizer states.
@@ -129,10 +146,53 @@ fn write_shard_file(
     Ok(())
 }
 
+/// The precision controller's review window (format v6): what
+/// [`PrecisionController::snapshot`] captures, keyed by tensor name so it
+/// survives shard-major reordering the same way the tensor list does.
+pub struct CtlCheckpoint {
+    pub window_clips: u64,
+    pub window_crash: bool,
+    pub tensors: Vec<(String, TensorCtlState)>,
+}
+
+fn write_ctl<W: Write>(w: &mut W, ctl: &CtlCheckpoint) -> Result<()> {
+    write_u64(w, ctl.window_clips)?;
+    write_u32(w, ctl.window_crash as u32)?;
+    write_u64(w, ctl.tensors.len() as u64)?;
+    for (name, s) in &ctl.tensors {
+        write_str(w, name)?;
+        // f64, not f32: the controller's spike decisions compare f64
+        // medians, and rounding the window could flip a post-restore
+        // review that the uninterrupted run would not have made
+        write_f64_slice(w, &s.hist)?;
+        write_u32(w, s.quiet)?;
+        write_f64(w, s.max_since_review)?;
+    }
+    Ok(())
+}
+
+fn read_ctl<R: Read>(r: &mut R) -> Result<CtlCheckpoint> {
+    let window_clips = read_u64(r)?;
+    let window_crash = read_u32(r)? != 0;
+    let n = read_u64(r)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = read_str(r)?;
+        let hist = read_f64_slice(r)?;
+        let quiet = read_u32(r)?;
+        let max_since_review = read_f64(r)?;
+        tensors.push((name, TensorCtlState { hist, quiet, max_since_review }));
+    }
+    Ok(CtlCheckpoint { window_clips, window_crash, tensors })
+}
+
 pub struct Checkpoint {
     pub step: u64,
     pub rng_state: [u64; 4],
     pub tensors: Vec<TensorCheckpoint>,
+    /// Precision-controller window (v6 files only; `None` for v2–v5 and
+    /// for captures without a controller).
+    pub ctl: Option<CtlCheckpoint>,
 }
 
 impl Checkpoint {
@@ -141,9 +201,10 @@ impl Checkpoint {
         rng: &Rng,
         params: &[Vec<f32>],
         popt: &ParamOptimizer,
+        ctl: Option<&PrecisionController>,
     ) -> Checkpoint {
         assert_eq!(params.len(), popt.n_tensors(), "params/optimizer tensor count");
-        let tensors = (0..popt.n_tensors())
+        let tensors: Vec<TensorCheckpoint> = (0..popt.n_tensors())
             .map(|i| TensorCheckpoint {
                 name: popt.tensor_name(i).to_string(),
                 group: popt.group_of(i) as u64,
@@ -158,7 +219,19 @@ impl Checkpoint {
                 gnorm: popt.opt(i).gnorm_history().unwrap_or_default(),
             })
             .collect();
-        Checkpoint { step, rng_state: rng.state(), tensors }
+        let ctl = ctl.map(|c| {
+            let (states, window_clips, window_crash) = c.snapshot();
+            CtlCheckpoint {
+                window_clips,
+                window_crash,
+                tensors: states
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, s)| (popt.tensor_name(i).to_string(), s))
+                    .collect(),
+            }
+        });
+        Checkpoint { step, rng_state: rng.state(), tensors, ctl }
     }
 
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
@@ -166,10 +239,16 @@ impl Checkpoint {
             .with_context(|| format!("creating {}", path.as_ref().display()))?;
         let mut w = BufWriter::new(f);
         write_u32(&mut w, MAGIC)?;
-        write_u32(&mut w, VERSION)?;
+        // static checkpoints keep writing v4 byte-for-byte; only a
+        // controller-bearing capture opts into the v6 layout
+        write_u32(&mut w, if self.ctl.is_some() { VERSION_ADAPTIVE } else { VERSION })?;
         write_u64(&mut w, self.step)?;
         for st in self.rng_state {
             write_u64(&mut w, st)?;
+        }
+        if let Some(ctl) = &self.ctl {
+            write_u32(&mut w, 0)?; // layout 0: monolithic
+            write_ctl(&mut w, ctl)?;
         }
         write_u64(&mut w, self.tensors.len() as u64)?;
         for t in &self.tensors {
@@ -234,10 +313,16 @@ impl Checkpoint {
         let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
         let mut w = BufWriter::new(f);
         write_u32(&mut w, MAGIC)?;
-        write_u32(&mut w, VERSION_SHARDED)?;
+        // only the manifest version changes for adaptive captures; shard
+        // files always use the v5 per-shard format
+        write_u32(&mut w, if self.ctl.is_some() { VERSION_ADAPTIVE } else { VERSION_SHARDED })?;
         write_u64(&mut w, self.step)?;
         for st in self.rng_state {
             write_u64(&mut w, st)?;
+        }
+        if let Some(ctl) = &self.ctl {
+            write_u32(&mut w, 1)?; // layout 1: sharded manifest
+            write_ctl(&mut w, ctl)?;
         }
         write_u64(&mut w, n_shards as u64)?;
         for s in 0..n_shards {
@@ -255,7 +340,7 @@ impl Checkpoint {
             return Err(anyhow!("bad checkpoint magic"));
         }
         let version = read_u32(&mut r)?;
-        if !(MIN_VERSION..=VERSION_SHARDED).contains(&version) {
+        if !(MIN_VERSION..=VERSION_ADAPTIVE).contains(&version) {
             return Err(anyhow!("unsupported checkpoint version {version}"));
         }
         let step = read_u64(&mut r)?;
@@ -263,9 +348,18 @@ impl Checkpoint {
         for st in rng_state.iter_mut() {
             *st = read_u64(&mut r)?;
         }
-        if version == VERSION_SHARDED {
-            // v5 manifest: shard file names + expected tensor counts; the
-            // tensors themselves live in the per-shard files next to it
+        // v2–v5 encode the layout in the version number; v6 carries an
+        // explicit discriminator plus the controller window
+        let (sharded, ctl) = if version == VERSION_ADAPTIVE {
+            let layout = read_u32(&mut r)?;
+            ensure!(layout <= 1, "checkpoint layout {layout} unknown (0/1)");
+            (layout == 1, Some(read_ctl(&mut r)?))
+        } else {
+            (version == VERSION_SHARDED, None)
+        };
+        if sharded {
+            // sharded manifest: shard file names + expected tensor counts;
+            // the tensors themselves live in the per-shard files next to it
             let dir = path.as_ref().parent().map(Path::to_path_buf).unwrap_or_default();
             let n_shards = read_u64(&mut r)? as usize;
             let mut tensors = Vec::new();
@@ -291,22 +385,34 @@ impl Checkpoint {
                     "shard file {fname:?}: {nt} tensors, manifest expects {expect}"
                 );
                 for _ in 0..nt {
-                    tensors.push(read_tensor(&mut sr, version)?);
+                    tensors.push(read_tensor(&mut sr, VERSION_SHARDED)?);
                 }
             }
-            return Ok(Checkpoint { step, rng_state, tensors });
+            return Ok(Checkpoint { step, rng_state, tensors, ctl });
         }
         let nt = read_u64(&mut r)? as usize;
         let mut tensors = Vec::with_capacity(nt);
         for _ in 0..nt {
             tensors.push(read_tensor(&mut r, version)?);
         }
-        Ok(Checkpoint { step, rng_state, tensors })
+        Ok(Checkpoint { step, rng_state, tensors, ctl })
     }
 
     /// Restore into a live [`ParamOptimizer`] + parameter set, matching
     /// tensors by name (requantizes 8-bit states losslessly).
-    pub fn restore(&self, params: &mut [Vec<f32>], popt: &mut ParamOptimizer) -> Result<()> {
+    ///
+    /// When both the checkpoint and the caller carry precision-controller
+    /// state (format v6 + an adaptive run), each tensor is first moved to
+    /// the width it was captured at — so a mid-run promotion or demotion
+    /// survives the restore — and the controller's review window is
+    /// restored afterwards. Otherwise `ctl` may be `None` and the stored
+    /// widths stay informational, exactly as in v2–v5.
+    pub fn restore(
+        &self,
+        params: &mut [Vec<f32>],
+        popt: &mut ParamOptimizer,
+        mut ctl: Option<&mut PrecisionController>,
+    ) -> Result<()> {
         anyhow::ensure!(
             self.tensors.len() == popt.n_tensors(),
             "tensor count mismatch: checkpoint {} vs model {}",
@@ -314,6 +420,7 @@ impl Checkpoint {
             popt.n_tensors()
         );
         anyhow::ensure!(params.len() == popt.n_tensors(), "params/optimizer tensor count");
+        let adaptive = ctl.is_some() && self.ctl.is_some();
         let by_name: BTreeMap<&str, &TensorCheckpoint> =
             self.tensors.iter().map(|t| (t.name.as_str(), t)).collect();
         for i in 0..popt.n_tensors() {
@@ -328,6 +435,12 @@ impl Checkpoint {
                 params[i].len()
             );
             params[i].copy_from_slice(&t.params);
+            if adaptive && t.state_bits != 0 {
+                // move the live tensor to its captured width *before*
+                // loading states, so they requantize into the right
+                // buffers (no-op when already there)
+                popt.set_tensor_bits(i, t.state_bits);
+            }
             let opt = popt.opt_mut(i);
             opt.set_t(self.step);
             let live_states = opt.states_mut();
@@ -360,6 +473,17 @@ impl Checkpoint {
                 popt.opt_mut(i).restore_gnorm_history(&t.gnorm);
             }
         }
+        if let (Some(c), Some(saved)) = (ctl.as_deref_mut(), self.ctl.as_ref()) {
+            // name-keyed like the tensor payload; a tensor absent from the
+            // saved window (layout drift) resumes with a fresh one
+            let by: BTreeMap<&str, &TensorCtlState> =
+                saved.tensors.iter().map(|(n, s)| (n.as_str(), s)).collect();
+            let ordered: Vec<TensorCtlState> = (0..popt.n_tensors())
+                .map(|i| by.get(popt.tensor_name(i)).map(|s| (*s).clone()).unwrap_or_default())
+                .collect();
+            c.restore(&ordered, saved.window_clips, saved.window_crash);
+            c.note_state_bytes(popt.state_bytes());
+        }
         Ok(())
     }
 }
@@ -367,7 +491,9 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::{Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer, TensorInfo};
+    use crate::optim::{
+        Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer, PrecisionPolicy, TensorInfo,
+    };
     use crate::util::rng::Rng;
 
     fn tensors() -> Vec<TensorInfo> {
@@ -428,7 +554,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.bin");
-        Checkpoint::capture(5, &Rng::new(9), &p_a, &popt_a).save(&path).unwrap();
+        Checkpoint::capture(5, &Rng::new(9), &p_a, &popt_a, None).save(&path).unwrap();
         for _ in 0..5 {
             let g = grads(&p_a);
             popt_a.step_native(&mut p_a, &g);
@@ -448,7 +574,7 @@ mod tests {
 
         let mut popt_b = mixed_popt();
         let mut p_b: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
-        loaded.restore(&mut p_b, &mut popt_b).unwrap();
+        loaded.restore(&mut p_b, &mut popt_b, None).unwrap();
         assert_eq!(popt_b.opt(0).t(), 5);
         for _ in 0..5 {
             let g = grads(&p_b);
@@ -495,7 +621,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v4_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.bin");
-        Checkpoint::capture(8, &Rng::new(9), &p_a, &popt_a).save(&path).unwrap();
+        Checkpoint::capture(8, &Rng::new(9), &p_a, &popt_a, None).save(&path).unwrap();
         // post-checkpoint steps, including a spike the percentile phase
         // must clip against the *restored* window
         for s in 0..4 {
@@ -507,7 +633,7 @@ mod tests {
         assert_eq!(loaded.tensors[0].gnorm.len(), 8, "8 steps of history travel");
         let mut popt_b = build();
         let mut p_b: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.0f32; n]).collect();
-        loaded.restore(&mut p_b, &mut popt_b).unwrap();
+        loaded.restore(&mut p_b, &mut popt_b, None).unwrap();
         for s in 0..4 {
             let g = grads(&p_b, if s == 1 { 50.0 } else { 1.0 });
             popt_b.step_native(&mut p_b, &g);
@@ -520,11 +646,11 @@ mod tests {
     fn restore_rejects_mismatched_layout() {
         let popt = mixed_popt();
         let params: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
-        let mut ck = Checkpoint::capture(1, &Rng::new(2), &params, &popt);
+        let mut ck = Checkpoint::capture(1, &Rng::new(2), &params, &popt, None);
         ck.tensors[1].name = "renamed".into();
         let mut popt_b = mixed_popt();
         let mut p_b = params.clone();
-        let err = ck.restore(&mut p_b, &mut popt_b).unwrap_err();
+        let err = ck.restore(&mut p_b, &mut popt_b, None).unwrap_err();
         assert!(format!("{err:#}").contains("block0.attn.wq"), "{err:#}");
     }
 
@@ -565,7 +691,7 @@ mod tests {
             let f = File::create(&path).unwrap();
             let mut w = BufWriter::new(f);
             write_u32(&mut w, MAGIC).unwrap();
-            write_u32(&mut w, VERSION_SHARDED + 1).unwrap();
+            write_u32(&mut w, VERSION_ADAPTIVE + 1).unwrap();
             w.flush().unwrap();
         }
         assert!(Checkpoint::load(&path).is_err());
@@ -606,6 +732,76 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_v6_roundtrips_controller_and_widths() {
+        // A controller-bearing capture writes v6: promoted widths and the
+        // review window must both survive the roundtrip, in both the
+        // monolithic and sharded layouts.
+        let mut popt = mixed_popt();
+        let mut ctl = PrecisionController::new(PrecisionPolicy::default(), &popt);
+        // warm the per-tensor histories, then promote via the detector
+        // trigger (a crash observed since the last review)
+        for s in 0..6 {
+            ctl.observe_step(&[1.0 + s as f64, 2.0, 3.0], 0, 0, false);
+        }
+        ctl.observe_step(&[1.0, 2.0, 3.0], 0, 0, true);
+        let moved = ctl.review(25, &mut popt);
+        assert!(!moved.is_empty(), "detector review promotes");
+        assert_eq!(popt.tensor_cfg(1).bits.bit_count(), 8, "attn promoted 4 -> 8");
+        assert_eq!(popt.tensor_cfg(2).bits.bit_count(), 32, "lm_head promoted 8 -> 32");
+        ctl.observe_step(&[4.0, 5.0, 6.0], 2, 0, false); // pending window state
+
+        let params: Vec<Vec<f32>> =
+            tensors().iter().map(|t| (0..t.size).map(|i| i as f32 * 0.25).collect()).collect();
+        let ck = Checkpoint::capture(25, &Rng::new(4), &params, &popt, Some(&ctl));
+        let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v6_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bin");
+        ck.save(&path).unwrap();
+
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 25);
+        let saved = loaded.ctl.as_ref().expect("v6 carries the controller window");
+        assert_eq!(saved.window_clips, 2);
+        assert!(!saved.window_crash, "crash flag was consumed by the review");
+        assert_eq!(saved.tensors.len(), 3);
+        assert_eq!(loaded.tensors[1].state_bits, 8, "promoted width travels");
+
+        // restore into a freshly built (4/8/32) layout with a fresh
+        // controller: tensors move to the captured widths and the review
+        // window matches the live controller's exactly
+        let mut popt_b = mixed_popt();
+        let mut ctl_b = PrecisionController::new(PrecisionPolicy::default(), &popt_b);
+        let mut p_b: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
+        loaded.restore(&mut p_b, &mut popt_b, Some(&mut ctl_b)).unwrap();
+        assert_eq!(popt_b.tensor_cfg(1).bits.bit_count(), 8);
+        assert_eq!(popt_b.tensor_cfg(2).bits.bit_count(), 32);
+        assert_eq!(ctl_b.snapshot(), ctl.snapshot(), "review window restored");
+        assert_eq!(p_b, params);
+
+        // without a controller the same file restores statically: states
+        // land at the built widths, as in v2-v5
+        let mut popt_c = mixed_popt();
+        let mut p_c: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
+        loaded.restore(&mut p_c, &mut popt_c, None).unwrap();
+        assert_eq!(popt_c.tensor_cfg(1).bits.bit_count(), 4, "static restore keeps built width");
+
+        // sharded adaptive manifest: same controller payload, resharded
+        ck.save_sharded(&path, &[1, 0, 1], 2).unwrap();
+        let sl = Checkpoint::load(&path).unwrap();
+        let sctl = sl.ctl.as_ref().expect("sharded v6 manifest carries the window");
+        assert_eq!(sctl.window_clips, 2);
+        assert_eq!(sctl.tensors.len(), 3);
+        let mut popt_d = mixed_popt();
+        let mut ctl_d = PrecisionController::new(PrecisionPolicy::default(), &popt_d);
+        let mut p_d: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
+        sl.restore(&mut p_d, &mut popt_d, Some(&mut ctl_d)).unwrap();
+        assert_eq!(popt_d.tensor_cfg(1).bits.bit_count(), 8);
+        assert_eq!(ctl_d.snapshot(), ctl.snapshot());
+        assert_eq!(p_d, params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn sharded_save_roundtrips_and_reshards() {
         // Save under a 4-shard assignment, check the manifest + per-shard
         // files land on disk, and load back a checkpoint equal to the
@@ -614,7 +810,7 @@ mod tests {
         let popt = mixed_popt();
         let params: Vec<Vec<f32>> =
             tensors().iter().map(|t| (0..t.size).map(|i| i as f32 * 0.5).collect()).collect();
-        let ck = Checkpoint::capture(3, &Rng::new(2), &params, &popt);
+        let ck = Checkpoint::capture(3, &Rng::new(2), &params, &popt, None);
         let dir = std::env::temp_dir().join(format!("bitopt8_ckpt_v5_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.bin");
@@ -641,7 +837,7 @@ mod tests {
         // pin the name-keyed mechanics)
         let mut popt_b = mixed_popt();
         let mut p_b: Vec<Vec<f32>> = tensors().iter().map(|t| vec![0.0; t.size]).collect();
-        loaded.restore(&mut p_b, &mut popt_b).unwrap();
+        loaded.restore(&mut p_b, &mut popt_b, None).unwrap();
         assert_eq!(p_b, params);
 
         // invalid assignments are rejected up front

@@ -10,6 +10,6 @@ pub mod metrics;
 pub mod stability;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CtlCheckpoint};
 pub use stability::StabilityDetector;
 pub use trainer::{median_over_seeds, run_config, RunResult, Trainer};

@@ -26,7 +26,9 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::JsonlSink;
 use crate::coordinator::stability::StabilityDetector;
 use crate::data::{corpus::Corpus, glue::GlueDataset};
-use crate::optim::{GroupReport, HloDispatch, HloEnv, ParamOptimizer, TensorInfo};
+use crate::optim::{
+    GroupReport, HloDispatch, HloEnv, ParamOptimizer, PrecisionController, TensorInfo,
+};
 use crate::runtime::{self, ModelEntry, Runtime};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -44,6 +46,9 @@ pub struct Trainer<'rt> {
     eval_seed: u64,
     pub detector: StabilityDetector,
     metrics: Option<JsonlSink>,
+    /// Layer-6 adaptive precision controller (`[precision]` config);
+    /// `None` = static widths.
+    precision: Option<PrecisionController>,
     pub step: usize,
 }
 
@@ -70,6 +75,13 @@ pub struct RunResult {
     pub wall_secs: f64,
     pub steps_done: usize,
     pub hlo_updated_tensors: usize,
+    /// Width transitions the adaptive precision controller applied (0 when
+    /// the controller is off or never fired).
+    pub precision_transitions: usize,
+    /// Largest total optimizer-state footprint reached during the run —
+    /// equals `state_bytes` for static-width runs; with the adaptive
+    /// controller it is the high-water mark across promotions.
+    pub peak_state_bytes: usize,
 }
 
 impl RunResult {
@@ -175,6 +187,11 @@ impl<'rt> Trainer<'rt> {
             sink.record("groups", vec![("groups", Json::Arr(entries))])?;
         }
 
+        // Adaptive precision controller: per-tensor bounds resolve against
+        // the freshly-built optimizer (HLO mirrors and 32-bit-only kinds
+        // come back pinned, so the controller simply never touches them).
+        let precision = cfg.precision.map(|policy| PrecisionController::new(policy, &popt));
+
         Ok(Trainer {
             rt,
             model,
@@ -187,6 +204,7 @@ impl<'rt> Trainer<'rt> {
             eval_seed,
             detector: StabilityDetector::new(),
             metrics,
+            precision,
             step: 0,
         })
     }
@@ -280,7 +298,7 @@ impl<'rt> Trainer<'rt> {
         }
 
         // ---- gradient hygiene --------------------------------------------
-        let (nonfinite, sq) = grad_stats(&grads);
+        let (nonfinite, sq, tensor_sq) = grad_stats(&grads);
         if nonfinite > 0 {
             // A crashed step must still leave a trace in the loss curve:
             // record it with a `grad_crash` marker instead of vanishing
@@ -293,6 +311,13 @@ impl<'rt> Trainer<'rt> {
             // activity must not surface in the next successful step's
             // record as if that step produced it.
             Self::drain_counters();
+            // The controller still observes the crash (per-tensor norms of
+            // the finite values; the crash flag latches until the next
+            // review promotes), but reviews only run on successful steps —
+            // the update that a transition would requantize never ran.
+            if let Some(ctl) = self.precision.as_mut() {
+                ctl.observe_step(&tensor_sq, 0, 0, true);
+            }
             if let Some(sink) = self.metrics.as_mut() {
                 let marker = vec![
                     ("grad_crash", Json::Bool(true)),
@@ -357,6 +382,35 @@ impl<'rt> Trainer<'rt> {
         }
         self.detector.observe(loss);
         self.step += 1;
+
+        // ---- adaptive precision (layer 6) --------------------------------
+        // Feed the controller this step's deterministic signals (raw
+        // per-tensor gradient norms — pre-clip — plus the drained clip and
+        // crash telemetry) and run a review on the policy cadence. Every
+        // transition requantizes that tensor's states losslessly from their
+        // 32-bit working values and lands in the JSONL `groups` stream.
+        let mut transitions = Vec::new();
+        if let Some(ctl) = self.precision.as_mut() {
+            ctl.observe_step(&tensor_sq, clip_events, unorm_clips, bad_blocks > 0);
+            if ctl.due(self.step) {
+                transitions = ctl.review(self.step, &mut self.popt);
+            }
+        }
+        if let Some(sink) = self.metrics.as_mut() {
+            for t in &transitions {
+                sink.record(
+                    "groups",
+                    vec![
+                        ("step", num(t.step as f64)),
+                        ("tensor", s(&t.tensor)),
+                        ("from_bits", num(t.from_bits as f64)),
+                        ("to_bits", num(t.to_bits as f64)),
+                        ("trigger", s(t.trigger)),
+                    ],
+                )?;
+            }
+        }
+
         if let Some(sink) = self.metrics.as_mut() {
             let mut extras = vec![("gnorm", num(gnorm))];
             if clip_events > 0 {
@@ -529,6 +583,12 @@ impl<'rt> Trainer<'rt> {
         res.reason = self.detector.reason();
         res.final_eval = res.evals.last().map(|&(_, l)| l).unwrap_or(f64::NAN);
         res.steps_done = self.step;
+        res.precision_transitions =
+            self.precision.as_ref().map_or(0, |c| c.transitions().len());
+        res.peak_state_bytes = match &self.precision {
+            Some(c) => c.peak_state_bytes().max(self.state_bytes()),
+            None => res.state_bytes,
+        };
         res.wall_secs = t0.elapsed().as_secs_f64();
         if let Some(m) = self.metrics.as_mut() {
             m.flush()?;
@@ -548,7 +608,13 @@ impl<'rt> Trainer<'rt> {
              optimizer state in HLO mirrors)",
             self.popt.n_hlo()
         );
-        Ok(Checkpoint::capture(self.step as u64, &self.data_rng, &self.params, &self.popt))
+        Ok(Checkpoint::capture(
+            self.step as u64,
+            &self.data_rng,
+            &self.params,
+            &self.popt,
+            self.precision.as_ref(),
+        ))
     }
 
     /// Capture a checkpoint and write it to disk in the layout matching the
@@ -577,11 +643,17 @@ impl<'rt> Trainer<'rt> {
              optimizer state in HLO mirrors)",
             self.popt.n_hlo()
         );
-        ck.restore(&mut self.params, &mut self.popt)?;
+        ck.restore(&mut self.params, &mut self.popt, self.precision.as_mut())?;
         self.data_rng = Rng::from_state(ck.rng_state);
         self.step = ck.step as usize;
         self.detector = StabilityDetector::new();
         Ok(())
+    }
+
+    /// The adaptive-precision controller, when the run has one
+    /// (`[precision]` / `--precision-policy`).
+    pub fn precision_controller(&self) -> Option<&PrecisionController> {
+        self.precision.as_ref()
     }
 
     /// Dequantized snapshots of every optimizer state (Figure 4 capture).
@@ -590,26 +662,38 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-/// Gradient-hygiene scan: the number of non-finite values, plus the global
-/// squared l2 norm over the *finite* values. The count (not just a verdict
-/// bit) goes into the `grad_crash` JSONL record — one flipped bit and a
-/// fully-NaN backward pass are very different failures, and the old
+/// Gradient-hygiene scan: the number of non-finite values, the global
+/// squared l2 norm over the *finite* values, and the per-tensor squared
+/// norms (the precision controller's spike signal). The count (not just a
+/// verdict bit) goes into the `grad_crash` JSONL record — one flipped bit
+/// and a fully-NaN backward pass are very different failures, and the old
 /// early-exit scan could not tell them apart. The finite-only norm stays
 /// usable for diagnostics even on a crashed step (the previous version
 /// returned a truncated partial norm).
-pub(crate) fn grad_stats(grads: &[Vec<f32>]) -> (u64, f64) {
+///
+/// Determinism contract: the *global* accumulator keeps the exact
+/// element-order f64 addition sequence it always had — the per-tensor
+/// sums are separate accumulators in the same loop, never folded into the
+/// global — so the gradient-clip threshold comparison is bitwise
+/// unchanged by this telemetry and independent of thread count.
+pub(crate) fn grad_stats(grads: &[Vec<f32>]) -> (u64, f64, Vec<f64>) {
     let mut nonfinite = 0u64;
     let mut sq = 0.0f64;
+    let mut tensor_sq = Vec::with_capacity(grads.len());
     for g in grads {
+        let mut tsq = 0.0f64;
         for &v in g {
             if v.is_finite() {
-                sq += v as f64 * v as f64;
+                let v2 = v as f64 * v as f64;
+                sq += v2;
+                tsq += v2;
             } else {
                 nonfinite += 1;
             }
         }
+        tensor_sq.push(tsq);
     }
-    (nonfinite, sq)
+    (nonfinite, sq, tensor_sq)
 }
 
 /// Convenience used by the repro harness: run one config end to end.
@@ -638,12 +722,14 @@ mod tests {
     #[test]
     fn grad_stats_computes_global_sq_norm() {
         let g = vec![vec![3.0f32], vec![4.0f32]];
-        let (nonfinite, sq) = grad_stats(&g);
+        let (nonfinite, sq, tensor_sq) = grad_stats(&g);
         assert_eq!(nonfinite, 0);
         assert!((sq - 25.0).abs() < 1e-12);
-        let (nonfinite, sq) = grad_stats(&[]);
+        assert_eq!(tensor_sq, vec![9.0, 16.0], "per-tensor sums for the controller");
+        let (nonfinite, sq, tensor_sq) = grad_stats(&[]);
         assert_eq!(nonfinite, 0);
         assert_eq!(sq, 0.0);
+        assert!(tensor_sq.is_empty());
     }
 
     #[test]
@@ -652,9 +738,11 @@ mod tests {
         // fully-NaN backward pass are different failures), and the norm
         // must stay clean — finite values only, never polluted by Inf/NaN.
         let g = vec![vec![1.0f32, f32::NAN, 2.0], vec![f32::INFINITY; 1000]];
-        let (nonfinite, sq) = grad_stats(&g);
+        let (nonfinite, sq, tensor_sq) = grad_stats(&g);
         assert_eq!(nonfinite, 1001);
         assert!((sq - 5.0).abs() < 1e-12, "norm over finite values only, got {sq}");
+        assert!((tensor_sq[0] - 5.0).abs() < 1e-12, "per-tensor sums skip non-finite too");
+        assert_eq!(tensor_sq[1], 0.0);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use anyhow::Result;
 use bitopt8::analysis;
 use bitopt8::config::RunConfig;
 use bitopt8::coordinator::Trainer;
-use bitopt8::optim::{ParamOptimizer, TensorInfo};
+use bitopt8::optim::{describe_policy, ParamOptimizer, TensorInfo};
 use bitopt8::quant::{dynamic_tree, linear, quantile, Format};
 use bitopt8::repro;
 use bitopt8::runtime::Runtime;
@@ -79,20 +79,28 @@ fn cmd_lint(args: &Args) -> Result<()> {
     let tensors = dry_run_tensors();
     let mut configs = 0usize;
     let mut plans = 0usize;
+    let mut transition_plans = 0usize;
     let mut violations = 0usize;
     for path in &paths {
         let cfg = RunConfig::from_file(&path.to_string_lossy())?;
-        let report = plan_lint::lint_spec(&cfg.optim_spec(), &tensors);
+        let spec = cfg.optim_spec();
+        let report = plan_lint::lint_spec(&spec, &tensors);
+        // plans rebuilt after a runtime width transition (the precision
+        // controller's promote/demote path) are distinct plan shapes and
+        // get the same static checks
+        let moved = plan_lint::lint_transitions(&spec, &tensors);
         configs += 1;
         plans += report.plans;
-        violations += report.errors.len();
+        transition_plans += moved.plans;
+        violations += report.errors.len() + moved.errors.len();
         println!(
-            "lint {:<40} plans={:<3} violations={}",
+            "lint {:<40} plans={:<3} transition_plans={:<3} violations={}",
             path.file_name().unwrap_or_default().to_string_lossy(),
             report.plans,
-            report.errors.len()
+            moved.plans,
+            report.errors.len() + moved.errors.len()
         );
-        for err in &report.errors {
+        for err in report.errors.iter().chain(&moved.errors) {
             eprintln!("  {err}");
         }
     }
@@ -113,7 +121,8 @@ fn cmd_lint(args: &Args) -> Result<()> {
         anyhow::bail!("PLAN_LINT failed: {violations} violation(s)");
     }
     println!(
-        "PLAN_LINT ok: configs={configs} plans={plans} matrix_kinds={} violations=0",
+        "PLAN_LINT ok: configs={configs} plans={plans} transition_plans={transition_plans} \
+         matrix_kinds={} violations=0",
         plan_lint::ALL_KINDS.len()
     );
     Ok(())
@@ -171,6 +180,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(placement) = popt.describe_placement() {
             println!("{placement}");
         }
+        if let Some(policy) = &cfg.precision {
+            println!("{}", describe_policy(policy, &popt));
+        }
         println!("dry run OK (config parses, spec validates, optimizers build)");
         return Ok(());
     }
@@ -201,6 +213,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.reason.map(|r| format!(" ({r})")).unwrap_or_default(),
         res.wall_secs
     );
+    if res.precision_transitions > 0 {
+        println!(
+            "precision transitions: {} | peak state {:.2} MB",
+            res.precision_transitions,
+            res.peak_state_bytes as f64 / 1e6
+        );
+    }
     Ok(())
 }
 

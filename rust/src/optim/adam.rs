@@ -7,7 +7,7 @@
 
 use super::stability;
 use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
-use super::{make_state, OptimConfig, OptimKind, Optimizer};
+use super::{make_state, Bits, OptimConfig, OptimKind, Optimizer};
 use crate::util::lanes::LANES;
 
 pub struct Adam {
@@ -223,6 +223,16 @@ impl Optimizer for Adam {
     fn restore_gnorm_history(&mut self, hist: &[f32]) {
         self.stab.history.restore(hist);
     }
+
+    fn set_bits(&mut self, bits: &Bits) -> bool {
+        if !self.cfg.kind.supports_bits(bits) {
+            return false;
+        }
+        super::requantize_state(&mut self.m, bits, true);
+        super::requantize_state(&mut self.r, bits, false);
+        self.cfg.bits = *bits;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +351,38 @@ mod tests {
         let opt = Adam::new(OptimConfig::adam(0.01, Bits::b8_dynamic()), n);
         let per = opt.state_bytes() as f64 / n as f64;
         assert!(per < 2.02, "{per}");
+    }
+
+    #[test]
+    fn set_bits_swaps_width_and_pins_values_through_32() {
+        let n = 4096;
+        let mut opt = Adam::new(OptimConfig::adam(0.01, Bits::b8_dynamic()), n);
+        let mut rng = Rng::new(7);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        for _ in 0..10 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            opt.step(&mut p, &g);
+        }
+        let bytes8 = opt.state_bytes();
+        let m0 = opt.m.to_f32();
+        let r0 = opt.r.to_f32();
+        // Promote 8 -> 32: the dequantized working values carry over exactly.
+        assert!(opt.set_bits(&Bits::B32));
+        assert!(opt.state_bytes() > bytes8);
+        assert_eq!(opt.m.to_f32(), m0);
+        assert_eq!(opt.r.to_f32(), r0);
+        // Demote 32 -> 8: requantizing those same working values is the
+        // idempotent-roundtrip contract, so every code lands where it was.
+        assert!(opt.set_bits(&Bits::b8_dynamic()));
+        assert_eq!(opt.state_bytes(), bytes8);
+        assert_eq!(opt.m.to_f32(), m0);
+        assert_eq!(opt.r.to_f32(), r0);
+        // Demotion to 4-bit shrinks storage and leaves the states usable.
+        assert!(opt.set_bits(&Bits::b4_dynamic()));
+        assert!(opt.state_bytes() < bytes8);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        opt.step(&mut p, &g);
+        assert!(p.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //!   alternation).
 //! * [`GroupOverride`] — a pattern plus optional `bits` / `format` /
 //!   `blockwise` / `lr` / `weight_decay` / `beta1` / `beta2` / `eps` /
-//!   `clip_percentile` / `max_unorm` / `skip_zeros` / `shards` overrides,
-//!   parseable from `"pattern:key=val,key=val"` (the CLI `--override`
-//!   syntax) or a `[[optimizer.group]]` TOML table. `shards` is the
-//!   *placement* axis (engine layer 5, `optim::shard`): how many simulated
-//!   shards this group's optimizer state is partitioned across.
+//!   `clip_percentile` / `max_unorm` / `skip_zeros` / `shards` /
+//!   `bits_min` / `bits_max` overrides, parseable from
+//!   `"pattern:key=val,key=val"` (the CLI `--override` syntax) or a
+//!   `[[optimizer.group]]` TOML table. `shards` is the *placement* axis
+//!   (engine layer 5, `optim::shard`): how many simulated shards this
+//!   group's optimizer state is partitioned across. `bits_min`/`bits_max`
+//!   bound the runtime precision controller (engine layer 6,
+//!   `optim::precision`) — the floor/ceiling of adaptive width
+//!   transitions, never the starting width.
 //! * [`ParamOptimizer`] — built from an [`OptimSpec`](super::OptimSpec)
 //!   (base config + ordered overrides, first match wins) and the model's
 //!   tensor list; owns the per-tensor `Box<dyn Optimizer>`s and their HLO
@@ -41,7 +45,7 @@ use super::shard::ShardLayout;
 use super::spec::OptimSpec;
 use super::{Bits, FusedStep, OptimConfig, Optimizer, StreamingStep};
 use crate::config::toml::TomlValue;
-use crate::quant::Format;
+use crate::quant::{CodeWidth, Format};
 
 // ------------------------------------------------------------------ Pattern
 
@@ -125,6 +129,16 @@ pub struct GroupOverride {
     /// update computes, and the N-shard path is pinned bit-identical to
     /// the single-shard path.
     pub shards: Option<u32>,
+    /// Adaptive-precision floor: the runtime precision controller
+    /// (`optim::precision`) never demotes this group's tensors below this
+    /// width (4, 8, or 32). Like `shards` this never changes the resolved
+    /// [`OptimConfig`] — the starting width is still `bits`; the bound
+    /// only constrains runtime transitions. Defaults to the resolved
+    /// starting width.
+    pub bits_min: Option<u32>,
+    /// Adaptive-precision ceiling: the controller never promotes this
+    /// group's tensors above this width (4, 8, or 32). Defaults to 32.
+    pub bits_max: Option<u32>,
 }
 
 impl GroupOverride {
@@ -242,11 +256,22 @@ impl GroupOverride {
                 );
                 self.shards = Some(s);
             }
+            "bits_min" | "bits_max" => {
+                let b: u32 = val
+                    .parse()
+                    .map_err(|_| anyhow!("override key {key}: bad value {val:?}"))?;
+                ensure!(b == 4 || b == 8 || b == 32, "{key} must be 4, 8 or 32, got {b}");
+                if key == "bits_min" {
+                    self.bits_min = Some(b);
+                } else {
+                    self.bits_max = Some(b);
+                }
+            }
             other => {
                 return Err(anyhow!(
                     "unknown override key {other:?} (known: bits, format, blockwise, lr, \
                      weight_decay, beta1, beta2, eps, clip_percentile, max_unorm, skip_zeros, \
-                     shards)"
+                     shards, bits_min, bits_max)"
                 ))
             }
         }
@@ -266,6 +291,8 @@ impl GroupOverride {
             || self.max_unorm.is_some()
             || self.skip_zeros.is_some()
             || self.shards.is_some()
+            || self.bits_min.is_some()
+            || self.bits_max.is_some()
     }
 
     pub fn pattern(&self) -> &Pattern {
@@ -345,6 +372,30 @@ impl GroupOverride {
                 ));
             }
         }
+        if self.bits_min.is_some() || self.bits_max.is_some() {
+            let floor = self.bits_min.unwrap_or(4);
+            let ceil = self.bits_max.unwrap_or(32);
+            ensure!(
+                floor <= ceil,
+                "group {:?}: bits_min ({floor}) above bits_max ({ceil})",
+                self.pattern().as_str()
+            );
+            ensure!(
+                (floor..=ceil).contains(&resolved_bits),
+                "group {:?}: starting bits ({resolved_bits}) outside \
+                 [bits_min, bits_max] = [{floor}, {ceil}]",
+                self.pattern().as_str()
+            );
+            // groups cannot override the optimizer kind
+            if floor < 32 && !base.kind.supports_8bit() {
+                return Err(anyhow!(
+                    "group {:?} sets bits_min = {floor}, but {} keeps 32-bit state by \
+                     construction and cannot requantize at runtime",
+                    self.pattern().as_str(),
+                    base.kind.name()
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -386,6 +437,12 @@ impl GroupOverride {
         }
         if let Some(v) = self.shards {
             parts.push(format!("shards={v}"));
+        }
+        if let Some(v) = self.bits_min {
+            parts.push(format!("bits_min={v}"));
+        }
+        if let Some(v) = self.bits_max {
+            parts.push(format!("bits_max={v}"));
         }
         format!("{}:{}", self.pattern().as_str(), parts.join(","))
     }
@@ -576,7 +633,14 @@ struct TensorSlot {
     name: String,
     /// 0 = default group (base config); g+1 = spec.groups[g].
     group: usize,
+    /// Live resolved config. `cfg.bits` tracks runtime width transitions
+    /// (see [`ParamOptimizer::set_tensor_bits`]), so reports and
+    /// checkpoint capture always reflect the tensor's current precision.
     cfg: OptimConfig,
+    /// Build-time resolved precision — the quantization format/blockwise
+    /// template runtime transitions re-resolve against, and the default
+    /// adaptive floor.
+    built_bits: Bits,
     size: usize,
     opt: Box<dyn Optimizer>,
     hlo: Option<HloMirror>,
@@ -623,6 +687,7 @@ impl ParamOptimizer {
                 name: t.name.clone(),
                 group,
                 cfg,
+                built_bits: cfg.bits,
                 size: t.size,
                 opt,
                 hlo: mirror,
@@ -917,6 +982,107 @@ impl ParamOptimizer {
             ));
         }
         Some(lines.join("\n"))
+    }
+
+    /// Runtime width transition for tensor `i` — the precision
+    /// controller's mechanism (`optim::precision`). Requantizes the
+    /// tensor's states at `bits` (4, 8, or 32) from their 32-bit working
+    /// values and updates the slot's live config, so byte accounting,
+    /// group reports, and checkpoint capture stay truthful. The
+    /// quantization format/blockwise template is the tensor's build-time
+    /// resolution (dynamic blockwise for groups that started 32-bit).
+    /// Returns `false` (no change) when the width is already current, the
+    /// optimizer kind cannot requantize, or the tensor runs on the HLO
+    /// engine (mirrors bake the width into the compiled artifact). Shard
+    /// placement is untouched: assignment is fixed at build time, only
+    /// the per-shard byte accounting shifts.
+    pub fn set_tensor_bits(&mut self, i: usize, bits: u32) -> bool {
+        debug_assert!(bits == 4 || bits == 8 || bits == 32, "bits {bits}");
+        let (format, blockwise) = self.quant_template(i);
+        let slot = &mut self.slots[i];
+        if slot.hlo.is_some() || slot.cfg.bits.bit_count() == bits {
+            return false;
+        }
+        let new_bits = match bits {
+            32 => Bits::B32,
+            4 => Bits::B4 { format, blockwise },
+            _ => Bits::B8 { format, blockwise },
+        };
+        if !slot.cfg.kind.supports_bits(&new_bits) || !slot.opt.set_bits(&new_bits) {
+            return false;
+        }
+        slot.cfg.bits = new_bits;
+        true
+    }
+
+    /// The quantization format / blockwise template runtime width
+    /// transitions use for tensor `i`: the live config's when currently
+    /// quantized, else the build-time resolution (so a tensor promoted to
+    /// 32-bit remembers its group's format on the way back down), else
+    /// dynamic blockwise for groups that started 32-bit.
+    pub fn quant_template(&self, i: usize) -> (Format, bool) {
+        let slot = &self.slots[i];
+        slot.cfg
+            .bits
+            .quantized()
+            .or_else(|| slot.built_bits.quantized())
+            .map(|(f, bw, _)| (f, bw))
+            .unwrap_or((Format::Dynamic, true))
+    }
+
+    /// Resolved adaptive-precision bounds for tensor `i`: the group's
+    /// (`bits_min`, `bits_max`) when set, else the build-time width as the
+    /// floor and 32 as the ceiling. Tensors that cannot transition (HLO
+    /// mirrors, factored 32-bit-only kinds) are pinned at their built
+    /// width.
+    pub fn bits_bounds(&self, i: usize) -> (u32, u32) {
+        let slot = &self.slots[i];
+        let built = slot.built_bits.bit_count();
+        if slot.hlo.is_some() || !slot.cfg.kind.supports_8bit() {
+            return (built, built);
+        }
+        let ov = if slot.group > 0 { Some(&self.spec.groups[slot.group - 1]) } else { None };
+        let floor = ov.and_then(|o| o.bits_min).unwrap_or(built);
+        let ceil = ov.and_then(|o| o.bits_max).unwrap_or(32);
+        (floor.min(ceil), ceil.max(floor))
+    }
+
+    /// Exact storage bytes of an `n`-element state tensor at a given width
+    /// (mirrors `Quantized::bytes`: packed codes + one f32 absmax per
+    /// block).
+    fn state_bytes_at(n: usize, bits: u32, blockwise: bool) -> usize {
+        match bits {
+            32 => n * 4,
+            w => {
+                let width = if w == 4 { CodeWidth::U4 } else { CodeWidth::U8 };
+                let block = if blockwise { crate::quant::BLOCK.min(n.max(1)) } else { n.max(1) };
+                width.bytes_for(n) + 4 * n.div_ceil(block).max(1)
+            }
+        }
+    }
+
+    /// Projected total optimizer-state footprint with every adaptive
+    /// tensor at its precision floor / ceiling — the best/worst-case bytes
+    /// a run under the precision policy can reach (`--dry-run` output).
+    /// Exact: only state-tensor storage changes with width, so each
+    /// state's live bytes are adjusted in place; per-optimizer scratch
+    /// (e.g. LAMB's update buffer) is carried through unchanged.
+    pub fn projected_state_bytes(&self) -> (usize, usize) {
+        let (mut at_floor, mut at_ceil) = (0usize, 0usize);
+        for (i, slot) in self.slots.iter().enumerate() {
+            let live = slot.opt.state_bytes();
+            let (floor, ceil) = self.bits_bounds(i);
+            let (_, blockwise) = self.quant_template(i);
+            let (mut lo, mut hi) = (live as i64, live as i64);
+            for (_, st) in slot.opt.states() {
+                let cur = st.bytes() as i64;
+                lo += Self::state_bytes_at(st.len(), floor, blockwise) as i64 - cur;
+                hi += Self::state_bytes_at(st.len(), ceil, blockwise) as i64 - cur;
+            }
+            at_floor += lo.max(0) as usize;
+            at_ceil += hi.max(0) as usize;
+        }
+        (at_floor, at_ceil)
     }
 
     /// Dequantized snapshots of every optimizer state, keyed

@@ -17,7 +17,7 @@ use super::state::{
     block_steps, AccessSet, BlockSteps, BlockView, CombineAccess, Phase, Region, Span, StateTensor,
     StepPlan,
 };
-use super::{make_state, OptimConfig, Optimizer};
+use super::{make_state, Bits, OptimConfig, Optimizer};
 use crate::util::lanes::{self, LANES};
 use crate::util::parallel::Shared;
 use crate::util::reduce;
@@ -230,6 +230,16 @@ impl Optimizer for Lamb {
 
     fn lr(&self) -> f32 {
         self.cfg.lr
+    }
+
+    fn set_bits(&mut self, bits: &Bits) -> bool {
+        if !self.cfg.kind.supports_bits(bits) {
+            return false;
+        }
+        super::requantize_state(&mut self.m, bits, true);
+        super::requantize_state(&mut self.r, bits, false);
+        self.cfg.bits = *bits;
+        true
     }
 }
 

@@ -16,7 +16,7 @@ use super::state::{
     block_steps_vec, AccessSet, BlockSteps, BlockView, CombineAccess, LaneView, Phase, Region,
     Span, StateTensor, StepPlan,
 };
-use super::{make_state, OptimConfig, Optimizer};
+use super::{make_state, Bits, OptimConfig, Optimizer};
 use crate::util::lanes::LANES;
 use crate::util::parallel::Shared;
 use crate::util::reduce;
@@ -172,6 +172,15 @@ impl Optimizer for Lars {
 
     fn lr(&self) -> f32 {
         self.cfg.lr
+    }
+
+    fn set_bits(&mut self, bits: &Bits) -> bool {
+        if !self.cfg.kind.supports_bits(bits) {
+            return false;
+        }
+        super::requantize_state(&mut self.m, bits, true);
+        self.cfg.bits = *bits;
+        true
     }
 }
 

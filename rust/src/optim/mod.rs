@@ -40,6 +40,7 @@ pub mod groups;
 pub mod lamb;
 pub mod lars;
 pub mod momentum;
+pub mod precision;
 pub mod shard;
 pub mod sm3;
 pub mod spec;
@@ -50,6 +51,9 @@ pub use engine::{fused_update, streaming_update, FusedStep, StreamingStep};
 pub use groups::{
     GroupOverride, GroupReport, HloDispatch, HloEnv, HloMirror, NativeStream, ParamOptimizer,
     Pattern, StreamSlot, TensorInfo,
+};
+pub use precision::{
+    describe_policy, PrecisionController, PrecisionPolicy, TensorCtlState, Transition,
 };
 pub use shard::{assign_greedy, sharded_update, ShardLayout, MAX_SHARDS};
 pub use spec::{validate_config, OptimSpec};
@@ -347,6 +351,15 @@ pub trait Optimizer: Send {
     /// Restore a history captured by [`Optimizer::gnorm_history`]
     /// (checkpoint load); a no-op for optimizers without one.
     fn restore_gnorm_history(&mut self, _hist: &[f32]) {}
+    /// Runtime width transition: re-resolve every state tensor's storage
+    /// precision to `bits`, requantizing from the 32-bit working values
+    /// (the checkpoint-restore mechanism, so the swap is lossless from the
+    /// dequantized values and `q(dq(q(x))) == q(x)` pins same-width swaps
+    /// bit-identically). Returns `false` when this optimizer cannot change
+    /// width (the factored 32-bit-only kinds); the default refuses.
+    fn set_bits(&mut self, _bits: &Bits) -> bool {
+        false
+    }
 }
 
 /// Build an optimizer for a tensor of `n` elements; `shape` (rows, cols)
@@ -361,6 +374,18 @@ pub fn build(cfg: &OptimConfig, n: usize, shape: Option<(usize, usize)>) -> Box<
         OptimKind::Adagrad => Box::new(adagrad::Adagrad::new(*cfg, n)),
         OptimKind::Sm3 => Box::new(sm3::Sm3::new(*cfg, n, shape)),
     }
+}
+
+/// Swap one state tensor to a new storage precision: dequantize to 32-bit
+/// working values, allocate fresh storage (a new `CodeBuf` at the new
+/// `CodeWidth` for quantized targets), and requantize. Signedness is the
+/// optimizer's static per-state knowledge (Adam's m is signed, its r is
+/// not), exactly as at construction time.
+pub(crate) fn requantize_state(state: &mut StateTensor, bits: &Bits, signed: bool) {
+    let vals = state.to_f32();
+    let mut fresh = make_state(bits, vals.len(), signed);
+    fresh.load_f32(&vals);
+    *state = fresh;
 }
 
 /// Make the signed/unsigned state tensors for a given precision config.

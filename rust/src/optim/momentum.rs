@@ -6,7 +6,7 @@
 
 use super::stability;
 use super::state::{block_steps_vec, BlockView, LaneView, StateTensor, StepPlan};
-use super::{make_state, OptimConfig, Optimizer};
+use super::{make_state, Bits, OptimConfig, Optimizer};
 use crate::util::lanes::LANES;
 
 pub struct Momentum {
@@ -140,6 +140,15 @@ impl Optimizer for Momentum {
 
     fn restore_gnorm_history(&mut self, hist: &[f32]) {
         self.stab.history.restore(hist);
+    }
+
+    fn set_bits(&mut self, bits: &Bits) -> bool {
+        if !self.cfg.kind.supports_bits(bits) {
+            return false;
+        }
+        super::requantize_state(&mut self.m, bits, true);
+        self.cfg.bits = *bits;
+        true
     }
 }
 

@@ -1,0 +1,612 @@
+//! Layer 6: the adaptive precision controller — a runtime bit-width
+//! policy over [`super::groups::ParamOptimizer`].
+//!
+//! The paper's block-wise 8-bit states hold a *static* precision chosen
+//! at build time. This module re-resolves each tensor's width while the
+//! run is live: on a configurable cadence it reviews deterministic
+//! per-tensor signals and walks tensors one rung up or down the
+//! 4 ↔ 8 ↔ 32 ladder, clamped to the group's `bits_min`/`bits_max`
+//! bounds ([`ParamOptimizer::bits_bounds`]).
+//!
+//! Promotion triggers, in precedence order (first match wins):
+//!
+//! | trigger       | signal                                                        |
+//! |---------------|---------------------------------------------------------------|
+//! | `detector`    | a gradient crash, percentile-clip or update-norm-clip event   |
+//! |               | landed since the last review (instability is global: every    |
+//! |               | promotable tensor goes up a rung)                             |
+//! | `gnorm_spike` | the tensor's max gradient norm since the last review exceeds  |
+//! |               | `spike_factor` × its rolling median ([`GnormHistory`], ≥ 5    |
+//! |               | observations)                                                 |
+//! | `quant_error` | the measured resolution error of the tensor's stored state    |
+//! |               | ([`resolution_error`] score, worst state) exceeds             |
+//! |               | `promote_error`                                               |
+//!
+//! Demotion (`quiet` trigger): after `hysteresis` consecutive reviews in
+//! which *no* promotion trigger fired, a tensor above its floor steps one
+//! rung down — guarded by [`roundtrip_error`]: the state must survive
+//! re-quantization at the narrower width with mean relative error below
+//! `demote_error`, or the demotion is deferred to a later review.
+//!
+//! Transitions are **bit-lossless** by the same mechanism checkpoint
+//! restore relies on: [`ParamOptimizer::set_tensor_bits`] requantizes
+//! from the 32-bit working values, and the blockwise round trip is
+//! idempotent (`q(dq(q(x))) == q(x)`), so promoting and later demoting a
+//! healthy tensor reproduces its exact stored codes.
+//!
+//! Everything the controller consumes is deterministic and
+//! thread-count-independent: per-tensor gradient norms are accumulated
+//! in fixed element order by the trainer, clip/crash events are exact
+//! drained counters, and the probes stream states sequentially — so the
+//! transition sequence is pinned across threads × lanes × shards (the
+//! `precision_parity` integration suite).
+
+use super::groups::ParamOptimizer;
+use super::stability::GnormHistory;
+use super::StateTensor;
+use crate::analysis::probe::{resolution_error, roundtrip_error};
+use crate::quant::CodeWidth;
+use anyhow::{anyhow, ensure, Result};
+
+/// Tunables of the runtime bit-width policy (`[precision]` TOML table /
+/// `--precision-policy` CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Review every `cadence` steps.
+    pub cadence: usize,
+    /// Promote when a state's [`resolution_error`] score exceeds this.
+    pub promote_error: f64,
+    /// Demote only when the [`roundtrip_error`] at the narrower width
+    /// stays strictly below this (0 disables demotion entirely).
+    pub demote_error: f64,
+    /// Promote when the window-max gradient norm exceeds this multiple of
+    /// the tensor's rolling median norm.
+    pub spike_factor: f64,
+    /// Consecutive quiet reviews required before a demotion.
+    pub hysteresis: u32,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> PrecisionPolicy {
+        PrecisionPolicy {
+            cadence: 25,
+            promote_error: 0.6,
+            demote_error: 0.1,
+            spike_factor: 4.0,
+            hysteresis: 2,
+        }
+    }
+}
+
+impl PrecisionPolicy {
+    /// Set one policy key from its string form (shared TOML/CLI parser,
+    /// the [`GroupOverride::set`](super::GroupOverride::set) pattern).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        macro_rules! num {
+            () => {
+                val.parse().map_err(|_| anyhow!("[precision] key {key}: bad number {val:?}"))?
+            };
+        }
+        match key {
+            "cadence" => self.cadence = num!(),
+            "promote_error" => self.promote_error = num!(),
+            "demote_error" => self.demote_error = num!(),
+            "spike_factor" => self.spike_factor = num!(),
+            "hysteresis" => self.hysteresis = num!(),
+            _ => {
+                return Err(anyhow!(
+                    "unknown [precision] key {key:?} (expected cadence, promote_error, \
+                     demote_error, spike_factor, hysteresis)"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI form `"key=val[,key=val...]"` over the defaults,
+    /// e.g. `--precision-policy "cadence=50,spike_factor=8"`. An empty
+    /// string yields the default policy.
+    pub fn parse(text: &str) -> Result<PrecisionPolicy> {
+        let mut p = PrecisionPolicy::default();
+        for kv in text.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--precision-policy: bad pair {kv:?} (want key=val)"))?;
+            p.set(k.trim(), v.trim())?;
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.cadence >= 1, "[precision] cadence must be >= 1");
+        ensure!(
+            self.promote_error.is_finite() && self.promote_error > 0.0,
+            "[precision] promote_error must be finite and > 0"
+        );
+        ensure!(
+            self.demote_error.is_finite() && self.demote_error >= 0.0,
+            "[precision] demote_error must be finite and >= 0"
+        );
+        ensure!(
+            self.spike_factor.is_finite() && self.spike_factor >= 1.0,
+            "[precision] spike_factor must be finite and >= 1"
+        );
+        ensure!(self.hysteresis >= 1, "[precision] hysteresis must be >= 1");
+        Ok(())
+    }
+
+    /// One-line summary for `--dry-run` / logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "cadence {} | promote_error {} | demote_error {} | spike x{} | hysteresis {}",
+            self.cadence, self.promote_error, self.demote_error, self.spike_factor, self.hysteresis
+        )
+    }
+}
+
+/// One recorded width transition (JSONL `groups` stream / `RunResult`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub step: usize,
+    pub tensor: String,
+    pub from_bits: u32,
+    pub to_bits: u32,
+    /// `"detector"`, `"gnorm_spike"`, `"quant_error"`, or `"quiet"`.
+    pub trigger: &'static str,
+}
+
+/// Checkpointable per-tensor controller state (format v6). Histories are
+/// serialized at full f64 precision: the spike trigger compares exact
+/// medians, and a restored run must replay the same decisions bit for
+/// bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorCtlState {
+    /// Chronological gradient-norm history ([`GnormHistory::snapshot_f64`]).
+    pub hist: Vec<f64>,
+    /// Consecutive quiet reviews so far.
+    pub quiet: u32,
+    /// Max gradient norm observed since the last review.
+    pub max_since_review: f64,
+}
+
+/// Live per-tensor tracking.
+struct TensorCtl {
+    floor: u32,
+    ceil: u32,
+    history: GnormHistory,
+    quiet: u32,
+    max_since_review: f64,
+}
+
+/// The runtime bit-width controller. The trainer feeds it one
+/// [`PrecisionController::observe_step`] per optimizer step and calls
+/// [`PrecisionController::review`] on the policy cadence; the controller
+/// mutates tensor widths through [`ParamOptimizer::set_tensor_bits`] and
+/// records every transition.
+pub struct PrecisionController {
+    policy: PrecisionPolicy,
+    tensors: Vec<TensorCtl>,
+    /// Clip + update-norm-clip events drained since the last review.
+    window_clips: u64,
+    /// A gradient crash landed since the last review.
+    window_crash: bool,
+    transitions: Vec<Transition>,
+    peak_state_bytes: usize,
+}
+
+fn rung_up(bits: u32) -> u32 {
+    match bits {
+        4 => 8,
+        _ => 32,
+    }
+}
+
+fn rung_down(bits: u32) -> u32 {
+    match bits {
+        32 => 8,
+        _ => 4,
+    }
+}
+
+/// Per-state signedness for the demote-guard codebook: quantized states
+/// carry it in their codebook (values sorted ascending, so a negative
+/// first level means signed); 32-bit states are scanned.
+fn state_is_signed(st: &StateTensor) -> bool {
+    match st {
+        StateTensor::Quant { codebook, .. } => {
+            codebook.values().first().is_some_and(|&v| v < 0.0)
+        }
+        StateTensor::F32(v) => v.iter().any(|&x| x < 0.0),
+    }
+}
+
+/// Would demoting tensor `i` to `to` bits stay under the loss budget?
+fn demote_ok(popt: &ParamOptimizer, i: usize, to: u32, demote_error: f64) -> bool {
+    if to == 32 {
+        return true;
+    }
+    let width = if to == 4 { CodeWidth::U4 } else { CodeWidth::U8 };
+    let (format, _) = popt.quant_template(i);
+    popt.opt(i).states().iter().all(|(_, st)| {
+        let cb = format.codebook(width, state_is_signed(st));
+        roundtrip_error(st, &cb, width).mean_rel < demote_error
+    })
+}
+
+impl PrecisionController {
+    pub fn new(policy: PrecisionPolicy, popt: &ParamOptimizer) -> PrecisionController {
+        let tensors = (0..popt.n_tensors())
+            .map(|i| {
+                let (floor, ceil) = popt.bits_bounds(i);
+                TensorCtl {
+                    floor,
+                    ceil,
+                    history: GnormHistory::new(),
+                    quiet: 0,
+                    max_since_review: 0.0,
+                }
+            })
+            .collect();
+        PrecisionController {
+            policy,
+            tensors,
+            window_clips: 0,
+            window_crash: false,
+            transitions: Vec::new(),
+            peak_state_bytes: popt.state_bytes(),
+        }
+    }
+
+    pub fn policy(&self) -> &PrecisionPolicy {
+        &self.policy
+    }
+
+    /// Is `step` (1-based, the trainer's post-increment count) a review
+    /// step?
+    pub fn due(&self, step: usize) -> bool {
+        step > 0 && step % self.policy.cadence == 0
+    }
+
+    /// Record one optimizer step's signals: per-tensor squared gradient
+    /// norms (fixed-order accumulation from the trainer's `grad_stats`)
+    /// plus the clip / update-norm-clip / crash events it drained.
+    pub fn observe_step(
+        &mut self,
+        tensor_sq_norms: &[f64],
+        clip_events: u64,
+        unorm_clips: u64,
+        grad_crash: bool,
+    ) {
+        debug_assert_eq!(tensor_sq_norms.len(), self.tensors.len(), "tensor count mismatch");
+        for (t, &sq) in self.tensors.iter_mut().zip(tensor_sq_norms) {
+            let gnorm = sq.sqrt();
+            t.history.push(gnorm);
+            if gnorm.is_finite() && gnorm > t.max_since_review {
+                t.max_since_review = gnorm;
+            }
+        }
+        self.window_clips += clip_events + unorm_clips;
+        self.window_crash |= grad_crash;
+    }
+
+    /// Run one review: resolve each tensor's triggers against the signals
+    /// gathered since the last review, apply at most one rung of width
+    /// change per tensor, reset the window, and return (and record) the
+    /// transitions.
+    pub fn review(&mut self, step: usize, popt: &mut ParamOptimizer) -> Vec<Transition> {
+        let pol = self.policy;
+        let global_unstable = self.window_crash || self.window_clips > 0;
+        let mut out = Vec::new();
+        for i in 0..self.tensors.len() {
+            let (floor, ceil) = (self.tensors[i].floor, self.tensors[i].ceil);
+            let max_gnorm = self.tensors[i].max_since_review;
+            self.tensors[i].max_since_review = 0.0;
+            if floor == ceil {
+                continue; // pinned (HLO mirror, factored kind, or bounds)
+            }
+            let cur = popt.tensor_cfg(i).bits.bit_count();
+            let spike = match self.tensors[i].history.clip_value(50.0) {
+                Some(median) => max_gnorm > pol.spike_factor * median,
+                None => false, // too little history to call a spike
+            };
+            let trigger = if global_unstable {
+                Some("detector")
+            } else if spike {
+                Some("gnorm_spike")
+            } else {
+                let err_score = if cur < 32 {
+                    popt.opt(i)
+                        .states()
+                        .iter()
+                        .filter_map(|(_, st)| resolution_error(st))
+                        .map(|s| s.score())
+                        .fold(0.0, f64::max)
+                } else {
+                    0.0
+                };
+                (err_score > pol.promote_error).then_some("quant_error")
+            };
+            if let Some(trig) = trigger {
+                self.tensors[i].quiet = 0;
+                if cur < ceil {
+                    let to = rung_up(cur).min(ceil);
+                    if popt.set_tensor_bits(i, to) {
+                        out.push(Transition {
+                            step,
+                            tensor: popt.tensor_name(i).to_string(),
+                            from_bits: cur,
+                            to_bits: to,
+                            trigger: trig,
+                        });
+                    }
+                }
+            } else {
+                self.tensors[i].quiet = self.tensors[i].quiet.saturating_add(1);
+                if cur > floor && self.tensors[i].quiet >= pol.hysteresis {
+                    let to = rung_down(cur).max(floor);
+                    if demote_ok(popt, i, to, pol.demote_error)
+                        && popt.set_tensor_bits(i, to)
+                    {
+                        // A fresh quiet window is required before the
+                        // next rung down.
+                        self.tensors[i].quiet = 0;
+                        out.push(Transition {
+                            step,
+                            tensor: popt.tensor_name(i).to_string(),
+                            from_bits: cur,
+                            to_bits: to,
+                            trigger: "quiet",
+                        });
+                    }
+                }
+            }
+        }
+        self.window_clips = 0;
+        self.window_crash = false;
+        self.peak_state_bytes = self.peak_state_bytes.max(popt.state_bytes());
+        self.transitions.extend(out.iter().cloned());
+        out
+    }
+
+    /// All transitions applied over the controller's lifetime.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Largest total optimizer-state footprint seen at any review (plus
+    /// the build-time footprint).
+    pub fn peak_state_bytes(&self) -> usize {
+        self.peak_state_bytes
+    }
+
+    /// Lets the trainer fold post-restore / post-step footprints into the
+    /// peak without a review.
+    pub fn note_state_bytes(&mut self, bytes: usize) {
+        self.peak_state_bytes = self.peak_state_bytes.max(bytes);
+    }
+
+    /// Checkpoint capture (format v6): per-tensor state plus the global
+    /// review window.
+    pub fn snapshot(&self) -> (Vec<TensorCtlState>, u64, bool) {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| TensorCtlState {
+                hist: t.history.snapshot_f64(),
+                quiet: t.quiet,
+                max_since_review: t.max_since_review,
+            })
+            .collect();
+        (tensors, self.window_clips, self.window_crash)
+    }
+
+    /// Checkpoint restore: rebuild the review window exactly. Tensor
+    /// bounds and the transition log are not part of the snapshot — the
+    /// bounds are re-derived from the spec at build time, and the log
+    /// counts transitions of *this* run.
+    pub fn restore(&mut self, tensors: &[TensorCtlState], window_clips: u64, window_crash: bool) {
+        for (t, s) in self.tensors.iter_mut().zip(tensors) {
+            t.history.restore_f64(&s.hist);
+            t.quiet = s.quiet;
+            t.max_since_review = s.max_since_review;
+        }
+        self.window_clips = window_clips;
+        self.window_crash = window_crash;
+    }
+}
+
+/// `--dry-run` report: the resolved policy, each group's adaptive range,
+/// and the best/worst-case projected state footprint
+/// ([`ParamOptimizer::projected_state_bytes`]).
+pub fn describe_policy(policy: &PrecisionPolicy, popt: &ParamOptimizer) -> String {
+    let spec = popt.spec();
+    let mut lines = vec![format!("precision policy: {}", policy.describe())];
+    for g in 0..=spec.groups.len() {
+        let cfg = if g == 0 { spec.base } else { spec.groups[g - 1].apply(&spec.base) };
+        let start = cfg.bits.bit_count();
+        let ov = if g == 0 { None } else { Some(&spec.groups[g - 1]) };
+        let (floor, ceil) = if cfg.kind.supports_8bit() {
+            let f = ov.and_then(|o| o.bits_min).unwrap_or(start);
+            let c = ov.and_then(|o| o.bits_max).unwrap_or(32);
+            (f.min(c), c.max(f))
+        } else {
+            (start, start) // factored kinds cannot requantize
+        };
+        lines.push(format!(
+            "  group {:<24} start {:>2}-bit  floor {:>2}-bit  ceiling {:>2}-bit",
+            spec.group_label(g),
+            start,
+            floor,
+            ceil
+        ));
+    }
+    let (lo, hi) = popt.projected_state_bytes();
+    lines.push(format!("  projected state bytes: {lo} (all at floor) .. {hi} (all at ceiling)"));
+    lines.join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Bits, GroupOverride, OptimConfig, TensorInfo};
+    use super::*;
+    use crate::optim::{OptimSpec, ParamOptimizer};
+
+    fn infos(names: &[(&str, usize)]) -> Vec<TensorInfo> {
+        names
+            .iter()
+            .map(|&(name, size)| TensorInfo {
+                name: name.to_string(),
+                size,
+                shape: None,
+                padded: size.next_multiple_of(2048),
+            })
+            .collect()
+    }
+
+    fn build(bits: Bits, groups: Vec<GroupOverride>) -> ParamOptimizer {
+        let spec = OptimSpec::with_groups(OptimConfig::adam(1e-3, bits), groups);
+        ParamOptimizer::build(spec, &infos(&[("w.a", 256), ("w.b", 512)]), None).unwrap()
+    }
+
+    #[test]
+    fn policy_parse_set_and_validate() {
+        let p = PrecisionPolicy::parse("cadence=50, spike_factor=8").unwrap();
+        assert_eq!(p.cadence, 50);
+        assert_eq!(p.spike_factor, 8.0);
+        assert_eq!(p.hysteresis, PrecisionPolicy::default().hysteresis);
+        assert!(PrecisionPolicy::parse("").is_ok());
+        assert!(PrecisionPolicy::parse("cadence=0").is_err());
+        assert!(PrecisionPolicy::parse("nope=1").is_err());
+        assert!(PrecisionPolicy::parse("cadence").is_err());
+        let mut p = PrecisionPolicy::default();
+        p.set("demote_error", "0").unwrap();
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn detector_promotes_one_rung_per_review_up_to_ceiling() {
+        let mut popt = build(Bits::b4_dynamic(), vec![]);
+        let start_bytes = popt.state_bytes();
+        let mut ctl = PrecisionController::new(PrecisionPolicy::default(), &popt);
+        assert!(ctl.due(25) && !ctl.due(26) && !ctl.due(0));
+
+        ctl.observe_step(&[1.0, 1.0], 0, 0, true);
+        let tr = ctl.review(25, &mut popt);
+        assert_eq!(tr.len(), 2);
+        for t in &tr {
+            assert_eq!((t.from_bits, t.to_bits, t.trigger), (4, 8, "detector"));
+        }
+        assert_eq!(popt.tensor_cfg(0).bits.bit_count(), 8);
+
+        // Clip events alone (no crash) also count as instability.
+        ctl.observe_step(&[1.0, 1.0], 2, 1, false);
+        let tr = ctl.review(50, &mut popt);
+        assert_eq!(tr.len(), 2);
+        assert_eq!((tr[0].from_bits, tr[0].to_bits), (8, 32));
+
+        // At the ceiling: instability no longer transitions anything.
+        ctl.observe_step(&[1.0, 1.0], 0, 0, true);
+        assert!(ctl.review(75, &mut popt).is_empty());
+        assert_eq!(popt.tensor_cfg(1).bits.bit_count(), 32);
+        assert_eq!(ctl.transitions().len(), 4);
+        assert!(ctl.peak_state_bytes() > start_bytes);
+    }
+
+    #[test]
+    fn quiet_reviews_demote_after_hysteresis() {
+        let mut popt = build(Bits::b4_dynamic(), vec![]);
+        let policy = PrecisionPolicy { demote_error: 0.9, ..PrecisionPolicy::default() };
+        let mut ctl = PrecisionController::new(policy, &popt);
+
+        ctl.observe_step(&[1.0, 1.0], 0, 0, true);
+        assert_eq!(ctl.review(25, &mut popt).len(), 2); // 4 -> 8
+
+        ctl.observe_step(&[0.01, 0.01], 0, 0, false);
+        assert!(ctl.review(50, &mut popt).is_empty()); // quiet 1 of 2
+        ctl.observe_step(&[0.01, 0.01], 0, 0, false);
+        let tr = ctl.review(75, &mut popt); // quiet 2 of 2
+        assert_eq!(tr.len(), 2);
+        for t in &tr {
+            assert_eq!((t.from_bits, t.to_bits, t.trigger), (8, 4, "quiet"));
+        }
+        // Never below the floor (= the build-time width, 4).
+        ctl.observe_step(&[0.01, 0.01], 0, 0, false);
+        ctl.observe_step(&[0.01, 0.01], 0, 0, false);
+        assert!(ctl.review(100, &mut popt).is_empty());
+        assert_eq!(popt.tensor_cfg(0).bits.bit_count(), 4);
+    }
+
+    #[test]
+    fn frozen_policy_never_transitions() {
+        let mut popt = build(Bits::b8_dynamic(), vec![]);
+        let policy =
+            PrecisionPolicy::parse("promote_error=2, spike_factor=1e9, demote_error=0").unwrap();
+        let mut ctl = PrecisionController::new(policy, &popt);
+        for s in 1..=100usize {
+            let g = if s % 10 == 0 { 1e6 } else { 1.0 };
+            ctl.observe_step(&[g, g], 0, 0, false);
+            if ctl.due(s) {
+                assert!(ctl.review(s, &mut popt).is_empty(), "step {s}");
+            }
+        }
+        assert_eq!(popt.tensor_cfg(0).bits.bit_count(), 8);
+        assert!(ctl.transitions().is_empty());
+    }
+
+    #[test]
+    fn gnorm_spike_trigger_and_snapshot_restore_agree() {
+        let policy = PrecisionPolicy { spike_factor: 2.0, ..PrecisionPolicy::default() };
+        let mut popt_a = build(Bits::b4_dynamic(), vec![]);
+        let mut popt_b = build(Bits::b4_dynamic(), vec![]);
+        let mut a = PrecisionController::new(policy, &popt_a);
+
+        // Warm the history past GNORM_MIN_HISTORY, then checkpoint.
+        for _ in 0..6 {
+            a.observe_step(&[1.0, 1.0], 0, 0, false);
+        }
+        let (ts, clips, crash) = a.snapshot();
+        let mut b = PrecisionController::new(policy, &popt_b);
+        b.restore(&ts, clips, crash);
+
+        // Identical continuation: tensor 0 spikes, tensor 1 stays calm.
+        for ctl in [&mut a, &mut b] {
+            ctl.observe_step(&[1e4, 1.0], 0, 0, false);
+        }
+        let tr_a = a.review(25, &mut popt_a);
+        let tr_b = b.review(25, &mut popt_b);
+        assert_eq!(tr_a, tr_b);
+        assert_eq!(tr_a.len(), 1);
+        assert_eq!(tr_a[0].tensor, "w.a");
+        assert_eq!((tr_a[0].from_bits, tr_a[0].to_bits, tr_a[0].trigger), (4, 8, "gnorm_spike"));
+        assert_eq!(popt_a.tensor_cfg(0).bits.bit_count(), 8);
+        assert_eq!(popt_a.tensor_cfg(1).bits.bit_count(), 4);
+    }
+
+    #[test]
+    fn bounds_respect_group_overrides_in_describe_and_review() {
+        let ov = GroupOverride::parse("w.a:bits_max=8").unwrap();
+        let mut popt = build(Bits::b4_dynamic(), vec![ov]);
+        assert_eq!(popt.bits_bounds(0), (4, 8));
+        assert_eq!(popt.bits_bounds(1), (4, 32));
+        let policy = PrecisionPolicy::default();
+        let text = describe_policy(&policy, &popt);
+        assert!(text.contains("ceiling  8-bit"), "{text}");
+        assert!(text.contains("projected state bytes"), "{text}");
+
+        let mut ctl = PrecisionController::new(policy, &popt);
+        ctl.observe_step(&[1.0, 1.0], 0, 0, true);
+        assert_eq!(ctl.review(25, &mut popt).len(), 2); // both 4 -> 8
+        ctl.observe_step(&[1.0, 1.0], 0, 0, true);
+        let tr = ctl.review(50, &mut popt);
+        // w.a is capped at 8; only w.b promotes to 32.
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].tensor, "w.b");
+        assert_eq!(popt.tensor_cfg(0).bits.bit_count(), 8);
+        assert_eq!(popt.tensor_cfg(1).bits.bit_count(), 32);
+    }
+}

@@ -120,6 +120,28 @@ impl GnormHistory {
             self.push(v as f64);
         }
     }
+
+    /// Full-precision chronological snapshot (oldest first). The precision
+    /// controller's spike trigger compares exact f64 medians, so its
+    /// checkpointed histories must not round through f32 — a restored run
+    /// has to reproduce the same promote/demote decisions bit for bit.
+    pub fn snapshot_f64(&self) -> Vec<f64> {
+        if self.vals.len() < GNORM_WINDOW {
+            self.vals.clone()
+        } else {
+            (0..GNORM_WINDOW).map(|i| self.vals[(self.pos + i) % GNORM_WINDOW]).collect()
+        }
+    }
+
+    /// Rebuild from a [`GnormHistory::snapshot_f64`] without precision loss.
+    pub fn restore_f64(&mut self, snap: &[f64]) {
+        self.vals.clear();
+        self.pos = 0;
+        let skip = snap.len().saturating_sub(GNORM_WINDOW);
+        for &v in &snap[skip..] {
+            self.push(v);
+        }
+    }
 }
 
 // ---- clip telemetry (the NONFINITE_BLOCKS pattern: process-global

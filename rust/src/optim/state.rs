@@ -103,6 +103,30 @@ impl StateTensor {
         }
     }
 
+    /// Overwrite the stored values from 32-bit working values: F32 states
+    /// copy in place; quantized states requantize block by block through
+    /// the public quantizer API. This is the checkpoint-restore mechanism,
+    /// also reused for runtime width transitions — when `vals` came from
+    /// [`StateTensor::to_f32`] of a same-width tensor the stored codes are
+    /// bit-identical (the `idempotent_roundtrip` contract).
+    pub fn load_f32(&mut self, vals: &[f32]) {
+        match self {
+            StateTensor::F32(v) => {
+                assert_eq!(v.len(), vals.len(), "state length mismatch");
+                v.copy_from_slice(vals);
+            }
+            StateTensor::Quant { q, codebook } => {
+                assert_eq!(q.len, vals.len(), "state length mismatch");
+                let bq = crate::quant::BlockQuantizer::with_width(
+                    codebook.clone(),
+                    q.block,
+                    q.width(),
+                );
+                bq.quantize_into(vals, q);
+            }
+        }
+    }
+
     /// Dequantize the whole tensor (for checkpoints / analysis).
     pub fn to_f32(&self) -> Vec<f32> {
         match self {

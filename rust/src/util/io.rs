@@ -24,6 +24,21 @@ pub fn write_f32_slice<W: Write>(w: &mut W, v: &[f32]) -> std::io::Result<()> {
     }
     Ok(())
 }
+pub fn write_f64<W: Write>(w: &mut W, v: f64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+pub fn write_f64_slice<W: Write>(w: &mut W, v: &[f64]) -> std::io::Result<()> {
+    write_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len().min(1 << 16) * 8);
+    for chunk in v.chunks(1 << 13) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
 pub fn write_u8_slice<W: Write>(w: &mut W, v: &[u8]) -> std::io::Result<()> {
     write_u64(w, v.len() as u64)?;
     w.write_all(v)
@@ -49,6 +64,20 @@ pub fn read_f32_slice<R: Read>(r: &mut R) -> std::io::Result<Vec<f32>> {
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+pub fn read_f64<R: Read>(r: &mut R) -> std::io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+pub fn read_f64_slice<R: Read>(r: &mut R) -> std::io::Result<Vec<f64>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
         .collect())
 }
 pub fn read_u8_slice<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
@@ -77,6 +106,8 @@ mod tests {
         write_u32(&mut buf, 0xDEADBEEF).unwrap();
         write_u64(&mut buf, u64::MAX - 3).unwrap();
         write_f32_slice(&mut buf, &[1.5, -2.25, 0.0, f32::MIN_POSITIVE]).unwrap();
+        write_f64(&mut buf, -0.1f64).unwrap();
+        write_f64_slice(&mut buf, &[1e-300, 2.5, f64::MAX]).unwrap();
         write_u8_slice(&mut buf, &[1, 2, 3]).unwrap();
         write_str(&mut buf, "hello/путь").unwrap();
 
@@ -84,6 +115,8 @@ mod tests {
         assert_eq!(read_u32(&mut r).unwrap(), 0xDEADBEEF);
         assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 3);
         assert_eq!(read_f32_slice(&mut r).unwrap(), vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        assert_eq!(read_f64(&mut r).unwrap(), -0.1f64);
+        assert_eq!(read_f64_slice(&mut r).unwrap(), vec![1e-300, 2.5, f64::MAX]);
         assert_eq!(read_u8_slice(&mut r).unwrap(), vec![1, 2, 3]);
         assert_eq!(read_str(&mut r).unwrap(), "hello/путь");
         assert!(r.is_empty());

@@ -1,0 +1,422 @@
+//! Parity tests for the adaptive precision controller (engine layer 6).
+//!
+//! The controller contract: runtime bit-width transitions are a *policy*
+//! over deterministic signals — they never depend on how the step was
+//! executed. Per-tensor gradient norms are accumulated in fixed element
+//! order, clip/crash events are exact counters, and the probes stream
+//! states sequentially, so the transition sequence (and therefore the
+//! whole trajectory) is pinned across threads × lane/scalar kernels ×
+//! shard layouts. These tests pin that down:
+//!
+//! * a frozen policy (no trigger can fire) is **bit-identical** to the
+//!   same spec run with no controller at all, across shard counts,
+//!   thread counts, and forced-scalar kernels,
+//! * a firing policy produces the identical transition sequence, final
+//!   widths, params, and states under every execution shape,
+//! * a v6 checkpoint saved mid-run with promoted tensors restores with
+//!   the captured widths and review window, and the resumed run replays
+//!   the uninterrupted trajectory bit for bit — monolithic and sharded
+//!   (including restoring into a different shard count),
+//! * a static (v4) checkpoint restored under a live controller keeps its
+//!   v2–v5 semantics: built widths, empty review window, and
+//! * `configs/adaptive_precision.toml` resolves the bounds and policy it
+//!   documents.
+
+use std::sync::Mutex;
+
+use bitopt8::config::RunConfig;
+use bitopt8::coordinator::Checkpoint;
+use bitopt8::optim::{
+    describe_policy, Bits, GroupOverride, OptimConfig, OptimSpec, ParamOptimizer,
+    PrecisionController, PrecisionPolicy, TensorInfo, Transition,
+};
+use bitopt8::util::lanes;
+use bitopt8::util::parallel;
+use bitopt8::util::rng::Rng;
+
+/// Serializes tests that toggle process-global knobs (thread count, the
+/// forced-scalar lane switch); see `pool_parity.rs` for the rationale.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The stable-embedding tensor listing the other parity suites use:
+/// multi-block, single-block, and sub-block sizes.
+fn model_tensors() -> Vec<TensorInfo> {
+    let specs: [(&str, usize, Option<(usize, usize)>); 7] = [
+        ("embed.tok", 512 * 64, Some((512, 64))),
+        ("embed.pos", 64 * 64, Some((64, 64))),
+        ("block0.attn.wq", 64 * 64, Some((64, 64))),
+        ("block0.mlp.w1", 64 * 256, Some((64, 256))),
+        ("block0.mlp.b1", 256, None),
+        ("final_ln.scale", 64, None),
+        ("lm_head", 64 * 512, Some((64, 512))),
+    ];
+    specs
+        .into_iter()
+        .map(|(name, size, shape)| TensorInfo {
+            name: name.to_string(),
+            size,
+            shape,
+            padded: size.next_multiple_of(2048),
+        })
+        .collect()
+}
+
+/// 4-bit base with pinned 32-bit embeddings and an 8-bit ceiling on the
+/// head — exercises pinned tensors, bounded tensors, and free tensors in
+/// one fleet.
+fn adaptive_spec(shards: u32) -> OptimSpec {
+    let base = OptimConfig::adam(0.01, Bits::b4_dynamic());
+    let mut spec = OptimSpec::with_groups(
+        base,
+        vec![
+            GroupOverride::parse("embed.tok|embed.pos:bits=32").unwrap(),
+            GroupOverride::parse("lm_head:bits_max=8").unwrap(),
+        ],
+    );
+    spec.default_shards = shards;
+    spec
+}
+
+/// A policy that can never fire: the probe score is capped at 1.0, no
+/// gradient norm reaches 1e9× its median, and demotion is disabled.
+fn frozen_policy() -> PrecisionPolicy {
+    PrecisionPolicy::parse("promote_error=2, spike_factor=1e9, demote_error=0").unwrap()
+}
+
+/// Fires only on the signals the driver scripts (spikes and crashes):
+/// `promote_error=2` keeps the probe trigger out of the timeline so the
+/// expected transition steps are exact.
+fn firing_policy() -> PrecisionPolicy {
+    PrecisionPolicy::parse("cadence=5, spike_factor=2, promote_error=2, demote_error=0.9")
+        .unwrap()
+}
+
+/// The promotable tensor the driver spikes (`block0.attn.wq`).
+const SPIKED: usize = 2;
+
+fn targets() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x7A36);
+    model_tensors()
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn init_params() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0xD1CE);
+    model_tensors()
+        .iter()
+        .map(|t| (0..t.size).map(|_| rng.normal() as f32 * 0.1).collect())
+        .collect()
+}
+
+fn sq_norms(grads: &[Vec<f32>]) -> Vec<f64> {
+    grads
+        .iter()
+        .map(|g| g.iter().map(|&v| v as f64 * v as f64).sum())
+        .collect()
+}
+
+/// Drive `steps` (1-based, inclusive) of the quadratic fleet: gradients
+/// are `params - target` per tensor, tensor `SPIKED`'s gradients are
+/// scaled 64× on every `spike_every`-th step, and `crash_step` (0 = none)
+/// skips the update and flags a gradient crash — exactly the trainer's
+/// crashed-step behavior. The controller (when present) observes every
+/// step and reviews on its cadence; returns the transitions applied.
+fn drive(
+    popt: &mut ParamOptimizer,
+    mut ctl: Option<&mut PrecisionController>,
+    params: &mut [Vec<f32>],
+    steps: std::ops::RangeInclusive<usize>,
+    spike_every: usize,
+    crash_step: usize,
+) -> Vec<Transition> {
+    let targets = targets();
+    let mut out = Vec::new();
+    for step in steps {
+        let mut grads: Vec<Vec<f32>> = params
+            .iter()
+            .zip(&targets)
+            .map(|(p, t)| p.iter().zip(t).map(|(a, b)| a - b).collect())
+            .collect();
+        if spike_every != 0 && step % spike_every == 0 {
+            for v in grads[SPIKED].iter_mut() {
+                *v *= 64.0;
+            }
+        }
+        let crash = step == crash_step;
+        if !crash {
+            popt.step_native(params, &grads);
+        }
+        if let Some(c) = ctl.as_deref_mut() {
+            c.observe_step(&sq_norms(&grads), 0, 0, crash);
+            if c.due(step) {
+                out.extend(c.review(step, popt));
+            }
+        }
+    }
+    out
+}
+
+fn widths(popt: &ParamOptimizer) -> Vec<u32> {
+    (0..popt.n_tensors()).map(|i| popt.tensor_cfg(i).bits.bit_count()).collect()
+}
+
+#[test]
+fn frozen_policy_is_bit_identical_to_static_run() {
+    let _g = locked();
+    // reference: no controller at all, single shard, single thread
+    let mut popt_ref = ParamOptimizer::build(adaptive_spec(1), &model_tensors(), None).unwrap();
+    let mut p_ref = init_params();
+    parallel::with_threads(1, || {
+        drive(&mut popt_ref, None, &mut p_ref, 1..=20, 8, 0);
+    });
+
+    for shards in [1u32, 4] {
+        for threads in [Some(1), Some(4), None] {
+            let mut popt =
+                ParamOptimizer::build(adaptive_spec(shards), &model_tensors(), None).unwrap();
+            let mut ctl = PrecisionController::new(frozen_policy(), &popt);
+            let mut p = init_params();
+            let run = |popt: &mut ParamOptimizer,
+                       ctl: &mut PrecisionController,
+                       p: &mut [Vec<f32>]| {
+                drive(popt, Some(ctl), p, 1..=20, 8, 0)
+            };
+            let tr = match threads {
+                Some(t) => parallel::with_threads(t, || run(&mut popt, &mut ctl, &mut p)),
+                None => run(&mut popt, &mut ctl, &mut p),
+            };
+            assert!(tr.is_empty(), "frozen policy transitioned at shards={shards}");
+            assert!(ctl.transitions().is_empty());
+            assert_eq!(widths(&popt), widths(&popt_ref));
+            assert_eq!(p, p_ref, "params diverged at shards={shards}, {threads:?} threads");
+            assert_eq!(popt.state_snapshot(), popt_ref.state_snapshot());
+        }
+        // forced-scalar kernels under the controller
+        let mut popt =
+            ParamOptimizer::build(adaptive_spec(shards), &model_tensors(), None).unwrap();
+        let mut ctl = PrecisionController::new(frozen_policy(), &popt);
+        let mut p = init_params();
+        lanes::with_forced_scalar(|| {
+            parallel::with_threads(4, || {
+                drive(&mut popt, Some(&mut ctl), &mut p, 1..=20, 8, 0);
+            })
+        });
+        assert!(ctl.transitions().is_empty());
+        assert_eq!(p, p_ref, "scalar run diverged at shards={shards}");
+        assert_eq!(popt.state_snapshot(), popt_ref.state_snapshot());
+    }
+}
+
+#[test]
+fn firing_policy_transitions_are_deterministic_across_execution_shapes() {
+    let _g = locked();
+    // 25 steps: the 64× spike on step 8 fires `gnorm_spike` at review 10,
+    // the crash on step 13 fires `detector` for every unpinned tensor at
+    // review 15, and reviews 20/25 are quiet (demotions allowed).
+    let run = |shards: u32, threads: Option<usize>, scalar: bool| {
+        let mut popt =
+            ParamOptimizer::build(adaptive_spec(shards), &model_tensors(), None).unwrap();
+        let mut ctl = PrecisionController::new(firing_policy(), &popt);
+        let mut p = init_params();
+        let mut go = || drive(&mut popt, Some(&mut ctl), &mut p, 1..=25, 8, 13);
+        let tr = match (threads, scalar) {
+            (Some(t), false) => parallel::with_threads(t, go),
+            (Some(t), true) => lanes::with_forced_scalar(|| parallel::with_threads(t, go)),
+            (None, false) => go(),
+            (None, true) => lanes::with_forced_scalar(go),
+        };
+        let peak = ctl.peak_state_bytes();
+        (tr, widths(&popt), p, popt.state_snapshot(), peak)
+    };
+
+    let (tr_ref, w_ref, p_ref, s_ref, peak_ref) = run(1, Some(1), false);
+    assert!(!tr_ref.is_empty(), "the firing policy must transition");
+    assert!(
+        tr_ref.iter().any(|t| t.trigger == "gnorm_spike" && t.tensor == "block0.attn.wq"),
+        "{tr_ref:?}"
+    );
+    assert!(tr_ref.iter().any(|t| t.trigger == "detector"), "{tr_ref:?}");
+    // pinned embeddings never move; lm_head never exceeds its ceiling
+    assert!(tr_ref.iter().all(|t| !t.tensor.starts_with("embed.")), "{tr_ref:?}");
+    assert!(
+        tr_ref.iter().filter(|t| t.tensor == "lm_head").all(|t| t.to_bits <= 8),
+        "{tr_ref:?}"
+    );
+    assert_eq!(w_ref[0], 32, "embed.tok stays pinned");
+    assert!(peak_ref > 0);
+
+    for (shards, threads, scalar) in [
+        (1u32, Some(4), false),
+        (1, None, false),
+        (4, Some(1), false),
+        (4, Some(4), false),
+        (4, Some(4), true),
+        (1, None, true),
+    ] {
+        let (tr, w, p, s, peak) = run(shards, threads, scalar);
+        let shape = format!("shards={shards}, threads={threads:?}, scalar={scalar}");
+        assert_eq!(tr, tr_ref, "transition sequence diverged at {shape}");
+        assert_eq!(w, w_ref, "final widths diverged at {shape}");
+        assert_eq!(p, p_ref, "params diverged at {shape}");
+        assert_eq!(s, s_ref, "states diverged at {shape}");
+        assert_eq!(peak, peak_ref, "peak footprint diverged at {shape}");
+    }
+}
+
+#[test]
+fn v6_monolithic_checkpoint_resumes_bit_identically() {
+    let _g = locked();
+    let dir = std::env::temp_dir().join(format!("bitopt8_v6mono_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+
+    // run A: the spike on step 8 promotes block0.attn.wq at review 10,
+    // save on step 12 with the promotion live
+    let mut popt_a = ParamOptimizer::build(adaptive_spec(1), &model_tensors(), None).unwrap();
+    let mut ctl_a = PrecisionController::new(firing_policy(), &popt_a);
+    let mut p_a = init_params();
+    let head = drive(&mut popt_a, Some(&mut ctl_a), &mut p_a, 1..=12, 8, 0);
+    assert!(
+        head.iter().any(|t| t.tensor == "block0.attn.wq" && t.to_bits == 8),
+        "{head:?}"
+    );
+    Checkpoint::capture(12, &Rng::new(7), &p_a, &popt_a, Some(&ctl_a)).save(&path).unwrap();
+    let snap_at_save = ctl_a.snapshot();
+
+    // the uninterrupted continuation (spike on 16 promotes 8 -> 32)
+    let tail_a = drive(&mut popt_a, Some(&mut ctl_a), &mut p_a, 13..=24, 8, 0);
+    assert!(
+        tail_a.iter().any(|t| t.tensor == "block0.attn.wq" && t.to_bits == 32),
+        "{tail_a:?}"
+    );
+
+    // the loaded file carries the controller payload and the live widths
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.step, 12);
+    let saved_ctl = loaded.ctl.as_ref().expect("v6 controller payload");
+    assert_eq!(saved_ctl.tensors.len(), 7);
+    let wq = loaded.tensors.iter().find(|t| t.name == "block0.attn.wq").unwrap();
+    assert_eq!(wq.state_bits, 8, "captured width must be the promoted one");
+
+    // run B: fresh build (4-bit), restore, continue with the same driver
+    let mut popt_b = ParamOptimizer::build(adaptive_spec(1), &model_tensors(), None).unwrap();
+    let mut ctl_b = PrecisionController::new(firing_policy(), &popt_b);
+    let mut p_b: Vec<Vec<f32>> = model_tensors().iter().map(|t| vec![0.0; t.size]).collect();
+    loaded.restore(&mut p_b, &mut popt_b, Some(&mut ctl_b)).unwrap();
+    assert_eq!(
+        popt_b.tensor_cfg(SPIKED).bits.bit_count(),
+        8,
+        "restore must re-apply the promoted width"
+    );
+    assert_eq!(ctl_b.snapshot(), snap_at_save, "review window must restore exactly");
+    let tail_b = drive(&mut popt_b, Some(&mut ctl_b), &mut p_b, 13..=24, 8, 0);
+
+    assert_eq!(tail_b, tail_a, "post-restore transitions diverged");
+    assert_eq!(p_b, p_a, "post-restore params diverged");
+    assert_eq!(popt_b.state_snapshot(), popt_a.state_snapshot());
+    assert_eq!(widths(&popt_b), widths(&popt_a));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v6_sharded_checkpoint_restores_into_a_different_shard_count() {
+    let _g = locked();
+    let dir = std::env::temp_dir().join(format!("bitopt8_v6shard_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+
+    // 4-shard run with a live promotion, v6 sharded save
+    let mut popt_a = ParamOptimizer::build(adaptive_spec(4), &model_tensors(), None).unwrap();
+    let mut ctl_a = PrecisionController::new(firing_policy(), &popt_a);
+    let mut p_a = init_params();
+    drive(&mut popt_a, Some(&mut ctl_a), &mut p_a, 1..=12, 8, 0);
+    assert!(!ctl_a.transitions().is_empty());
+    let layout = popt_a.shard_layout();
+    let (assignment, n_shards) = (layout.assignment.clone(), layout.n_shards);
+    Checkpoint::capture(12, &Rng::new(7), &p_a, &popt_a, Some(&ctl_a))
+        .save_sharded(&path, &assignment, n_shards)
+        .unwrap();
+    let snap_at_save = ctl_a.snapshot();
+    for s in 0..4 {
+        assert!(dir.join(format!("ck.bin.shard{s:02}")).exists(), "missing shard file {s}");
+    }
+    let tail_a = drive(&mut popt_a, Some(&mut ctl_a), &mut p_a, 13..=24, 8, 0);
+
+    // controller state is keyed by tensor name, so resharding is free
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert!(loaded.ctl.is_some(), "sharded v6 manifest must carry the controller");
+    let mut popt_b = ParamOptimizer::build(adaptive_spec(2), &model_tensors(), None).unwrap();
+    let mut ctl_b = PrecisionController::new(firing_policy(), &popt_b);
+    let mut p_b: Vec<Vec<f32>> = model_tensors().iter().map(|t| vec![0.0; t.size]).collect();
+    loaded.restore(&mut p_b, &mut popt_b, Some(&mut ctl_b)).unwrap();
+    assert_eq!(popt_b.tensor_cfg(SPIKED).bits.bit_count(), 8);
+    assert_eq!(ctl_b.snapshot(), snap_at_save);
+    let tail_b = drive(&mut popt_b, Some(&mut ctl_b), &mut p_b, 13..=24, 8, 0);
+
+    assert_eq!(tail_b, tail_a, "resharded adaptive restore diverged");
+    assert_eq!(p_b, p_a);
+    assert_eq!(popt_b.state_snapshot(), popt_a.state_snapshot());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn static_checkpoint_keeps_v5_semantics_under_a_live_controller() {
+    let _g = locked();
+    let dir = std::env::temp_dir().join(format!("bitopt8_v4compat_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+
+    // static run, no controller: capture(..., None) must stay plain v4
+    let mut popt_a = ParamOptimizer::build(adaptive_spec(1), &model_tensors(), None).unwrap();
+    let mut p_a = init_params();
+    drive(&mut popt_a, None, &mut p_a, 1..=8, 0, 0);
+    Checkpoint::capture(8, &Rng::new(7), &p_a, &popt_a, None).save(&path).unwrap();
+    drive(&mut popt_a, None, &mut p_a, 9..=16, 0, 0);
+
+    // restoring under a live (frozen) controller must not change widths
+    // or invent a review window — v2–v5 semantics exactly
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert!(loaded.ctl.is_none(), "a static save must not carry a controller payload");
+    let mut popt_b = ParamOptimizer::build(adaptive_spec(1), &model_tensors(), None).unwrap();
+    let mut ctl_b = PrecisionController::new(frozen_policy(), &popt_b);
+    let fresh_snap = ctl_b.snapshot();
+    let mut p_b: Vec<Vec<f32>> = model_tensors().iter().map(|t| vec![0.0; t.size]).collect();
+    loaded.restore(&mut p_b, &mut popt_b, Some(&mut ctl_b)).unwrap();
+    assert_eq!(popt_b.tensor_cfg(SPIKED).bits.bit_count(), 4, "built width must survive");
+    assert_eq!(ctl_b.snapshot(), fresh_snap, "no saved window to restore");
+    let tr = drive(&mut popt_b, Some(&mut ctl_b), &mut p_b, 9..=16, 0, 0);
+
+    assert!(tr.is_empty());
+    assert_eq!(p_b, p_a, "static restore under a controller diverged");
+    assert_eq!(popt_b.state_snapshot(), popt_a.state_snapshot());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adaptive_precision_config_resolves_the_documented_policy() {
+    // integration tests run from the package root, so configs/ resolves
+    let cfg = RunConfig::from_file("configs/adaptive_precision.toml").unwrap();
+    let policy = cfg.precision.expect("[precision] table enables the controller");
+    assert_eq!(policy.cadence, 10);
+    assert_eq!(policy.demote_error, 0.05);
+    assert_eq!(cfg.fault.spike_every, 16);
+
+    let spec = cfg.optim_spec();
+    let popt = ParamOptimizer::build(spec, &model_tensors(), None).unwrap();
+    let head = popt.find("lm_head").unwrap();
+    assert_eq!(popt.bits_bounds(head), (4, 8), "bits_max caps the head's ceiling");
+    let wq = popt.find("block0.attn.wq").unwrap();
+    assert_eq!(popt.bits_bounds(wq), (4, 32));
+
+    let text = describe_policy(&policy, &popt);
+    assert!(text.contains("ceiling  8-bit"), "{text}");
+    assert!(text.contains("projected state bytes"), "{text}");
+    let (lo, hi) = popt.projected_state_bytes();
+    assert!(lo < hi, "the adaptive range must span a real footprint spread");
+}

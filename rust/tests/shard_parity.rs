@@ -232,7 +232,7 @@ fn sharded_checkpoint_reshards_with_identical_trajectory() {
     let dir = std::env::temp_dir().join(format!("bitopt8_reshard_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ck.bin");
-    let ck = Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a);
+    let ck = Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a, None);
     let layout = popt_a.shard_layout();
     ck.save_sharded(&path, &layout.assignment, layout.n_shards).unwrap();
     for s in 0..4 {
@@ -250,7 +250,7 @@ fn sharded_checkpoint_reshards_with_identical_trajectory() {
     let mut p_b: Vec<Vec<f32>> = tensors.iter().map(|t| vec![0.0; t.size]).collect();
     let loaded = Checkpoint::load(&path).unwrap();
     assert_eq!(loaded.step, 3);
-    loaded.restore(&mut p_b, &mut popt_b).unwrap();
+    loaded.restore(&mut p_b, &mut popt_b, None).unwrap();
     synth_run(&mut popt_b, &mut p_b, 3, 0xCD);
 
     assert_eq!(p_b, p_a, "4-shard checkpoint resharded to 2 diverged");
@@ -275,13 +275,13 @@ fn v4_monolithic_checkpoint_restores_into_sharded_run() {
     let dir = std::env::temp_dir().join(format!("bitopt8_v4fwd_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ck.bin");
-    Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a).save(&path).unwrap();
+    Checkpoint::capture(3, &Rng::new(7), &p_a, &popt_a, None).save(&path).unwrap();
     synth_run(&mut popt_a, &mut p_a, 2, 0x22);
 
     // forward compat: the v4 file drops straight into a 4-shard run
     let mut popt_b = ParamOptimizer::build(spec_with_shards(4), &tensors, None).unwrap();
     let mut p_b: Vec<Vec<f32>> = tensors.iter().map(|t| vec![0.0; t.size]).collect();
-    Checkpoint::load(&path).unwrap().restore(&mut p_b, &mut popt_b).unwrap();
+    Checkpoint::load(&path).unwrap().restore(&mut p_b, &mut popt_b, None).unwrap();
     synth_run(&mut popt_b, &mut p_b, 2, 0x22);
 
     assert_eq!(p_b, p_a, "v4 checkpoint restored into sharded run diverged");
